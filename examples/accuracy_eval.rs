@@ -1,0 +1,76 @@
+//! E5 — accuracy evaluation: the tilted-fusion banding penalty and the
+//! int8 quantization penalty, measured against ground truth on a
+//! synthetic Set5-like eval set (the Rust-side counterpart of
+//! `python/tests/test_tilted.py`).
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example accuracy_eval
+//! ```
+
+use anyhow::Result;
+
+use sr_accel::benchkit::Table;
+use sr_accel::config::AcceleratorConfig;
+use sr_accel::coordinator::{Engine, Int8Engine, SimEngine};
+use sr_accel::image::{box_downsample_x3, psnr_u8, ImageU8, SceneGenerator};
+use sr_accel::model::load_apbnw;
+use sr_accel::runtime::artifacts_dir;
+
+fn main() -> Result<()> {
+    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))?;
+    let acc = AcceleratorConfig::paper(); // 60-row bands
+    let mut t = Table::new(
+        "accuracy on synthetic scenes (HR 360x480, LR 120x160, x3)",
+        &[
+            "scene", "monolithic PSNR dB", "banded PSNR dB",
+            "penalty dB", "nearest-anchor dB",
+        ],
+    );
+    let mut worst_penalty = 0.0f64;
+    for seed in 0..5u64 {
+        // ground truth HR scene and its box-downsampled LR
+        let hr_gt = SceneGenerator::new(480, 360, 100 + seed).frame(0);
+        let lr_f = box_downsample_x3(&hr_gt.to_f32());
+        let lr = lr_f.to_u8();
+
+        let mut mono = Int8Engine::new(qm.clone());
+        let hr_mono = mono.upscale(&lr)?;
+        let mut banded = SimEngine::new(qm.clone(), acc.clone());
+        let hr_band = banded.upscale(&lr)?;
+        let anchor = sr_accel::image::nearest_upsample(&lr, 3);
+
+        let p_mono = psnr_u8(&hr_mono, &hr_gt);
+        let p_band = psnr_u8(&hr_band, &hr_gt);
+        let p_anchor = psnr_u8(&anchor, &hr_gt);
+        let pen = p_mono - p_band;
+        worst_penalty = worst_penalty.max(pen);
+        t.row(&[
+            format!("scene {seed}"),
+            format!("{p_mono:.2}"),
+            format!("{p_band:.2}"),
+            format!("{pen:.3}"),
+            format!("{p_anchor:.2}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nworst banding penalty: {worst_penalty:.3} dB \
+         (paper: < 0.2 dB from their simulation)"
+    );
+    assert!(
+        worst_penalty < 0.2,
+        "banding penalty exceeded the paper's bound"
+    );
+    // visual artifact for inspection
+    let hr_gt = SceneGenerator::new(480, 360, 100).frame(0);
+    let lr = box_downsample_x3(&hr_gt.to_f32()).to_u8();
+    let mut eng = SimEngine::new(qm, acc);
+    let out = eng.upscale(&lr)?;
+    sr_accel::image::write_ppm(
+        std::path::Path::new("/tmp/accuracy_banded.ppm"),
+        &out,
+    )?;
+    let _: &ImageU8 = &out;
+    println!("wrote /tmp/accuracy_banded.ppm");
+    Ok(())
+}

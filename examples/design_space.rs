@@ -1,0 +1,94 @@
+//! Design-space exploration: sweep tile geometry and PE-block count,
+//! mapping the SRAM / throughput / utilization frontier the paper's
+//! Section IV.A argues about.  Shows why (C=8, R=60, 28 blocks) is the
+//! published design point.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example design_space
+//! ```
+
+use anyhow::Result;
+
+use sr_accel::analysis::{AreaModel, BufferBudget, BufferParams};
+use sr_accel::benchkit::Table;
+use sr_accel::config::AcceleratorConfig;
+use sr_accel::fusion::{FusionScheduler, TiltedScheduler};
+use sr_accel::model::{load_apbnw, Tensor};
+use sr_accel::runtime::artifacts_dir;
+use sr_accel::sim::engine::{layer_cycles, EngineGeometry};
+use sr_accel::util::Xoshiro256pp;
+
+fn main() -> Result<()> {
+    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))?;
+    let frame = {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut t = Tensor::new(120, 320, 3);
+        rng.fill_u8(&mut t.data);
+        t
+    };
+
+    // ---- tile width sweep -------------------------------------------
+    let mut t = Table::new(
+        "tile width sweep (R=60, measured on 120x320, scaled x4)",
+        &["C", "SRAM KB", "fps@600MHz", "util %", "area mm^2"],
+    );
+    let area = AreaModel::default();
+    for c in [1usize, 2, 4, 8, 16, 32, 60] {
+        let acc = AcceleratorConfig {
+            tile_cols: c,
+            ..AcceleratorConfig::paper()
+        };
+        let mut p = BufferParams::paper_tilted();
+        p.tile_cols = c.max(2);
+        p.weight_bytes = qm.weight_bytes() + qm.bias_bytes();
+        let budget = BufferBudget::tilted(&p);
+        let res = TiltedScheduler::default().run_frame(&frame, &qm, &acc);
+        let fps = 600e6 / (res.stats.compute_cycles as f64 * 4.0);
+        let gates = area.gate_count(1260, 140);
+        let mm2 = area.area_mm2_40nm(gates, budget.total_kb());
+        t.row(&[
+            format!("{c}"),
+            format!("{:.1}", budget.total_kb()),
+            format!("{fps:.1}"),
+            format!("{:.1}", res.stats.utilization() * 100.0),
+            format!("{mm2:.2}"),
+        ]);
+    }
+    t.print();
+
+    // ---- PE-block count sweep (hypothetical re-architectures) --------
+    let mut t2 = Table::new(
+        "PE-block sweep (analytic, APBN layers, 60x8 tiles)",
+        &["blocks", "MACs", "peak GMAC/s", "cycles/tile-stack", "util %"],
+    );
+    let channels = [3usize, 28, 28, 28, 28, 28, 28, 27];
+    for blocks in [7usize, 14, 28, 56] {
+        let geo = EngineGeometry {
+            pe_blocks: blocks,
+            macs_per_cycle: blocks * 45,
+        };
+        let mut cyc = 0u64;
+        let mut ops = 0u64;
+        let mut slots = 0u64;
+        for w in channels.windows(2) {
+            let c = layer_cycles(60, 8, w[0], w[1], &geo);
+            cyc += c.cycles;
+            ops += c.mac_ops;
+            slots += c.mac_slots;
+        }
+        t2.row(&[
+            format!("{blocks}"),
+            format!("{}", blocks * 45),
+            format!("{:.0}", blocks as f64 * 45.0 * 0.6),
+            format!("{cyc}"),
+            format!("{:.1}", 100.0 * ops as f64 / slots as f64),
+        ]);
+    }
+    t2.print();
+    println!(
+        "\n28 blocks = the channel count of APBN's inner layers: fewer \
+         blocks double the cycles; more blocks idle on cin<=28 — the \
+         paper's utilization argument."
+    );
+    Ok(())
+}

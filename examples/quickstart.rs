@@ -1,0 +1,49 @@
+//! Quickstart: load the AOT artifacts, upscale one synthetic image with
+//! both engines (bit-exact int8 and PJRT float), compare, and write the
+//! results as PPM files.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use sr_accel::coordinator::{Engine, Int8Engine, PjrtEngine};
+use sr_accel::image::{psnr_u8, write_ppm, SceneGenerator};
+use sr_accel::model::load_apbnw;
+use sr_accel::runtime::artifacts_dir;
+
+fn main() -> Result<()> {
+    // 1. weights (quantized by the Python compile path)
+    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))?;
+    println!(
+        "model: {} layers, channels {:?}, {} int8 weights",
+        qm.n_layers(),
+        qm.channels(),
+        qm.weight_bytes()
+    );
+
+    // 2. one synthetic LR frame at the PJRT tile geometry
+    let lr = SceneGenerator::new(32, 24, 42).frame(0);
+    write_ppm(Path::new("/tmp/quickstart_lr.ppm"), &lr)?;
+
+    // 3. the integer engine (the silicon's arithmetic)
+    let mut int8 = Int8Engine::new(qm);
+    let hr_int8 = int8.upscale(&lr)?;
+    write_ppm(Path::new("/tmp/quickstart_int8.ppm"), &hr_int8)?;
+    println!("int8: {}x{} -> {}x{}", lr.w, lr.h, hr_int8.w, hr_int8.h);
+
+    // 4. the PJRT engine (AOT-lowered JAX float model)
+    let mut pjrt = PjrtEngine::from_artifact("apbn_tile.hlo.txt")?;
+    let hr_pjrt = pjrt.upscale(&lr)?;
+    write_ppm(Path::new("/tmp/quickstart_pjrt.ppm"), &hr_pjrt)?;
+
+    // 5. the two datapaths agree up to quantization error
+    let p = psnr_u8(&hr_int8, &hr_pjrt);
+    println!("int8 vs pjrt (float) PSNR: {p:.1} dB (quantization gap)");
+    assert!(p > 40.0, "engines diverged: {p:.1} dB");
+    println!("wrote /tmp/quickstart_{{lr,int8,pjrt}}.ppm");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! E7 — the end-to-end driver (DESIGN.md §4): serve a synthetic 640x360
+//! video stream through the coordinator at the paper's geometry, with
+//! BOTH the native int8 engine and the hardware simulator, and report
+//! throughput/latency plus the simulated silicon's fps.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_video
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md (E7).
+
+use anyhow::Result;
+
+use sr_accel::config::AcceleratorConfig;
+use sr_accel::coordinator::{
+    run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
+    SimEngine,
+};
+use sr_accel::model::load_apbnw;
+use sr_accel::runtime::artifacts_dir;
+
+fn main() -> Result<()> {
+    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))?;
+
+    // ---- 1. host serving: int8 engine on 320x180 (quarter frames,
+    //         keeps the demo quick on a 1-core CI host) ---------------
+    let cfg = PipelineConfig {
+        frames: 12,
+        queue_depth: 4,
+        workers: 1,
+        lr_w: 320,
+        lr_h: 180,
+        seed: 7,
+        source_fps: None,
+        scale: 3,
+    };
+    let qmc = qm.clone();
+    let factories: Vec<EngineFactory> = vec![Box::new(move || {
+        Ok(Box::new(Int8Engine::new(qmc)) as Box<dyn Engine>)
+    })];
+    println!("== host serving (int8 engine, 320x180 LR) ==");
+    let rep = run_pipeline(&cfg, factories, |_, _| {})?;
+    println!("{}\n", rep.render());
+
+    // ---- 2. silicon-side: the tilted-fusion simulator on one full
+    //         640x360 frame, reporting the modeled chip fps -----------
+    println!("== simulated silicon (tilted fusion, 640x360 LR) ==");
+    let acc = AcceleratorConfig::paper();
+    let mut sim = SimEngine::new(qm, acc.clone());
+    let frame = sr_accel::image::SceneGenerator::paper_lr(7).frame(0);
+    let t0 = std::time::Instant::now();
+    let hr = sim.upscale(&frame)?;
+    let wall = t0.elapsed();
+    let stats = sim.last_stats().unwrap();
+    let chip_fps =
+        acc.frequency_mhz * 1e6 / stats.compute_cycles as f64;
+    println!(
+        "HR {}x{}; {} cycles/frame -> {:.1} fps at {} MHz \
+         (paper: 60 fps), PE util {:.1} % (paper: 87 %)",
+        hr.w,
+        hr.h,
+        stats.compute_cycles,
+        chip_fps,
+        acc.frequency_mhz,
+        stats.utilization() * 100.0
+    );
+    println!(
+        "DRAM: {:.2} MB/frame -> {:.2} GB/s at 60 fps (paper: 0.41)",
+        stats.dram_total_bytes() as f64 / 1e6,
+        stats.dram_total_bytes() as f64 * 60.0 / 1e9
+    );
+    println!("(simulator wall time {:.1} s)", wall.as_secs_f64());
+    assert!(chip_fps > 60.0, "silicon model must sustain 60 fps");
+    Ok(())
+}

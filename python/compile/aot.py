@@ -1,0 +1,123 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all lowered with ``return_tuple=True`` — the Rust side
+unwraps with ``to_tuple1``):
+
+* ``apbn_tile.hlo.txt``  — full model, 24x32 LR tile, ref backend.
+  Fast path for tests and the quickstart example.
+* ``apbn_band.hlo.txt``  — full model over one 60x640 band, **pallas
+  backend**: the L1 kernel lowers into this very module, so the Rust
+  serving pipeline executes the Pallas dataflow.
+* ``apbn_full.hlo.txt``  — full model, 360x640 LR frame, ref backend.
+* ``kernel_conv3x3.hlo.txt`` — the bare L1 tile kernel (60x64, 28->28),
+  for kernel micro-benchmarks from Rust.
+
+Weights are baked as constants (closed over at trace time) so the Rust
+hot path passes only the image.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as apbn
+from .kernels.conv3x3 import conv3x3_pallas
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True is ESSENTIAL: the default HLO printer
+    # elides big literals ("constant({...})" -> "constant(...)"), and the
+    # baked model weights are exactly such literals — the text parser on
+    # the Rust side would silently reload them as zeros.
+    text = comp.as_hlo_text(print_large_constants=True)
+    if "..." in text:
+        raise RuntimeError(
+            "HLO text still contains elided constants — the Rust runtime "
+            "would misread the weights")
+    return text
+
+
+def lower_model(params, h, w, backend):
+    def fn(x):
+        return (apbn.forward(x, params, backend=backend),)
+    spec = jax.ShapeDtypeStruct((h, w, 3), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def lower_kernel(params, h, w):
+    wgt, b = params[1]          # a 28->28 layer: the steady-state hot spot
+    def fn(x):
+        return (conv3x3_pallas(x, wgt, b, relu=True),)
+    spec = jax.ShapeDtypeStruct((h, w, 28), jnp.float32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+ARTIFACTS = {
+    "apbn_tile.hlo.txt": dict(kind="model", h=24, w=32, backend="ref"),
+    "apbn_band.hlo.txt": dict(kind="model", h=60, w=640, backend="pallas"),
+    "apbn_full.hlo.txt": dict(kind="model", h=360, w=640, backend="ref"),
+    "kernel_conv3x3.hlo.txt": dict(kind="kernel", h=60, w=64),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--weights", default="../artifacts/weights.npz")
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names")
+    args = ap.parse_args()
+
+    arrs = dict(np.load(args.weights))
+    params = apbn.unflatten_params(arrs)
+    os.makedirs(args.outdir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {}
+    for name, cfg in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        if cfg["kind"] == "model":
+            text = lower_model(params, cfg["h"], cfg["w"], cfg["backend"])
+            in_shape = [cfg["h"], cfg["w"], 3]
+            out_shape = [cfg["h"] * 3, cfg["w"] * 3, 3]
+        else:
+            text = lower_kernel(params, cfg["h"], cfg["w"])
+            in_shape = [cfg["h"], cfg["w"], 28]
+            out_shape = [cfg["h"], cfg["w"], 28]
+        path = os.path.join(args.outdir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {**cfg, "input_shape": in_shape,
+                          "output_shape": out_shape,
+                          "hlo_chars": len(text)}
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(args.outdir, "manifest.json")
+    # merge with an existing manifest when --only is used
+    if only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old.update(manifest)
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

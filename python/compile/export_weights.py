@@ -1,0 +1,156 @@
+"""Export quantized weights + golden vectors for the Rust layer.
+
+Two binary formats, both little-endian, parsed by
+``rust/src/model/weights.rs`` and ``rust/tests/golden.rs``:
+
+``weights.apbnw``::
+
+    magic   8s   b"APBNW1\\0\\0"
+    u32     n_layers
+    u32     scale
+    u32     shift                  (fixed-point requant shift, 24)
+    per layer:
+        u32 cin, u32 cout, u32 relu
+        f32 s_in, f32 s_w, f32 s_out
+        i64 m0
+        i32 bias[cout]
+        i8  weights[3*3*cin*cout]   # [dr][dc][cin][cout] row-major (HWIO)
+
+``golden_quant.bin`` (bit-exactness oracle for the integer engine)::
+
+    magic   8s   b"APBNGV1\\0"
+    u32     h, w                    (LR size)
+    u8      input[h*w*3]            (HWC)
+    u32     n_layers
+    u64     fnv1a64 checksum of each layer's output bytes
+            (uint8 maps for ReLU layers, int32-LE for the final layer)
+    u32     oh, ow
+    u8      output[oh*ow*3]         (HR, post residual + shuffle)
+
+``golden_float.bin`` (PJRT runtime check)::
+
+    magic   8s   b"APBNGF1\\0"
+    u32     h, w
+    f32     input[h*w*3]
+    u32     oh, ow
+    f32     output[oh*ow*3]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import numpy as np
+
+from . import data
+from . import model as apbn
+from . import quant
+
+GOLDEN_LR = (24, 32)   # small LR tile for fast cross-language tests
+
+
+def fnv1a64(b: bytes) -> int:
+    h = 0xcbf29ce484222325
+    for byte in b:
+        h ^= byte
+        h = (h * 0x100000001b3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def write_apbnw(path: str, qm: quant.QuantModel) -> None:
+    with open(path, "wb") as f:
+        f.write(b"APBNW1\0\0")
+        f.write(struct.pack("<III", len(qm.layers), qm.scale, quant.SHIFT))
+        for l in qm.layers:
+            cin, cout = l.w_q.shape[2], l.w_q.shape[3]
+            f.write(struct.pack("<III", cin, cout, int(l.relu)))
+            f.write(struct.pack("<fff", l.s_in, l.s_w, l.s_out))
+            f.write(struct.pack("<q", l.m0))
+            f.write(l.b_q.astype("<i4").tobytes())
+            f.write(l.w_q.astype("i1").tobytes())   # HWIO row-major
+
+
+def golden_input_u8(h: int, w: int, seed: int = 123) -> np.ndarray:
+    img = data.hr_image(seed, h * 3, w * 3)
+    lr = data.downsample_x3(img)
+    return np.clip(np.round(lr * 255.0), 0, 255).astype(np.uint8)
+
+
+def write_golden_quant(path: str, qm: quant.QuantModel) -> None:
+    h, w = GOLDEN_LR
+    x = golden_input_u8(h, w)
+    # layer-by-layer checksums
+    sums = []
+    cur = x
+    for layer in qm.layers[:-1]:
+        cur = quant.conv3x3_int(cur, layer)
+        sums.append(fnv1a64(cur.tobytes()))
+    pre = quant.conv3x3_int(cur, qm.layers[-1])
+    sums.append(fnv1a64(pre.astype("<i4").tobytes()))
+    out = quant.forward_int(x, qm)
+    with open(path, "wb") as f:
+        f.write(b"APBNGV1\0")
+        f.write(struct.pack("<II", h, w))
+        f.write(x.tobytes())
+        f.write(struct.pack("<I", len(sums)))
+        for s in sums:
+            f.write(struct.pack("<Q", s))
+        f.write(struct.pack("<II", out.shape[0], out.shape[1]))
+        f.write(out.tobytes())
+
+
+def write_golden_float(path: str, params: list) -> None:
+    h, w = GOLDEN_LR
+    x = golden_input_u8(h, w).astype(np.float32) / 255.0
+    import jax.numpy as jnp
+    y = np.asarray(apbn.forward(jnp.asarray(x), params))
+    with open(path, "wb") as f:
+        f.write(b"APBNGF1\0")
+        f.write(struct.pack("<II", h, w))
+        f.write(x.astype("<f4").tobytes())
+        f.write(struct.pack("<II", y.shape[0], y.shape[1]))
+        f.write(y.astype("<f4").tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--weights", default="../artifacts/weights.npz")
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+
+    arrs = dict(np.load(args.weights))
+    params = apbn.unflatten_params(arrs)
+    calib = [data.downsample_x3(data.hr_image(1000 + i, 108, 108))
+             for i in range(6)]
+    qm = quant.quantize(params, calib)
+
+    os.makedirs(args.outdir, exist_ok=True)
+    write_apbnw(os.path.join(args.outdir, "weights.apbnw"), qm)
+    write_golden_quant(os.path.join(args.outdir, "golden_quant.bin"), qm)
+    write_golden_float(os.path.join(args.outdir, "golden_float.bin"), params)
+
+    # quantization quality note for EXPERIMENTS.md
+    lrs, hrs = data.eval_set(n=4, hr_size=108)
+    import jax.numpy as jnp
+    qs = []
+    for lr in lrs:
+        x8 = np.clip(np.round(lr * 255), 0, 255).astype(np.uint8)
+        fo = np.asarray(apbn.forward(jnp.asarray(lr), params))
+        io_ = quant.forward_int(x8, qm)
+        qs.append(quant.dequant_psnr(fo, io_))
+    meta = {
+        "quant_vs_float_psnr_db": float(np.mean(qs)),
+        "weight_bytes": qm.weight_bytes(),
+        "channels": list(qm.channels),
+    }
+    with open(os.path.join(args.outdir, "quant_meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"quant-vs-float PSNR {np.mean(qs):.2f} dB; "
+          f"weights {qm.weight_bytes()} bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracle.
+
+``ref``      — the correctness oracle (plain jax.lax).
+``conv3x3``  — the PE-array-dataflow tile kernel + the fused band kernel.
+"""
+
+from . import ref  # noqa: F401
+from .conv3x3 import (  # noqa: F401
+    conv3x3_pallas,
+    fused_band_pallas,
+    vmem_footprint_bytes,
+)

@@ -1,0 +1,212 @@
+"""Layer-1 Pallas kernels: the paper's PE-array dataflow on TPU terms.
+
+The ISCAS'22 accelerator computes one *output column segment* per cycle:
+an input column is broadcast horizontally across a 5x3 parallelogram of
+MACs, a weight column is broadcast vertically, and products are reduced
+along the diagonal (Fig. 4-6 of the paper).  Three PE arrays — one per
+weight column — finish a whole 3x3 convolution column per cycle.
+
+On TPU the analogous structure is:
+
+* the *band* (R rows x full width x C channels) lives in VMEM — the
+  ping-pong SRAM analog;
+* the grid walks column tiles left to right — the tile schedule;
+* inside a grid step, the three weight-column contractions are expressed
+  as ``(rows*cols, Cin) @ (Cin, Cout)`` matmuls that map onto the MXU —
+  the systolic array plays the role of the parallelogram PE plane.
+
+Kernels are lowered with ``interpret=True`` everywhere in this repo: the
+CPU PJRT plugin cannot execute Mosaic custom-calls, so interpret mode is
+both the correctness path and what gets AOT-lowered into the HLO
+artifacts the Rust runtime loads.  Real-TPU efficiency is *estimated*
+from the BlockSpec footprint in DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _conv_tile_kernel(x_ref, w_ref, b_ref, o_ref, *, tile_w: int,
+                      height: int, relu: bool):
+    """One grid step = one column tile of the band.
+
+    ``x_ref`` holds the zero-padded band (H+2, W+2, Cin) — the on-chip
+    ping-pong buffer.  ``o_ref`` is this tile's (H, tile_w, Cout) output
+    block.  The dc loop below is literally the paper's "three PE arrays",
+    the dr loop its diagonal reduction depth.
+    """
+    t = pl.program_id(0)
+    cin = x_ref.shape[2]
+    cout = o_ref.shape[2]
+    # The tile's input window, incl. the 1-column halo on each side.
+    xw = x_ref[:, pl.dslice(t * tile_w, tile_w + 2), :]   # (H+2, tile_w+2, Cin)
+    acc = jnp.zeros((height, tile_w, cout), jnp.float32)
+    for dc in range(3):            # three PE arrays (weight columns)
+        col = xw[:, dc:dc + tile_w, :]                    # (H+2, tile_w, Cin)
+        for dr in range(3):        # diagonal reduction depth
+            win = col[dr:dr + height]                     # (H, tile_w, Cin)
+            w_col = w_ref[dr, dc]                         # (Cin, Cout)
+            acc += jnp.dot(
+                win.reshape(height * tile_w, cin), w_col,
+                preferred_element_type=jnp.float32,
+            ).reshape(height, tile_w, cout)
+    acc = acc + b_ref[...]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def conv3x3_pallas(x: jax.Array, w: jax.Array, b: jax.Array,
+                   *, tile_w: int = 8, relu: bool = False,
+                   interpret: bool = True) -> jax.Array:
+    """3x3 SAME conv of an (H, W, Cin) image via the tile-walking kernel.
+
+    Bit-for-bit comparable to :func:`ref.conv3x3` up to float summation
+    order (tests use allclose with tight tolerances).
+    """
+    h, wd, cin = x.shape
+    cout = w.shape[3]
+    n_tiles = math.ceil(wd / tile_w)
+    padded_w = n_tiles * tile_w
+    # Zero padding: +1 halo ring for SAME conv, plus right padding to a
+    # whole number of tiles (cropped off afterwards).
+    xp = jnp.pad(x, ((1, 1), (1, 1 + padded_w - wd), (0, 0)))
+    kernel = functools.partial(
+        _conv_tile_kernel, tile_w=tile_w, height=h, relu=relu)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            # The whole padded band stays resident — the ping-pong SRAM.
+            pl.BlockSpec(xp.shape, lambda t: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda t: (0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda t: (0,)),
+        ],
+        # Column tiles stream out — the DRAM write-back schedule.
+        out_specs=pl.BlockSpec((h, tile_w, cout), lambda t: (0, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, padded_w, cout), jnp.float32),
+        interpret=interpret,
+    )(xp, w, b)
+    return out[:, :wd, :]
+
+
+def _fused_band_kernel(x_ref, *refs, tile_w: int, height: int, width: int,
+                       n_layers: int, halo: int, channels: tuple):
+    """One grid step computes ALL layers for one column tile.
+
+    This is the layer-fusion schedule itself: the tile's input window
+    carries a ``halo = n_layers`` column margin (the recompute variant of
+    fusion — Pallas grid steps cannot carry the ASIC's overlap queue, see
+    DESIGN.md §Hardware-Adaptation; the queue-exact schedule is the Rust
+    simulator's job).  Vertically the band is zero-padded once, which is
+    exactly the paper's top/bottom information loss.
+
+    Each layer's output is re-masked to zero outside the true image
+    extent: SAME padding in the reference zero-pads *every* layer's
+    input, so a fused schedule must re-zero the halo region after each
+    layer or bias+ReLU garbage propagates inward from the frame border.
+    """
+    w_refs = refs[:n_layers]
+    b_refs = refs[n_layers:2 * n_layers]
+    o_ref = refs[2 * n_layers]
+    t = pl.program_id(0)
+    win_w = tile_w + 2 * halo
+    # (H + 2L, tile_w + 2L, C0) window; shrinks by 2 per layer.
+    h = x_ref[:, pl.dslice(t * tile_w, win_w), :]
+    cur_h = height + 2 * halo
+    cur_w = win_w
+    for layer in range(n_layers):
+        cin, cout = channels[layer], channels[layer + 1]
+        oh, ow = cur_h - 2, cur_w - 2
+        acc = jnp.zeros((oh, ow, cout), jnp.float32)
+        for dc in range(3):
+            col = h[:, dc:dc + ow, :]
+            for dr in range(3):
+                win = col[dr:dr + oh]
+                acc += jnp.dot(
+                    win.reshape(oh * ow, cin), w_refs[layer][dr, dc],
+                    preferred_element_type=jnp.float32,
+                ).reshape(oh, ow, cout)
+        acc = acc + b_refs[layer][...]
+        if layer != n_layers - 1:
+            acc = jnp.maximum(acc, 0.0)
+        # Re-zero outside the image: out row i is global row
+        # i - (halo - layer - 1); out col j is global col
+        # t*tile_w + j - (halo - layer - 1).
+        off = halo - layer - 1
+        grow = jax.lax.broadcasted_iota(jnp.int32, (oh, ow, 1), 0) - off
+        gcol = (jax.lax.broadcasted_iota(jnp.int32, (oh, ow, 1), 1)
+                + t * tile_w - off)
+        valid = ((grow >= 0) & (grow < height)
+                 & (gcol >= 0) & (gcol < width))
+        h = jnp.where(valid, acc, 0.0)
+        cur_h, cur_w = oh, ow
+    o_ref[...] = h
+
+
+def fused_band_pallas(x: jax.Array, params: list, *, tile_w: int = 8,
+                      interpret: bool = True) -> jax.Array:
+    """Run all conv layers fused over one band, tile by tile.
+
+    ``x`` is one (R, W, C0) band; returns the (R, W, C_last) pre-residual
+    feature map.  Fusion means intermediate feature maps never leave the
+    kernel (VMEM) — the paper's headline DRAM saving — at the cost of an
+    ``n_layers``-column recompute halo per tile.
+    """
+    h, wd, _ = x.shape
+    n_layers = len(params)
+    halo = n_layers
+    channels = tuple([x.shape[2]] + [w.shape[3] for w, _ in params])
+    n_tiles = math.ceil(wd / tile_w)
+    padded_w = n_tiles * tile_w
+    # Vertical pad = n_layers rows of zeros top and bottom (band seam loss),
+    # horizontal pad = halo + tile rounding.
+    xp = jnp.pad(x, ((halo, halo), (halo, halo + padded_w - wd), (0, 0)))
+    kernel = functools.partial(
+        _fused_band_kernel, tile_w=tile_w, height=h, width=wd,
+        n_layers=n_layers, halo=halo, channels=channels)
+    cout = channels[-1]
+    ws = [w for w, _ in params]
+    bs = [b for _, b in params]
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=(
+            [pl.BlockSpec(xp.shape, lambda t: (0, 0, 0))]
+            + [pl.BlockSpec(w.shape, lambda t: (0, 0, 0, 0)) for w in ws]
+            + [pl.BlockSpec(b.shape, lambda t: (0,)) for b in bs]
+        ),
+        out_specs=pl.BlockSpec((h, tile_w, cout), lambda t: (0, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, padded_w, cout), jnp.float32),
+        interpret=interpret,
+    )(xp, *ws, *bs)
+    return out[:, :wd, :]
+
+
+def vmem_footprint_bytes(band_rows: int, band_cols: int, tile_w: int,
+                         channels: tuple, dtype_bytes: int = 4) -> dict:
+    """Estimate the VMEM working set of the fused band kernel — the TPU
+    analog of the paper's Table II buffer analysis (used by DESIGN.md
+    §Perf; interpret-mode wallclock is NOT a TPU proxy)."""
+    n_layers = len(channels) - 1
+    halo = n_layers
+    band = (band_rows + 2 * halo) * (band_cols + 2 * halo) * channels[0]
+    tile_feat = max(
+        (band_rows + 2 * (halo - l)) * (tile_w + 2 * (halo - l)) * channels[l + 1]
+        for l in range(n_layers)
+    )
+    weights = sum(9 * channels[l] * channels[l + 1] for l in range(n_layers))
+    return {
+        "band_input_bytes": band * dtype_bytes,
+        "peak_tile_feature_bytes": tile_feat * dtype_bytes,
+        "weight_bytes": weights * dtype_bytes,
+        "total_bytes": (band + tile_feat + weights) * dtype_bytes,
+    }

@@ -1,0 +1,111 @@
+"""Pure-jnp oracle for every kernel in this package.
+
+This module is the CORE correctness signal: the Pallas kernels in
+``conv3x3.py`` and the whole APBN model in ``..model`` are asserted
+against these definitions by ``python/tests``.  Everything here is
+deliberately written with ``jax.lax`` primitives only — no Pallas, no
+custom calls — so it runs identically on any backend.
+
+Conventions
+-----------
+* Single image tensors, shape ``(H, W, C)`` float32.
+* Conv weights, shape ``(3, 3, Cin, Cout)`` (HWIO); bias ``(Cout,)``.
+* "SAME" zero padding, stride 1 — the padding the paper's accelerator
+  implements at frame borders (and at band seams, where it is the source
+  of the tilted-fusion information loss).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv3x3(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+            relu: bool = False) -> jax.Array:
+    """3x3 stride-1 SAME conv over a single (H, W, Cin) image.
+
+    The reference for both the Pallas tile kernel (L1) and the Rust
+    int8 engine's float mode (L3, via exported golden vectors).
+    """
+    if x.ndim != 3:
+        raise ValueError(f"expected (H, W, C) input, got shape {x.shape}")
+    if w.shape[:2] != (3, 3) or w.shape[2] != x.shape[2]:
+        raise ValueError(f"weight shape {w.shape} incompatible with input {x.shape}")
+    y = jax.lax.conv_general_dilated(
+        x[None],                       # NHWC
+        w,                             # HWIO
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    if b is not None:
+        y = y + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def conv3x3_valid(x: jax.Array, w: jax.Array, b: jax.Array | None = None,
+                  relu: bool = False) -> jax.Array:
+    """3x3 VALID conv — used by the tilted-fusion functional model where
+    the halo is supplied explicitly instead of zero padding."""
+    y = jax.lax.conv_general_dilated(
+        x[None], w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[0]
+    if b is not None:
+        y = y + b
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def depth_to_space(x: jax.Array, r: int = 3) -> jax.Array:
+    """Pixel shuffle. Channel layout: ``c = (i*r + j)*C + c_out`` so that
+    ``out[h*r+i, w*r+j, c_out] = x[h, w, (i*r+j)*C + c_out]``.
+
+    With this layout the paper's "anchor" (nearest-neighbour x3 upsample of
+    the LR input) is exactly ``jnp.tile(x, (1, 1, r*r))`` before the
+    shuffle — the residual-like structure of APBN's final layer.
+    """
+    h, w, ch = x.shape
+    if ch % (r * r) != 0:
+        raise ValueError(f"channels {ch} not divisible by r^2={r * r}")
+    c = ch // (r * r)
+    y = x.reshape(h, w, r, r, c)          # (h, w, i, j, c)
+    y = y.transpose(0, 2, 1, 3, 4)        # (h, i, w, j, c)
+    return y.reshape(h * r, w * r, c)
+
+
+def space_to_depth(x: jax.Array, r: int = 3) -> jax.Array:
+    """Inverse of :func:`depth_to_space` (used in tests)."""
+    hr, wr, c = x.shape
+    h, w = hr // r, wr // r
+    y = x.reshape(h, r, w, r, c)
+    y = y.transpose(0, 2, 1, 3, 4)
+    return y.reshape(h, w, r * r * c)
+
+
+def nearest_upsample(x: jax.Array, r: int = 3) -> jax.Array:
+    """Nearest-neighbour upsample — the anchor path of APBN."""
+    return depth_to_space(jnp.tile(x, (1, 1, r * r)), r)
+
+
+def apbn_forward(x: jax.Array, params: list, scale: int = 3) -> jax.Array:
+    """Reference forward pass of the 7-layer APBN model of the paper.
+
+    ``params`` is a list of ``(w, b)`` with channels
+    ``3 -> 28 -> ... -> 28 -> 27`` (for x3).  Layers 0..L-2 have ReLU; the
+    final layer has none and is followed by the anchor residual and the
+    pixel shuffle.  Output is clipped to [0, 1] like the 8-bit datapath.
+    """
+    anchor = jnp.tile(x, (1, 1, scale * scale))
+    h = x
+    for w, b in params[:-1]:
+        h = conv3x3(h, w, b, relu=True)
+    w, b = params[-1]
+    h = conv3x3(h, w, b, relu=False)
+    h = h + anchor
+    h = jnp.clip(h, 0.0, 1.0)
+    return depth_to_space(h, scale)

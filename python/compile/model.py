@@ -1,0 +1,101 @@
+"""Layer-2: the APBN super-resolution model in JAX.
+
+Anchor-based Plain Net [Du et al., CVPR-W 2021], the model the paper's
+accelerator executes: seven 3x3 convs (3 -> 28 -> 28 -> 28 -> 28 -> 28 ->
+28 -> 27 for x3), ReLU on all but the last, an anchor residual (nearest-
+neighbour x3 of the input, i.e. the LR pixel repeated 9x across the 27
+output channels) and a depth-to-space.  Output clipped to [0, 1] — the
+8-bit datapath of the chip.
+
+Two conv backends share this graph:
+
+* ``backend="ref"``    — ``kernels.ref.conv3x3`` (jax.lax), used for
+  training and for the full-frame AOT artifact;
+* ``backend="pallas"`` — ``kernels.conv3x3_pallas`` (interpret mode), the
+  L1 kernel, used for the band artifact so the Pallas kernel lowers into
+  the very HLO the Rust runtime executes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.conv3x3 import conv3x3_pallas
+
+SCALE = 3
+N_LAYERS = 7
+#: Channel trace of the paper's model: Ch_0=3 (input), intermediates 28,
+#: final 27 = scale^2 * 3.
+CHANNELS: tuple = (3, 28, 28, 28, 28, 28, 28, 27)
+
+
+def init_params(key: jax.Array, channels: Sequence[int] = CHANNELS) -> list:
+    """He-init APBN parameters: list of (w:(3,3,cin,cout), b:(cout,))."""
+    params = []
+    for cin, cout in zip(channels[:-1], channels[1:]):
+        key, kw = jax.random.split(key)
+        fan_in = 9 * cin
+        w = jax.random.normal(kw, (3, 3, cin, cout), jnp.float32)
+        w = w * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((cout,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def _conv(backend: str, x, w, b, relu: bool):
+    if backend == "pallas":
+        return conv3x3_pallas(x, w, b, relu=relu)
+    return ref.conv3x3(x, w, b, relu=relu)
+
+
+def features(x: jax.Array, params: list, backend: str = "ref") -> jax.Array:
+    """The conv trunk only: (H, W, 3) -> (H, W, 27), pre-residual."""
+    h = x
+    for w, b in params[:-1]:
+        h = _conv(backend, h, w, b, relu=True)
+    w, b = params[-1]
+    return _conv(backend, h, w, b, relu=False)
+
+
+def forward(x: jax.Array, params: list, backend: str = "ref",
+            scale: int = SCALE) -> jax.Array:
+    """Full APBN: (H, W, 3) in [0,1] -> (scale*H, scale*W, 3) in [0,1]."""
+    h = features(x, params, backend)
+    h = h + jnp.tile(x, (1, 1, scale * scale))     # anchor residual
+    h = jnp.clip(h, 0.0, 1.0)
+    return ref.depth_to_space(h, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def forward_jit(x: jax.Array, params: list, backend: str = "ref"):
+    return forward(x, params, backend)
+
+
+def num_params(params: list) -> int:
+    return sum(w.size + b.size for w, b in params)
+
+
+def macs_per_lr_pixel(channels: Sequence[int] = CHANNELS) -> int:
+    """MAC count per LR pixel — the workload number behind the paper's
+    utilization and throughput analysis (Section III.B)."""
+    return sum(9 * cin * cout for cin, cout in zip(channels[:-1], channels[1:]))
+
+
+def flatten_params(params: list) -> dict:
+    """Params as a flat dict of arrays, for npz round-tripping."""
+    out = {}
+    for i, (w, b) in enumerate(params):
+        out[f"w{i}"] = w
+        out[f"b{i}"] = b
+    return out
+
+
+def unflatten_params(arrs: dict) -> list:
+    n = len([k for k in arrs if k.startswith("w")])
+    return [(jnp.asarray(arrs[f"w{i}"]), jnp.asarray(arrs[f"b{i}"]))
+            for i in range(n)]

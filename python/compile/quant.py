@@ -1,0 +1,167 @@
+"""8-bit quantization of APBN — the arithmetic the silicon executes.
+
+This module is the *specification* of the Rust engine's integer datapath
+(``rust/src/model/quant.rs`` + ``rust/src/reference``): every operation
+here is defined over numpy integers with explicit widths so the two
+implementations can be compared bit-for-bit through exported golden
+vectors (``export_weights.py``).
+
+Scheme (symmetric weights, affine-free activations — what a 2022-era
+8-bit SR accelerator does):
+
+* activations: uint8, zero-point 0, per-layer scale ``s_l``
+  (``real = q * s_l``); the input layer uses ``s_0 = 1/255``.
+* weights: int8 per-layer symmetric, ``s_w = max|w| / 127``.
+* conv accumulates in int32 (the PE array + accumulator tree), adds an
+  int32 bias ``round(b / (s_in * s_w))``.
+* requantize with a fixed-point multiplier: ``M = s_in*s_w/s_out`` is
+  represented as ``m0 * 2^-SHIFT`` with ``m0 = round(M * 2^SHIFT)``;
+  ``q_out = clamp((acc * m0 + 2^(SHIFT-1)) >> SHIFT, 0, 255)`` — the >> is
+  arithmetic, and the clamp-at-0 *is* the ReLU.
+* the final layer is requantized into the input scale (``1/255``), the
+  anchor residual (the raw uint8 input pixel) is added as an integer, and
+  the sum clamps to [0, 255] before depth-to-space.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import model as apbn_model
+from .kernels import ref as kref
+
+SHIFT = 24  #: fixed-point shift of the requantization multiplier
+
+
+@dataclasses.dataclass
+class QuantLayer:
+    """One quantized conv layer (all the silicon needs)."""
+    w_q: np.ndarray      # int8  (3, 3, cin, cout)
+    b_q: np.ndarray      # int32 (cout,)
+    m0: int              # fixed-point multiplier, round(M * 2^SHIFT)
+    s_in: float          # input activation scale
+    s_w: float           # weight scale
+    s_out: float         # output activation scale
+    relu: bool
+
+
+@dataclasses.dataclass
+class QuantModel:
+    layers: list
+    scale: int = 3
+
+    @property
+    def channels(self):
+        chs = [self.layers[0].w_q.shape[2]]
+        chs += [l.w_q.shape[3] for l in self.layers]
+        return tuple(chs)
+
+    def weight_bytes(self) -> int:
+        return sum(l.w_q.size for l in self.layers)
+
+
+def calibrate_activation_scales(params: list, calib_images: list) -> list:
+    """Per-layer output scales from float activation maxima.
+
+    99.9th-percentile-free max calibration (the paper's model is tiny and
+    post-ReLU activations are well behaved); the final layer is pinned to
+    the input scale 1/255 so the residual add needs no rescaling — that is
+    how the chip's accumulator mux (Fig. 4b) can feed residuals directly.
+    """
+    n = len(params)
+    maxima = np.zeros(n)
+    for img in calib_images:
+        h = np.asarray(img, np.float32)
+        for i, (w, b) in enumerate(params):
+            relu = i != n - 1
+            h = np.asarray(kref.conv3x3(h, w, b, relu=relu))
+            maxima[i] = max(maxima[i], float(np.abs(h).max()))
+    scales = [float(max(m, 1e-6)) / 255.0 for m in maxima]
+    scales[-1] = 1.0 / 255.0
+    return scales
+
+
+def quantize(params: list, calib_images: list, scale: int = 3) -> QuantModel:
+    """Quantize float APBN params into a :class:`QuantModel`."""
+    s_acts = [1.0 / 255.0] + calibrate_activation_scales(params, calib_images)
+    layers = []
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        w = np.asarray(w, np.float32)
+        b = np.asarray(b, np.float32)
+        s_w = float(np.abs(w).max()) / 127.0
+        s_w = max(s_w, 1e-12)
+        w_q = np.clip(np.round(w / s_w), -127, 127).astype(np.int8)
+        s_in, s_out = s_acts[i], s_acts[i + 1]
+        b_q = np.round(b / (s_in * s_w)).astype(np.int64)
+        b_q = np.clip(b_q, -(2**31), 2**31 - 1).astype(np.int32)
+        m = (s_in * s_w) / s_out
+        m0 = int(round(m * (1 << SHIFT)))
+        layers.append(QuantLayer(
+            w_q=w_q, b_q=b_q, m0=m0, s_in=s_in, s_w=s_w, s_out=s_out,
+            relu=(i != n - 1)))
+    return QuantModel(layers=layers, scale=scale)
+
+
+def conv3x3_int(x_q: np.ndarray, layer: QuantLayer) -> np.ndarray:
+    """Bit-exact integer 3x3 SAME conv + requant of one layer.
+
+    ``x_q`` is uint8 (H, W, cin); returns uint8 (H, W, cout) for ReLU
+    layers, or int32 (H, W, cout) in 1/255 units for the final layer
+    (pre-residual).  Pure numpy; this is the executable spec the Rust
+    engine is tested against.
+    """
+    h, w, cin = x_q.shape
+    cout = layer.w_q.shape[3]
+    xp = np.zeros((h + 2, w + 2, cin), np.int32)
+    xp[1:-1, 1:-1] = x_q.astype(np.int32)
+    acc = np.zeros((h, w, cout), np.int64)
+    wq = layer.w_q.astype(np.int64)
+    for dr in range(3):
+        for dc in range(3):
+            win = xp[dr:dr + h, dc:dc + w].astype(np.int64)
+            acc += np.tensordot(win, wq[dr, dc], axes=([2], [0]))
+    acc += layer.b_q.astype(np.int64)
+    # Fixed-point requantization (arithmetic shift, round-half-up).
+    q = (acc * layer.m0 + (1 << (SHIFT - 1))) >> SHIFT
+    if layer.relu:
+        return np.clip(q, 0, 255).astype(np.uint8)
+    return q.astype(np.int32)
+
+
+def forward_int(x_u8: np.ndarray, qm: QuantModel) -> np.ndarray:
+    """Full integer APBN forward: uint8 LR (H, W, 3) -> uint8 HR.
+
+    The exact frame-level computation of the accelerator; the tilted
+    schedule in the Rust simulator must reproduce this output bit-for-bit
+    within a band.
+    """
+    h = x_u8
+    for layer in qm.layers[:-1]:
+        h = conv3x3_int(h, layer)
+    pre = conv3x3_int(h, qm.layers[-1])               # int32, 1/255 units
+    r2 = qm.scale * qm.scale
+    anchor = np.tile(x_u8.astype(np.int32), (1, 1, r2))
+    out = np.clip(pre + anchor, 0, 255).astype(np.uint8)
+    return depth_to_space_u8(out, qm.scale)
+
+
+def depth_to_space_u8(x: np.ndarray, r: int) -> np.ndarray:
+    """uint8 pixel shuffle with the same channel layout as kernels.ref."""
+    h, w, ch = x.shape
+    c = ch // (r * r)
+    y = x.reshape(h, w, r, r, c).transpose(0, 2, 1, 3, 4)
+    return y.reshape(h * r, w * r, c)
+
+
+def dequant_psnr(float_out: np.ndarray, int_out: np.ndarray) -> float:
+    """PSNR between float-model output ([0,1]) and int-model output
+    (uint8) — the quantization-quality metric."""
+    a = np.asarray(float_out, np.float64)
+    b = int_out.astype(np.float64) / 255.0
+    mse = float(np.mean((a - b) ** 2))
+    if mse == 0:
+        return float("inf")
+    return 10.0 * np.log10(1.0 / mse)

@@ -1,0 +1,118 @@
+"""AOT path tests: HLO text generation + binary export formats.
+
+These run the same code paths as `make artifacts` on miniature shapes so
+they stay fast, and parse back every binary the Rust side consumes.
+"""
+
+import io
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data, export_weights as ew, model as apbn, quant
+
+
+@pytest.fixture(scope="module")
+def params():
+    return apbn.init_params(jax.random.PRNGKey(4))
+
+
+@pytest.fixture(scope="module")
+def qm(params):
+    calib = [data.downsample_x3(data.hr_image(60, 36, 36))]
+    return quant.quantize(params, calib)
+
+
+class TestHloText:
+    def test_model_lowering_produces_hlo(self, params):
+        text = aot.lower_model(params, 6, 8, "ref")
+        assert "HloModule" in text
+        assert "f32[6,8,3]" in text.replace(" ", "")
+
+    def test_pallas_backend_lowers(self, params):
+        text = aot.lower_model(params, 6, 8, "pallas")
+        assert "HloModule" in text
+
+    def test_kernel_lowering(self, params):
+        text = aot.lower_kernel(params, 8, 8)
+        assert "HloModule" in text
+
+    def test_artifact_table_complete(self):
+        names = set(aot.ARTIFACTS)
+        assert {"apbn_tile.hlo.txt", "apbn_band.hlo.txt",
+                "apbn_full.hlo.txt", "kernel_conv3x3.hlo.txt"} <= names
+
+
+class TestApbnwFormat:
+    def test_roundtrip_header_and_layers(self, qm, tmp_path):
+        path = tmp_path / "w.apbnw"
+        ew.write_apbnw(str(path), qm)
+        blob = path.read_bytes()
+        assert blob[:8] == b"APBNW1\0\0"
+        n, scale, shift = struct.unpack_from("<III", blob, 8)
+        assert (n, scale, shift) == (7, 3, quant.SHIFT)
+        # walk all layers and confirm exact sizes
+        off = 20
+        for l in qm.layers:
+            cin, cout, relu = struct.unpack_from("<III", blob, off)
+            assert (cin, cout) == (l.w_q.shape[2], l.w_q.shape[3])
+            assert relu == int(l.relu)
+            off += 12
+            s_in, s_w, s_out = struct.unpack_from("<fff", blob, off)
+            assert s_in == pytest.approx(l.s_in, rel=1e-6)
+            off += 12
+            (m0,) = struct.unpack_from("<q", blob, off)
+            assert m0 == l.m0
+            off += 8
+            bias = np.frombuffer(blob, "<i4", cout, off)
+            np.testing.assert_array_equal(bias, l.b_q)
+            off += 4 * cout
+            w = np.frombuffer(blob, "i1", 9 * cin * cout, off)
+            np.testing.assert_array_equal(
+                w, l.w_q.reshape(-1))
+            off += 9 * cin * cout
+        assert off == len(blob)
+
+    def test_fnv1a64_known_vector(self):
+        # FNV-1a 64 of empty input is the offset basis
+        assert ew.fnv1a64(b"") == 0xcbf29ce484222325
+        assert ew.fnv1a64(b"a") == 0xaf63dc4c8601ec8c
+
+    def test_golden_quant_file(self, qm, tmp_path):
+        path = tmp_path / "g.bin"
+        ew.write_golden_quant(str(path), qm)
+        blob = path.read_bytes()
+        assert blob[:8] == b"APBNGV1\0"
+        h, w = struct.unpack_from("<II", blob, 8)
+        assert (h, w) == ew.GOLDEN_LR
+        off = 16 + h * w * 3
+        (n,) = struct.unpack_from("<I", blob, off)
+        assert n == 7
+        off += 4 + 8 * n
+        oh, ow = struct.unpack_from("<II", blob, off)
+        assert (oh, ow) == (3 * h, 3 * w)
+        off += 8 + oh * ow * 3
+        assert off == len(blob)
+        # the embedded output must equal a fresh int forward
+        x = np.frombuffer(blob, np.uint8, h * w * 3, 16).reshape(h, w, 3)
+        out = quant.forward_int(x, qm)
+        got = np.frombuffer(blob, np.uint8, oh * ow * 3,
+                            len(blob) - oh * ow * 3).reshape(oh, ow, 3)
+        np.testing.assert_array_equal(got, out)
+
+    def test_golden_float_file(self, params, tmp_path):
+        path = tmp_path / "f.bin"
+        ew.write_golden_float(str(path), params)
+        blob = path.read_bytes()
+        assert blob[:8] == b"APBNGF1\0"
+        h, w = struct.unpack_from("<II", blob, 8)
+        x = np.frombuffer(blob, "<f4", h * w * 3, 16).reshape(h, w, 3)
+        off = 16 + h * w * 3 * 4
+        oh, ow = struct.unpack_from("<II", blob, off)
+        y = np.frombuffer(blob, "<f4", oh * ow * 3, off + 8)
+        want = np.asarray(apbn.forward(jnp.asarray(x), params)).reshape(-1)
+        np.testing.assert_allclose(y, want, atol=1e-6)

@@ -1,0 +1,163 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the CORE correctness signal of the compile path.  Hypothesis
+sweeps shapes, channel counts and tile widths; every case asserts
+allclose against ``kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as apbn
+from compile.kernels import ref, conv3x3_pallas, fused_band_pallas
+from compile.kernels.conv3x3 import vmem_footprint_bytes
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def rand(key, shape):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape,
+                              jnp.float32, -1.0, 1.0)
+
+
+class TestConvTileKernel:
+    @pytest.mark.parametrize("h,w,cin,cout,tile_w", [
+        (12, 16, 3, 28, 8),
+        (12, 16, 28, 28, 4),
+        (7, 9, 4, 5, 3),      # width not a tile multiple
+        (5, 5, 1, 1, 8),      # tile wider than image
+        (60, 64, 28, 28, 8),  # the paper's steady-state layer shape
+        (60, 17, 28, 27, 8),  # final layer channels, ragged width
+    ])
+    def test_matches_ref(self, h, w, cin, cout, tile_w):
+        x = rand(1, (h, w, cin))
+        wgt = rand(2, (3, 3, cin, cout)) * 0.2
+        b = rand(3, (cout,)) * 0.1
+        got = conv3x3_pallas(x, wgt, b, tile_w=tile_w, relu=False)
+        want = ref.conv3x3(x, wgt, b, relu=False)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_relu_applied(self):
+        x = rand(4, (8, 8, 2))
+        wgt = rand(5, (3, 3, 2, 3))
+        b = jnp.full((3,), -10.0)  # drive everything negative
+        got = conv3x3_pallas(x, wgt, b, tile_w=4, relu=True)
+        assert float(jnp.min(got)) == 0.0
+        want = ref.conv3x3(x, wgt, b, relu=True)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_tile_w_1_extreme(self):
+        """The paper notes the tile width can shrink to a single column."""
+        x = rand(6, (10, 7, 3))
+        wgt = rand(7, (3, 3, 3, 4))
+        b = rand(8, (4,))
+        got = conv3x3_pallas(x, wgt, b, tile_w=1)
+        want = ref.conv3x3(x, wgt, b)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        h=st.integers(3, 20), w=st.integers(3, 24),
+        cin=st.integers(1, 8), cout=st.integers(1, 8),
+        tile_w=st.integers(1, 12), seed=st.integers(0, 2**16),
+        relu=st.booleans(),
+    )
+    def test_property_sweep(self, h, w, cin, cout, tile_w, seed, relu):
+        x = rand(seed, (h, w, cin))
+        wgt = rand(seed + 1, (3, 3, cin, cout)) * 0.3
+        b = rand(seed + 2, (cout,)) * 0.1
+        got = conv3x3_pallas(x, wgt, b, tile_w=tile_w, relu=relu)
+        want = ref.conv3x3(x, wgt, b, relu=relu)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_dtype_f32_output(self):
+        x = rand(9, (6, 6, 2))
+        wgt = rand(10, (3, 3, 2, 2))
+        b = rand(11, (2,))
+        assert conv3x3_pallas(x, wgt, b).dtype == jnp.float32
+
+    def test_bad_weight_shape_raises(self):
+        x = rand(1, (6, 6, 2))
+        with pytest.raises(Exception):
+            ref.conv3x3(x, rand(2, (3, 3, 5, 2)), None)
+
+
+class TestFusedBandKernel:
+    def _params(self, channels, seed=0, gain=0.25):
+        ps = []
+        for i, (cin, cout) in enumerate(zip(channels[:-1], channels[1:])):
+            ps.append((rand(seed + 2 * i, (3, 3, cin, cout)) * gain,
+                       rand(seed + 2 * i + 1, (cout,)) * 0.05))
+        return ps
+
+    @pytest.mark.parametrize("channels,tile_w", [
+        ((3, 8, 8, 6), 4),
+        ((3, 28, 28, 28, 28, 28, 28, 27), 8),   # the paper's APBN
+        ((2, 4), 5),                            # single layer
+        ((3, 5, 7), 16),                        # tile wider than image
+    ])
+    def test_matches_unfused_trunk(self, channels, tile_w):
+        params = self._params(channels)
+        x = rand(99, (12, 13, channels[0]))
+        got = fused_band_pallas(x, params, tile_w=tile_w)
+        want = x
+        for i, (w, b) in enumerate(params):
+            want = ref.conv3x3(x=want, w=w, b=b, relu=(i != len(params) - 1))
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n_layers=st.integers(1, 4), tile_w=st.integers(2, 10),
+        h=st.integers(4, 14), w=st.integers(4, 18),
+        seed=st.integers(0, 2**10),
+    )
+    def test_property_fusion_exact(self, n_layers, tile_w, h, w, seed):
+        channels = tuple([3] + [4] * n_layers)
+        params = self._params(channels, seed=seed)
+        x = rand(seed + 50, (h, w, 3))
+        got = fused_band_pallas(x, params, tile_w=tile_w)
+        want = x
+        for i, (wg, b) in enumerate(params):
+            want = ref.conv3x3(want, wg, b, relu=(i != n_layers - 1))
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+class TestOracleInternals:
+    def test_depth_space_roundtrip(self):
+        x = rand(1, (4, 5, 27))
+        y = ref.depth_to_space(x, 3)
+        assert y.shape == (12, 15, 3)
+        np.testing.assert_allclose(ref.space_to_depth(y, 3), x)
+
+    def test_nearest_upsample_is_anchor(self):
+        x = rand(2, (3, 4, 3))
+        up = ref.nearest_upsample(x, 3)
+        for i in range(3):
+            for j in range(3):
+                np.testing.assert_allclose(up[i::3, j::3, :], x)
+
+    def test_apbn_forward_shape(self):
+        params = apbn.init_params(jax.random.PRNGKey(0))
+        x = jnp.zeros((12, 16, 3))
+        y = ref.apbn_forward(x, params)
+        assert y.shape == (36, 48, 3)
+
+    def test_macs_per_pixel(self):
+        # 9*(3*28 + 5*28*28 + 28*27) = 42840 MACs per LR pixel
+        assert apbn.macs_per_lr_pixel() == 42840
+
+
+class TestVmemFootprint:
+    def test_paper_band_fits_16mb_vmem(self):
+        """DESIGN.md §Perf: the fused band working set must fit VMEM."""
+        fp = vmem_footprint_bytes(60, 640, 8, apbn.CHANNELS)
+        assert fp["total_bytes"] < 16 * 1024 * 1024
+
+    def test_monotone_in_tile_width(self):
+        a = vmem_footprint_bytes(60, 640, 4, apbn.CHANNELS)
+        b = vmem_footprint_bytes(60, 640, 16, apbn.CHANNELS)
+        assert b["peak_tile_feature_bytes"] > a["peak_tile_feature_bytes"]

@@ -1,0 +1,95 @@
+"""L2 model graph tests: shapes, residual semantics, backends, training
+utilities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model as apbn
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def params():
+    return apbn.init_params(jax.random.PRNGKey(1))
+
+
+class TestForward:
+    def test_output_shape_and_range(self, params):
+        x = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (24, 32, 3)),
+                        jnp.float32)
+        y = apbn.forward(x, params)
+        assert y.shape == (72, 96, 3)
+        assert float(y.min()) >= 0.0 and float(y.max()) <= 1.0
+
+    def test_anchor_dominates_at_zero_weights(self):
+        """With a zero trunk the model must be exactly nearest-neighbour
+        upsampling — the anchor residual wiring."""
+        zero = [(jnp.zeros((3, 3, cin, cout)), jnp.zeros((cout,)))
+                for cin, cout in zip(apbn.CHANNELS[:-1], apbn.CHANNELS[1:])]
+        x = jnp.asarray(np.random.default_rng(1).uniform(0, 1, (6, 8, 3)),
+                        jnp.float32)
+        y = apbn.forward(x, zero)
+        np.testing.assert_allclose(y, ref.nearest_upsample(x, 3), atol=1e-7)
+
+    def test_backends_agree(self, params):
+        x = jnp.asarray(np.random.default_rng(2).uniform(0, 1, (12, 16, 3)),
+                        jnp.float32)
+        a = apbn.forward(x, params, backend="ref")
+        b = apbn.forward(x, params, backend="pallas")
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+    def test_param_count_is_tiny(self, params):
+        # 42840 weights + 195 biases = 43035 — the paper's mobile model
+        assert apbn.num_params(params) == 43035
+
+    def test_flatten_roundtrip(self, params):
+        arrs = apbn.flatten_params(params)
+        back = apbn.unflatten_params(arrs)
+        for (w1, b1), (w2, b2) in zip(params, back):
+            np.testing.assert_array_equal(w1, w2)
+            np.testing.assert_array_equal(b1, b2)
+
+
+class TestData:
+    def test_hr_lr_shapes(self):
+        lrs, hrs = data.batch(0, 2, hr_size=36)
+        assert hrs.shape == (2, 36, 36, 3)
+        assert lrs.shape == (2, 12, 12, 3)
+
+    def test_downsample_is_box_mean(self):
+        hr = np.arange(36 * 3, dtype=np.float32).reshape(6, 6, 3) / 108
+        lr = data.downsample_x3(hr)
+        np.testing.assert_allclose(lr[0, 0], hr[:3, :3].mean(axis=(0, 1)))
+
+    def test_images_in_unit_range(self):
+        for s in range(5):
+            im = data.hr_image(s, 36, 45)
+            assert im.min() >= 0.0 and im.max() <= 1.0
+            assert im.dtype == np.float32
+
+    def test_generators_are_deterministic(self):
+        np.testing.assert_array_equal(data.hr_image(42, 36, 36),
+                                      data.hr_image(42, 36, 36))
+
+
+class TestTraining:
+    def test_loss_decreases_fast(self):
+        """A 30-step sanity run must cut the Charbonnier loss."""
+        from compile import train as tr
+        params, log = tr.train(steps=30, batch_size=2, log_every=29)
+        assert log[-1]["loss"] < log[0]["loss"]
+
+    def test_adam_updates_all_tensors(self, params):
+        from compile import train as tr
+        lrs, hrs = data.batch(1, 1, hr_size=36)
+        grads = jax.grad(tr.l1_loss)(params, jnp.asarray(lrs),
+                                     jnp.asarray(hrs))
+        st = tr.adam_init(params)
+        new_p, st2 = tr.adam_step(params, grads, st, lr=1e-2)
+        assert st2["t"] == 1
+        changed = sum(
+            int(not np.allclose(w1, w2)) + int(not np.allclose(b1, b2))
+            for (w1, b1), (w2, b2) in zip(params, new_p))
+        assert changed >= 13  # every tensor with nonzero grad moved

@@ -1,0 +1,134 @@
+"""Quantization spec tests: the integer datapath the Rust engine mirrors."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data, model as apbn, quant
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def small_setup():
+    params = apbn.init_params(jax.random.PRNGKey(2))
+    calib = [data.downsample_x3(data.hr_image(50 + i, 36, 36))
+             for i in range(3)]
+    qm = quant.quantize(params, calib)
+    return params, qm
+
+
+class TestQuantizeStructure:
+    def test_layer_count_and_channels(self, small_setup):
+        _, qm = small_setup
+        assert len(qm.layers) == 7
+        assert qm.channels == apbn.CHANNELS
+
+    def test_weight_range_symmetric(self, small_setup):
+        _, qm = small_setup
+        for l in qm.layers:
+            assert l.w_q.dtype == np.int8
+            assert int(l.w_q.max()) <= 127 and int(l.w_q.min()) >= -127
+
+    def test_final_layer_scale_is_input_scale(self, small_setup):
+        """The residual add requires the last layer in 1/255 units."""
+        _, qm = small_setup
+        assert qm.layers[-1].s_out == pytest.approx(1.0 / 255.0)
+        assert not qm.layers[-1].relu
+        assert all(l.relu for l in qm.layers[:-1])
+
+    def test_weight_bytes_match_paper_order(self, small_setup):
+        """APBN-7 has 42840 int8 weights — the paper's 42.54 KB weight
+        buffer row (we get 42.84 decimal KB, delta documented)."""
+        _, qm = small_setup
+        assert qm.weight_bytes() == 42840
+
+    def test_multiplier_positive_and_bounded(self, small_setup):
+        _, qm = small_setup
+        for l in qm.layers:
+            assert 0 < l.m0 < 2**40
+
+
+class TestIntForward:
+    def test_quant_close_to_float(self, small_setup):
+        params, qm = small_setup
+        lr = data.downsample_x3(data.hr_image(321, 36, 48))
+        x8 = np.clip(np.round(lr * 255), 0, 255).astype(np.uint8)
+        fo = np.asarray(apbn.forward(np.float32(lr), params))
+        io_ = quant.forward_int(x8, qm)
+        p = quant.dequant_psnr(fo, io_)
+        assert p > 30.0, f"int8 model too far from float ({p:.1f} dB)"
+
+    def test_output_dtype_and_shape(self, small_setup):
+        _, qm = small_setup
+        x8 = np.zeros((12, 15, 3), np.uint8)
+        y = quant.forward_int(x8, qm)
+        assert y.dtype == np.uint8 and y.shape == (36, 45, 3)
+
+    def test_zero_input_gives_anchor_plus_bias_path(self, small_setup):
+        """All-zero input: output = clamp(trunk(0)), deterministic."""
+        _, qm = small_setup
+        x8 = np.zeros((9, 9, 3), np.uint8)
+        y1 = quant.forward_int(x8, qm)
+        y2 = quant.forward_int(x8, qm)
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_saturated_input_no_overflow(self, small_setup):
+        _, qm = small_setup
+        x8 = np.full((9, 12, 3), 255, np.uint8)
+        y = quant.forward_int(x8, qm)  # must not raise / wrap
+        assert y.max() <= 255
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), h=st.integers(3, 12),
+           w=st.integers(3, 12))
+    def test_property_determinism_and_range(self, small_setup, seed, h, w):
+        _, qm = small_setup
+        rng = np.random.default_rng(seed)
+        x8 = rng.integers(0, 256, (h, w, 3), dtype=np.uint8)
+        y = quant.forward_int(x8, qm)
+        assert y.shape == (3 * h, 3 * w, 3)
+        np.testing.assert_array_equal(y, quant.forward_int(x8, qm))
+
+
+class TestRequantArithmetic:
+    def test_rounding_half_up(self):
+        """The fixed-point requant uses round-half-up via +2^(S-1) >> S."""
+        layer = quant.QuantLayer(
+            w_q=np.zeros((3, 3, 1, 1), np.int8),
+            b_q=np.array([0], np.int32), m0=1 << quant.SHIFT,
+            s_in=1.0, s_w=1.0, s_out=1.0, relu=True)
+        x = np.zeros((1, 1, 1), np.uint8)
+        # acc = 0 -> q = 0
+        assert quant.conv3x3_int(x, layer)[0, 0, 0] == 0
+
+    def test_identity_multiplier(self):
+        """m0 = 2^SHIFT passes the accumulator through unchanged."""
+        w_q = np.zeros((3, 3, 1, 1), np.int8)
+        w_q[1, 1, 0, 0] = 1
+        layer = quant.QuantLayer(
+            w_q=w_q, b_q=np.array([0], np.int32), m0=1 << quant.SHIFT,
+            s_in=1.0, s_w=1.0, s_out=1.0, relu=True)
+        x = np.arange(9, dtype=np.uint8).reshape(3, 3, 1) * 10
+        y = quant.conv3x3_int(x, layer)
+        np.testing.assert_array_equal(y[..., 0], x[..., 0])
+
+    def test_negative_acc_clamps_to_zero_with_relu(self):
+        w_q = np.zeros((3, 3, 1, 1), np.int8)
+        w_q[1, 1, 0, 0] = -1
+        layer = quant.QuantLayer(
+            w_q=w_q, b_q=np.array([0], np.int32), m0=1 << quant.SHIFT,
+            s_in=1.0, s_w=1.0, s_out=1.0, relu=True)
+        x = np.full((2, 2, 1), 7, np.uint8)
+        assert quant.conv3x3_int(x, layer).max() == 0
+
+    def test_final_layer_returns_int32(self):
+        w_q = np.zeros((3, 3, 1, 1), np.int8)
+        w_q[1, 1, 0, 0] = -1
+        layer = quant.QuantLayer(
+            w_q=w_q, b_q=np.array([0], np.int32), m0=1 << quant.SHIFT,
+            s_in=1.0, s_w=1.0, s_out=1.0, relu=False)
+        x = np.full((2, 2, 1), 7, np.uint8)
+        y = quant.conv3x3_int(x, layer)
+        assert y.dtype == np.int32
+        assert (y <= 0).all()

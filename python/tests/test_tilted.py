@@ -1,0 +1,148 @@
+"""Tilted-layer-fusion semantics (Section II of the paper).
+
+The two claims under test:
+
+1. *Horizontal exactness* — the tilted schedule (parallelepiped tiles +
+   overlap queue) produces output identical to monolithic whole-band
+   convolution, for any tile width, image width, band height and layer
+   count.  This is the paper's core argument for keeping left/right
+   boundary information.
+2. *Bounded vertical penalty* — processing the frame as independent
+   bands costs < 0.2 dB PSNR (experiment E5).
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data, model as apbn, tilted
+
+
+def make_params(channels, seed=0, gain=0.3):
+    rng = np.random.default_rng(seed)
+    ps = []
+    for cin, cout in zip(channels[:-1], channels[1:]):
+        w = rng.normal(0, gain / np.sqrt(9 * cin),
+                       (3, 3, cin, cout)).astype(np.float32)
+        b = rng.normal(0, 0.02, (cout,)).astype(np.float32)
+        ps.append((w, b))
+    return ps
+
+
+def trunk_ref(band, params):
+    h = band
+    from compile.kernels import ref
+    for i, (w, b) in enumerate(params):
+        h = np.asarray(ref.conv3x3(np.float32(h), w, b,
+                                   relu=(i != len(params) - 1)))
+    return h
+
+
+class TestTiltedExactness:
+    @pytest.mark.parametrize("tile_w", [1, 2, 3, 8, 13, 60])
+    def test_tile_width_sweep(self, tile_w):
+        params = make_params((3, 6, 6, 5))
+        band = np.random.default_rng(1).uniform(
+            0, 1, (10, 40, 3)).astype(np.float32)
+        got = tilted.tilted_band_schedule(band, params, tile_w=tile_w)
+        np.testing.assert_allclose(got, trunk_ref(band, params),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_paper_configuration(self):
+        """The paper's 8x60 tile, 7 layers, 28 channels."""
+        params = make_params(apbn.CHANNELS, seed=3, gain=0.25)
+        band = np.random.default_rng(2).uniform(
+            0, 1, (60, 160, 3)).astype(np.float32)
+        got = tilted.tilted_band_schedule(band, params, tile_w=8)
+        np.testing.assert_allclose(got, trunk_ref(band, params),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_width_not_multiple_of_tile(self):
+        params = make_params((3, 4, 4))
+        band = np.random.default_rng(3).uniform(
+            0, 1, (8, 37, 3)).astype(np.float32)
+        got = tilted.tilted_band_schedule(band, params, tile_w=8)
+        np.testing.assert_allclose(got, trunk_ref(band, params),
+                                   atol=1e-5, rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        tile_w=st.integers(1, 12),
+        width=st.integers(4, 40),
+        rows=st.integers(3, 16),
+        n_layers=st.integers(1, 6),
+        seed=st.integers(0, 2**12),
+    )
+    def test_property_any_geometry(self, tile_w, width, rows, n_layers, seed):
+        channels = tuple([3] + [4] * n_layers)
+        params = make_params(channels, seed=seed)
+        band = np.random.default_rng(seed + 1).uniform(
+            0, 1, (rows, width, 3)).astype(np.float32)
+        got = tilted.tilted_band_schedule(band, params, tile_w=tile_w)
+        np.testing.assert_allclose(got, trunk_ref(band, params),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_trace_is_tilted(self):
+        """Layer l of tile t must cover columns shifted l left — the
+        parallelepiped of Fig. 2."""
+        params = make_params((3, 4, 4, 4))
+        band = np.zeros((6, 24, 3), np.float32)
+        trace = []
+        tilted.tilted_band_schedule(band, params, tile_w=8, trace=trace)
+        for (t, l, lo, hi) in trace:
+            assert lo == max(t * 8 - l, 0)
+            assert hi == min((t + 1) * 8 - 1 - l, 23)
+
+    def test_overlap_buffer_queue_depth(self):
+        """Queue depth is n_layers + 2 (paper Section IV.A.2); pushing
+        past it must fail loudly."""
+        ob = tilted.OverlapBuffer(n_layers=7, rows=60, max_ch=28)
+        assert ob.depth == 9
+        for i in range(9):
+            ob.push_back(np.full((60, 2, 28), i, np.float32))
+        with pytest.raises(OverflowError):
+            ob.push_back(np.zeros((60, 2, 28), np.float32))
+        assert ob.pop_front()[0, 0, 0] == 0  # FIFO order
+        ob.push_back(np.zeros((60, 2, 28), np.float32))
+        assert ob.count == 9
+
+    def test_overlap_buffer_bytes_match_eq2(self):
+        """M_o = L x R x 2 x maxCh with L = layers + 2 -> 30240 bytes."""
+        ob = tilted.OverlapBuffer(n_layers=7, rows=60, max_ch=28)
+        assert ob.bytes_used() == 30240
+
+
+class TestBandPenalty:
+    @pytest.fixture(scope="class")
+    def trained(self):
+        import os
+        path = os.path.join(os.path.dirname(__file__),
+                            "../../artifacts/weights.npz")
+        if os.path.exists(path):
+            arrs = dict(np.load(path))
+            return apbn.unflatten_params(arrs)
+        return apbn.init_params(jax.random.PRNGKey(0))
+
+    def test_penalty_under_0p2_db(self, trained):
+        """E5: the paper's '< 0.2 dB based on our simulation'."""
+        hr = data.hr_image(777, 180, 240)
+        lr = data.downsample_x3(hr)
+        p_full, p_band, pen = tilted.band_penalty_db(
+            lr, hr, trained, band_rows=60)
+        assert pen < 0.2, (p_full, p_band, pen)
+
+    def test_banded_equals_full_when_one_band(self, trained):
+        lr = data.downsample_x3(data.hr_image(5, 90, 120))  # 30 rows
+        full = np.asarray(apbn.forward(np.float32(lr), trained))
+        banded = tilted.banded_forward(lr, trained, band_rows=64)
+        np.testing.assert_allclose(banded, full, atol=1e-5)
+
+    def test_seam_rows_are_the_only_difference(self, trained):
+        lr = data.downsample_x3(data.hr_image(6, 360, 96))  # 120 rows
+        full = np.asarray(apbn.forward(np.float32(lr), trained))
+        banded = tilted.banded_forward(lr, trained, band_rows=60)
+        diff = np.abs(full - banded).max(axis=(1, 2))
+        # rows far from the seam (HR rows around 3*60=180) must agree
+        interior = np.concatenate([diff[:150], diff[210:]])
+        assert interior.max() < 1e-4

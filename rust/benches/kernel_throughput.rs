@@ -1,0 +1,94 @@
+//! L3 engine micro-benchmarks (the §Perf instrument): int8 conv layers,
+//! whole-frame inference, and the PJRT path, in wall-clock time and
+//! LR-Mpix/s.  These numbers feed EXPERIMENTS.md §Perf before/after.
+
+use sr_accel::benchkit::{black_box, Bencher, Table};
+use sr_accel::coordinator::{Engine, Int8Engine, PjrtEngine};
+use sr_accel::image::SceneGenerator;
+use sr_accel::model::{load_apbnw, Tensor};
+use sr_accel::reference::{conv3x3_final, conv3x3_relu};
+use sr_accel::runtime::artifacts_dir;
+
+fn main() {
+    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))
+        .expect("run `make artifacts`");
+    let bench = Bencher::default();
+    let mut t = Table::new(
+        "engine micro-benchmarks",
+        &["benchmark", "median", "p95", "LR Mpix/s"],
+    );
+
+    // -- single steady-state layer (28->28) on a 60x64 map -------------
+    let fm = {
+        let g = SceneGenerator::new(64, 60, 1).frame(0);
+        // build a 28-channel map by running the first layer once
+        let t0 = Tensor::from_vec(g.h, g.w, g.c, g.data);
+        conv3x3_relu(&t0, &qm.layers[0])
+    };
+    let layer = &qm.layers[1];
+    let m = bench.run("conv3x3 28->28 (60x64)", || {
+        black_box(conv3x3_relu(black_box(&fm), layer));
+    });
+    let px = (fm.h * fm.w) as f64;
+    t.row(&[
+        m.name.clone(),
+        sr_accel::benchkit::fmt_ns(m.summary_ns.median()),
+        sr_accel::benchkit::fmt_ns(m.summary_ns.percentile(95.0)),
+        format!("{:.3}", px / m.summary_ns.median() * 1e3),
+    ]);
+
+    // -- final layer 28->27 --------------------------------------------
+    let m2 = bench.run("conv3x3 final 28->27 (60x64)", || {
+        black_box(conv3x3_final(black_box(&fm), qm.layers.last().unwrap()));
+    });
+    t.row(&[
+        m2.name.clone(),
+        sr_accel::benchkit::fmt_ns(m2.summary_ns.median()),
+        sr_accel::benchkit::fmt_ns(m2.summary_ns.percentile(95.0)),
+        format!("{:.3}", px / m2.summary_ns.median() * 1e3),
+    ]);
+
+    // -- whole-frame int8 engine (320x180) ------------------------------
+    let img = SceneGenerator::new(320, 180, 2).frame(0);
+    let mut engine = Int8Engine::new(qm.clone());
+    let quick = Bencher::quick();
+    let m3 = quick.run("int8 full frame (320x180)", || {
+        black_box(engine.upscale(black_box(&img)).unwrap());
+    });
+    let fpx = (img.h * img.w) as f64;
+    t.row(&[
+        m3.name.clone(),
+        sr_accel::benchkit::fmt_ns(m3.summary_ns.median()),
+        sr_accel::benchkit::fmt_ns(m3.summary_ns.percentile(95.0)),
+        format!("{:.3}", fpx / m3.summary_ns.median() * 1e3),
+    ]);
+
+    // -- PJRT float path on the same tile size --------------------------
+    match PjrtEngine::from_artifact("apbn_tile.hlo.txt") {
+        Ok(mut pjrt) => {
+            let tile = SceneGenerator::new(32, 24, 3).frame(0);
+            let m4 = quick.run("pjrt tile (32x24)", || {
+                black_box(pjrt.upscale(black_box(&tile)).unwrap());
+            });
+            t.row(&[
+                m4.name.clone(),
+                sr_accel::benchkit::fmt_ns(m4.summary_ns.median()),
+                sr_accel::benchkit::fmt_ns(m4.summary_ns.percentile(95.0)),
+                format!(
+                    "{:.3}",
+                    (32.0 * 24.0) / m4.summary_ns.median() * 1e3
+                ),
+            ]);
+        }
+        Err(e) => println!("pjrt bench skipped: {e}"),
+    }
+    t.print();
+
+    // MAC-rate summary for §Perf bookkeeping
+    let macs_per_px = 9.0 * 28.0 * 28.0;
+    let gmacs = px * macs_per_px / m.summary_ns.median();
+    println!(
+        "\nint8 steady-state layer: {gmacs:.2} GMAC/s on this host \
+         (silicon target: 756 GMAC/s at 600 MHz x 1260 MACs)"
+    );
+}

@@ -1,0 +1,110 @@
+//! E1 — regenerates **Table I** (performance summary & comparison).
+//!
+//! Our row is measured: the tilted-fusion simulator runs a full 640x360
+//! frame and the row derives throughput from measured cycles, SRAM from
+//! the buffer equations and gates/area from the calibrated model.
+//! Published rows come from the cited papers.  Shape to check against
+//! the paper: our design has the smallest SRAM and normalized area, and
+//! >= 124.4 Mpix/s at 600 MHz.
+
+use sr_accel::analysis::{our_design_row, published_rows};
+use sr_accel::benchkit::{Bencher, Table};
+use sr_accel::config::{AcceleratorConfig, ModelConfig};
+use sr_accel::fusion::{FusionScheduler, TiltedScheduler};
+use sr_accel::image::SceneGenerator;
+use sr_accel::model::{load_apbnw, Tensor};
+use sr_accel::runtime::artifacts_dir;
+
+fn main() {
+    let acc = AcceleratorConfig::paper();
+    let model = ModelConfig::apbn();
+    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))
+        .expect("run `make artifacts`");
+    let img = SceneGenerator::paper_lr(7).frame(0);
+    let frame = Tensor::from_vec(img.h, img.w, img.c, img.data);
+
+    // measure simulator wall time too (meta-benchmark)
+    let bench = Bencher {
+        warmup: 1,
+        target_time: std::time::Duration::from_millis(100),
+        min_iters: 1,
+        max_iters: 3,
+    };
+    let sched = TiltedScheduler::default();
+    let mut stats = None;
+    let m = bench.run("tilted full-frame simulation (640x360)", || {
+        let res = sched.run_frame(&frame, &qm, &acc);
+        stats = Some(res.stats);
+    });
+    println!("{}", m.report_line());
+    let stats = stats.unwrap();
+
+    let ours = our_design_row(
+        &stats,
+        &acc,
+        &model,
+        1920 * 1080,
+        (qm.weight_bytes() + qm.bias_bytes()) as usize,
+    );
+
+    let mut t = Table::new(
+        "Table I — performance summary and comparisons",
+        &[
+            "design", "SR method", "fusion", "tech", "MHz", "SRAM KB",
+            "Mpix/s", "MACs", "kGates", "mm^2@40nm", "target",
+        ],
+    );
+    let f1 = |o: Option<f64>| o.map(|v| format!("{v:.1}")).unwrap_or("-".into());
+    for r in published_rows().iter().chain(std::iter::once(&ours)) {
+        t.row(&[
+            r.name.into(),
+            r.sr_method.into(),
+            r.layer_fusion.into(),
+            r.technology.into(),
+            format!("{:.0}", r.frequency_mhz),
+            f1(r.sram_kb),
+            f1(r.throughput_mpix),
+            r.macs.map(|m| m.to_string()).unwrap_or("-".into()),
+            f1(r.gate_count_k),
+            r.normalized_area_mm2
+                .map(|v| format!("{v:.2}"))
+                .unwrap_or("-".into()),
+            r.target.into(),
+        ]);
+    }
+    t.print();
+
+    // ---- shape assertions: who wins and by what factor --------------
+    let our_sram = ours.sram_kb.unwrap();
+    let our_tput = ours.throughput_mpix.unwrap();
+    let our_area = ours.normalized_area_mm2.unwrap();
+    let srnpu = published_rows()
+        .into_iter()
+        .find(|r| r.name.contains("SRNPU"))
+        .unwrap();
+    assert!(
+        our_sram < srnpu.sram_kb.unwrap() / 5.0,
+        "our SRAM must be >5x below SRNPU"
+    );
+    assert!(
+        our_area < srnpu.normalized_area_mm2.unwrap(),
+        "our area must undercut SRNPU normalized"
+    );
+    assert!(
+        our_tput >= 124.0,
+        "throughput must reach the paper's 124.4 Mpix/s (got {our_tput:.1})"
+    );
+    assert!(
+        our_tput / 1.0 > srnpu.throughput_mpix.unwrap(),
+        "we must outrun SRNPU"
+    );
+    println!(
+        "\nSHAPE OK: SRAM {our_sram:.1} KB (SRNPU 572), \
+         {our_tput:.1} Mpix/s (paper 124.4), area {our_area:.2} mm^2 (SRNPU 6.06)"
+    );
+    println!(
+        "paper vs measured: throughput 124.4 -> {our_tput:.1} Mpix/s \
+         (paper reports the 60 fps target; our peak corresponds to {:.1} fps)",
+        our_tput * 1e6 / (1920.0 * 1080.0)
+    );
+}

@@ -1,0 +1,74 @@
+//! E2 — regenerates **Table II** (buffer-size comparison), both from the
+//! closed-form equations (1)-(3) and from the simulator's *measured*
+//! high-water marks, which must agree.
+
+use sr_accel::analysis::{BufferBudget, BufferParams};
+use sr_accel::benchkit::Table;
+use sr_accel::config::AcceleratorConfig;
+use sr_accel::fusion::TiltedScheduler;
+use sr_accel::model::{QuantModel, Tensor};
+use sr_accel::util::Xoshiro256pp;
+
+fn main() {
+    let tilted = BufferBudget::tilted(&BufferParams::paper_tilted());
+    let classical =
+        BufferBudget::classical(&BufferParams::paper_classical());
+
+    let kb = |b: usize| format!("{:.2} KB", b as f64 / 1000.0);
+    let mut t = Table::new(
+        "Table II — comparison of the buffer size",
+        &["buffer", "tilted fusion", "classical fusion", "paper (tilted)"],
+    );
+    t.row(&["weight".into(), kb(tilted.weight), kb(classical.weight), "42.54 KB".into()]);
+    t.row(&["ping-pong".into(), kb(tilted.ping_pong_pair), kb(classical.ping_pong_pair), "26.88 KB".into()]);
+    t.row(&["overlap".into(), kb(tilted.overlap), "-".into(), "30.24 KB".into()]);
+    t.row(&["residual".into(), kb(tilted.residual), kb(classical.residual), "2.7 KB".into()]);
+    t.row(&["total".into(), kb(tilted.total()), kb(classical.total()), "102.36 KB".into()]);
+    t.print();
+
+    // exact-match assertions against the paper
+    assert_eq!(tilted.ping_pong_pair, 26_880);
+    assert_eq!(tilted.overlap, 30_240);
+    assert_eq!(tilted.residual, 2_700);
+    assert_eq!(tilted.total(), 102_360);
+    assert_eq!(classical.total(), 254_940);
+
+    // ---- measured: the simulator's provisioned/high-water bytes -----
+    let qm = QuantModel::test_model(7, 3, 28, 3, 0);
+    let acc = AcceleratorConfig::paper();
+    let band = {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut t = Tensor::new(60, 640, 3);
+        rng.fill_u8(&mut t.data);
+        t
+    };
+    let (_, stats) = TiltedScheduler::default().run_band(&band, &qm, &acc);
+    let mut m = Table::new(
+        "measured by the simulator (640-wide band, 8x60 tiles)",
+        &["buffer", "measured", "equation"],
+    );
+    m.row(&[
+        "ping-pong pair (high water)".into(),
+        format!("{} B", stats.peak_pingpong_bytes),
+        "26880 B".into(),
+    ]);
+    m.row(&[
+        "overlap (provisioned)".into(),
+        format!("{} B", stats.overlap_bytes),
+        "30240 B".into(),
+    ]);
+    m.row(&[
+        "residual (provisioned)".into(),
+        format!("{} B", stats.residual_bytes),
+        "2700 B".into(),
+    ]);
+    m.print();
+    assert!(stats.peak_pingpong_bytes <= 26_880);
+    assert_eq!(stats.overlap_bytes, 30_240);
+    assert_eq!(stats.residual_bytes, 2_700);
+    println!("\nSHAPE OK: measured buffers within the Table II budget; \
+              tilted total {:.2} KB vs classical {:.2} KB (-{:.0} %)",
+        tilted.total() as f64 / 1000.0,
+        classical.total() as f64 / 1000.0,
+        (1.0 - tilted.total() as f64 / classical.total() as f64) * 100.0);
+}

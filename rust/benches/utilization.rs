@@ -1,0 +1,76 @@
+//! E6 — the Section III.B claim: "an average of 87 % hardware
+//! utilization" across APBN's layers on the 28-PE-block arrangement.
+//! Per-layer and frame-average utilization from the cycle model, plus a
+//! cycle-exact spot check.
+
+use sr_accel::benchkit::Table;
+use sr_accel::config::AcceleratorConfig;
+use sr_accel::fusion::TiltedScheduler;
+use sr_accel::model::{QuantModel, Tensor};
+use sr_accel::sim::engine::{layer_cycles, EngineGeometry};
+use sr_accel::util::Xoshiro256pp;
+
+fn main() {
+    let geo = EngineGeometry::paper();
+    let channels = [3usize, 28, 28, 28, 28, 28, 28, 27];
+    let mut t = Table::new(
+        "PE utilization per APBN layer (60x8 tile, 28 PE blocks)",
+        &["layer", "cin -> cout", "cycles/tile", "utilization %"],
+    );
+    let mut ops = 0u64;
+    let mut slots = 0u64;
+    for (i, w) in channels.windows(2).enumerate() {
+        let c = layer_cycles(60, 8, w[0], w[1], &geo);
+        ops += c.mac_ops;
+        slots += c.mac_slots;
+        t.row(&[
+            format!("conv{}", i + 1),
+            format!("{} -> {}", w[0], w[1]),
+            format!("{}", c.cycles),
+            format!("{:.1}", 100.0 * c.mac_ops as f64 / c.mac_slots as f64),
+        ]);
+    }
+    let avg = ops as f64 / slots as f64;
+    t.row(&[
+        "average".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.1}", avg * 100.0),
+    ]);
+    t.print();
+    assert!((avg - 0.87).abs() < 0.01, "avg util {avg}");
+
+    // frame-level measurement through the tilted scheduler
+    let qm = QuantModel::test_model(7, 3, 28, 3, 0);
+    let acc = AcceleratorConfig::paper();
+    let frame = {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let mut t = Tensor::new(120, 320, 3);
+        rng.fill_u8(&mut t.data);
+        t
+    };
+    use sr_accel::fusion::FusionScheduler;
+    let res = TiltedScheduler::default().run_frame(&frame, &qm, &acc);
+    println!(
+        "\nframe-level measured utilization: {:.1} % (paper: 87 %)",
+        res.stats.utilization() * 100.0
+    );
+    assert!((res.stats.utilization() - 0.87).abs() < 0.02);
+
+    // the 87 % comes from the 3-channel first layer; a hypothetical
+    // 28-channel input would be ~100 % — the ablation the paper implies
+    let full: u64 = channels[1..]
+        .windows(2)
+        .map(|w| layer_cycles(60, 8, w[0], w[1], &geo).mac_ops)
+        .sum();
+    let full_slots: u64 = channels[1..]
+        .windows(2)
+        .map(|w| layer_cycles(60, 8, w[0], w[1], &geo).mac_slots)
+        .sum();
+    println!(
+        "inner-layers-only utilization: {:.1} % — the first-layer \
+         channel deficit is the whole gap",
+        100.0 * full as f64 / full_slots as f64
+    );
+    println!("SHAPE OK: 87 % average utilization reproduced");
+}

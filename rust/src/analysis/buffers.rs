@@ -1,0 +1,162 @@
+//! Buffer-size analysis — equations (1)-(3) of the paper, reproducing
+//! Table II exactly (decimal KB, as the paper uses).
+//!
+//! * eq (1): `M_p = R x C x max(Ch_i)` per ping-pong buffer;
+//! * eq (2): `M_o = L x R x 2 x max(Ch_i)` with `L = n_layers + 2`
+//!   (the queue depth of Section IV.A.2);
+//! * eq (3): `M_r = Ch_0 x R x (C + L)` with `L = n_layers` (the tilt
+//!   lag of the residual anchor).
+
+use crate::config::{AcceleratorConfig, ModelConfig};
+
+/// Inputs of the buffer equations.
+#[derive(Clone, Copy, Debug)]
+pub struct BufferParams {
+    /// Tile rows (R), 60 in the paper.
+    pub tile_rows: usize,
+    /// Tile columns (C): 8 tilted, 60 classical.
+    pub tile_cols: usize,
+    /// Conv layer count (7 for APBN).
+    pub n_layers: usize,
+    /// max(Ch_i) = 28.
+    pub max_ch: usize,
+    /// Ch_0 = 3.
+    pub ch0: usize,
+    /// int8 weight bytes + bias bytes (model-dependent).
+    pub weight_bytes: usize,
+}
+
+impl BufferParams {
+    pub fn paper_tilted() -> Self {
+        Self {
+            tile_rows: 60,
+            tile_cols: 8,
+            n_layers: 7,
+            max_ch: 28,
+            ch0: 3,
+            weight_bytes: 42_540, // the paper's own Table II weight row
+        }
+    }
+
+    pub fn paper_classical() -> Self {
+        Self {
+            tile_cols: 60,
+            ..Self::paper_tilted()
+        }
+    }
+
+    pub fn from_config(
+        acc: &AcceleratorConfig,
+        model: &ModelConfig,
+        weight_bytes: usize,
+    ) -> Self {
+        Self {
+            tile_rows: acc.tile_rows,
+            tile_cols: acc.tile_cols,
+            n_layers: model.n_layers(),
+            max_ch: model.max_channels(),
+            ch0: model.channels[0],
+            weight_bytes,
+        }
+    }
+}
+
+/// One design's buffer budget (bytes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BufferBudget {
+    pub weight: usize,
+    pub ping_pong_pair: usize,
+    pub overlap: usize,
+    pub residual: usize,
+}
+
+impl BufferBudget {
+    /// Tilted layer fusion (the paper's design, Table II col 1).
+    pub fn tilted(p: &BufferParams) -> Self {
+        let mp = p.tile_rows * p.tile_cols * p.max_ch; // eq (1)
+        let mo = (p.n_layers + 2) * p.tile_rows * 2 * p.max_ch; // eq (2)
+        let mr = p.ch0 * p.tile_rows * (p.tile_cols + p.n_layers); // eq (3)
+        Self {
+            weight: p.weight_bytes,
+            ping_pong_pair: 2 * mp,
+            overlap: mo,
+            residual: mr,
+        }
+    }
+
+    /// Classical layer fusion (Table II col 2): wide tiles, no overlap
+    /// queue, residual buffer holds the whole tile width.
+    pub fn classical(p: &BufferParams) -> Self {
+        let mp = p.tile_rows * p.tile_cols * p.max_ch;
+        let mr = p.ch0 * p.tile_rows * p.tile_cols;
+        Self {
+            weight: p.weight_bytes,
+            ping_pong_pair: 2 * mp,
+            overlap: 0,
+            residual: mr,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.weight + self.ping_pong_pair + self.overlap + self.residual
+    }
+
+    /// Decimal kilobytes, the unit of Table II.
+    pub fn total_kb(&self) -> f64 {
+        self.total() as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_tilted_column() {
+        let b = BufferBudget::tilted(&BufferParams::paper_tilted());
+        assert_eq!(b.ping_pong_pair, 26_880); // 26.88 KB
+        assert_eq!(b.overlap, 30_240); // 30.24 KB
+        assert_eq!(b.residual, 2_700); // 2.7 KB
+        assert_eq!(b.total(), 102_360); // 102.36 KB
+        assert!((b.total_kb() - 102.36).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table2_classical_column() {
+        let b = BufferBudget::classical(&BufferParams::paper_classical());
+        assert_eq!(b.ping_pong_pair, 201_600); // 201.6 KB
+        assert_eq!(b.overlap, 0);
+        assert_eq!(b.residual, 10_800); // 10.8 KB
+        assert_eq!(b.total(), 254_940); // 254.94 KB
+    }
+
+    #[test]
+    fn tilted_saves_about_60_percent() {
+        let t = BufferBudget::tilted(&BufferParams::paper_tilted());
+        let c = BufferBudget::classical(&BufferParams::paper_classical());
+        let save = 1.0 - t.total() as f64 / c.total() as f64;
+        // the paper says "nearly 60 %"
+        assert!(save > 0.55 && save < 0.65, "saving {save}");
+    }
+
+    #[test]
+    fn extreme_single_column_tile() {
+        // Section IV.A.1: "the width of the tile can be a single column"
+        let mut p = BufferParams::paper_tilted();
+        p.tile_cols = 1;
+        let b = BufferBudget::tilted(&p);
+        assert_eq!(b.ping_pong_pair, 2 * 60 * 28);
+        assert!(b.total() < 80_000);
+    }
+
+    #[test]
+    fn measured_apbn_weight_bytes_close_to_paper() {
+        // our APBN export: 42 840 weights + 780 bias bytes = 43.62 KB
+        // vs the paper's 42.54 KB weight row (bias width unstated).
+        // Documented delta in EXPERIMENTS.md — keep it under 3 %.
+        let ours = 42_840 + 195 * 4;
+        let paper = 42_540;
+        let delta = (ours as f64 - paper as f64).abs() / paper as f64;
+        assert!(delta < 0.03, "weight budget drifted: {delta}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Analysis models (DESIGN.md S13): the closed-form buffer equations of
+//! Section IV.A, the gate-count/area model, the DRAM bandwidth model,
+//! and the Table I comparison generator.
+
+pub mod area;
+pub mod bandwidth;
+pub mod buffers;
+pub mod comparison;
+pub mod energy;
+
+pub use area::AreaModel;
+pub use bandwidth::{frame_traffic_bytes, required_gbps, TrafficBreakdown};
+pub use buffers::{BufferBudget, BufferParams};
+pub use comparison::{our_design_row, published_rows, DesignRow};
+pub use energy::{EnergyBreakdown, EnergyModel};

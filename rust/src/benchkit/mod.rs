@@ -1,0 +1,216 @@
+//! Benchmark harness (offline stand-in for criterion).
+//!
+//! Every `rust/benches/*.rs` target (`harness = false`) uses this: warmup
+//! + timed iterations, median/p95 reporting, and aligned table printing
+//! that regenerates the paper's tables (DESIGN.md §4).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One measured benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub summary_ns: Summary,
+}
+
+impl Measurement {
+    pub fn median(&self) -> Duration {
+        Duration::from_nanos(self.summary_ns.median() as u64)
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.summary_ns.median()),
+            fmt_ns(self.summary_ns.percentile(95.0)),
+            fmt_ns(self.summary_ns.mean()),
+            self.iters,
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if !ns.is_finite() {
+        "n/a".into()
+    } else if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner: measures wall time of `f` until `target_time` is spent
+/// or `max_iters` reached, after `warmup` unmeasured calls.
+pub struct Bencher {
+    pub warmup: usize,
+    pub target_time: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: 2,
+            target_time: Duration::from_millis(600),
+            min_iters: 5,
+            max_iters: 200,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: 1,
+            target_time: Duration::from_millis(150),
+            min_iters: 3,
+            max_iters: 50,
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        let mut iters = 0;
+        while iters < self.max_iters
+            && (iters < self.min_iters || start.elapsed() < self.target_time)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+            iters += 1;
+        }
+        Measurement {
+            name: name.to_string(),
+            iters,
+            summary_ns: Summary::from_samples(samples),
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value
+/// (std::hint::black_box stabilized — thin wrapper for call-site clarity).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Aligned-table printer used by the table benches to mirror the paper's
+/// layout. Column widths adapt to content.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncol)
+                .map(|i| format!(" {:<width$} ", cells[i], width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = format!("\n== {} ==\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_measures_something() {
+        let b = Bencher::quick();
+        let m = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert!(m.iters >= 3);
+        assert!(m.summary_ns.median() > 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(&["x".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("longer"));
+        assert_eq!(t.rows_len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("us"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with('s'));
+    }
+}

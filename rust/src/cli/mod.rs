@@ -1,0 +1,153 @@
+//! Command-line argument parser (offline stand-in for clap, DESIGN.md
+//! S5): subcommands, `--key value` / `--key=value` options, flags, and
+//! positional arguments, with generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`; the first non-option token is the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare `--` not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn opt_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.opt(name).unwrap_or(default)
+    }
+
+    /// Reject any option/flag not in the allowed set (catches typos).
+    pub fn ensure_known(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown option --{k} (allowed: {allowed:?})");
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+sr-accel — tilted-layer-fusion SR accelerator (ISCAS'22 reproduction)
+
+USAGE: sr-accel <COMMAND> [OPTIONS]
+
+COMMANDS:
+  serve      run the frame-serving pipeline on synthetic video
+             --engine int8|pjrt|sim  --frames N  --workers N
+             --queue-depth N  --width N --height N  --source-fps F
+  simulate   run one frame through a fusion schedule, print HW stats
+             --fusion tilted|classical|block|layer  --width N --height N
+             --tile-cols N --tile-rows N  --cycle-exact
+  upscale    upscale a PPM image: upscale in.ppm out.ppm [--engine ...]
+  analyze    print analysis tables: analyze buffers|bandwidth|area|table1
+  info       show artifact + weight metadata
+  help       this text
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("serve --frames 10 --engine=int8 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt("frames"), Some("10"));
+        assert_eq!(a.opt("engine"), Some("int8"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("upscale in.ppm out.ppm");
+        assert_eq!(a.positional, vec!["in.ppm", "out.ppm"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 5 --f 2.5");
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 5);
+        assert_eq!(a.opt_usize("missing", 7).unwrap(), 7);
+        assert!((a.opt_f64("f", 0.0).unwrap() - 2.5).abs() < 1e-12);
+        assert!(a.opt_usize("f", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("serve --typo 1");
+        assert!(a.ensure_known(&["frames"]).is_err());
+        assert!(a.ensure_known(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse("sim --cycle-exact --width 64");
+        assert!(a.flag("cycle-exact"));
+        assert_eq!(a.opt("width"), Some("64"));
+    }
+}

@@ -1,0 +1,69 @@
+//! Configuration system: a TOML-subset parser plus the typed configs of
+//! every subsystem (accelerator geometry, model, serving, simulation).
+//!
+//! The subset covers what real deployment configs need: `[section]`
+//! headers, `key = value` with string / integer / float / bool / arrays,
+//! comments and blank lines.  No external crates (offline build).
+
+mod parser;
+mod types;
+
+pub use parser::{parse_toml, ParseError, Value};
+pub use types::{
+    AcceleratorConfig, FidelityKind, FusionKind, ModelConfig, ServeConfig,
+    SimConfig, SystemConfig,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# paper configuration
+[accelerator]
+pe_blocks = 28
+macs_per_array = 15         # 5x3
+arrays_per_block = 3
+frequency_mhz = 600.0
+tile_rows = 60
+tile_cols = 8
+
+[model]
+channels = [3, 28, 28, 28, 28, 28, 28, 27]
+scale = 3
+
+[serve]
+workers = 2
+queue_depth = 4
+source = "synthetic"
+"#;
+
+    #[test]
+    fn parses_paper_config() {
+        let v = parse_toml(SAMPLE).unwrap();
+        assert_eq!(v.get_i64("accelerator.pe_blocks"), Some(28));
+        assert_eq!(v.get_f64("accelerator.frequency_mhz"), Some(600.0));
+        assert_eq!(
+            v.get_array("model.channels").unwrap().len(),
+            8
+        );
+        assert_eq!(v.get_str("serve.source"), Some("synthetic"));
+    }
+
+    #[test]
+    fn typed_config_from_toml() {
+        let sys = SystemConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(sys.accelerator.pe_blocks, 28);
+        assert_eq!(sys.model.channels, vec![3, 28, 28, 28, 28, 28, 28, 27]);
+        assert_eq!(sys.serve.workers, 2);
+    }
+
+    #[test]
+    fn defaults_reproduce_paper() {
+        let a = AcceleratorConfig::paper();
+        assert_eq!(a.total_macs(), 1260);
+        assert_eq!(a.tile_rows, 60);
+        assert_eq!(a.tile_cols, 8);
+        assert!((a.frequency_mhz - 600.0).abs() < 1e-9);
+    }
+}

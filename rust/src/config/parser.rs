@@ -1,0 +1,259 @@
+//! TOML-subset parser: sections, scalars, arrays, comments.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    /// The root (or a section) — a map of dotted keys.
+    Table(BTreeMap<String, Value>),
+}
+
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Value {
+    fn table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Look up a dotted path like `"accelerator.pe_blocks"`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.table()?.get(part)?;
+        }
+        Some(cur)
+    }
+
+    pub fn get_i64(&self, path: &str) -> Option<i64> {
+        match self.get(path)? {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        match self.get(path)? {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        match self.get(path)? {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        match self.get(path)? {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_array(&self, path: &str) -> Option<&[Value]> {
+        match self.get(path)? {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn get_i64_array(&self, path: &str) -> Option<Vec<i64>> {
+        self.get_array(path)?
+            .iter()
+            .map(|v| match v {
+                Value::Int(i) => Some(*i),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Parse a scalar or array token.
+fn parse_value(s: &str, line: usize) -> Result<Value, ParseError> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(err(line, "empty value"));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?;
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            // split on commas not inside strings (strings may not
+            // contain commas in this subset — documented limitation)
+            for part in inner.split(',') {
+                if part.trim().is_empty() {
+                    continue; // trailing comma
+                }
+                items.push(parse_value(part, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    if let Some(q) = s.strip_prefix('"') {
+        let q = q
+            .strip_suffix('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        return Ok(Value::Str(q.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line, format!("cannot parse value: {s:?}")))
+}
+
+/// Strip a trailing comment, respecting string quoting.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a TOML-subset document into a nested [`Value::Table`].
+pub fn parse_toml(text: &str) -> Result<Value, ParseError> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(h) = line.strip_prefix('[') {
+            let h = h
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if h.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = h.split('.').map(|s| s.trim().to_string()).collect();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, "expected key = value"))?;
+        let key = k.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let val = parse_value(v, lineno)?;
+        // descend/create section tables
+        let mut cur = &mut root;
+        for part in &section {
+            cur = match cur
+                .entry(part.clone())
+                .or_insert_with(|| Value::Table(BTreeMap::new()))
+            {
+                Value::Table(t) => t,
+                _ => return Err(err(lineno, "section collides with key")),
+            };
+        }
+        if cur.insert(key.to_string(), val).is_some() {
+            return Err(err(lineno, format!("duplicate key {key:?}")));
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let v = parse_toml("a = 1\nb = 2.5\nc = \"x\"\nd = true\n").unwrap();
+        assert_eq!(v.get_i64("a"), Some(1));
+        assert_eq!(v.get_f64("b"), Some(2.5));
+        assert_eq!(v.get_str("c"), Some("x"));
+        assert_eq!(v.get_bool("d"), Some(true));
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let v = parse_toml("a = 3").unwrap();
+        assert_eq!(v.get_f64("a"), Some(3.0));
+    }
+
+    #[test]
+    fn arrays_with_trailing_comma() {
+        let v = parse_toml("xs = [1, 2, 3,]").unwrap();
+        assert_eq!(v.get_i64_array("xs").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn nested_sections() {
+        let v = parse_toml("[a.b]\nc = 7").unwrap();
+        assert_eq!(v.get_i64("a.b.c"), Some(7));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let v = parse_toml("a = \"x#y\"  # trailing\n").unwrap();
+        assert_eq!(v.get_str("a"), Some("x#y"));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse_toml("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_lines_report_lineno() {
+        let e = parse_toml("a = 1\noops").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn empty_array() {
+        let v = parse_toml("xs = []").unwrap();
+        assert!(v.get_array("xs").unwrap().is_empty());
+    }
+}

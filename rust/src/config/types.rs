@@ -1,0 +1,320 @@
+//! Typed configuration structs with the paper's numbers as defaults.
+
+use super::parser::{parse_toml, ParseError, Value};
+
+/// Accelerator geometry (Section III of the paper).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AcceleratorConfig {
+    /// 28 PE blocks — one per input channel of the widest layer.
+    pub pe_blocks: usize,
+    /// 3 PE arrays per block — one per 3x3 weight column.
+    pub arrays_per_block: usize,
+    /// 5x3 MACs per array; 5 = output column segment height.
+    pub macs_per_array: usize,
+    /// Output pixels produced per array per cycle (the "5" in 5x3).
+    pub seg_height: usize,
+    /// Clock frequency, MHz (600 in the paper).
+    pub frequency_mhz: f64,
+    /// Tile geometry: R rows x C columns (60 x 8 in the paper).
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+    /// Accumulator pipeline depth (2-stage in the paper).
+    pub accumulator_stages: usize,
+    /// DRAM peak bandwidth available, GB/s (DDR2-ish per the paper).
+    pub dram_gbps: f64,
+    /// Cycles of latency for a ping-pong buffer role swap.
+    pub buffer_swap_cycles: u64,
+}
+
+impl AcceleratorConfig {
+    /// The exact design point of the paper.
+    pub fn paper() -> Self {
+        Self {
+            pe_blocks: 28,
+            arrays_per_block: 3,
+            macs_per_array: 15,
+            seg_height: 5,
+            frequency_mhz: 600.0,
+            tile_rows: 60,
+            tile_cols: 8,
+            accumulator_stages: 2,
+            dram_gbps: 4.264, // DDR2-533 x 8B — "even DDR2 can work well"
+            buffer_swap_cycles: 1,
+        }
+    }
+
+    pub fn total_macs(&self) -> usize {
+        self.pe_blocks * self.arrays_per_block * self.macs_per_array
+    }
+
+    /// Peak MAC throughput in GMAC/s.
+    pub fn peak_gmacs(&self) -> f64 {
+        self.total_macs() as f64 * self.frequency_mhz * 1e6 / 1e9
+    }
+}
+
+/// Model description (APBN of the paper by default).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub channels: Vec<usize>,
+    pub scale: usize,
+}
+
+impl ModelConfig {
+    pub fn apbn() -> Self {
+        Self {
+            channels: vec![3, 28, 28, 28, 28, 28, 28, 27],
+            scale: 3,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.channels.len() - 1
+    }
+
+    pub fn max_channels(&self) -> usize {
+        *self.channels.iter().max().unwrap_or(&0)
+    }
+
+    /// MACs per LR pixel (42 840 for APBN-7).
+    pub fn macs_per_lr_pixel(&self) -> u64 {
+        self.channels
+            .windows(2)
+            .map(|w| 9 * w[0] as u64 * w[1] as u64)
+            .sum()
+    }
+
+    /// int8 weight bytes (42 840 for APBN-7).
+    pub fn weight_bytes(&self) -> u64 {
+        self.channels
+            .windows(2)
+            .map(|w| 9 * w[0] as u64 * w[1] as u64)
+            .sum()
+    }
+}
+
+/// Which fusion schedule to run (Section II + baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusionKind {
+    /// The paper's contribution.
+    Tilted,
+    /// Alwani-style fused layers with stored rectangular halos [14].
+    Classical,
+    /// Block convolution: halos discarded, information lost [15].
+    BlockConv,
+    /// No fusion: every intermediate goes to DRAM [11][12].
+    LayerByLayer,
+}
+
+impl FusionKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "tilted" => Self::Tilted,
+            "classical" => Self::Classical,
+            "block" | "block-conv" => Self::BlockConv,
+            "layer" | "layer-by-layer" => Self::LayerByLayer,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Tilted => "tilted",
+            Self::Classical => "classical",
+            Self::BlockConv => "block-conv",
+            Self::LayerByLayer => "layer-by-layer",
+        }
+    }
+
+    pub const ALL: [FusionKind; 4] = [
+        Self::Tilted,
+        Self::Classical,
+        Self::BlockConv,
+        Self::LayerByLayer,
+    ];
+}
+
+/// Simulator fidelity (DESIGN.md §6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FidelityKind {
+    /// Per-cycle PE-plane stepping; bit-exact values + exact cycles.
+    CycleExact,
+    /// Closed-form cycle accounting + vectorized int8 conv.
+    Analytic,
+}
+
+/// Simulation run parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimConfig {
+    pub fusion: FusionKind,
+    pub fidelity: FidelityKind,
+    pub frame_width: usize,
+    pub frame_height: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            fusion: FusionKind::Tilted,
+            fidelity: FidelityKind::Analytic,
+            frame_width: 640,
+            frame_height: 360,
+        }
+    }
+}
+
+/// Serving pipeline parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub queue_depth: usize,
+    pub frames: usize,
+    pub source: String,
+    pub engine: String,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: 1,
+            queue_depth: 4,
+            frames: 30,
+            source: "synthetic".into(),
+            engine: "int8".into(),
+        }
+    }
+}
+
+/// Top-level config aggregating all subsystems.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    pub accelerator: AcceleratorConfig,
+    pub model: ModelConfig,
+    pub sim: SimConfig,
+    pub serve: ServeConfig,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            accelerator: AcceleratorConfig::paper(),
+            model: ModelConfig::apbn(),
+            sim: SimConfig::default(),
+            serve: ServeConfig::default(),
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Parse from TOML text; missing keys fall back to paper defaults.
+    pub fn from_toml(text: &str) -> Result<Self, ParseError> {
+        let v = parse_toml(text)?;
+        let mut cfg = SystemConfig::default();
+        apply(&mut cfg, &v)?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::from_toml(&text)?)
+    }
+}
+
+fn apply(cfg: &mut SystemConfig, v: &Value) -> Result<(), ParseError> {
+    let a = &mut cfg.accelerator;
+    if let Some(x) = v.get_i64("accelerator.pe_blocks") {
+        a.pe_blocks = x as usize;
+    }
+    if let Some(x) = v.get_i64("accelerator.arrays_per_block") {
+        a.arrays_per_block = x as usize;
+    }
+    if let Some(x) = v.get_i64("accelerator.macs_per_array") {
+        a.macs_per_array = x as usize;
+    }
+    if let Some(x) = v.get_i64("accelerator.seg_height") {
+        a.seg_height = x as usize;
+    }
+    if let Some(x) = v.get_f64("accelerator.frequency_mhz") {
+        a.frequency_mhz = x;
+    }
+    if let Some(x) = v.get_i64("accelerator.tile_rows") {
+        a.tile_rows = x as usize;
+    }
+    if let Some(x) = v.get_i64("accelerator.tile_cols") {
+        a.tile_cols = x as usize;
+    }
+    if let Some(x) = v.get_f64("accelerator.dram_gbps") {
+        a.dram_gbps = x;
+    }
+    if let Some(xs) = v.get_i64_array("model.channels") {
+        cfg.model.channels = xs.into_iter().map(|x| x as usize).collect();
+    }
+    if let Some(x) = v.get_i64("model.scale") {
+        cfg.model.scale = x as usize;
+    }
+    if let Some(s) = v.get_str("sim.fusion") {
+        cfg.sim.fusion = FusionKind::parse(s).ok_or(ParseError {
+            line: 0,
+            msg: format!("unknown fusion kind {s:?}"),
+        })?;
+    }
+    if let Some(x) = v.get_i64("sim.frame_width") {
+        cfg.sim.frame_width = x as usize;
+    }
+    if let Some(x) = v.get_i64("sim.frame_height") {
+        cfg.sim.frame_height = x as usize;
+    }
+    if let Some(x) = v.get_i64("serve.workers") {
+        cfg.serve.workers = x as usize;
+    }
+    if let Some(x) = v.get_i64("serve.queue_depth") {
+        cfg.serve.queue_depth = x as usize;
+    }
+    if let Some(x) = v.get_i64("serve.frames") {
+        cfg.serve.frames = x as usize;
+    }
+    if let Some(s) = v.get_str("serve.source") {
+        cfg.serve.source = s.to_string();
+    }
+    if let Some(s) = v.get_str("serve.engine") {
+        cfg.serve.engine = s.to_string();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_macs_and_peak() {
+        let a = AcceleratorConfig::paper();
+        assert_eq!(a.total_macs(), 1260);
+        assert!((a.peak_gmacs() - 756.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn apbn_macs_per_pixel() {
+        assert_eq!(ModelConfig::apbn().macs_per_lr_pixel(), 42_840);
+    }
+
+    #[test]
+    fn fusion_kind_roundtrip() {
+        for k in FusionKind::ALL {
+            assert_eq!(FusionKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FusionKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn unknown_fusion_is_error() {
+        assert!(SystemConfig::from_toml("[sim]\nfusion = \"bogus\"").is_err());
+    }
+
+    #[test]
+    fn partial_toml_keeps_defaults() {
+        let c = SystemConfig::from_toml("[accelerator]\npe_blocks = 14").unwrap();
+        assert_eq!(c.accelerator.pe_blocks, 14);
+        assert_eq!(c.accelerator.tile_rows, 60); // default kept
+    }
+}

@@ -1,0 +1,248 @@
+//! Upscaling engines behind the serving pipeline.
+//!
+//! * [`Int8Engine`] — the bit-exact integer datapath (the silicon's
+//!   arithmetic) running natively; the production CPU engine.
+//! * [`PjrtEngine`] — the AOT-compiled JAX/Pallas artifact executed via
+//!   the PJRT CPU client (float datapath).
+//! * [`SimEngine`] — the cycle-accounting tilted-fusion simulator; slow,
+//!   but returns hardware statistics with every frame.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::config::AcceleratorConfig;
+use crate::fusion::{FusionScheduler, TiltedScheduler};
+use crate::image::ImageU8;
+use crate::model::{QuantModel, Tensor};
+use crate::reference;
+use crate::runtime::{artifacts_dir, Executor, Manifest};
+use crate::sim::RunStats;
+
+/// A frame upscaler. Engines are constructed *inside* their worker
+/// thread (the PJRT client is not `Send`), so the trait itself does not
+/// require `Send` — see [`EngineFactory`].
+pub trait Engine {
+    fn upscale(&mut self, lr: &ImageU8) -> Result<ImageU8>;
+    fn name(&self) -> &'static str;
+    /// Hardware stats of the last frame, if the engine models them.
+    fn last_stats(&self) -> Option<RunStats> {
+        None
+    }
+}
+
+/// Deferred engine constructor, sendable into a worker thread.
+pub type EngineFactory =
+    Box<dyn FnOnce() -> Result<Box<dyn Engine>> + Send>;
+
+/// Engine selector for configs/CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Int8,
+    Pjrt,
+    Sim,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "int8" => Self::Int8,
+            "pjrt" => Self::Pjrt,
+            "sim" => Self::Sim,
+            _ => return None,
+        })
+    }
+}
+
+/// Bit-exact integer engine (the chip's arithmetic on CPU).
+pub struct Int8Engine {
+    qm: QuantModel,
+}
+
+impl Int8Engine {
+    pub fn new(qm: QuantModel) -> Self {
+        Self { qm }
+    }
+
+    pub fn from_artifacts() -> Result<Self> {
+        let path = artifacts_dir().join("weights.apbnw");
+        Ok(Self::new(crate::model::load_apbnw(&path)?))
+    }
+
+    pub fn model(&self) -> &QuantModel {
+        &self.qm
+    }
+}
+
+impl Engine for Int8Engine {
+    fn upscale(&mut self, lr: &ImageU8) -> Result<ImageU8> {
+        Ok(reference::upscale(lr, &self.qm))
+    }
+
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+}
+
+/// PJRT engine running an AOT artifact (float datapath).
+pub struct PjrtEngine {
+    exe: Executor,
+}
+
+impl PjrtEngine {
+    /// Load a named artifact (e.g. `"apbn_full.hlo.txt"`).
+    pub fn from_artifact(name: &str) -> Result<Self> {
+        let dir = artifacts_dir();
+        let manifest = Manifest::load(&dir)?;
+        let (in_shape, out_shape) = manifest
+            .shapes(name)
+            .with_context(|| format!("{name} not in manifest"))?;
+        let exe = Executor::load(&dir.join(name), in_shape, out_shape)?;
+        Ok(Self { exe })
+    }
+
+    pub fn in_shape(&self) -> (usize, usize, usize) {
+        self.exe.in_shape
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn upscale(&mut self, lr: &ImageU8) -> Result<ImageU8> {
+        let out = self.exe.run(&lr.to_f32())?;
+        Ok(out.to_u8())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Simulator engine: tilted fusion with full hardware accounting.
+pub struct SimEngine {
+    qm: QuantModel,
+    cfg: AcceleratorConfig,
+    sched: TiltedScheduler,
+    last: Option<RunStats>,
+}
+
+impl SimEngine {
+    pub fn new(qm: QuantModel, cfg: AcceleratorConfig) -> Self {
+        Self {
+            qm,
+            cfg,
+            sched: TiltedScheduler::default(),
+            last: None,
+        }
+    }
+
+    pub fn from_artifacts(cfg: AcceleratorConfig) -> Result<Self> {
+        let path = artifacts_dir().join("weights.apbnw");
+        Ok(Self::new(crate::model::load_apbnw(&path)?, cfg))
+    }
+}
+
+impl Engine for SimEngine {
+    fn upscale(&mut self, lr: &ImageU8) -> Result<ImageU8> {
+        let t = Tensor::from_vec(lr.h, lr.w, lr.c, lr.data.clone());
+        let res = self.sched.run_frame(&t, &self.qm, &self.cfg);
+        self.last = Some(res.stats);
+        Ok(ImageU8::from_vec(
+            res.hr.h,
+            res.hr.w,
+            res.hr.c,
+            res.hr.data,
+        ))
+    }
+
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn last_stats(&self) -> Option<RunStats> {
+        self.last.clone()
+    }
+}
+
+/// Build an engine by kind; `artifact` lets callers pick AOT modules.
+pub fn build_engine(
+    kind: EngineKind,
+    cfg: &AcceleratorConfig,
+    artifact: Option<&Path>,
+) -> Result<Box<dyn Engine>> {
+    Ok(match kind {
+        EngineKind::Int8 => Box::new(Int8Engine::from_artifacts()?),
+        EngineKind::Pjrt => {
+            let name = artifact
+                .and_then(|p| p.file_name())
+                .and_then(|n| n.to_str())
+                .unwrap_or("apbn_full.hlo.txt");
+            Box::new(PjrtEngine::from_artifact(name)?)
+        }
+        EngineKind::Sim => {
+            Box::new(SimEngine::from_artifacts(cfg.clone())?)
+        }
+    })
+}
+
+/// A factory that builds the engine lazily inside the worker thread.
+pub fn engine_factory(
+    kind: EngineKind,
+    cfg: &AcceleratorConfig,
+    artifact: Option<&Path>,
+) -> EngineFactory {
+    let cfg = cfg.clone();
+    let artifact = artifact.map(|p| p.to_path_buf());
+    Box::new(move || build_engine(kind, &cfg, artifact.as_deref()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QuantModel;
+    use crate::util::Xoshiro256pp;
+
+    fn rand_img(h: usize, w: usize, seed: u64) -> ImageU8 {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut img = ImageU8::new(h, w, 3);
+        rng.fill_u8(&mut img.data);
+        img
+    }
+
+    #[test]
+    fn int8_engine_matches_reference() {
+        let qm = QuantModel::test_model(3, 3, 6, 3, 1);
+        let mut eng = Int8Engine::new(qm.clone());
+        let lr = rand_img(6, 8, 2);
+        let hr = eng.upscale(&lr).unwrap();
+        let want = reference::upscale(&lr, &qm);
+        assert_eq!(hr, want);
+        assert_eq!(eng.name(), "int8");
+    }
+
+    #[test]
+    fn sim_engine_matches_int8_within_bands() {
+        // one band: sim == reference == int8 engine
+        let qm = QuantModel::test_model(2, 3, 4, 3, 5);
+        let cfg = AcceleratorConfig {
+            tile_rows: 8,
+            tile_cols: 4,
+            ..AcceleratorConfig::paper()
+        };
+        let lr = rand_img(8, 12, 3);
+        let mut sim = SimEngine::new(qm.clone(), cfg);
+        let mut int8 = Int8Engine::new(qm);
+        assert_eq!(
+            sim.upscale(&lr).unwrap(),
+            int8.upscale(&lr).unwrap()
+        );
+        assert!(sim.last_stats().is_some());
+    }
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("int8"), Some(EngineKind::Int8));
+        assert_eq!(EngineKind::parse("pjrt"), Some(EngineKind::Pjrt));
+        assert_eq!(EngineKind::parse("sim"), Some(EngineKind::Sim));
+        assert_eq!(EngineKind::parse("x"), None);
+    }
+}

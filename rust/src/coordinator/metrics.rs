@@ -1,0 +1,118 @@
+//! Pipeline metrics: per-frame records and the aggregated report.
+
+use std::time::Duration;
+
+use crate::util::stats::Summary;
+
+/// Timing of one frame through the pipeline.
+#[derive(Clone, Debug)]
+pub struct FrameRecord {
+    pub index: usize,
+    /// Time from source emit to completion.
+    pub latency: Duration,
+    /// Time spent waiting in the input queue.
+    pub queue_wait: Duration,
+    /// Pure engine time.
+    pub compute: Duration,
+}
+
+/// Aggregated serving report (printed by `sr-accel serve` and logged in
+/// EXPERIMENTS.md E7).
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    pub frames: usize,
+    pub wall: Duration,
+    pub fps: f64,
+    pub latency_ms: Summary,
+    pub queue_wait_ms: Summary,
+    pub compute_ms: Summary,
+    pub engine: String,
+    pub workers: usize,
+    /// HR megapixels per second of wall time.
+    pub mpix_per_s: f64,
+}
+
+impl PipelineReport {
+    pub fn from_records(
+        records: &[FrameRecord],
+        wall: Duration,
+        engine: &str,
+        workers: usize,
+        hr_pixels_per_frame: usize,
+    ) -> Self {
+        let to_ms =
+            |d: &Duration| d.as_secs_f64() * 1e3;
+        let fps = records.len() as f64 / wall.as_secs_f64().max(1e-12);
+        Self {
+            frames: records.len(),
+            wall,
+            fps,
+            latency_ms: Summary::from_samples(
+                records.iter().map(|r| to_ms(&r.latency)).collect(),
+            ),
+            queue_wait_ms: Summary::from_samples(
+                records.iter().map(|r| to_ms(&r.queue_wait)).collect(),
+            ),
+            compute_ms: Summary::from_samples(
+                records.iter().map(|r| to_ms(&r.compute)).collect(),
+            ),
+            engine: engine.to_string(),
+            workers,
+            mpix_per_s: fps * hr_pixels_per_frame as f64 / 1e6,
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "engine={} workers={} frames={} wall={:.2}s\n\
+             throughput: {:.2} fps  ({:.1} HR Mpix/s)\n\
+             latency  ms: p50 {:.2}  p95 {:.2}  max {:.2}\n\
+             queue-wait ms: p50 {:.2}  p95 {:.2}\n\
+             compute  ms: p50 {:.2}  p95 {:.2}",
+            self.engine,
+            self.workers,
+            self.frames,
+            self.wall.as_secs_f64(),
+            self.fps,
+            self.mpix_per_s,
+            self.latency_ms.median(),
+            self.latency_ms.percentile(95.0),
+            self.latency_ms.max(),
+            self.queue_wait_ms.median(),
+            self.queue_wait_ms.percentile(95.0),
+            self.compute_ms.median(),
+            self.compute_ms.percentile(95.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: usize, ms: u64) -> FrameRecord {
+        FrameRecord {
+            index: i,
+            latency: Duration::from_millis(ms),
+            queue_wait: Duration::from_millis(ms / 4),
+            compute: Duration::from_millis(ms / 2),
+        }
+    }
+
+    #[test]
+    fn report_aggregates() {
+        let records: Vec<_> = (0..10).map(|i| rec(i, 10 + i as u64)).collect();
+        let rep = PipelineReport::from_records(
+            &records,
+            Duration::from_secs(1),
+            "int8",
+            2,
+            1920 * 1080,
+        );
+        assert_eq!(rep.frames, 10);
+        assert!((rep.fps - 10.0).abs() < 1e-9);
+        assert!(rep.latency_ms.median() >= 10.0);
+        assert!((rep.mpix_per_s - 20.736).abs() < 1e-3);
+        assert!(rep.render().contains("throughput"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Serving coordinator (DESIGN.md S14): the Layer-3 "request path".
+//!
+//! A frame pipeline with bounded-channel backpressure, mirroring how the
+//! chip sits in a camera/display pipeline: a source produces LR frames
+//! at a target rate, worker threads upscale them through a pluggable
+//! [`Engine`], and the sink restores order and records latency.
+//!
+//! No tokio in this offline environment — std threads + `sync_channel`
+//! provide the same bounded-queue semantics (documented substitution,
+//! DESIGN.md §3).
+
+pub mod engine;
+pub mod metrics;
+pub mod pipeline;
+
+pub use engine::{
+    Engine, EngineFactory, EngineKind, Int8Engine, PjrtEngine, SimEngine,
+};
+pub use metrics::{FrameRecord, PipelineReport};
+pub use pipeline::{run_pipeline, PipelineConfig};

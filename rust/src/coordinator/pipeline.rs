@@ -1,0 +1,262 @@
+//! The threaded serving pipeline: source -> bounded queue -> workers ->
+//! reordering sink.
+//!
+//! Backpressure: `sync_channel(queue_depth)` blocks the source when the
+//! workers fall behind — the chip-side analog is the camera stalling on
+//! a full line buffer.  Frame order is restored at the sink so the
+//! output stream is display-ready.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::image::{ImageU8, SceneGenerator};
+
+use super::engine::EngineFactory;
+use super::metrics::{FrameRecord, PipelineReport};
+
+/// Pipeline parameters.
+pub struct PipelineConfig {
+    pub frames: usize,
+    pub queue_depth: usize,
+    pub workers: usize,
+    /// LR geometry of the synthetic source.
+    pub lr_w: usize,
+    pub lr_h: usize,
+    pub seed: u64,
+    /// Optional pacing: source emits at this fps (None = as fast as
+    /// the pipeline drains).
+    pub source_fps: Option<f64>,
+    /// Upscale factor (for the Mpix/s report).
+    pub scale: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            frames: 30,
+            queue_depth: 4,
+            workers: 1,
+            lr_w: 640,
+            lr_h: 360,
+            seed: 7,
+            source_fps: None,
+            scale: 3,
+        }
+    }
+}
+
+struct WorkItem {
+    index: usize,
+    emitted: Instant,
+    dequeued: Option<Instant>,
+    frame: ImageU8,
+}
+
+struct DoneItem {
+    index: usize,
+    record: FrameRecord,
+    hr: ImageU8,
+}
+
+/// Run the pipeline; `factories` supplies one engine constructor per
+/// worker — each engine is built *inside* its thread (PJRT clients are
+/// not `Send`).
+pub fn run_pipeline(
+    cfg: &PipelineConfig,
+    factories: Vec<EngineFactory>,
+    mut on_frame: impl FnMut(usize, &ImageU8),
+) -> Result<PipelineReport> {
+    assert_eq!(factories.len(), cfg.workers, "one engine per worker");
+    let (work_tx, work_rx) = sync_channel::<WorkItem>(cfg.queue_depth);
+    let work_rx = Arc::new(Mutex::new(work_rx));
+    let (done_tx, done_rx) = sync_channel::<DoneItem>(cfg.queue_depth * 2);
+
+    let engine_name = Arc::new(Mutex::new(String::new()));
+    let t0 = Instant::now();
+
+    // --- workers -----------------------------------------------------
+    let mut handles = Vec::new();
+    for factory in factories {
+        let rx = Arc::clone(&work_rx);
+        let tx = done_tx.clone();
+        let name_slot = Arc::clone(&engine_name);
+        handles.push(thread::spawn(move || -> Result<()> {
+            let mut engine = factory()?;
+            *name_slot.lock().unwrap() = engine.name().to_string();
+            loop {
+                let item = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(mut item) = item else {
+                    return Ok(()); // source closed
+                };
+                let dq = Instant::now();
+                item.dequeued = Some(dq);
+                let hr = engine.upscale(&item.frame)?;
+                let now = Instant::now();
+                let record = FrameRecord {
+                    index: item.index,
+                    latency: now - item.emitted,
+                    queue_wait: dq - item.emitted,
+                    compute: now - dq,
+                };
+                if tx
+                    .send(DoneItem {
+                        index: item.index,
+                        record,
+                        hr,
+                    })
+                    .is_err()
+                {
+                    return Ok(());
+                }
+            }
+        }));
+    }
+    drop(done_tx);
+
+    // --- source (this thread feeds; a collector thread drains) --------
+    let frames = cfg.frames;
+    let collector = thread::spawn(move || {
+        let mut records = Vec::with_capacity(frames);
+        let mut pending: BTreeMap<usize, DoneItem> = BTreeMap::new();
+        let mut next = 0usize;
+        let mut ordered: Vec<(usize, ImageU8)> = Vec::new();
+        for done in done_rx.iter() {
+            pending.insert(done.index, done);
+            while let Some(d) = pending.remove(&next) {
+                records.push(d.record);
+                ordered.push((d.index, d.hr));
+                next += 1;
+            }
+        }
+        (records, ordered)
+    });
+
+    let gen = SceneGenerator::new(cfg.lr_w, cfg.lr_h, cfg.seed);
+    let frame_interval = cfg
+        .source_fps
+        .map(|f| Duration::from_secs_f64(1.0 / f));
+    let mut next_emit = Instant::now();
+    for i in 0..cfg.frames {
+        if let Some(iv) = frame_interval {
+            let now = Instant::now();
+            if now < next_emit {
+                thread::sleep(next_emit - now);
+            }
+            next_emit += iv;
+        }
+        let frame = gen.frame(i);
+        work_tx
+            .send(WorkItem {
+                index: i,
+                emitted: Instant::now(),
+                dequeued: None,
+                frame,
+            })
+            .map_err(|_| anyhow::anyhow!("workers died"))?;
+    }
+    drop(work_tx);
+
+    for h in handles {
+        h.join().expect("worker panicked")?;
+    }
+    let (records, ordered) = collector.join().expect("collector panicked");
+    let wall = t0.elapsed();
+    for (i, hr) in &ordered {
+        on_frame(*i, hr);
+    }
+    let hr_px = cfg.lr_w * cfg.scale * cfg.lr_h * cfg.scale;
+    let name = engine_name.lock().unwrap().clone();
+    Ok(PipelineReport::from_records(
+        &records,
+        wall,
+        &name,
+        cfg.workers,
+        hr_px,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::Int8Engine;
+    use crate::model::QuantModel;
+
+    fn tiny_cfg(frames: usize, workers: usize) -> PipelineConfig {
+        PipelineConfig {
+            frames,
+            queue_depth: 2,
+            workers,
+            lr_w: 24,
+            lr_h: 18,
+            seed: 1,
+            source_fps: None,
+            scale: 3,
+        }
+    }
+
+    fn engines(n: usize) -> Vec<EngineFactory> {
+        (0..n)
+            .map(|_| {
+                Box::new(|| {
+                    Ok(Box::new(Int8Engine::new(QuantModel::test_model(
+                        2, 3, 4, 3, 9,
+                    )))
+                        as Box<dyn crate::coordinator::Engine>)
+                }) as EngineFactory
+            })
+            .collect()
+    }
+
+    #[test]
+    fn processes_all_frames_in_order() {
+        let cfg = tiny_cfg(8, 1);
+        let mut seen = Vec::new();
+        let rep = run_pipeline(&cfg, engines(1), |i, hr| {
+            assert_eq!((hr.h, hr.w), (54, 72));
+            seen.push(i);
+        })
+        .unwrap();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+        assert_eq!(rep.frames, 8);
+        assert!(rep.fps > 0.0);
+    }
+
+    #[test]
+    fn multi_worker_preserves_order() {
+        let cfg = tiny_cfg(12, 2);
+        let mut seen = Vec::new();
+        let rep = run_pipeline(&cfg, engines(2), |i, _| seen.push(i))
+            .unwrap();
+        assert_eq!(seen, (0..12).collect::<Vec<_>>());
+        assert_eq!(rep.workers, 2);
+    }
+
+    #[test]
+    fn paced_source_caps_fps() {
+        let cfg = PipelineConfig {
+            source_fps: Some(200.0),
+            ..tiny_cfg(10, 1)
+        };
+        let rep = run_pipeline(&cfg, engines(1), |_, _| {}).unwrap();
+        // 10 frames at 200 fps pacing -> at least ~45 ms of wall time
+        assert!(rep.wall >= Duration::from_millis(40), "{:?}", rep.wall);
+    }
+
+    #[test]
+    fn deterministic_output_frames() {
+        let cfg = tiny_cfg(3, 1);
+        let mut a = Vec::new();
+        run_pipeline(&cfg, engines(1), |_, hr| a.push(hr.clone())).unwrap();
+        let mut b = Vec::new();
+        run_pipeline(&cfg, engines(1), |_, hr| b.push(hr.clone())).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,239 @@
+//! Block convolution baseline (Li et al. [15]): fused rectangular tiles
+//! with **no** halo — every tile is zero-padded as if it were a whole
+//! image, so information is lost on all four tile edges (Fig. 1a).
+//!
+//! Cheap (no overlap storage, no recompute) but lossy: the HR output
+//! differs from the reference, increasingly so as tiles shrink — the
+//! effect `benches/fig1_boundary.rs` quantifies.
+
+use crate::config::{AcceleratorConfig, FusionKind};
+use crate::model::{QuantModel, Tensor};
+use crate::reference::{self, add_anchor_and_shuffle};
+use crate::sim::engine::{layer_cycles, EngineGeometry};
+use crate::sim::RunStats;
+
+use super::{base_frame_traffic, FrameResult, FusionScheduler};
+
+/// Fused tiles with discarded boundaries.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockConvScheduler {
+    pub tile_rows: usize,
+    pub tile_cols: usize,
+}
+
+impl Default for BlockConvScheduler {
+    fn default() -> Self {
+        Self {
+            tile_rows: 60,
+            tile_cols: 60,
+        }
+    }
+}
+
+impl BlockConvScheduler {
+    /// Fraction of LR pixels whose receptive field is truncated by tile
+    /// boundaries — the "area affected by information loss" of Fig. 1.
+    /// `halo` = network receptive-field radius (= n_layers for 3x3s).
+    pub fn affected_fraction(
+        frame_h: usize,
+        frame_w: usize,
+        tile_rows: usize,
+        tile_cols: usize,
+        halo: usize,
+    ) -> f64 {
+        let mut affected = 0usize;
+        let mut total = 0usize;
+        let mut ty = 0;
+        while ty < frame_h {
+            let th = tile_rows.min(frame_h - ty);
+            let mut tx = 0;
+            while tx < frame_w {
+                let tw = tile_cols.min(frame_w - tx);
+                for y in 0..th {
+                    for x in 0..tw {
+                        total += 1;
+                        // distance to the nearest *interior* tile edge
+                        // (frame borders are real borders, not loss)
+                        let d_top =
+                            if ty == 0 { usize::MAX } else { y };
+                        let d_bot = if ty + th == frame_h {
+                            usize::MAX
+                        } else {
+                            th - 1 - y
+                        };
+                        let d_left =
+                            if tx == 0 { usize::MAX } else { x };
+                        let d_right = if tx + tw == frame_w {
+                            usize::MAX
+                        } else {
+                            tw - 1 - x
+                        };
+                        let d =
+                            d_top.min(d_bot).min(d_left).min(d_right);
+                        if d < halo {
+                            affected += 1;
+                        }
+                    }
+                }
+                tx += tile_cols;
+            }
+            ty += tile_rows;
+        }
+        affected as f64 / total as f64
+    }
+}
+
+impl FusionScheduler for BlockConvScheduler {
+    fn run_frame(
+        &self,
+        frame: &Tensor<u8>,
+        qm: &QuantModel,
+        cfg: &AcceleratorConfig,
+    ) -> FrameResult {
+        let mut stats = RunStats::default();
+        base_frame_traffic(frame, qm, &mut stats);
+        let geo = EngineGeometry {
+            pe_blocks: cfg.pe_blocks,
+            macs_per_cycle: cfg.total_macs(),
+        };
+        let scale = qm.scale;
+        let mut hr: Tensor<u8> =
+            Tensor::new(frame.h * scale, frame.w * scale, frame.c);
+        let mut peak_ping = 0u64;
+
+        let mut ty = 0;
+        while ty < frame.h {
+            let th = self.tile_rows.min(frame.h - ty);
+            let mut tx = 0;
+            while tx < frame.w {
+                let tw = self.tile_cols.min(frame.w - tx);
+                stats.tiles += 1;
+                // the tile *is* the image: zero-padded SAME convs
+                let mut tile: Tensor<u8> = Tensor::new(th, tw, frame.c);
+                for y in 0..th {
+                    for x in 0..tw {
+                        for c in 0..frame.c {
+                            tile.set(y, x, c, frame.get(ty + y, tx + x, c));
+                        }
+                    }
+                }
+                for layer in &qm.layers {
+                    let cost =
+                        layer_cycles(th, tw, layer.cin, layer.cout, &geo);
+                    stats.compute_cycles +=
+                        cost.cycles + cfg.buffer_swap_cycles;
+                    stats.mac_ops += cost.mac_ops;
+                    stats.mac_slots += cost.mac_slots
+                        + cfg.buffer_swap_cycles * cfg.total_macs() as u64;
+                    peak_ping = peak_ping.max(
+                        (th * tw * (layer.cin + layer.cout)) as u64,
+                    );
+                }
+                let mut h = tile.clone();
+                for layer in &qm.layers[..qm.n_layers() - 1] {
+                    h = reference::conv3x3_relu(&h, layer);
+                }
+                let pre = reference::conv3x3_final(
+                    &h,
+                    qm.layers.last().unwrap(),
+                );
+                let hr_tile = add_anchor_and_shuffle(&pre, &tile, scale);
+                for y in 0..hr_tile.h {
+                    for x in 0..hr_tile.w {
+                        for c in 0..frame.c {
+                            hr.set(
+                                ty * scale + y,
+                                tx * scale + x,
+                                c,
+                                hr_tile.get(y, x, c),
+                            );
+                        }
+                    }
+                }
+                tx += self.tile_cols;
+            }
+            ty += self.tile_rows;
+        }
+        stats.peak_pingpong_bytes = peak_ping;
+        FrameResult { hr, stats }
+    }
+
+    fn kind(&self) -> FusionKind {
+        FusionKind::BlockConv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::image::psnr_u8;
+    use crate::image::ImageU8;
+    use crate::model::QuantModel;
+    use crate::reference;
+    use crate::util::Xoshiro256pp;
+
+    fn rand_frame(h: usize, w: usize, seed: u64) -> Tensor<u8> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut t = Tensor::new(h, w, 3);
+        rng.fill_u8(&mut t.data);
+        t
+    }
+
+    fn to_img(t: &Tensor<u8>) -> ImageU8 {
+        ImageU8::from_vec(t.h, t.w, t.c, t.data.clone())
+    }
+
+    #[test]
+    fn single_tile_is_exact() {
+        let qm = QuantModel::test_model(2, 3, 4, 3, 3);
+        let frame = rand_frame(8, 9, 1);
+        let sched = BlockConvScheduler {
+            tile_rows: 8,
+            tile_cols: 9,
+        };
+        let res =
+            sched.run_frame(&frame, &qm, &AcceleratorConfig::paper());
+        assert_eq!(
+            res.hr.data,
+            reference::forward_int(&frame, &qm).data
+        );
+    }
+
+    #[test]
+    fn small_tiles_lose_information() {
+        let qm = QuantModel::test_model(3, 3, 6, 3, 9);
+        let frame = rand_frame(16, 16, 2);
+        let res = BlockConvScheduler {
+            tile_rows: 4,
+            tile_cols: 4,
+        }
+        .run_frame(&frame, &qm, &AcceleratorConfig::paper());
+        let want = reference::forward_int(&frame, &qm);
+        assert_ne!(
+            res.hr.data, want.data,
+            "4x4 block conv should be lossy"
+        );
+        // but not garbage: still correlated with the exact output
+        // (random-noise input is the worst case for boundary loss)
+        let p = psnr_u8(&to_img(&res.hr), &to_img(&want));
+        assert!(p > 8.0, "block conv PSNR collapsed: {p}");
+    }
+
+    #[test]
+    fn affected_fraction_monotone_in_tile_size() {
+        let f8 = BlockConvScheduler::affected_fraction(360, 640, 8, 8, 7);
+        let f60 =
+            BlockConvScheduler::affected_fraction(360, 640, 60, 60, 7);
+        assert!(f8 > f60, "{f8} vs {f60}");
+        assert!(f8 > 0.9, "8x8 tiles with halo 7 nearly all affected");
+        assert!((0.0..=1.0).contains(&f60));
+    }
+
+    #[test]
+    fn affected_fraction_zero_for_whole_frame_tile() {
+        let f =
+            BlockConvScheduler::affected_fraction(60, 80, 60, 80, 7);
+        assert_eq!(f, 0.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Fusion schedulers (DESIGN.md S12): the paper's tilted layer fusion
+//! and the three baselines it is evaluated against.
+//!
+//! | scheduler        | paper ref | output                        |
+//! |------------------|-----------|-------------------------------|
+//! | [`TiltedScheduler`]       | Section II (this paper) | exact within bands |
+//! | [`ClassicalScheduler`]    | Alwani fused-layer [14] | exact (recompute halos) |
+//! | [`BlockConvScheduler`]    | block convolution [15]  | lossy at every tile edge |
+//! | [`LayerByLayerScheduler`] | [11]/[12] style         | exact, DRAM-heavy |
+//!
+//! Every scheduler consumes a uint8 LR frame and produces the uint8 HR
+//! frame plus [`RunStats`] (cycles, MAC utilization, DRAM/SRAM traffic,
+//! buffer footprints) — the raw material for Tables I/II, Fig. 1 and the
+//! DRAM-bandwidth experiment.
+
+pub mod block_conv;
+pub mod classical;
+pub mod layer_by_layer;
+pub mod overlap;
+pub mod tilted;
+
+pub use block_conv::BlockConvScheduler;
+pub use classical::ClassicalScheduler;
+pub use layer_by_layer::LayerByLayerScheduler;
+pub use overlap::OverlapQueue;
+pub use tilted::TiltedScheduler;
+
+use crate::config::{AcceleratorConfig, FusionKind};
+use crate::model::{QuantModel, Tensor};
+use crate::sim::RunStats;
+
+/// Result of running one LR frame through a scheduler.
+#[derive(Clone, Debug)]
+pub struct FrameResult {
+    pub hr: Tensor<u8>,
+    pub stats: RunStats,
+}
+
+/// A frame-level execution schedule on the simulated accelerator.
+pub trait FusionScheduler {
+    fn run_frame(
+        &self,
+        frame: &Tensor<u8>,
+        qm: &QuantModel,
+        cfg: &AcceleratorConfig,
+    ) -> FrameResult;
+
+    fn kind(&self) -> FusionKind;
+}
+
+/// Construct the scheduler for a [`FusionKind`].
+pub fn make_scheduler(kind: FusionKind) -> Box<dyn FusionScheduler> {
+    match kind {
+        FusionKind::Tilted => Box::new(TiltedScheduler::default()),
+        FusionKind::Classical => Box::new(ClassicalScheduler::default()),
+        FusionKind::BlockConv => Box::new(BlockConvScheduler::default()),
+        FusionKind::LayerByLayer => {
+            Box::new(LayerByLayerScheduler::default())
+        }
+    }
+}
+
+/// Shared per-frame DRAM accounting: every schedule reads the LR frame
+/// and the weights once and writes the HR frame once; schedulers add
+/// their own intermediate traffic on top.
+pub(crate) fn base_frame_traffic(
+    frame: &Tensor<u8>,
+    qm: &QuantModel,
+    stats: &mut RunStats,
+) {
+    stats.dram_read_bytes += frame.byte_len() as u64;
+    stats.dram_read_bytes +=
+        (qm.weight_bytes() + qm.bias_bytes()) as u64;
+    let scale = qm.scale;
+    stats.dram_write_bytes +=
+        (frame.h * scale * frame.w * scale * frame.c) as u64;
+}
+
+/// Split a frame height into bands of `rows` (last band may be short).
+pub(crate) fn band_ranges(h: usize, rows: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut y = 0;
+    while y < h {
+        out.push((y, (y + rows).min(h)));
+        y += rows;
+    }
+    out
+}
+
+/// Extract rows `[y0, y1)` of a tensor.
+pub(crate) fn band_of(frame: &Tensor<u8>, y0: usize, y1: usize) -> Tensor<u8> {
+    Tensor::from_vec(
+        y1 - y0,
+        frame.w,
+        frame.c,
+        frame.data[y0 * frame.w * frame.c..y1 * frame.w * frame.c].to_vec(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn band_ranges_cover_exactly() {
+        assert_eq!(band_ranges(360, 60), {
+            let mut v = Vec::new();
+            for i in 0..6 {
+                v.push((i * 60, (i + 1) * 60));
+            }
+            v
+        });
+        assert_eq!(band_ranges(70, 60), vec![(0, 60), (60, 70)]);
+        assert_eq!(band_ranges(5, 60), vec![(0, 5)]);
+    }
+
+    #[test]
+    fn make_scheduler_kinds() {
+        for k in FusionKind::ALL {
+            assert_eq!(make_scheduler(k).kind(), k);
+        }
+    }
+}

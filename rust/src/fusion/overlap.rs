@@ -1,0 +1,173 @@
+//! The overlap buffer: a queue-style addressed SRAM holding the two
+//! rightmost columns of each in-flight feature map (Section III.F).
+//!
+//! Entries are labelled `(tile, map)` so the scheduler's discipline —
+//! conv *k* of tile *t* consumes the front entry, which must be
+//! `(t-1, k-1)` — is asserted, not assumed.  Capacity is
+//! `(n_layers + 2)` entries of `rows * 2 * max_ch` bytes, the paper's
+//! eq. (2); the steady-state occupancy of L+1 proves the +2 is exactly
+//! the pipeline slack the paper provisions.
+
+use crate::sim::Sram;
+
+/// Label of a queue entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EntryLabel {
+    pub tile: usize,
+    /// Feature-map index: 0 = the LR input, k = output of conv k.
+    pub map: usize,
+}
+
+/// Queue-addressed overlap SRAM.
+pub struct OverlapQueue {
+    sram: Sram,
+    /// Per-slot payload byte length and label.
+    labels: Vec<Option<(EntryLabel, usize)>>,
+    entry_bytes: usize,
+    front: usize,
+    count: usize,
+    max_count: usize,
+}
+
+impl OverlapQueue {
+    /// `depth` entries of `entry_bytes` each (rows * 2 * max_ch).
+    pub fn new(depth: usize, entry_bytes: usize) -> Self {
+        Self {
+            sram: Sram::new("overlap", depth * entry_bytes),
+            labels: vec![None; depth],
+            entry_bytes,
+            front: 0,
+            count: 0,
+            max_count: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.sram.capacity()
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Highest simultaneous occupancy observed.
+    pub fn max_count(&self) -> usize {
+        self.max_count
+    }
+
+    pub fn sram(&self) -> &Sram {
+        &self.sram
+    }
+
+    /// Push the two rightmost columns of `label`'s feature map.
+    pub fn push_back(&mut self, label: EntryLabel, payload: &[u8]) {
+        assert!(
+            payload.len() <= self.entry_bytes,
+            "overlap entry too large: {} > {}",
+            payload.len(),
+            self.entry_bytes
+        );
+        assert!(
+            self.count < self.depth(),
+            "overlap queue overflow (depth {}) pushing {:?}",
+            self.depth(),
+            label
+        );
+        let slot = (self.front + self.count) % self.depth();
+        self.sram.write(slot * self.entry_bytes, payload);
+        self.labels[slot] = Some((label, payload.len()));
+        self.count += 1;
+        self.max_count = self.max_count.max(self.count);
+    }
+
+    /// Label at the queue front, if any.
+    pub fn front_label(&self) -> Option<EntryLabel> {
+        self.labels[self.front].map(|(l, _)| l)
+    }
+
+    /// Read the front payload, asserting it carries `expect`.
+    pub fn read_front(&self, expect: EntryLabel) -> Vec<u8> {
+        let (label, len) = self.labels[self.front]
+            .unwrap_or_else(|| panic!("overlap queue empty reading {expect:?}"));
+        assert_eq!(
+            label, expect,
+            "overlap queue out of order: front {label:?}, expected {expect:?}"
+        );
+        self.sram
+            .read(self.front * self.entry_bytes, len)
+            .to_vec()
+    }
+
+    /// Pop the front entry (it must carry `expect`).
+    pub fn pop_front(&mut self, expect: EntryLabel) {
+        let (label, _) = self.labels[self.front]
+            .unwrap_or_else(|| panic!("overlap queue empty popping {expect:?}"));
+        assert_eq!(label, expect, "overlap pop out of order");
+        self.labels[self.front] = None;
+        self.front = (self.front + 1) % self.depth();
+        self.count -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lbl(tile: usize, map: usize) -> EntryLabel {
+        EntryLabel { tile, map }
+    }
+
+    #[test]
+    fn fifo_order_with_labels() {
+        let mut q = OverlapQueue::new(4, 8);
+        q.push_back(lbl(0, 0), &[1; 8]);
+        q.push_back(lbl(0, 1), &[2; 8]);
+        assert_eq!(q.read_front(lbl(0, 0)), vec![1; 8]);
+        q.pop_front(lbl(0, 0));
+        assert_eq!(q.front_label(), Some(lbl(0, 1)));
+        q.pop_front(lbl(0, 1));
+        assert_eq!(q.count(), 0);
+    }
+
+    #[test]
+    fn ring_wraps() {
+        let mut q = OverlapQueue::new(3, 4);
+        for i in 0..10 {
+            q.push_back(lbl(i, 0), &[i as u8; 4]);
+            if i >= 1 {
+                q.pop_front(lbl(i - 1, 0));
+            }
+        }
+        assert_eq!(q.read_front(lbl(9, 0)), vec![9; 4]);
+        assert_eq!(q.max_count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut q = OverlapQueue::new(2, 4);
+        q.push_back(lbl(0, 0), &[0; 4]);
+        q.push_back(lbl(0, 1), &[0; 4]);
+        q.push_back(lbl(0, 2), &[0; 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of order")]
+    fn wrong_label_read_panics() {
+        let mut q = OverlapQueue::new(2, 4);
+        q.push_back(lbl(3, 1), &[0; 4]);
+        q.read_front(lbl(3, 2));
+    }
+
+    #[test]
+    fn short_payload_allowed() {
+        // clamped tiles push fewer bytes (narrow maps at image edges)
+        let mut q = OverlapQueue::new(2, 8);
+        q.push_back(lbl(0, 0), &[5; 4]);
+        assert_eq!(q.read_front(lbl(0, 0)), vec![5; 4]);
+    }
+}

@@ -1,0 +1,490 @@
+//! Tilted layer fusion (Section II) against real memory models.
+//!
+//! A band of `R` rows is processed in parallelepiped tiles of `C`
+//! columns: the region of feature map *k* (output of conv *k-1*, map 0 =
+//! the LR input) for tile *t* is columns `[tC - k, (t+1)C - 1 - k]` —
+//! each deeper layer shifts one pixel left (Fig. 2).  Consequences,
+//! all modelled here explicitly:
+//!
+//! * the right boundary of conv *k*'s input (column `hi+1`) is exactly
+//!   the last column conv *k-1* just produced in this tile — "ready
+//!   without waiting" (the red pixels of Fig. 2);
+//! * the left boundary (columns `lo-1`, `lo`) is the previous tile's two
+//!   rightmost columns of map *k-1*, read from the queue-addressed
+//!   [`OverlapQueue`] (the blue pixels);
+//! * the residual anchor of the final layer lags `L` columns behind the
+//!   input stream, so the residual ring holds `C + L` input columns —
+//!   the paper's eq. (3);
+//! * vertical band seams are zero-padded: the only information loss.
+//!
+//! The band output is bit-identical to monolithic band inference
+//! (`reference::forward_int` on the band) — asserted by
+//! `rust/tests/fusion_exactness.rs`.
+
+use crate::config::{AcceleratorConfig, FidelityKind, FusionKind};
+use crate::model::{QuantModel, Tensor};
+use crate::reference::add_anchor_and_shuffle;
+use crate::sim::engine::{
+    AnalyticEngine, CycleExactEngine, LayerOut, TileEngine,
+};
+use crate::sim::{RunStats, Sram};
+
+use super::overlap::{EntryLabel, OverlapQueue};
+use super::{band_of, band_ranges, base_frame_traffic, FrameResult, FusionScheduler};
+
+/// The paper's scheduler.
+#[derive(Clone, Copy, Debug)]
+pub struct TiltedScheduler {
+    pub fidelity: FidelityKind,
+}
+
+impl Default for TiltedScheduler {
+    fn default() -> Self {
+        Self {
+            fidelity: FidelityKind::Analytic,
+        }
+    }
+}
+
+impl TiltedScheduler {
+    pub fn cycle_exact() -> Self {
+        Self {
+            fidelity: FidelityKind::CycleExact,
+        }
+    }
+
+    fn engine(&self) -> Box<dyn TileEngine> {
+        match self.fidelity {
+            FidelityKind::Analytic => Box::new(AnalyticEngine::paper()),
+            FidelityKind::CycleExact => Box::new(CycleExactEngine::paper()),
+        }
+    }
+
+    /// Run one band; returns the HR band and its stats.
+    pub fn run_band(
+        &self,
+        band: &Tensor<u8>,
+        qm: &QuantModel,
+        cfg: &AcceleratorConfig,
+    ) -> (Tensor<u8>, RunStats) {
+        let engine = self.engine();
+        let rows = band.h;
+        let width = band.w;
+        let c_tile = cfg.tile_cols.max(2); // sliding-2 window needs C >= 2
+        let n_layers = qm.n_layers();
+        let max_ch = qm.max_channels();
+        let ch0 = qm.layers[0].cin;
+        let scale = qm.scale;
+
+        // --- on-chip memories, provisioned per eqs. (1)-(3) -----------
+        let col_stride = cfg.tile_rows * max_ch; // bytes per buffered column
+        let mut ping = [
+            Sram::new("ping_a", cfg.tile_rows * c_tile * max_ch),
+            Sram::new("ping_b", cfg.tile_rows * c_tile * max_ch),
+        ];
+        let mut queue = OverlapQueue::new(
+            n_layers + 2,
+            cfg.tile_rows * 2 * max_ch,
+        );
+        let res_cols = c_tile + n_layers;
+        let mut residual =
+            Sram::new("residual", ch0 * cfg.tile_rows * res_cols);
+
+        // functional bookkeeping of what each queue entry contains
+        // (payload bytes + image-space column indices), keyed by
+        // (tile, map); the authoritative bytes live in the queue SRAM
+        // and are read back through it
+        let mut pending: std::collections::HashMap<
+            (usize, usize),
+            (usize, usize),
+        > = std::collections::HashMap::new();
+
+        // region of map k-1 currently resident in the ping buffer
+        // (cur_lo, width) per tile step; index of buffer holding it
+        let mut stats = RunStats::default();
+        let mut hr_band: Tensor<u8> =
+            Tensor::new(rows * scale, width * scale, ch0);
+
+        let n_tiles = width.div_ceil(c_tile);
+        let region =
+            |t: usize, k: usize| -> Option<(usize, usize)> {
+                let lo = (t * c_tile) as isize - k as isize;
+                let hi = ((t + 1) * c_tile) as isize - 1 - k as isize;
+                let lo_c = lo.max(0) as usize;
+                let hi_c = hi.min(width as isize - 1);
+                if hi_c < lo_c as isize {
+                    None
+                } else {
+                    Some((lo_c, hi_c as usize))
+                }
+            };
+
+        for t in 0..n_tiles + n_layers {
+            // -- 1. load the input tile from DRAM into the ping buffer --
+            let mut cur_buf = 0usize; // buffer holding map k-1's region
+            let in_region = if t < n_tiles {
+                region(t, 0)
+            } else {
+                None
+            };
+            if let Some((lo, hi)) = in_region {
+                for c in lo..=hi {
+                    let col = band.column(c);
+                    ping[0].write((c - lo) * col_stride, &col);
+                    // residual ring keeps the anchor columns
+                    residual
+                        .write((c % res_cols) * ch0 * cfg.tile_rows, &col);
+                }
+                // push the sliding last-2 window of the input map
+                let payload = two_col_payload(
+                    &shift_map(band, 0),
+                    hi.saturating_sub(1),
+                    hi,
+                );
+                queue.push_back(EntryLabel { tile: t, map: 0 }, &payload);
+                pending.insert((t, 0), (hi.saturating_sub(1), hi));
+                stats.tiles += 1;
+            }
+
+            // -- 2. run the L convs of this tile step, tilted ----------
+            // prev-tile region of map k-1 while it was current
+            for k in 1..=n_layers {
+                let layer = &qm.layers[k - 1];
+                // consume the overlap entry of map k-1 from tile t-1
+                let prev_payload: Option<(Vec<u8>, (usize, usize))> = if t
+                    >= 1
+                {
+                    pending.remove(&(t - 1, k - 1)).map(|cols| {
+                        let label = EntryLabel {
+                            tile: t - 1,
+                            map: k - 1,
+                        };
+                        let bytes = queue.read_front(label);
+                        queue.pop_front(label);
+                        (bytes, cols)
+                    })
+                } else {
+                    None
+                };
+
+                let Some((lo, hi)) = region(t, k) else {
+                    continue;
+                };
+                let cur = region(t, k - 1); // map k-1 region this tile
+                let cin = layer.cin;
+                let pw = hi - lo + 3;
+                let mut patch: Tensor<u8> =
+                    Tensor::new(rows + 2, pw, cin);
+                for (px, c_img) in
+                    (lo as isize - 1..=hi as isize + 1).enumerate()
+                {
+                    if c_img < 0 || c_img >= width as isize {
+                        continue; // image border: stays zero
+                    }
+                    let c_img = c_img as usize;
+                    let col: Vec<u8> = if let Some((cl, chi)) = cur {
+                        if c_img >= cl && c_img <= chi {
+                            ping[cur_buf]
+                                .read(
+                                    (c_img - cl) * col_stride,
+                                    rows * cin,
+                                )
+                                .to_vec()
+                        } else {
+                            read_overlap_col(
+                                &prev_payload,
+                                c_img,
+                                rows * cin,
+                                t,
+                                k,
+                            )
+                        }
+                    } else {
+                        read_overlap_col(
+                            &prev_payload,
+                            c_img,
+                            rows * cin,
+                            t,
+                            k,
+                        )
+                    };
+                    // place into the patch (vertical zero halo = seam)
+                    for y in 0..rows {
+                        for ch in 0..cin {
+                            patch.set(
+                                y + 1,
+                                px,
+                                ch,
+                                col[y * cin + ch],
+                            );
+                        }
+                    }
+                }
+
+                let (out, cost) = engine.run_layer(&patch, layer);
+                stats.compute_cycles +=
+                    cost.cycles + cfg.buffer_swap_cycles;
+                stats.mac_ops += cost.mac_ops;
+                stats.mac_slots += cost.mac_slots
+                    + cfg.buffer_swap_cycles * cfg.total_macs() as u64;
+
+                match out {
+                    LayerOut::U8(map_k) => {
+                        // store region into the other ping buffer
+                        let dst = 1 - cur_buf;
+                        for c in lo..=hi {
+                            let col = map_k.column(c - lo);
+                            ping[dst]
+                                .write((c - lo) * col_stride, &col);
+                        }
+                        // push the sliding last-2 window of map k
+                        if k < n_layers {
+                            let (c1, c2) = if hi > lo {
+                                (hi - 1, hi)
+                            } else {
+                                (hi, hi) // single col: duplicate; the
+                                         // left one comes from prev win
+                            };
+                            let payload =
+                                two_col_payload(&shift_map(&map_k, lo), c1, c2);
+                            queue.push_back(
+                                EntryLabel { tile: t, map: k },
+                                &payload,
+                            );
+                            pending.insert((t, k), (c1, c2));
+                        }
+                        cur_buf = dst;
+                    }
+                    LayerOut::I32(pre) => {
+                        // final conv: residual add + shuffle, column-wise
+                        debug_assert_eq!(k, n_layers);
+                        let mut anchor: Tensor<u8> =
+                            Tensor::new(rows, hi - lo + 1, ch0);
+                        for c in lo..=hi {
+                            let bytes = residual.read(
+                                (c % res_cols) * ch0 * cfg.tile_rows,
+                                rows * ch0,
+                            );
+                            anchor.set_column(c - lo, bytes);
+                        }
+                        let hr_tile =
+                            add_anchor_and_shuffle(&pre, &anchor, scale);
+                        for y in 0..hr_tile.h {
+                            for x in 0..hr_tile.w {
+                                for ch in 0..ch0 {
+                                    hr_band.set(
+                                        y,
+                                        lo * scale + x,
+                                        ch,
+                                        hr_tile.get(y, x, ch),
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        stats.sram_reads = ping[0].reads()
+            + ping[1].reads()
+            + queue.sram().reads()
+            + residual.reads();
+        stats.sram_writes = ping[0].writes()
+            + ping[1].writes()
+            + queue.sram().writes()
+            + residual.writes();
+        stats.peak_pingpong_bytes =
+            (ping[0].high_water() + ping[1].high_water()) as u64;
+        stats.overlap_bytes = queue.capacity_bytes() as u64;
+        stats.residual_bytes = residual.capacity() as u64;
+        assert!(
+            queue.max_count() <= n_layers + 2,
+            "overlap occupancy {} exceeded L+2",
+            queue.max_count()
+        );
+        (hr_band, stats)
+    }
+}
+
+/// Payload = the two columns `c1`, `c2` of a map tensor indexed from 0.
+fn two_col_payload(map: &MapView, c1: usize, c2: usize) -> Vec<u8> {
+    let mut p = map.column(c1);
+    p.extend(map.column(c2));
+    p
+}
+
+/// Minimal column view abstraction so both band input (full width) and
+/// freshly computed region maps (offset by `lo`) can feed the payload
+/// builder with *image-space* column indices.
+struct MapViewOwned {
+    t: Tensor<u8>,
+    offset: usize,
+}
+
+type MapView = MapViewOwned;
+
+impl MapViewOwned {
+    fn column(&self, c_img: usize) -> Vec<u8> {
+        self.t.column(c_img - self.offset)
+    }
+}
+
+fn shift_map(t: &Tensor<u8>, offset: usize) -> MapViewOwned {
+    MapViewOwned {
+        t: t.clone(),
+        offset,
+    }
+}
+
+/// Read one overlap-sourced column out of the popped payload.
+fn read_overlap_col(
+    payload: &Option<(Vec<u8>, (usize, usize))>,
+    c_img: usize,
+    col_bytes: usize,
+    t: usize,
+    k: usize,
+) -> Vec<u8> {
+    let (bytes, (c1, c2)) = payload.as_ref().unwrap_or_else(|| {
+        panic!("tilt violated: tile {t} conv {k} needs col {c_img} with no overlap entry")
+    });
+    let half = bytes.len() / 2;
+    if c_img == *c1 {
+        bytes[..half][..col_bytes].to_vec()
+    } else if c_img == *c2 {
+        bytes[half..][..col_bytes].to_vec()
+    } else {
+        panic!(
+            "tilt violated: tile {t} conv {k} needs col {c_img}, overlap has ({c1},{c2})"
+        )
+    }
+}
+
+impl FusionScheduler for TiltedScheduler {
+    fn run_frame(
+        &self,
+        frame: &Tensor<u8>,
+        qm: &QuantModel,
+        cfg: &AcceleratorConfig,
+    ) -> FrameResult {
+        let mut stats = RunStats::default();
+        base_frame_traffic(frame, qm, &mut stats);
+        let scale = qm.scale;
+        let mut hr: Tensor<u8> =
+            Tensor::new(frame.h * scale, frame.w * scale, frame.c);
+        for (y0, y1) in band_ranges(frame.h, cfg.tile_rows) {
+            let band = band_of(frame, y0, y1);
+            let (hr_band, band_stats) = self.run_band(&band, qm, cfg);
+            stats.merge(&band_stats);
+            let dst0 = y0 * scale * hr.w * hr.c;
+            hr.data[dst0..dst0 + hr_band.data.len()]
+                .copy_from_slice(&hr_band.data);
+        }
+        FrameResult { hr, stats }
+    }
+
+    fn kind(&self) -> FusionKind {
+        FusionKind::Tilted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::model::QuantModel;
+    use crate::reference;
+    use crate::util::Xoshiro256pp;
+
+    fn rand_frame(h: usize, w: usize, c: usize, seed: u64) -> Tensor<u8> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut t = Tensor::new(h, w, c);
+        rng.fill_u8(&mut t.data);
+        t
+    }
+
+    fn small_cfg(rows: usize, cols: usize) -> AcceleratorConfig {
+        AcceleratorConfig {
+            tile_rows: rows,
+            tile_cols: cols,
+            ..AcceleratorConfig::paper()
+        }
+    }
+
+    #[test]
+    fn band_matches_reference_exactly() {
+        let qm = QuantModel::test_model(3, 3, 5, 3, 21);
+        let band = rand_frame(6, 24, 3, 1);
+        let cfg = small_cfg(6, 4);
+        let (hr, _) = TiltedScheduler::default().run_band(&band, &qm, &cfg);
+        let want = reference::forward_int(&band, &qm);
+        assert_eq!(hr.data, want.data, "tilted band differs from reference");
+    }
+
+    #[test]
+    fn band_matches_reference_ragged_width() {
+        // width not a multiple of the tile: drain logic + clamping
+        let qm = QuantModel::test_model(4, 3, 6, 3, 5);
+        let band = rand_frame(7, 19, 3, 9);
+        let cfg = small_cfg(7, 4);
+        let (hr, _) = TiltedScheduler::default().run_band(&band, &qm, &cfg);
+        let want = reference::forward_int(&band, &qm);
+        assert_eq!(hr.data, want.data);
+    }
+
+    #[test]
+    fn frame_splits_into_bands_with_seams() {
+        let qm = QuantModel::test_model(2, 3, 4, 3, 13);
+        let frame = rand_frame(12, 16, 3, 3);
+        let cfg = small_cfg(6, 4);
+        let res = TiltedScheduler::default().run_frame(&frame, &qm, &cfg);
+        // band-by-band reference (zero-padded seams)
+        for (i, (y0, y1)) in band_ranges(12, 6).into_iter().enumerate() {
+            let band = band_of(&frame, y0, y1);
+            let want = reference::forward_int(&band, &qm);
+            let got = &res.hr.data[y0 * 3 * res.hr.w * 3
+                ..y1 * 3 * res.hr.w * 3];
+            assert_eq!(got, &want.data[..], "band {i}");
+        }
+    }
+
+    #[test]
+    fn overlap_occupancy_is_l_plus_1() {
+        // the queue never exceeds L+1 entries; capacity is L+2 (eq. 2)
+        let qm = QuantModel::test_model(3, 3, 5, 3, 2);
+        let band = rand_frame(6, 20, 3, 4);
+        let cfg = small_cfg(6, 4);
+        // run_band asserts max_count <= L+2 internally
+        let (_, stats) = TiltedScheduler::default().run_band(&band, &qm, &cfg);
+        assert_eq!(
+            stats.overlap_bytes,
+            ((qm.n_layers() + 2) * 6 * 2 * qm.max_channels()) as u64
+        );
+    }
+
+    #[test]
+    fn paper_buffer_budget_table2() {
+        // APBN-shaped model, paper geometry: the Table II numbers
+        let qm = QuantModel::test_model(7, 3, 28, 3, 0);
+        let band = rand_frame(60, 64, 3, 8);
+        let cfg = AcceleratorConfig::paper();
+        let (_, stats) =
+            TiltedScheduler::default().run_band(&band, &qm, &cfg);
+        assert_eq!(stats.overlap_bytes, 9 * 60 * 2 * 28); // 30240 = 30.24 KB
+        assert_eq!(stats.residual_bytes, 3 * 60 * (8 + 7)); // 2700 = 2.7 KB
+        assert!(stats.peak_pingpong_bytes <= 2 * 60 * 8 * 28);
+    }
+
+    #[test]
+    fn cycle_exact_fidelity_agrees() {
+        let qm = QuantModel::test_model(2, 3, 4, 3, 17);
+        let band = rand_frame(5, 12, 3, 6);
+        let cfg = small_cfg(5, 4);
+        let (a, sa) = TiltedScheduler::default().run_band(&band, &qm, &cfg);
+        let (c, sc) =
+            TiltedScheduler::cycle_exact().run_band(&band, &qm, &cfg);
+        assert_eq!(a.data, c.data);
+        assert_eq!(sa.compute_cycles, sc.compute_cycles);
+        assert_eq!(sa.mac_ops, sc.mac_ops);
+    }
+}

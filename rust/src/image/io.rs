@@ -1,0 +1,116 @@
+//! Binary PPM (P6) read/write — the repo's portable image format.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::ImageU8;
+
+/// Write an RGB image as binary PPM (P6).
+pub fn write_ppm(path: &Path, img: &ImageU8) -> Result<()> {
+    if img.c != 3 {
+        bail!("PPM requires 3 channels, image has {}", img.c);
+    }
+    let f = File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    write!(w, "P6\n{} {}\n255\n", img.w, img.h)?;
+    w.write_all(&img.data)?;
+    Ok(())
+}
+
+fn read_token(r: &mut impl Read) -> Result<String> {
+    let mut tok = String::new();
+    let mut byte = [0u8; 1];
+    // skip whitespace and comments
+    loop {
+        r.read_exact(&mut byte)?;
+        match byte[0] {
+            b'#' => {
+                // comment to end of line
+                while byte[0] != b'\n' {
+                    r.read_exact(&mut byte)?;
+                }
+            }
+            b' ' | b'\t' | b'\r' | b'\n' => {}
+            _ => break,
+        }
+    }
+    tok.push(byte[0] as char);
+    loop {
+        r.read_exact(&mut byte)?;
+        match byte[0] {
+            b' ' | b'\t' | b'\r' | b'\n' => break,
+            c => tok.push(c as char),
+        }
+    }
+    Ok(tok)
+}
+
+/// Read a binary PPM (P6) into an RGB image.
+pub fn read_ppm(path: &Path) -> Result<ImageU8> {
+    let f = File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let magic = read_token(&mut r)?;
+    if magic != "P6" {
+        bail!("not a P6 PPM: magic {magic:?}");
+    }
+    let w: usize = read_token(&mut r)?.parse().context("PPM width")?;
+    let h: usize = read_token(&mut r)?.parse().context("PPM height")?;
+    let maxval: usize = read_token(&mut r)?.parse().context("PPM maxval")?;
+    if maxval != 255 {
+        bail!("unsupported PPM maxval {maxval}");
+    }
+    let mut data = vec![0u8; h * w * 3];
+    r.read_exact(&mut data).context("PPM pixel data")?;
+    Ok(ImageU8::from_vec(h, w, 3, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Xoshiro256pp;
+
+    #[test]
+    fn ppm_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let mut img = ImageU8::new(7, 9, 3);
+        rng.fill_u8(&mut img.data);
+        let dir = std::env::temp_dir().join("sr_accel_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.ppm");
+        write_ppm(&path, &img).unwrap();
+        let back = read_ppm(&path).unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn rejects_non_rgb() {
+        let img = ImageU8::new(2, 2, 1);
+        let path = std::env::temp_dir().join("bad.ppm");
+        assert!(write_ppm(&path, &img).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("sr_accel_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_magic.ppm");
+        std::fs::write(&path, b"P5\n1 1\n255\nx").unwrap();
+        assert!(read_ppm(&path).is_err());
+    }
+
+    #[test]
+    fn parses_comments() {
+        let dir = std::env::temp_dir().join("sr_accel_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("comment.ppm");
+        std::fs::write(&path, b"P6\n# hello\n1 1\n255\nabc").unwrap();
+        let img = read_ppm(&path).unwrap();
+        assert_eq!((img.h, img.w), (1, 1));
+        assert_eq!(img.data, b"abc");
+    }
+}

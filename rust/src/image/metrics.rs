@@ -1,0 +1,100 @@
+//! Image quality metrics: MSE / PSNR (the paper's quality currency).
+
+use super::{ImageF32, ImageU8};
+
+/// Mean squared error between two float images.
+pub fn mse(a: &ImageF32, b: &ImageF32) -> f64 {
+    assert_eq!(
+        (a.h, a.w, a.c),
+        (b.h, b.w, b.c),
+        "mse: shape mismatch"
+    );
+    let n = a.data.len() as f64;
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / n
+}
+
+/// PSNR in dB for float images in [0, 1].
+pub fn psnr(a: &ImageF32, b: &ImageF32) -> f64 {
+    let m = mse(a, b);
+    if m == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (1.0 / m).log10()
+    }
+}
+
+/// PSNR in dB for u8 images (peak 255).
+pub fn psnr_u8(a: &ImageU8, b: &ImageU8) -> f64 {
+    assert_eq!((a.h, a.w, a.c), (b.h, b.w, b.c), "psnr_u8: shape mismatch");
+    let n = a.data.len() as f64;
+    let m = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / n;
+    if m == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (255.0 * 255.0 / m).log10()
+    }
+}
+
+/// Max absolute per-pixel difference (u8) — used for bit-exactness
+/// assertions with a human-readable failure mode.
+pub fn max_abs_diff_u8(a: &ImageU8, b: &ImageU8) -> u8 {
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| x.abs_diff(y))
+        .max()
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_images_infinite_psnr() {
+        let a = ImageF32::from_vec(1, 2, 1, vec![0.25, 0.5]);
+        assert!(psnr(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn known_mse() {
+        let a = ImageF32::from_vec(1, 2, 1, vec![0.0, 0.0]);
+        let b = ImageF32::from_vec(1, 2, 1, vec![0.1, 0.3]);
+        // f32 storage of 0.1/0.3 is inexact; compare loosely
+        assert!((mse(&a, &b) - (0.01 + 0.09) / 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn psnr_u8_one_lsb_everywhere() {
+        let a = ImageU8::from_vec(2, 2, 1, vec![10; 4]);
+        let b = ImageU8::from_vec(2, 2, 1, vec![11; 4]);
+        // MSE = 1 -> PSNR = 20*log10(255) = 48.13
+        assert!((psnr_u8(&a, &b) - 48.130_8).abs() < 0.01);
+        assert_eq!(max_abs_diff_u8(&a, &b), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_shapes_panic() {
+        let a = ImageF32::new(1, 2, 1);
+        let b = ImageF32::new(2, 1, 1);
+        mse(&a, &b);
+    }
+}

@@ -1,0 +1,158 @@
+//! Image substrate: u8/f32 HWC tensors, PPM I/O, resampling, quality
+//! metrics, and the synthetic workload generator (DESIGN.md S6).
+
+pub mod io;
+pub mod metrics;
+pub mod resize;
+pub mod synth;
+
+pub use io::{read_ppm, write_ppm};
+pub use metrics::{mse, psnr, psnr_u8};
+pub use resize::{box_downsample_x3, nearest_upsample};
+pub use synth::SceneGenerator;
+
+/// An 8-bit HWC image (the accelerator's native pixel format).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ImageU8 {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<u8>,
+}
+
+impl ImageU8 {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self {
+            h,
+            w,
+            c,
+            data: vec![0; h * w * c],
+        }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<u8>) -> Self {
+        assert_eq!(data.len(), h * w * c, "image buffer size mismatch");
+        Self { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> u8 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: u8) {
+        self.data[(y * self.w + x) * self.c + ch] = v;
+    }
+
+    /// Rows `[y0, y1)` as a borrowed band view (copy).
+    pub fn rows(&self, y0: usize, y1: usize) -> ImageU8 {
+        let y1 = y1.min(self.h);
+        ImageU8 {
+            h: y1 - y0,
+            w: self.w,
+            c: self.c,
+            data: self.data[y0 * self.w * self.c..y1 * self.w * self.c]
+                .to_vec(),
+        }
+    }
+
+    pub fn to_f32(&self) -> ImageF32 {
+        ImageF32 {
+            h: self.h,
+            w: self.w,
+            c: self.c,
+            data: self.data.iter().map(|&v| v as f32 / 255.0).collect(),
+        }
+    }
+}
+
+/// A float HWC image in [0, 1] (the PJRT runtime's format).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ImageF32 {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl ImageF32 {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self {
+            h,
+            w,
+            c,
+            data: vec![0.0; h * w * c],
+        }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), h * w * c, "image buffer size mismatch");
+        Self { h, w, c, data }
+    }
+
+    #[inline]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> f32 {
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: f32) {
+        self.data[(y * self.w + x) * self.c + ch] = v;
+    }
+
+    /// Quantize to u8 with round-half-up, clamped — matches
+    /// `np.clip(np.round(x*255), 0, 255)` on the Python side.
+    pub fn to_u8(&self) -> ImageU8 {
+        ImageU8 {
+            h: self.h,
+            w: self.w,
+            c: self.c,
+            data: self
+                .data
+                .iter()
+                .map(|&v| (v * 255.0).round().clamp(0.0, 255.0) as u8)
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u8_f32_roundtrip() {
+        let mut im = ImageU8::new(2, 3, 3);
+        im.set(1, 2, 0, 255);
+        im.set(0, 0, 2, 128);
+        let f = im.to_f32();
+        assert!((f.get(1, 2, 0) - 1.0).abs() < 1e-6);
+        let back = f.to_u8();
+        assert_eq!(back, im);
+    }
+
+    #[test]
+    fn rows_band_view() {
+        let mut im = ImageU8::new(4, 2, 1);
+        for y in 0..4 {
+            im.set(y, 0, 0, y as u8);
+        }
+        let band = im.rows(1, 3);
+        assert_eq!(band.h, 2);
+        assert_eq!(band.get(0, 0, 0), 1);
+        assert_eq!(band.get(1, 0, 0), 2);
+    }
+
+    #[test]
+    fn rows_clamps_at_bottom() {
+        let im = ImageU8::new(5, 2, 1);
+        assert_eq!(im.rows(3, 99).h, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn from_vec_checks_len() {
+        ImageU8::from_vec(2, 2, 1, vec![0; 5]);
+    }
+}

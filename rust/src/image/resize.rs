@@ -1,0 +1,85 @@
+//! Resampling: the x3 box downsample (LR degradation model, matching
+//! `python/compile/data.downsample_x3`) and nearest-neighbour upsample
+//! (the APBN anchor path).
+
+use super::{ImageF32, ImageU8};
+
+/// Box-filter x3 downsample of a float image; h and w must be
+/// divisible by 3 (the caller crops beforehand).
+pub fn box_downsample_x3(img: &ImageF32) -> ImageF32 {
+    assert!(
+        img.h % 3 == 0 && img.w % 3 == 0,
+        "box_downsample_x3 needs h,w divisible by 3 (got {}x{})",
+        img.h,
+        img.w
+    );
+    let (oh, ow, c) = (img.h / 3, img.w / 3, img.c);
+    let mut out = ImageF32::new(oh, ow, c);
+    for y in 0..oh {
+        for x in 0..ow {
+            for ch in 0..c {
+                let mut s = 0.0f32;
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        s += img.get(3 * y + dy, 3 * x + dx, ch);
+                    }
+                }
+                out.set(y, x, ch, s / 9.0);
+            }
+        }
+    }
+    out
+}
+
+/// Nearest-neighbour x`r` upsample of a u8 image — the anchor.
+pub fn nearest_upsample(img: &ImageU8, r: usize) -> ImageU8 {
+    let mut out = ImageU8::new(img.h * r, img.w * r, img.c);
+    for y in 0..out.h {
+        for x in 0..out.w {
+            for ch in 0..img.c {
+                out.set(y, x, ch, img.get(y / r, x / r, ch));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn box_mean_of_constant_is_constant() {
+        let img = ImageF32::from_vec(3, 3, 1, vec![0.5; 9]);
+        let d = box_downsample_x3(&img);
+        assert_eq!((d.h, d.w), (1, 1));
+        assert!((d.get(0, 0, 0) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn box_mean_values() {
+        let data: Vec<f32> = (0..9).map(|i| i as f32).collect();
+        let img = ImageF32::from_vec(3, 3, 1, data);
+        let d = box_downsample_x3(&img);
+        assert!((d.get(0, 0, 0) - 4.0).abs() < 1e-6); // mean of 0..8
+    }
+
+    #[test]
+    fn nearest_replicates_pixels() {
+        let img = ImageU8::from_vec(1, 2, 1, vec![7, 9]);
+        let up = nearest_upsample(&img, 3);
+        assert_eq!((up.h, up.w), (3, 6));
+        for y in 0..3 {
+            for x in 0..3 {
+                assert_eq!(up.get(y, x, 0), 7);
+                assert_eq!(up.get(y, x + 3, 0), 9);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "divisible by 3")]
+    fn downsample_rejects_ragged() {
+        box_downsample_x3(&ImageF32::new(4, 3, 1));
+    }
+}

@@ -1,0 +1,148 @@
+//! Synthetic scene / video generator — the workload source for the
+//! serving pipeline and the benchmarks (the paper's target is a live
+//! 640x360 video feed, which we simulate per DESIGN.md §4).
+//!
+//! Mirrors the Python corpus generators in spirit (gradients, periodic
+//! texture, checkers, boxes, glyph strokes) plus temporal motion for
+//! video: each frame advances a deterministic phase so consecutive
+//! frames are correlated like real video.
+
+use crate::util::Xoshiro256pp;
+
+use super::ImageU8;
+
+/// Deterministic procedural scene generator.
+pub struct SceneGenerator {
+    pub w: usize,
+    pub h: usize,
+    seed: u64,
+}
+
+impl SceneGenerator {
+    pub fn new(w: usize, h: usize, seed: u64) -> Self {
+        Self { w, h, seed }
+    }
+
+    /// The LR geometry of the paper (640x360).
+    pub fn paper_lr(seed: u64) -> Self {
+        Self::new(640, 360, seed)
+    }
+
+    /// Render frame `t` of the synthetic video.
+    pub fn frame(&self, t: usize) -> ImageU8 {
+        let mut rng = Xoshiro256pp::seed_from_u64(self.seed);
+        let mut img = ImageU8::new(self.h, self.w, 3);
+        // scene parameters fixed by seed; phase advances with t
+        let n_waves = 2 + (rng.next_u32() % 3) as usize;
+        let waves: Vec<(f64, f64, f64, f64, [f64; 3])> = (0..n_waves)
+            .map(|_| {
+                (
+                    rng.uniform(0.01, 0.12),           // fx
+                    rng.uniform(0.01, 0.12),           // fy
+                    rng.uniform(0.0, std::f64::consts::TAU), // phase
+                    rng.uniform(0.02, 0.2),            // speed
+                    [
+                        rng.uniform(0.2, 1.0),
+                        rng.uniform(0.2, 1.0),
+                        rng.uniform(0.2, 1.0),
+                    ],
+                )
+            })
+            .collect();
+        let (bx, by) = (rng.uniform(0.0, 1.0), rng.uniform(0.0, 1.0));
+        let box_col = [
+            rng.uniform(0.0, 1.0),
+            rng.uniform(0.0, 1.0),
+            rng.uniform(0.0, 1.0),
+        ];
+        let box_w = self.w / 6 + 4;
+        let box_h = self.h / 6 + 4;
+        let vx = rng.uniform(0.5, 3.0);
+        let vy = rng.uniform(0.2, 1.5);
+
+        let tf = t as f64;
+        for y in 0..self.h {
+            for x in 0..self.w {
+                let mut px = [0.45f64, 0.45, 0.45];
+                for (fx, fy, ph, speed, col) in &waves {
+                    let v = (std::f64::consts::TAU
+                        * (fx * x as f64 + fy * y as f64)
+                        + ph
+                        + speed * tf)
+                        .sin()
+                        * 0.22;
+                    for ch in 0..3 {
+                        px[ch] += v * col[ch];
+                    }
+                }
+                for (ch, p) in px.iter().enumerate() {
+                    img.set(
+                        y,
+                        x,
+                        ch,
+                        (p.clamp(0.0, 1.0) * 255.0).round() as u8,
+                    );
+                }
+            }
+        }
+        // a moving box (hard edges exercise the SR trunk)
+        let bx0 = ((bx * self.w as f64 + vx * tf) as usize) % self.w;
+        let by0 = ((by * self.h as f64 + vy * tf) as usize) % self.h;
+        for dy in 0..box_h {
+            let y = (by0 + dy) % self.h;
+            for dx in 0..box_w {
+                let x = (bx0 + dx) % self.w;
+                for ch in 0..3 {
+                    img.set(
+                        y,
+                        x,
+                        ch,
+                        (box_col[ch] * 255.0).round() as u8,
+                    );
+                }
+            }
+        }
+        img
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_are_deterministic() {
+        let g = SceneGenerator::new(32, 24, 9);
+        assert_eq!(g.frame(3), g.frame(3));
+    }
+
+    #[test]
+    fn consecutive_frames_differ_but_are_correlated() {
+        let g = SceneGenerator::new(48, 32, 1);
+        let a = g.frame(0);
+        let b = g.frame(1);
+        assert_ne!(a, b, "motion must change the frame");
+        // correlated: mean abs diff small relative to full range
+        let mad: f64 = a
+            .data
+            .iter()
+            .zip(&b.data)
+            .map(|(&x, &y)| x.abs_diff(y) as f64)
+            .sum::<f64>()
+            / a.data.len() as f64;
+        assert!(mad < 40.0, "frames uncorrelated (mad {mad})");
+    }
+
+    #[test]
+    fn different_seeds_different_scenes() {
+        let a = SceneGenerator::new(32, 24, 1).frame(0);
+        let b = SceneGenerator::new(32, 24, 2).frame(0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn paper_lr_geometry() {
+        let g = SceneGenerator::paper_lr(0);
+        assert_eq!((g.w, g.h), (640, 360));
+    }
+}

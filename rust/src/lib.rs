@@ -1,0 +1,26 @@
+//! # sr-accel
+//!
+//! Reproduction of **"A Real Time Super Resolution Accelerator with Tilted
+//! Layer Fusion"** (Huang, Hsu, Chang — ISCAS 2022) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! * Layer 1 (build time, Python): Pallas kernels for the 3x3-conv PE-array
+//!   dataflow, checked against a pure-jnp oracle.
+//! * Layer 2 (build time, Python): the APBN super-resolution model in JAX,
+//!   AOT-lowered to HLO text artifacts.
+//! * Layer 3 (this crate): the accelerator simulator, the tilted-layer-fusion
+//!   scheduler, the frame-serving coordinator, and the analysis models that
+//!   regenerate every table and figure of the paper.
+
+pub mod analysis;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod fusion;
+pub mod runtime;
+pub mod sim;
+pub mod image;
+pub mod model;
+pub mod reference;
+pub mod util;

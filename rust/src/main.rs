@@ -1,0 +1,353 @@
+//! `sr-accel` — the Layer-3 leader binary.
+//!
+//! Subcommands drive the serving pipeline, the accelerator simulator,
+//! single-image upscaling, and the paper's analysis tables.  See
+//! `sr_accel::cli::USAGE`.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use sr_accel::analysis::{
+    frame_traffic_bytes, our_design_row, published_rows, required_gbps,
+    AreaModel, BufferBudget, BufferParams,
+};
+use sr_accel::benchkit::Table;
+use sr_accel::cli::{Args, USAGE};
+use sr_accel::config::{AcceleratorConfig, FusionKind, ModelConfig, SystemConfig};
+use sr_accel::coordinator::{
+    engine::{build_engine, engine_factory},
+    run_pipeline, EngineKind, PipelineConfig,
+};
+use sr_accel::fusion::{make_scheduler, TiltedScheduler, FusionScheduler};
+use sr_accel::image::{read_ppm, write_ppm, SceneGenerator};
+use sr_accel::model::{load_apbnw, Tensor};
+use sr_accel::runtime::{artifacts_dir, Manifest};
+
+fn main() -> ExitCode {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("upscale") => cmd_upscale(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("info") => cmd_info(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(anyhow::anyhow!("unknown command {other:?}\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn load_system_config(args: &Args) -> Result<SystemConfig> {
+    match args.opt("config") {
+        Some(path) => SystemConfig::from_file(path),
+        None => Ok(SystemConfig::default()),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "engine", "frames", "workers", "queue-depth", "width", "height",
+        "source-fps", "seed", "config", "save-last",
+    ])?;
+    let sys = load_system_config(args)?;
+    let kind = EngineKind::parse(args.opt_str("engine", &sys.serve.engine))
+        .context("unknown --engine (int8|pjrt|sim)")?;
+    let cfg = PipelineConfig {
+        frames: args.opt_usize("frames", sys.serve.frames)?,
+        queue_depth: args.opt_usize("queue-depth", sys.serve.queue_depth)?,
+        workers: args.opt_usize("workers", sys.serve.workers)?,
+        lr_w: args.opt_usize("width", sys.sim.frame_width)?,
+        lr_h: args.opt_usize("height", sys.sim.frame_height)?,
+        seed: args.opt_usize("seed", 7)? as u64,
+        source_fps: match args.opt("source-fps") {
+            Some(_) => Some(args.opt_f64("source-fps", 60.0)?),
+            None => None,
+        },
+        scale: sys.model.scale,
+    };
+    // PJRT artifacts are fixed-shape; pick the matching one
+    let artifact = match (cfg.lr_w, cfg.lr_h) {
+        (640, 360) => "apbn_full.hlo.txt",
+        (32, 24) => "apbn_tile.hlo.txt",
+        (640, 60) => "apbn_band.hlo.txt",
+        _ if kind == EngineKind::Pjrt => bail!(
+            "pjrt engine requires an AOT shape: 640x360, 640x60 or 32x24"
+        ),
+        _ => "apbn_full.hlo.txt",
+    };
+    let engines = (0..cfg.workers)
+        .map(|_| {
+            engine_factory(
+                kind,
+                &sys.accelerator,
+                Some(Path::new(artifact)),
+            )
+        })
+        .collect::<Vec<_>>();
+    let save_last = args.opt("save-last").map(|s| s.to_string());
+    let mut last = None;
+    let report = run_pipeline(&cfg, engines, |i, hr| {
+        if save_last.is_some() {
+            last = Some((i, hr.clone()));
+        }
+    })?;
+    println!("{}", report.render());
+    if let (Some(path), Some((i, hr))) = (save_last, last) {
+        write_ppm(Path::new(&path), &hr)?;
+        println!("saved frame {i} to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "fusion", "width", "height", "tile-cols", "tile-rows", "seed",
+        "cycle-exact", "config", "frames",
+    ])?;
+    let sys = load_system_config(args)?;
+    let fusion = FusionKind::parse(args.opt_str("fusion", "tilted"))
+        .context("unknown --fusion (tilted|classical|block|layer)")?;
+    let mut acc = sys.accelerator.clone();
+    acc.tile_cols = args.opt_usize("tile-cols", acc.tile_cols)?;
+    acc.tile_rows = args.opt_usize("tile-rows", acc.tile_rows)?;
+    let w = args.opt_usize("width", sys.sim.frame_width)?;
+    let h = args.opt_usize("height", sys.sim.frame_height)?;
+    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))?;
+
+    let gen = SceneGenerator::new(w, h, args.opt_usize("seed", 7)? as u64);
+    let img = gen.frame(0);
+    let frame = Tensor::from_vec(img.h, img.w, img.c, img.data);
+
+    let sched: Box<dyn FusionScheduler> = if fusion == FusionKind::Tilted
+        && args.flag("cycle-exact")
+    {
+        Box::new(TiltedScheduler::cycle_exact())
+    } else {
+        make_scheduler(fusion)
+    };
+    let t0 = std::time::Instant::now();
+    let res = sched.run_frame(&frame, &qm, &acc);
+    let sim_wall = t0.elapsed();
+    let s = &res.stats;
+
+    let freq = acc.frequency_mhz * 1e6;
+    let compute_s = s.compute_cycles as f64 / freq;
+    let dram_s = s.dram_total_bytes() as f64 / (acc.dram_gbps * 1e9);
+    let frame_s = compute_s.max(dram_s);
+    let hr_px = (w * qm.scale) * (h * qm.scale);
+
+    let mut t = Table::new(
+        &format!("simulate {} {}x{} (tile {}x{})",
+            fusion.name(), w, h, acc.tile_cols, acc.tile_rows),
+        &["metric", "value"],
+    );
+    let row = |t: &mut Table, k: &str, v: String| t.row(&[k.into(), v]);
+    row(&mut t, "compute cycles/frame", format!("{}", s.compute_cycles));
+    row(&mut t, "PE utilization", format!("{:.1} %", s.utilization() * 100.0));
+    row(&mut t, "DRAM read/frame", format!("{:.3} MB", s.dram_read_bytes as f64 / 1e6));
+    row(&mut t, "DRAM write/frame", format!("{:.3} MB", s.dram_write_bytes as f64 / 1e6));
+    row(&mut t, "DRAM BW @60fps", format!("{:.3} GB/s", s.dram_total_bytes() as f64 * 60.0 / 1e9));
+    row(&mut t, "frame time @600MHz", format!("{:.3} ms ({})", frame_s * 1e3,
+        if compute_s >= dram_s { "compute-bound" } else { "DRAM-bound" }));
+    row(&mut t, "fps @600MHz", format!("{:.1}", 1.0 / frame_s));
+    row(&mut t, "throughput", format!("{:.1} Mpix/s", hr_px as f64 / frame_s / 1e6));
+    row(&mut t, "SRAM reads/frame", format!("{}", s.sram_reads));
+    row(&mut t, "SRAM writes/frame", format!("{}", s.sram_writes));
+    row(&mut t, "peak ping-pong", format!("{} B", s.peak_pingpong_bytes));
+    row(&mut t, "overlap buffer", format!("{} B", s.overlap_bytes));
+    row(&mut t, "residual buffer", format!("{} B", s.residual_bytes));
+    row(&mut t, "tiles/frame", format!("{}", s.tiles));
+    let energy = sr_accel::analysis::EnergyModel::default().frame_energy(s);
+    row(&mut t, "energy/frame (DRAM/SRAM/MAC)", format!(
+        "{:.2} mJ ({:.0} / {:.0} / {:.0} uJ)",
+        energy.total_mj(),
+        energy.dram_nj / 1e3,
+        energy.sram_nj / 1e3,
+        energy.mac_nj / 1e3));
+    row(&mut t, "memory+MAC power @60fps", format!(
+        "{:.2} W", energy.watts_at_fps(60.0)));
+    row(&mut t, "simulator wall time", format!("{:.2} s", sim_wall.as_secs_f64()));
+    t.print();
+    Ok(())
+}
+
+fn cmd_upscale(args: &Args) -> Result<()> {
+    args.ensure_known(&["engine", "config"])?;
+    let [input, output] = args.positional.as_slice() else {
+        bail!("usage: sr-accel upscale <in.ppm> <out.ppm> [--engine int8]");
+    };
+    let sys = load_system_config(args)?;
+    let kind = EngineKind::parse(args.opt_str("engine", "int8"))
+        .context("unknown --engine")?;
+    let img = read_ppm(Path::new(input))?;
+    let mut engine = build_engine(kind, &sys.accelerator, None)?;
+    let t0 = std::time::Instant::now();
+    let hr = engine.upscale(&img)?;
+    let dt = t0.elapsed();
+    write_ppm(Path::new(output), &hr)?;
+    println!(
+        "{}x{} -> {}x{} in {:.1} ms ({} engine)",
+        img.w, img.h, hr.w, hr.h,
+        dt.as_secs_f64() * 1e3,
+        engine.name()
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    args.ensure_known(&["config"])?;
+    let what = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let model = ModelConfig::apbn();
+    match what {
+        "buffers" | "table2" => print_table2(),
+        "bandwidth" => print_bandwidth(&model),
+        "area" => print_area(),
+        "table1" => print_table1(&model)?,
+        "all" => {
+            print_table2();
+            print_bandwidth(&model);
+            print_area();
+            print_table1(&model)?;
+        }
+        other => bail!("unknown analysis {other:?} (buffers|bandwidth|area|table1|all)"),
+    }
+    Ok(())
+}
+
+fn print_table2() {
+    let tilted = BufferBudget::tilted(&BufferParams::paper_tilted());
+    let classical = BufferBudget::classical(&BufferParams::paper_classical());
+    let mut t = Table::new(
+        "Table II — buffer sizes (decimal KB)",
+        &["buffer", "tilted (8x60)", "classical (60x60)"],
+    );
+    let kb = |b: usize| format!("{:.2}", b as f64 / 1000.0);
+    t.row(&["weight".into(), kb(tilted.weight), kb(classical.weight)]);
+    t.row(&["ping-pong pair".into(), kb(tilted.ping_pong_pair), kb(classical.ping_pong_pair)]);
+    t.row(&["overlap".into(), kb(tilted.overlap), "-".into()]);
+    t.row(&["residual".into(), kb(tilted.residual), kb(classical.residual)]);
+    t.row(&["total".into(), kb(tilted.total()), kb(classical.total())]);
+    t.print();
+}
+
+fn print_bandwidth(model: &ModelConfig) {
+    let lbl = frame_traffic_bytes(model, 640, 360, false, 0.0);
+    let tl = frame_traffic_bytes(model, 640, 360, true, 0.0);
+    let mut t = Table::new(
+        "DRAM bandwidth @ 640x360 -> FHD x3, 60 fps",
+        &["style", "per-frame MB", "GB/s", "vs paper"],
+    );
+    t.row(&[
+        "layer-by-layer".into(),
+        format!("{:.2}", lbl.total() as f64 / 1e6),
+        format!("{:.2}", required_gbps(&lbl, 60.0)),
+        "5.03".into(),
+    ]);
+    t.row(&[
+        "tilted fusion".into(),
+        format!("{:.2}", tl.total() as f64 / 1e6),
+        format!("{:.2}", required_gbps(&tl, 60.0)),
+        "0.41".into(),
+    ]);
+    t.row(&[
+        "reduction".into(),
+        "-".into(),
+        format!("{:.1} %", (1.0 - required_gbps(&tl, 60.0) / required_gbps(&lbl, 60.0)) * 100.0),
+        "92 %".into(),
+    ]);
+    t.print();
+}
+
+fn print_area() {
+    let m = AreaModel::default();
+    let (gates, area) = m.paper_design();
+    let mut t = Table::new(
+        "Area model (calibrated, 40 nm)",
+        &["quantity", "model", "paper"],
+    );
+    t.row(&["gate count".into(), format!("{:.1} K", gates / 1000.0), "544.3 K".into()]);
+    t.row(&["area".into(), format!("{area:.2} mm^2"), "3.11 mm^2".into()]);
+    t.print();
+}
+
+fn print_table1(model: &ModelConfig) -> Result<()> {
+    // measure our design on one synthetic frame
+    let acc = AcceleratorConfig::paper();
+    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))?;
+    let gen = SceneGenerator::paper_lr(7);
+    let img = gen.frame(0);
+    let frame = Tensor::from_vec(img.h, img.w, img.c, img.data);
+    let res = TiltedScheduler::default().run_frame(&frame, &qm, &acc);
+    let ours = our_design_row(
+        &res.stats,
+        &acc,
+        model,
+        (1920 * 1080) as u64,
+        (qm.weight_bytes() + qm.bias_bytes()) as usize,
+    );
+    let mut t = Table::new(
+        "Table I — performance summary & comparison",
+        &["design", "fusion", "tech", "MHz", "SRAM KB", "Mpix/s", "MACs", "kGates", "mm^2 @40nm"],
+    );
+    let f = |o: Option<f64>| o.map(|v| format!("{v:.1}")).unwrap_or("-".into());
+    for r in published_rows().iter().chain(std::iter::once(&ours)) {
+        t.row(&[
+            r.name.into(),
+            r.layer_fusion.into(),
+            r.technology.into(),
+            format!("{:.0}", r.frequency_mhz),
+            f(r.sram_kb),
+            f(r.throughput_mpix),
+            r.macs.map(|m| m.to_string()).unwrap_or("-".into()),
+            f(r.gate_count_k),
+            r.normalized_area_mm2.map(|v| format!("{v:.2}")).unwrap_or("-".into()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.ensure_known(&[])?;
+    let dir = artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            for name in m.names() {
+                let (i, o) = m.shapes(name).unwrap();
+                println!("  {name}: {:?} -> {:?}", i, o);
+            }
+        }
+        Err(e) => println!("  (no manifest: {e})"),
+    }
+    match load_apbnw(&dir.join("weights.apbnw")) {
+        Ok(qm) => {
+            println!(
+                "weights: {} layers, channels {:?}, {} weight bytes, scale x{}",
+                qm.n_layers(),
+                qm.channels(),
+                qm.weight_bytes(),
+                qm.scale
+            );
+        }
+        Err(e) => println!("weights: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,136 @@
+//! Model substrate: the quantized APBN network as the Rust engine sees
+//! it — tensor container, quantized layer/model types, the `.apbnw`
+//! loader shared with Python, and deterministic test-model builders.
+
+pub mod quant;
+pub mod weights;
+
+pub use quant::{QuantLayer, QuantModel};
+pub use weights::load_apbnw;
+
+/// A dense HWC tensor (row-major `[h][w][c]`), the feature-map container
+/// of the integer engine and the simulator memories.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Tensor<T> {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<T>,
+}
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        Self {
+            h,
+            w,
+            c,
+            data: vec![T::default(); h * w * c],
+        }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), h * w * c, "tensor buffer size mismatch");
+        Self { h, w, c, data }
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, y: usize, x: usize, ch: usize) -> usize {
+        (y * self.w + x) * self.c + ch
+    }
+
+    #[inline(always)]
+    pub fn get(&self, y: usize, x: usize, ch: usize) -> T {
+        self.data[self.idx(y, x, ch)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: T) {
+        let i = self.idx(y, x, ch);
+        self.data[i] = v;
+    }
+
+    /// Copy column `x` (all rows, all channels) into a flat vec —
+    /// the unit of transfer into the overlap buffer.
+    pub fn column(&self, x: usize) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.h * self.c);
+        for y in 0..self.h {
+            let base = self.idx(y, x, 0);
+            out.extend_from_slice(&self.data[base..base + self.c]);
+        }
+        out
+    }
+
+    /// Write a flat column (as produced by [`Tensor::column`]) at `x`.
+    pub fn set_column(&mut self, x: usize, col: &[T]) {
+        assert_eq!(col.len(), self.h * self.c, "column length mismatch");
+        for y in 0..self.h {
+            let base = self.idx(y, x, 0);
+            self.data[base..base + self.c]
+                .copy_from_slice(&col[y * self.c..(y + 1) * self.c]);
+        }
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * std::mem::size_of::<T>()
+    }
+}
+
+impl Tensor<u8> {
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+impl Tensor<i32> {
+    /// Little-endian byte view for FNV checksums (matches numpy `<i4`).
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * 4);
+        for v in &self.data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_hwc_row_major() {
+        let mut t: Tensor<u8> = Tensor::new(2, 3, 2);
+        t.set(1, 2, 1, 9);
+        assert_eq!(t.data[(1 * 3 + 2) * 2 + 1], 9);
+        assert_eq!(t.get(1, 2, 1), 9);
+    }
+
+    #[test]
+    fn column_roundtrip() {
+        let mut t: Tensor<u8> = Tensor::new(3, 4, 2);
+        for y in 0..3 {
+            for ch in 0..2 {
+                t.set(y, 2, ch, (10 * y + ch) as u8);
+            }
+        }
+        let col = t.column(2);
+        let mut t2: Tensor<u8> = Tensor::new(3, 4, 2);
+        t2.set_column(2, &col);
+        assert_eq!(t2.column(2), col);
+        assert_eq!(t2.get(2, 2, 1), 21);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn from_vec_validates() {
+        let _ = Tensor::<u8>::from_vec(2, 2, 2, vec![0; 7]);
+    }
+
+    #[test]
+    fn i32_le_bytes_match_numpy() {
+        let t = Tensor::<i32>::from_vec(1, 1, 2, vec![1, -2]);
+        assert_eq!(
+            t.to_le_bytes(),
+            vec![1, 0, 0, 0, 0xfe, 0xff, 0xff, 0xff]
+        );
+    }
+}

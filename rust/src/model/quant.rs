@@ -1,0 +1,204 @@
+//! Quantized APBN model types — the Rust mirror of
+//! `python/compile/quant.py` (see that module for the arithmetic spec).
+
+use crate::util::fixed::FixedMul;
+
+/// One quantized conv layer as stored in `.apbnw`.
+#[derive(Clone, Debug)]
+pub struct QuantLayer {
+    pub cin: usize,
+    pub cout: usize,
+    pub relu: bool,
+    pub s_in: f32,
+    pub s_w: f32,
+    pub s_out: f32,
+    /// Fixed-point requant multiplier (`m0 * 2^-SHIFT`).
+    pub m: FixedMul,
+    /// int32 bias, length `cout`.
+    pub bias: Vec<i32>,
+    /// int8 weights, HWIO row-major: `[dr][dc][cin][cout]`.
+    pub w: Vec<i8>,
+}
+
+impl QuantLayer {
+    #[inline(always)]
+    pub fn weight(&self, dr: usize, dc: usize, ci: usize, co: usize) -> i8 {
+        self.w[((dr * 3 + dc) * self.cin + ci) * self.cout + co]
+    }
+
+    /// Weight bytes of this layer (int8).
+    pub fn weight_bytes(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Identity layer for tests: passes the centre pixel through.
+    pub fn identity(c: usize) -> Self {
+        let mut w = vec![0i8; 9 * c * c];
+        for ch in 0..c {
+            // dr=1, dc=1, cin=ch, cout=ch
+            w[((1 * 3 + 1) * c + ch) * c + ch] = 1;
+        }
+        Self {
+            cin: c,
+            cout: c,
+            relu: true,
+            s_in: 1.0,
+            s_w: 1.0,
+            s_out: 1.0,
+            m: FixedMul {
+                m0: 1 << crate::util::fixed::SHIFT,
+            },
+            bias: vec![0; c],
+            w,
+        }
+    }
+}
+
+/// The full quantized model.
+#[derive(Clone, Debug)]
+pub struct QuantModel {
+    pub layers: Vec<QuantLayer>,
+    pub scale: usize,
+    pub shift: u32,
+}
+
+impl QuantModel {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Channel trace `[cin_0, cout_0, cout_1, ...]`.
+    pub fn channels(&self) -> Vec<usize> {
+        let mut chs = vec![self.layers[0].cin];
+        chs.extend(self.layers.iter().map(|l| l.cout));
+        chs
+    }
+
+    pub fn max_channels(&self) -> usize {
+        self.channels().into_iter().max().unwrap_or(0)
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    pub fn bias_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.bias.len() * 4).sum()
+    }
+
+    /// Sanity-check channel continuity and residual compatibility.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, pair) in self.layers.windows(2).enumerate() {
+            if pair[0].cout != pair[1].cin {
+                anyhow::bail!(
+                    "layer {} cout {} != layer {} cin {}",
+                    i,
+                    pair[0].cout,
+                    i + 1,
+                    pair[1].cin
+                );
+            }
+        }
+        let last = self.layers.last().unwrap();
+        let first = self.layers.first().unwrap();
+        if last.cout != first.cin * self.scale * self.scale {
+            anyhow::bail!(
+                "final layer cout {} incompatible with anchor residual \
+                 ({} * {}^2)",
+                last.cout,
+                first.cin,
+                self.scale
+            );
+        }
+        if last.relu {
+            anyhow::bail!("final layer must not have ReLU");
+        }
+        Ok(())
+    }
+
+    /// A tiny deterministic model for tests: `n_layers` layers of
+    /// `c_in -> c_mid -> ... -> c_in*scale^2` with small pseudorandom
+    /// weights and exact requant multipliers.
+    pub fn test_model(
+        n_layers: usize,
+        c_in: usize,
+        c_mid: usize,
+        scale: usize,
+        seed: u64,
+    ) -> Self {
+        use crate::util::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let c_out_final = c_in * scale * scale;
+        let mut layers = Vec::new();
+        for i in 0..n_layers {
+            let cin = if i == 0 { c_in } else { c_mid };
+            let cout = if i == n_layers - 1 { c_out_final } else { c_mid };
+            let w: Vec<i8> = (0..9 * cin * cout)
+                .map(|_| (rng.range_u64(0, 14) as i64 - 7) as i8)
+                .collect();
+            let bias: Vec<i32> = (0..cout)
+                .map(|_| rng.range_u64(0, 200) as i32 - 100)
+                .collect();
+            layers.push(QuantLayer {
+                cin,
+                cout,
+                relu: i != n_layers - 1,
+                s_in: 1.0 / 255.0,
+                s_w: 0.01,
+                s_out: 1.0 / 255.0,
+                // small multiplier keeps activations in range
+                m: FixedMul::from_real(0.05),
+                bias,
+                w,
+            });
+        }
+        Self {
+            layers,
+            scale,
+            shift: crate::util::fixed::SHIFT,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_layer_weight_layout() {
+        let l = QuantLayer::identity(3);
+        assert_eq!(l.weight(1, 1, 2, 2), 1);
+        assert_eq!(l.weight(0, 0, 2, 2), 0);
+        assert_eq!(l.weight(1, 1, 0, 1), 0);
+    }
+
+    #[test]
+    fn test_model_validates() {
+        let m = QuantModel::test_model(3, 3, 8, 3, 42);
+        m.validate().unwrap();
+        assert_eq!(m.channels(), vec![3, 8, 8, 27]);
+        assert_eq!(m.max_channels(), 27);
+    }
+
+    #[test]
+    fn validate_catches_channel_break() {
+        let mut m = QuantModel::test_model(2, 3, 4, 3, 0);
+        m.layers[1].cin = 5;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_relu_on_final() {
+        let mut m = QuantModel::test_model(2, 3, 4, 3, 0);
+        m.layers.last_mut().unwrap().relu = true;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn weight_byte_accounting() {
+        let m = QuantModel::test_model(2, 3, 4, 3, 0);
+        // layer0: 9*3*4 = 108; layer1: 9*4*27 = 972
+        assert_eq!(m.weight_bytes(), 108 + 972);
+        assert_eq!(m.bias_bytes(), (4 + 27) * 4);
+    }
+}

@@ -1,0 +1,182 @@
+//! `.apbnw` loader — the binary weight format written by
+//! `python/compile/export_weights.py` (see its docstring for the spec).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::fixed::FixedMul;
+
+use super::{QuantLayer, QuantModel};
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "truncated .apbnw: need {} bytes at offset {}, have {}",
+                n,
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+/// Parse a `.apbnw` blob.
+pub fn parse_apbnw(blob: &[u8]) -> Result<QuantModel> {
+    let mut c = Cursor { buf: blob, pos: 0 };
+    let magic = c.take(8)?;
+    if magic != b"APBNW1\0\0" {
+        bail!("bad .apbnw magic: {magic:?}");
+    }
+    let n_layers = c.u32()? as usize;
+    let scale = c.u32()? as usize;
+    let shift = c.u32()?;
+    if shift != crate::util::fixed::SHIFT {
+        bail!(
+            "requant shift mismatch: file {shift}, engine {}",
+            crate::util::fixed::SHIFT
+        );
+    }
+    if n_layers == 0 || n_layers > 64 {
+        bail!("implausible layer count {n_layers}");
+    }
+    let mut layers = Vec::with_capacity(n_layers);
+    for li in 0..n_layers {
+        let cin = c.u32()? as usize;
+        let cout = c.u32()? as usize;
+        let relu = c.u32()? != 0;
+        if cin == 0 || cout == 0 || cin > 4096 || cout > 4096 {
+            bail!("layer {li}: implausible channels {cin}x{cout}");
+        }
+        let s_in = c.f32()?;
+        let s_w = c.f32()?;
+        let s_out = c.f32()?;
+        let m0 = c.i64()?;
+        let mut bias = Vec::with_capacity(cout);
+        for _ in 0..cout {
+            bias.push(i32::from_le_bytes(c.take(4)?.try_into().unwrap()));
+        }
+        let wlen = 9 * cin * cout;
+        let wraw = c.take(wlen)?;
+        let w: Vec<i8> = wraw.iter().map(|&b| b as i8).collect();
+        layers.push(QuantLayer {
+            cin,
+            cout,
+            relu,
+            s_in,
+            s_w,
+            s_out,
+            m: FixedMul { m0 },
+            bias,
+            w,
+        });
+    }
+    if c.pos != blob.len() {
+        bail!(
+            "trailing bytes in .apbnw: parsed {}, file {}",
+            c.pos,
+            blob.len()
+        );
+    }
+    let model = QuantModel {
+        layers,
+        scale,
+        shift,
+    };
+    model.validate()?;
+    Ok(model)
+}
+
+/// Load a `.apbnw` file from disk.
+pub fn load_apbnw(path: &Path) -> Result<QuantModel> {
+    let blob = std::fs::read(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    parse_apbnw(&blob).with_context(|| format!("parse {}", path.display()))
+}
+
+/// Serialize a model back to the `.apbnw` format (round-trip tests and
+/// the weight-repacking tools).
+pub fn write_apbnw(model: &QuantModel) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"APBNW1\0\0");
+    out.extend_from_slice(&(model.layers.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(model.scale as u32).to_le_bytes());
+    out.extend_from_slice(&model.shift.to_le_bytes());
+    for l in &model.layers {
+        out.extend_from_slice(&(l.cin as u32).to_le_bytes());
+        out.extend_from_slice(&(l.cout as u32).to_le_bytes());
+        out.extend_from_slice(&(l.relu as u32).to_le_bytes());
+        out.extend_from_slice(&l.s_in.to_le_bytes());
+        out.extend_from_slice(&l.s_w.to_le_bytes());
+        out.extend_from_slice(&l.s_out.to_le_bytes());
+        out.extend_from_slice(&l.m.m0.to_le_bytes());
+        for b in &l.bias {
+            out.extend_from_slice(&b.to_le_bytes());
+        }
+        out.extend(l.w.iter().map(|&x| x as u8));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_test_model() {
+        let m = QuantModel::test_model(3, 3, 6, 3, 7);
+        let blob = write_apbnw(&m);
+        let back = parse_apbnw(&blob).unwrap();
+        assert_eq!(back.layers.len(), 3);
+        assert_eq!(back.scale, 3);
+        for (a, b) in m.layers.iter().zip(&back.layers) {
+            assert_eq!(a.w, b.w);
+            assert_eq!(a.bias, b.bias);
+            assert_eq!(a.m.m0, b.m.m0);
+            assert_eq!(a.relu, b.relu);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_apbnw(b"NOTAMAGIC").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let m = QuantModel::test_model(2, 3, 4, 3, 0);
+        let blob = write_apbnw(&m);
+        for cut in [10, 25, blob.len() - 1] {
+            assert!(parse_apbnw(&blob[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let m = QuantModel::test_model(2, 3, 4, 3, 0);
+        let mut blob = write_apbnw(&m);
+        blob.push(0);
+        assert!(parse_apbnw(&blob).is_err());
+    }
+}

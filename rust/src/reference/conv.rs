@@ -1,0 +1,342 @@
+//! Integer 3x3 convolutions: whole-map SAME variants (the oracle) and
+//! explicit-patch VALID variants (the primitive the schedulers and the
+//! simulator drive their memories through).
+//!
+//! Accumulation is i32 (the silicon's accumulator width; the worst case
+//! `255 * 127 * 9 * 28 ≈ 8.2e6` fits comfortably), requantization
+//! widens to i64 exactly like `quant.py`.
+
+use crate::model::{QuantLayer, Tensor};
+use crate::util::fixed::clamp_u8;
+
+/// SAME 3x3 conv + requant + ReLU over a whole map (zero padding).
+pub fn conv3x3_relu(x: &Tensor<u8>, layer: &QuantLayer) -> Tensor<u8> {
+    assert_eq!(x.c, layer.cin, "conv3x3_relu: cin mismatch");
+    assert!(layer.relu, "conv3x3_relu called on a non-ReLU layer");
+    let mut out = Tensor::new(x.h, x.w, layer.cout);
+    let (w, cout) = (x.w, layer.cout);
+    conv_rows(x, layer, |y, acc_row, cout_p| {
+        for xx in 0..w {
+            let a = &acc_row[xx * cout_p..xx * cout_p + cout];
+            let o = &mut out.data[(y * w + xx) * cout..][..cout];
+            for (oo, &av) in o.iter_mut().zip(a) {
+                *oo = clamp_u8(layer.m.apply(av as i64));
+            }
+        }
+    });
+    out
+}
+
+/// SAME 3x3 conv + requant of the final layer (no ReLU, i32 output in
+/// 1/255 units, pre-residual).
+pub fn conv3x3_final(x: &Tensor<u8>, layer: &QuantLayer) -> Tensor<i32> {
+    assert_eq!(x.c, layer.cin, "conv3x3_final: cin mismatch");
+    assert!(!layer.relu, "conv3x3_final called on a ReLU layer");
+    let mut out = Tensor::new(x.h, x.w, layer.cout);
+    let (w, cout) = (x.w, layer.cout);
+    conv_rows(x, layer, |y, acc_row, cout_p| {
+        for xx in 0..w {
+            let a = &acc_row[xx * cout_p..xx * cout_p + cout];
+            let o = &mut out.data[(y * w + xx) * cout..][..cout];
+            for (oo, &av) in o.iter_mut().zip(a) {
+                *oo = layer.m.apply(av as i64) as i32;
+            }
+        }
+    });
+    out
+}
+
+/// Row-wise 3x3 SAME convolution core (§Perf hot path).
+///
+/// Per output row: bias-init a `w*cout_p` i32 accumulator strip
+/// (`cout_p` = cout padded to 8), then for each of the <=9 taps sweep
+/// the whole row — the tap loops hoist all bounds logic out of the
+/// pixel loop.  Two inner kernels:
+///
+/// * **AVX2 `vpmaddwd`**: `u8 x i8` products fit i16 (255*127 < 2^15),
+///   so input-channel *pairs* are packed `(x_ci, x_ci+1)` into 32-bit
+///   lanes and multiplied against pair-interleaved i16 weights — 16
+///   MACs per instruction.  Weights repack once per call into
+///   `[tap][ci/2][co]` pair layout, zero-padded in both ci and co.
+/// * scalar fallback (also the reference for the dispatch test).
+///
+/// `emit(y, acc_row, cout_p)` requantizes each finished row.
+fn conv_rows<F: FnMut(usize, &[i32], usize)>(
+    x: &Tensor<u8>,
+    layer: &QuantLayer,
+    mut emit: F,
+) {
+    let (h, w) = (x.h, x.w);
+    let (cin, cout) = (layer.cin, layer.cout);
+    let cout_p = cout.next_multiple_of(8);
+    let cin_p = cin.next_multiple_of(2);
+
+    #[cfg(target_arch = "x86_64")]
+    let use_avx2 = std::arch::is_x86_feature_detected!("avx2");
+    #[cfg(not(target_arch = "x86_64"))]
+    let use_avx2 = false;
+
+    // pair-interleaved i16 weights: wp[tap][ci2][co] holds the u32
+    // (w[2*ci2][co] as u16) | (w[2*ci2+1][co] as u16) << 16
+    let taps = 9;
+    let mut wp = vec![0u32; taps * (cin_p / 2) * cout_p];
+    // plain i32 weights for the scalar path
+    let mut w32 = vec![0i32; taps * cin * cout_p];
+    for tap in 0..taps {
+        for ci in 0..cin {
+            for co in 0..cout {
+                let v = layer.w[(tap * cin + ci) * cout + co];
+                w32[(tap * cin + ci) * cout_p + co] = v as i32;
+                let slot =
+                    (tap * (cin_p / 2) + ci / 2) * cout_p + co;
+                let half = (v as i16 as u16 as u32) << (16 * (ci % 2));
+                wp[slot] |= half;
+            }
+        }
+    }
+
+    let mut acc_row = vec![0i32; w * cout_p];
+    // input pixel staging padded to cin_p (zero tail)
+    let mut px = vec![0u8; cin_p];
+    for y in 0..h {
+        for xx in 0..w {
+            acc_row[xx * cout_p..xx * cout_p + cout]
+                .copy_from_slice(&layer.bias);
+            acc_row[xx * cout_p + cout..(xx + 1) * cout_p].fill(0);
+        }
+        for dr in 0..3usize {
+            let sy = y as isize + dr as isize - 1;
+            if sy < 0 || sy >= h as isize {
+                continue;
+            }
+            let in_row = &x.data[(sy as usize) * w * cin..][..w * cin];
+            for dc in 0..3usize {
+                let x_lo = 1usize.saturating_sub(dc);
+                let x_hi = (w + 1 - dc).min(w);
+                let tap = dr * 3 + dc;
+                for xx in x_lo..x_hi {
+                    let src = (xx + dc - 1) * cin;
+                    let acc =
+                        &mut acc_row[xx * cout_p..(xx + 1) * cout_p];
+                    #[cfg(target_arch = "x86_64")]
+                    if use_avx2 {
+                        // even cin reads the input row in place; odd
+                        // cin stages through the zero-padded buffer
+                        let src_px: &[u8] = if cin == cin_p {
+                            &in_row[src..src + cin]
+                        } else {
+                            px[..cin]
+                                .copy_from_slice(&in_row[src..src + cin]);
+                            &px
+                        };
+                        let wtap = &wp[tap * (cin_p / 2) * cout_p..]
+                            [..(cin_p / 2) * cout_p];
+                        // SAFETY: avx2 confirmed by runtime detection;
+                        // all slices are exactly sized above.
+                        unsafe {
+                            madd_avx2(acc, src_px, wtap, cin_p, cout_p)
+                        };
+                        continue;
+                    }
+                    let wtap = &w32[tap * cin * cout_p..][..cin * cout_p];
+                    for ci in 0..cin {
+                        let xv = in_row[src + ci] as i32;
+                        if xv == 0 {
+                            continue; // post-ReLU sparsity
+                        }
+                        let wrow = &wtap[ci * cout_p..(ci + 1) * cout_p];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+        emit(y, &acc_row, cout_p);
+    }
+}
+
+/// One pixel's multiply-accumulate over all (ci, co): `vpmaddwd` does
+/// the 2-channel dot product in 32-bit lanes, 8 output channels per
+/// 256-bit op.
+///
+/// # Safety
+/// Caller guarantees AVX2 is available, `px.len() == cin_p` (even),
+/// `acc.len() == cout_p` (multiple of 8), `wtap.len() == cin_p/2 * cout_p`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn madd_avx2(
+    acc: &mut [i32],
+    px: &[u8],
+    wtap: &[u32],
+    cin_p: usize,
+    cout_p: usize,
+) {
+    use std::arch::x86_64::*;
+    for ci2 in 0..cin_p / 2 {
+        let x0 = px[2 * ci2] as u32;
+        let x1 = px[2 * ci2 + 1] as u32;
+        if x0 == 0 && x1 == 0 {
+            continue; // pair-granular sparsity skip
+        }
+        let xpair = _mm256_set1_epi32((x0 | (x1 << 16)) as i32);
+        let wrow = wtap.as_ptr().add(ci2 * cout_p);
+        let mut co = 0;
+        while co < cout_p {
+            let a_ptr = acc.as_mut_ptr().add(co);
+            let wv =
+                _mm256_loadu_si256(wrow.add(co) as *const __m256i);
+            let a = _mm256_loadu_si256(a_ptr as *const __m256i);
+            let prod = _mm256_madd_epi16(xpair, wv);
+            _mm256_storeu_si256(
+                a_ptr as *mut __m256i,
+                _mm256_add_epi32(a, prod),
+            );
+            co += 8;
+        }
+    }
+}
+
+/// VALID conv over an explicitly assembled `(rows+2, cols+2, cin)` patch
+/// (the scheduler fills halos from its ping-pong/overlap memories; zero
+/// rows/columns stand for image borders).  ReLU layers.
+pub fn conv_patch_relu(patch: &Tensor<u8>, layer: &QuantLayer) -> Tensor<u8> {
+    assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
+    assert_eq!(patch.c, layer.cin);
+    assert!(layer.relu);
+    let (oh, ow) = (patch.h - 2, patch.w - 2);
+    let mut out = Tensor::new(oh, ow, layer.cout);
+    let mut acc = vec![0i32; layer.cout];
+    for y in 0..oh {
+        for xx in 0..ow {
+            accumulate_patch(patch, layer, y, xx, &mut acc);
+            for (co, &a) in acc.iter().enumerate() {
+                out.set(y, xx, co, clamp_u8(layer.m.apply(a as i64)));
+            }
+        }
+    }
+    out
+}
+
+/// VALID conv over a patch, final (no-ReLU) layer.
+pub fn conv_patch_final(patch: &Tensor<u8>, layer: &QuantLayer) -> Tensor<i32> {
+    assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
+    assert_eq!(patch.c, layer.cin);
+    assert!(!layer.relu);
+    let (oh, ow) = (patch.h - 2, patch.w - 2);
+    let mut out = Tensor::new(oh, ow, layer.cout);
+    let mut acc = vec![0i32; layer.cout];
+    for y in 0..oh {
+        for xx in 0..ow {
+            accumulate_patch(patch, layer, y, xx, &mut acc);
+            for (co, &a) in acc.iter().enumerate() {
+                out.set(y, xx, co, layer.m.apply(a as i64) as i32);
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn accumulate_patch(
+    patch: &Tensor<u8>,
+    layer: &QuantLayer,
+    y: usize,
+    xx: usize,
+    acc: &mut [i32],
+) {
+    acc.copy_from_slice(&layer.bias);
+    for dr in 0..3usize {
+        for dc in 0..3usize {
+            let base = patch.idx(y + dr, xx + dc, 0);
+            let wbase = ((dr * 3 + dc) * layer.cin) * layer.cout;
+            for ci in 0..layer.cin {
+                let xv = patch.data[base + ci] as i32;
+                if xv == 0 {
+                    continue;
+                }
+                let wrow = &layer.w[wbase + ci * layer.cout..];
+                for (co, a) in acc.iter_mut().enumerate() {
+                    *a += xv * wrow[co] as i32;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QuantModel;
+    use crate::util::Xoshiro256pp;
+
+    fn rand_map(h: usize, w: usize, c: usize, seed: u64) -> Tensor<u8> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut t = Tensor::new(h, w, c);
+        rng.fill_u8(&mut t.data);
+        t
+    }
+
+    #[test]
+    fn identity_layer_passes_through() {
+        let l = QuantLayer::identity(2);
+        let x = rand_map(5, 6, 2, 1);
+        let y = conv3x3_relu(&x, &l);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn same_equals_patch_with_zero_halo() {
+        let qm = QuantModel::test_model(2, 3, 5, 3, 3);
+        let l = &qm.layers[0];
+        let x = rand_map(6, 7, 3, 2);
+        let whole = conv3x3_relu(&x, l);
+        // assemble an explicitly zero-padded patch
+        let mut patch: Tensor<u8> = Tensor::new(x.h + 2, x.w + 2, x.c);
+        for y in 0..x.h {
+            for xx in 0..x.w {
+                for c in 0..x.c {
+                    patch.set(y + 1, xx + 1, c, x.get(y, xx, c));
+                }
+            }
+        }
+        let via_patch = conv_patch_relu(&patch, l);
+        assert_eq!(whole.data, via_patch.data);
+    }
+
+    #[test]
+    fn final_layer_patch_matches_same() {
+        let qm = QuantModel::test_model(2, 3, 5, 3, 4);
+        let l = qm.layers.last().unwrap();
+        let x = rand_map(5, 5, 5, 7);
+        let whole = conv3x3_final(&x, l);
+        let mut patch: Tensor<u8> = Tensor::new(x.h + 2, x.w + 2, x.c);
+        for y in 0..x.h {
+            for xx in 0..x.w {
+                for c in 0..x.c {
+                    patch.set(y + 1, xx + 1, c, x.get(y, xx, c));
+                }
+            }
+        }
+        let via_patch = conv_patch_final(&patch, l);
+        assert_eq!(whole.data, via_patch.data);
+    }
+
+    #[test]
+    fn border_uses_zero_padding() {
+        // all-ones weights: corner output sums a 2x2 window only
+        let mut l = QuantLayer::identity(1);
+        l.w.iter_mut().for_each(|w| *w = 1);
+        let x = Tensor::from_vec(2, 2, 1, vec![10, 20, 30, 40]);
+        let y = conv3x3_relu(&x, &l);
+        assert_eq!(y.get(0, 0, 0), 100); // 10+20+30+40
+    }
+
+    #[test]
+    #[should_panic(expected = "cin mismatch")]
+    fn channel_mismatch_panics() {
+        let l = QuantLayer::identity(3);
+        let x = rand_map(4, 4, 2, 0);
+        conv3x3_relu(&x, &l);
+    }
+}

@@ -1,0 +1,148 @@
+//! Reference integer engine: bit-exact 8-bit APBN inference.
+//!
+//! This is the monolithic (whole-frame) oracle the fusion schedulers and
+//! the cycle simulator are pinned against, and — after the §Perf pass —
+//! also the production CPU engine behind the serving coordinator.  Its
+//! arithmetic mirrors `python/compile/quant.py` exactly; the
+//! cross-language golden-vector test (`rust/tests/golden.rs`) proves it.
+
+pub mod conv;
+
+pub use conv::{conv3x3_final, conv3x3_relu, conv_patch_final, conv_patch_relu};
+
+use crate::image::ImageU8;
+use crate::model::{QuantModel, Tensor};
+
+/// Full integer APBN forward: uint8 LR -> uint8 HR.
+///
+/// SAME zero padding at every layer (the frame-border behaviour of the
+/// chip when run monolithically; band seams are the schedulers' job).
+pub fn forward_int(x: &Tensor<u8>, qm: &QuantModel) -> Tensor<u8> {
+    let mut h = x.clone();
+    for layer in &qm.layers[..qm.layers.len() - 1] {
+        h = conv3x3_relu(&h, layer);
+    }
+    let pre = conv3x3_final(&h, qm.layers.last().unwrap());
+    add_anchor_and_shuffle(&pre, x, qm.scale)
+}
+
+/// Residual add + clamp + depth-to-space (the tail of the datapath).
+///
+/// `pre` is the final conv output in 1/255 units (int32); `lr` the raw
+/// uint8 input whose pixels are the anchor.
+pub fn add_anchor_and_shuffle(
+    pre: &Tensor<i32>,
+    lr: &Tensor<u8>,
+    scale: usize,
+) -> Tensor<u8> {
+    let r2 = scale * scale;
+    assert_eq!(pre.c, lr.c * r2, "pre-residual channel mismatch");
+    assert_eq!((pre.h, pre.w), (lr.h, lr.w));
+    let mut out: Tensor<u8> = Tensor::new(lr.h * scale, lr.w * scale, lr.c);
+    for y in 0..lr.h {
+        for x in 0..lr.w {
+            for i in 0..scale {
+                for j in 0..scale {
+                    for ch in 0..lr.c {
+                        // channel layout (i*scale + j)*C + ch, matching
+                        // kernels.ref.depth_to_space
+                        let pc = (i * scale + j) * lr.c + ch;
+                        let v = pre.get(y, x, pc)
+                            + lr.get(y, x, ch) as i32;
+                        out.set(
+                            y * scale + i,
+                            x * scale + j,
+                            ch,
+                            v.clamp(0, 255) as u8,
+                        );
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Convenience wrapper over [`ImageU8`].
+pub fn upscale(img: &ImageU8, qm: &QuantModel) -> ImageU8 {
+    let t = Tensor::from_vec(img.h, img.w, img.c, img.data.clone());
+    let out = forward_int(&t, qm);
+    ImageU8::from_vec(out.h, out.w, out.c, out.data)
+}
+
+/// Per-layer outputs for checksum-style debugging (golden tests).
+pub fn forward_layers(
+    x: &Tensor<u8>,
+    qm: &QuantModel,
+) -> (Vec<Tensor<u8>>, Tensor<i32>) {
+    let mut outs = Vec::new();
+    let mut h = x.clone();
+    for layer in &qm.layers[..qm.layers.len() - 1] {
+        h = conv3x3_relu(&h, layer);
+        outs.push(h.clone());
+    }
+    let pre = conv3x3_final(&h, qm.layers.last().unwrap());
+    (outs, pre)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QuantModel;
+    use crate::util::Xoshiro256pp;
+
+    fn rand_input(h: usize, w: usize, c: usize, seed: u64) -> Tensor<u8> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut t = Tensor::new(h, w, c);
+        rng.fill_u8(&mut t.data);
+        t
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let qm = QuantModel::test_model(3, 3, 6, 3, 1);
+        let x = rand_input(7, 9, 3, 2);
+        let y = forward_int(&x, &qm);
+        assert_eq!((y.h, y.w, y.c), (21, 27, 3));
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let qm = QuantModel::test_model(3, 3, 6, 3, 1);
+        let x = rand_input(6, 6, 3, 3);
+        assert_eq!(forward_int(&x, &qm).data, forward_int(&x, &qm).data);
+    }
+
+    #[test]
+    fn zero_trunk_is_nearest_upsample() {
+        // zero weights + zero bias => pre = 0 => output = anchor
+        let mut qm = QuantModel::test_model(2, 3, 4, 3, 1);
+        for l in &mut qm.layers {
+            l.w.iter_mut().for_each(|w| *w = 0);
+            l.bias.iter_mut().for_each(|b| *b = 0);
+        }
+        let x = rand_input(4, 5, 3, 9);
+        let y = forward_int(&x, &qm);
+        for yy in 0..y.h {
+            for xx in 0..y.w {
+                for ch in 0..3 {
+                    assert_eq!(y.get(yy, xx, ch), x.get(yy / 3, xx / 3, ch));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn residual_clamps() {
+        // big positive bias on the final layer saturates at 255
+        let mut qm = QuantModel::test_model(1, 1, 1, 2, 1);
+        let last = qm.layers.last_mut().unwrap();
+        last.bias.iter_mut().for_each(|b| *b = 1 << 20);
+        last.m = crate::util::fixed::FixedMul {
+            m0: 1 << crate::util::fixed::SHIFT,
+        };
+        let x = rand_input(2, 2, 1, 4);
+        let y = forward_int(&x, &qm);
+        assert!(y.data.iter().all(|&v| v == 255));
+    }
+}

@@ -1,0 +1,128 @@
+//! Loaders for the cross-language golden-vector files written by
+//! `python/compile/export_weights.py` (formats in its docstring).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::image::ImageF32;
+use crate::model::Tensor;
+
+/// Integer-engine golden: input, per-layer checksums, expected output.
+#[derive(Clone, Debug)]
+pub struct GoldenQuant {
+    pub input: Tensor<u8>,
+    /// FNV-1a64 of each conv layer's output bytes (final layer i32-LE).
+    pub layer_checksums: Vec<u64>,
+    pub output: Tensor<u8>,
+}
+
+/// Float-model golden for the PJRT runtime.
+#[derive(Clone, Debug)]
+pub struct GoldenFloat {
+    pub input: ImageF32,
+    pub output: ImageF32,
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.p + n > self.b.len() {
+            bail!("truncated golden file at offset {}", self.p);
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+pub fn load_golden_quant(path: &Path) -> Result<GoldenQuant> {
+    let blob = std::fs::read(path)
+        .with_context(|| format!("read {} — run `make artifacts`", path.display()))?;
+    let mut c = Cur { b: &blob, p: 0 };
+    if c.take(8)? != b"APBNGV1\0" {
+        bail!("bad golden_quant magic");
+    }
+    let h = c.u32()? as usize;
+    let w = c.u32()? as usize;
+    let input =
+        Tensor::from_vec(h, w, 3, c.take(h * w * 3)?.to_vec());
+    let n = c.u32()? as usize;
+    let mut sums = Vec::with_capacity(n);
+    for _ in 0..n {
+        sums.push(c.u64()?);
+    }
+    let oh = c.u32()? as usize;
+    let ow = c.u32()? as usize;
+    let output =
+        Tensor::from_vec(oh, ow, 3, c.take(oh * ow * 3)?.to_vec());
+    if c.p != blob.len() {
+        bail!("trailing bytes in golden_quant");
+    }
+    Ok(GoldenQuant {
+        input,
+        layer_checksums: sums,
+        output,
+    })
+}
+
+pub fn load_golden_float(path: &Path) -> Result<GoldenFloat> {
+    let blob = std::fs::read(path)
+        .with_context(|| format!("read {} — run `make artifacts`", path.display()))?;
+    let mut c = Cur { b: &blob, p: 0 };
+    if c.take(8)? != b"APBNGF1\0" {
+        bail!("bad golden_float magic");
+    }
+    let h = c.u32()? as usize;
+    let w = c.u32()? as usize;
+    let fin = bytes_to_f32(c.take(h * w * 3 * 4)?);
+    let oh = c.u32()? as usize;
+    let ow = c.u32()? as usize;
+    let fout = bytes_to_f32(c.take(oh * ow * 3 * 4)?);
+    Ok(GoldenFloat {
+        input: ImageF32::from_vec(h, w, 3, fin),
+        output: ImageF32::from_vec(oh, ow, 3, fout),
+    })
+}
+
+fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("sr_accel_goldens");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"WRONGMAG rest").unwrap();
+        assert!(load_golden_quant(&p).is_err());
+        assert!(load_golden_float(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join("sr_accel_goldens");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.bin");
+        std::fs::write(&p, b"APBNGV1\0\x18\x00\x00\x00").unwrap();
+        assert!(load_golden_quant(&p).is_err());
+    }
+}

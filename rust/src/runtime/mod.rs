@@ -1,0 +1,233 @@
+//! PJRT runtime (DESIGN.md S10): loads the HLO-text artifacts produced
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Python never runs on this path — the artifacts are ahead-of-time
+//! lowered and the weights are baked into them as constants, so the
+//! executor's hot loop is `image in, image out`.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+mod goldens;
+
+pub use goldens::{load_golden_float, load_golden_quant, GoldenFloat, GoldenQuant};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::image::ImageF32;
+
+/// A compiled model executable bound to a PJRT client.
+pub struct Executor {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// LR input shape (h, w, c).
+    pub in_shape: (usize, usize, usize),
+    /// HR output shape (h, w, c).
+    pub out_shape: (usize, usize, usize),
+    pub artifact: PathBuf,
+}
+
+impl Executor {
+    /// Compile an HLO-text artifact on the CPU PJRT client.
+    ///
+    /// `in_shape`/`out_shape` come from `artifacts/manifest.json`
+    /// (see [`Manifest`]).
+    pub fn load(
+        path: &Path,
+        in_shape: (usize, usize, usize),
+        out_shape: (usize, usize, usize),
+    ) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(to_anyhow)
+            .context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .map_err(to_anyhow)
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(to_anyhow)
+            .with_context(|| format!("compile {}", path.display()))?;
+        Ok(Self {
+            client,
+            exe,
+            in_shape,
+            out_shape,
+            artifact: path.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run one LR image through the model. The image must match
+    /// `in_shape` exactly (one executable per shape — AOT contract).
+    pub fn run(&self, img: &ImageF32) -> Result<ImageF32> {
+        let (h, w, c) = self.in_shape;
+        if (img.h, img.w, img.c) != (h, w, c) {
+            bail!(
+                "executor expects {}x{}x{}, got {}x{}x{} (artifact {})",
+                h,
+                w,
+                c,
+                img.h,
+                img.w,
+                img.c,
+                self.artifact.display()
+            );
+        }
+        let lit = xla::Literal::vec1(&img.data)
+            .reshape(&[h as i64, w as i64, c as i64])
+            .map_err(to_anyhow)
+            .context("reshape input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(to_anyhow)
+            .context("execute")?[0][0]
+            .to_literal_sync()
+            .map_err(to_anyhow)?;
+        // aot.py lowers with return_tuple=True -> 1-tuple
+        let out = result.to_tuple1().map_err(to_anyhow)?;
+        let data: Vec<f32> = out.to_vec().map_err(to_anyhow)?;
+        let (oh, ow, oc) = self.out_shape;
+        if data.len() != oh * ow * oc {
+            bail!(
+                "output size {} != expected {}x{}x{}",
+                data.len(),
+                oh,
+                ow,
+                oc
+            );
+        }
+        Ok(ImageF32::from_vec(oh, ow, oc, data))
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+/// Minimal manifest.json reader (artifact name -> shapes).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    entries: Vec<(String, (usize, usize, usize), (usize, usize, usize))>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!("read {}/manifest.json — run `make artifacts`", dir.display())
+            })?;
+        Self::parse(&text)
+    }
+
+    /// Tiny purpose-built JSON walk: we own both ends of this format.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        // entries look like: "name": { ... "input_shape": [h, w, c],
+        // "output_shape": [h, w, c] ... }
+        let mut rest = text;
+        while let Some(pos) = rest.find(".hlo.txt\"") {
+            let name_start = rest[..pos].rfind('"').context("manifest name")?;
+            let name = rest[name_start + 1..pos + 8].to_string();
+            let body = &rest[pos..];
+            let in_shape = parse_shape(body, "input_shape")?;
+            let out_shape = parse_shape(body, "output_shape")?;
+            entries.push((name, in_shape, out_shape));
+            rest = &rest[pos + 9..];
+        }
+        if entries.is_empty() {
+            bail!("manifest.json contains no artifacts");
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn shapes(
+        &self,
+        name: &str,
+    ) -> Option<((usize, usize, usize), (usize, usize, usize))> {
+        self.entries
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, i, o)| (*i, *o))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|(n, _, _)| n.as_str()).collect()
+    }
+}
+
+fn parse_shape(body: &str, key: &str) -> Result<(usize, usize, usize)> {
+    let kpos = body.find(key).with_context(|| format!("manifest {key}"))?;
+    let open = body[kpos..].find('[').context("shape open")? + kpos;
+    let close = body[open..].find(']').context("shape close")? + open;
+    let nums: Vec<usize> = body[open + 1..close]
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()
+        .context("shape numbers")?;
+    if nums.len() != 3 {
+        bail!("{key} is not rank 3");
+    }
+    Ok((nums[0], nums[1], nums[2]))
+}
+
+/// Default artifact directory (repo-root/artifacts), overridable via
+/// `SR_ACCEL_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SR_ACCEL_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "apbn_tile.hlo.txt": {
+    "kind": "model", "h": 24, "w": 32, "backend": "ref",
+    "input_shape": [24, 32, 3], "output_shape": [72, 96, 3],
+    "hlo_chars": 6321
+  },
+  "kernel_conv3x3.hlo.txt": {
+    "kind": "kernel", "h": 60, "w": 64,
+    "input_shape": [60, 64, 28], "output_shape": [60, 64, 28],
+    "hlo_chars": 8062
+  }
+}"#;
+
+    #[test]
+    fn manifest_parses_shapes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(
+            m.shapes("apbn_tile.hlo.txt"),
+            Some(((24, 32, 3), (72, 96, 3)))
+        );
+        assert_eq!(
+            m.shapes("kernel_conv3x3.hlo.txt"),
+            Some(((60, 64, 28), (60, 64, 28)))
+        );
+        assert_eq!(m.names().len(), 2);
+    }
+
+    #[test]
+    fn manifest_missing_artifact_is_none() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.shapes("nope.hlo.txt").is_none());
+    }
+
+    #[test]
+    fn empty_manifest_rejected() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

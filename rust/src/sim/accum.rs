@@ -1,0 +1,160 @@
+//! The 2-stage pipelined accumulator (Fig. 4b).
+//!
+//! Stage 1 sums the three PE arrays inside each block (folded into
+//! [`super::pe::PeBlock::cycle`]) and the first half of the 28-input
+//! adder tree; stage 2 finishes the tree and muxes in either the bias
+//! or the residual, then hands the value to requantization.
+//!
+//! The model is value-exact and latency-exact: results emerge
+//! `STAGES` cycles after their operands enter.
+
+use super::pe::SEG;
+
+/// Pipeline depth of the accumulator.
+pub const STAGES: usize = 2;
+
+/// What stage 2 adds to the reduced sum (the mux of Fig. 4b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage2Add {
+    Bias(i32),
+    /// Residual path of the final layer (anchor pixel, already in
+    /// accumulator units — the chip feeds it through the same port).
+    Residual(i32),
+    Nothing,
+}
+
+/// One in-flight accumulation job.
+#[derive(Clone, Debug)]
+struct Job {
+    /// Partial sums per block, SEG values each, being reduced.
+    partial: [i64; SEG],
+    add: Stage2Add,
+    /// Remaining cycles before retire.
+    remaining: usize,
+    /// Opaque tag the engine uses to route the retired segment.
+    tag: u64,
+}
+
+/// The pipelined accumulator: accepts one segment per cycle, retires one
+/// segment per cycle after the fill.
+#[derive(Debug, Default)]
+pub struct Accumulator {
+    pipe: Vec<Job>,
+    pub retired: Vec<(u64, [i64; SEG])>,
+    cycles: u64,
+}
+
+impl Accumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Issue the per-block partial sums of one cycle. `blocks[b][r]` is
+    /// block b's partial for segment row r. Returns nothing; the result
+    /// retires `STAGES` cycles later via [`Self::tick`].
+    pub fn issue(&mut self, blocks: &[[i32; SEG]], add: Stage2Add, tag: u64) {
+        let mut partial = [0i64; SEG];
+        for blk in blocks {
+            for (r, p) in partial.iter_mut().enumerate() {
+                *p += blk[r] as i64;
+            }
+        }
+        self.pipe.push(Job {
+            partial,
+            add,
+            remaining: STAGES,
+            tag,
+        });
+    }
+
+    /// Advance one cycle; any job whose latency elapsed retires into
+    /// [`Self::retired`] with its stage-2 addend applied.
+    pub fn tick(&mut self) {
+        self.cycles += 1;
+        let mut done = Vec::new();
+        for job in &mut self.pipe {
+            job.remaining -= 1;
+            if job.remaining == 0 {
+                let addend = match job.add {
+                    Stage2Add::Bias(b) => b as i64,
+                    Stage2Add::Residual(r) => r as i64,
+                    Stage2Add::Nothing => 0,
+                };
+                let mut out = job.partial;
+                for v in &mut out {
+                    *v += addend;
+                }
+                done.push((job.tag, out));
+            }
+        }
+        self.pipe.retain(|j| j.remaining > 0);
+        self.retired.extend(done);
+    }
+
+    /// Cycles needed to flush in-flight jobs.
+    pub fn drain_cycles(&self) -> usize {
+        self.pipe.iter().map(|j| j.remaining).max().unwrap_or(0)
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.pipe.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduces_blocks_and_adds_bias() {
+        let mut acc = Accumulator::new();
+        let blocks = vec![[1i32; SEG], [2; SEG], [3; SEG]];
+        acc.issue(&blocks, Stage2Add::Bias(10), 7);
+        assert!(acc.retired.is_empty());
+        acc.tick();
+        assert!(acc.retired.is_empty(), "one-cycle latency too short");
+        acc.tick();
+        assert_eq!(acc.retired.len(), 1);
+        let (tag, vals) = acc.retired[0];
+        assert_eq!(tag, 7);
+        assert!(vals.iter().all(|&v| v == 16)); // 1+2+3+10
+    }
+
+    #[test]
+    fn pipeline_overlaps_issues() {
+        let mut acc = Accumulator::new();
+        acc.issue(&[[1; SEG]], Stage2Add::Nothing, 0);
+        acc.tick();
+        acc.issue(&[[2; SEG]], Stage2Add::Nothing, 1);
+        acc.tick(); // retires job 0
+        acc.tick(); // retires job 1
+        assert_eq!(
+            acc.retired.iter().map(|r| r.0).collect::<Vec<_>>(),
+            vec![0, 1]
+        );
+        assert_eq!(acc.in_flight(), 0);
+    }
+
+    #[test]
+    fn residual_mux() {
+        let mut acc = Accumulator::new();
+        acc.issue(&[[5; SEG]], Stage2Add::Residual(100), 0);
+        acc.tick();
+        acc.tick();
+        assert!(acc.retired[0].1.iter().all(|&v| v == 105));
+    }
+
+    #[test]
+    fn drain_cycles_tracks_depth() {
+        let mut acc = Accumulator::new();
+        assert_eq!(acc.drain_cycles(), 0);
+        acc.issue(&[[0; SEG]], Stage2Add::Nothing, 0);
+        assert_eq!(acc.drain_cycles(), STAGES);
+        acc.tick();
+        assert_eq!(acc.drain_cycles(), 1);
+    }
+}

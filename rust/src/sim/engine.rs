@@ -1,0 +1,350 @@
+//! Tile conv engines: cycle-exact and analytic fidelities.
+//!
+//! A [`TileEngine`] computes one conv layer over an explicitly assembled
+//! `(rows+2, cols+2, cin)` patch (halos filled by the scheduler from its
+//! ping-pong / overlap memories), returning the `(rows, cols, cout)`
+//! output plus the cycles/MACs spent.  The two implementations must
+//! agree exactly on both values and cycles — `rust/tests/` pins this.
+
+use crate::model::{QuantLayer, Tensor};
+use crate::reference::{conv_patch_final, conv_patch_relu};
+use crate::util::fixed::clamp_u8;
+
+use super::accum::{Accumulator, Stage2Add, STAGES};
+use super::pe::{PeBlock, SEG};
+
+/// Output of one tile-layer execution.
+#[derive(Clone, Debug)]
+pub enum LayerOut {
+    U8(Tensor<u8>),
+    I32(Tensor<i32>),
+}
+
+impl LayerOut {
+    pub fn unwrap_u8(self) -> Tensor<u8> {
+        match self {
+            LayerOut::U8(t) => t,
+            LayerOut::I32(_) => panic!("expected u8 layer output"),
+        }
+    }
+
+    pub fn unwrap_i32(self) -> Tensor<i32> {
+        match self {
+            LayerOut::I32(t) => t,
+            LayerOut::U8(_) => panic!("expected i32 layer output"),
+        }
+    }
+}
+
+/// Cycle/MAC cost of one tile-layer execution.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LayerCost {
+    pub cycles: u64,
+    pub mac_ops: u64,
+    pub mac_slots: u64,
+}
+
+/// A conv-layer execution engine over patches.
+pub trait TileEngine {
+    /// `patch` is `(rows+2, cols+2, cin)`; returns `(rows, cols, cout)`.
+    fn run_layer(&self, patch: &Tensor<u8>, layer: &QuantLayer)
+        -> (LayerOut, LayerCost);
+
+    fn name(&self) -> &'static str;
+}
+
+/// Geometry shared by both engines.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineGeometry {
+    /// PE blocks available (28 in the paper).
+    pub pe_blocks: usize,
+    /// Peak MAC slots per cycle (1260 in the paper).
+    pub macs_per_cycle: usize,
+}
+
+impl EngineGeometry {
+    pub fn paper() -> Self {
+        Self {
+            pe_blocks: 28,
+            macs_per_cycle: 1260,
+        }
+    }
+}
+
+fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Closed-form cycle cost of one layer over a (rows x cols) tile.
+///
+/// One cycle produces one SEG-row segment of one output column for one
+/// output channel with up to `pe_blocks` input channels reduced; plus
+/// the accumulator drain.
+pub fn layer_cycles(
+    rows: usize,
+    cols: usize,
+    cin: usize,
+    cout: usize,
+    geo: &EngineGeometry,
+) -> LayerCost {
+    let issues = cols as u64
+        * cout as u64
+        * div_ceil(rows, SEG) as u64
+        * div_ceil(cin, geo.pe_blocks) as u64;
+    // a segment retires STAGES cycles after issue and issues overlap, so
+    // the tail adds STAGES-1 cycles beyond the issue stream
+    let cycles = issues + (STAGES as u64 - 1);
+    LayerCost {
+        cycles,
+        mac_ops: 9 * rows as u64 * cols as u64 * cin as u64 * cout as u64,
+        mac_slots: cycles * geo.macs_per_cycle as u64,
+    }
+}
+
+/// Analytic engine: values via the reference conv, cycles closed-form.
+#[derive(Clone, Copy, Debug)]
+pub struct AnalyticEngine {
+    pub geo: EngineGeometry,
+}
+
+impl AnalyticEngine {
+    pub fn paper() -> Self {
+        Self {
+            geo: EngineGeometry::paper(),
+        }
+    }
+}
+
+impl TileEngine for AnalyticEngine {
+    fn run_layer(
+        &self,
+        patch: &Tensor<u8>,
+        layer: &QuantLayer,
+    ) -> (LayerOut, LayerCost) {
+        let rows = patch.h - 2;
+        let cols = patch.w - 2;
+        let cost = layer_cycles(rows, cols, layer.cin, layer.cout, &self.geo);
+        let out = if layer.relu {
+            LayerOut::U8(conv_patch_relu(patch, layer))
+        } else {
+            LayerOut::I32(conv_patch_final(patch, layer))
+        };
+        (out, cost)
+    }
+
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+}
+
+/// Cycle-exact engine: steps the PE plane and the pipelined accumulator
+/// cycle by cycle. Requires `cin <= pe_blocks` (true for APBN; the
+/// analytic engine covers the general case).
+#[derive(Clone, Copy, Debug)]
+pub struct CycleExactEngine {
+    pub geo: EngineGeometry,
+}
+
+impl CycleExactEngine {
+    pub fn paper() -> Self {
+        Self {
+            geo: EngineGeometry::paper(),
+        }
+    }
+}
+
+impl TileEngine for CycleExactEngine {
+    fn run_layer(
+        &self,
+        patch: &Tensor<u8>,
+        layer: &QuantLayer,
+    ) -> (LayerOut, LayerCost) {
+        assert!(
+            layer.cin <= self.geo.pe_blocks,
+            "cycle-exact engine: cin {} exceeds {} PE blocks",
+            layer.cin,
+            self.geo.pe_blocks
+        );
+        let rows = patch.h - 2;
+        let cols = patch.w - 2;
+        let segs = div_ceil(rows, SEG);
+        let blocks: Vec<PeBlock> =
+            vec![PeBlock::default(); self.geo.pe_blocks];
+        let mut acc = Accumulator::new();
+
+        // raw (pre-requant) accumulator results indexed by tag
+        let mut mac_ops: u64 = 0;
+        let mut block_partials = vec![[0i32; SEG]; layer.cin];
+
+        for x in 0..cols {
+            for co in 0..layer.cout {
+                // weight columns for (all cin, this co): wcols[j][dr]
+                for s in 0..segs {
+                    let y0 = s * SEG;
+                    let valid = (rows - y0).min(SEG);
+                    // each PE block ci processes input channel ci
+                    for (ci, partial) in
+                        block_partials.iter_mut().enumerate().take(layer.cin)
+                    {
+                        // input columns x, x+1, x+2 of the padded patch,
+                        // rows y0 .. y0+SEG+2 (zero beyond patch)
+                        let mut cols3 = [[0i32; SEG + 2]; 3];
+                        for (j, colbuf) in cols3.iter_mut().enumerate() {
+                            for (r, slot) in colbuf.iter_mut().enumerate() {
+                                let py = y0 + r;
+                                if py < patch.h {
+                                    *slot =
+                                        patch.get(py, x + j, ci) as i32;
+                                }
+                            }
+                        }
+                        let wcols = [
+                            [
+                                layer.weight(0, 0, ci, co),
+                                layer.weight(1, 0, ci, co),
+                                layer.weight(2, 0, ci, co),
+                            ],
+                            [
+                                layer.weight(0, 1, ci, co),
+                                layer.weight(1, 1, ci, co),
+                                layer.weight(2, 1, ci, co),
+                            ],
+                            [
+                                layer.weight(0, 2, ci, co),
+                                layer.weight(1, 2, ci, co),
+                                layer.weight(2, 2, ci, co),
+                            ],
+                        ];
+                        *partial = blocks[ci].cycle(&cols3, &wcols);
+                    }
+                    mac_ops += 9 * valid as u64 * layer.cin as u64;
+                    let tag = ((x * layer.cout + co) * segs + s) as u64;
+                    acc.issue(
+                        &block_partials[..layer.cin],
+                        Stage2Add::Bias(layer.bias[co]),
+                        tag,
+                    );
+                    acc.tick();
+                }
+            }
+        }
+        // drain the accumulator pipeline
+        while acc.in_flight() > 0 {
+            acc.tick();
+        }
+        let cycles = acc.cycles();
+
+        // requantize retired segments into the output tensor
+        let cost = LayerCost {
+            cycles,
+            mac_ops,
+            mac_slots: cycles * self.geo.macs_per_cycle as u64,
+        };
+        if layer.relu {
+            let mut out: Tensor<u8> = Tensor::new(rows, cols, layer.cout);
+            for &(tag, vals) in &acc.retired {
+                let (x, co, s) = untag(tag, layer.cout, segs);
+                for (r, &v) in vals.iter().enumerate() {
+                    let y = s * SEG + r;
+                    if y < rows {
+                        out.set(y, x, co, clamp_u8(layer.m.apply(v)));
+                    }
+                }
+            }
+            (LayerOut::U8(out), cost)
+        } else {
+            let mut out: Tensor<i32> = Tensor::new(rows, cols, layer.cout);
+            for &(tag, vals) in &acc.retired {
+                let (x, co, s) = untag(tag, layer.cout, segs);
+                for (r, &v) in vals.iter().enumerate() {
+                    let y = s * SEG + r;
+                    if y < rows {
+                        out.set(y, x, co, layer.m.apply(v) as i32);
+                    }
+                }
+            }
+            (LayerOut::I32(out), cost)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "cycle-exact"
+    }
+}
+
+fn untag(tag: u64, cout: usize, segs: usize) -> (usize, usize, usize) {
+    let s = (tag as usize) % segs;
+    let rest = (tag as usize) / segs;
+    let co = rest % cout;
+    let x = rest / cout;
+    (x, co, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QuantModel;
+    use crate::util::Xoshiro256pp;
+
+    fn rand_patch(rows: usize, cols: usize, c: usize, seed: u64) -> Tensor<u8> {
+        // interior random, halo ring zero (image-border semantics)
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut p = Tensor::new(rows + 2, cols + 2, c);
+        for y in 1..=rows {
+            for x in 1..=cols {
+                for ch in 0..c {
+                    p.set(y, x, ch, rng.next_u32() as u8);
+                }
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn engines_agree_on_values_and_cycles() {
+        let qm = QuantModel::test_model(2, 3, 6, 3, 11);
+        for (rows, cols) in [(5, 4), (7, 3), (12, 8), (6, 1)] {
+            let patch = rand_patch(rows, cols, 3, rows as u64 * 31);
+            let l = &qm.layers[0];
+            let (a_out, a_cost) =
+                AnalyticEngine::paper().run_layer(&patch, l);
+            let (c_out, c_cost) =
+                CycleExactEngine::paper().run_layer(&patch, l);
+            assert_eq!(
+                a_out.unwrap_u8().data,
+                c_out.unwrap_u8().data,
+                "{rows}x{cols}"
+            );
+            assert_eq!(a_cost, c_cost, "{rows}x{cols}");
+        }
+    }
+
+    #[test]
+    fn engines_agree_on_final_layer() {
+        let qm = QuantModel::test_model(2, 3, 6, 3, 5);
+        let l = qm.layers.last().unwrap();
+        let patch = rand_patch(9, 5, 6, 77);
+        let (a, ac) = AnalyticEngine::paper().run_layer(&patch, l);
+        let (c, cc) = CycleExactEngine::paper().run_layer(&patch, l);
+        assert_eq!(a.unwrap_i32().data, c.unwrap_i32().data);
+        assert_eq!(ac, cc);
+    }
+
+    #[test]
+    fn cycle_formula_matches_paper_steady_state() {
+        // steady-state layer: 60-row, 8-col tile, 28->28 channels
+        let c = layer_cycles(60, 8, 28, 28, &EngineGeometry::paper());
+        // 8 cols * 28 cout * 12 segments + 1 pipeline-tail cycle
+        assert_eq!(c.cycles, 8 * 28 * 12 + 1);
+        // utilization of the steady-state layer ~ 100 %
+        let util = c.mac_ops as f64 / c.mac_slots as f64;
+        assert!(util > 0.99, "util {util}");
+    }
+
+    #[test]
+    fn first_layer_utilization_is_3_28() {
+        let c = layer_cycles(60, 8, 3, 28, &EngineGeometry::paper());
+        let util = c.mac_ops as f64 / c.mac_slots as f64;
+        assert!((util - 3.0 / 28.0).abs() < 0.01, "util {util}");
+    }
+}

@@ -1,0 +1,109 @@
+//! Cycle-level simulator of the ISCAS'22 accelerator (DESIGN.md §6, S11).
+//!
+//! Components mirror Fig. 3 of the paper: PE blocks (28x three 5x3
+//! arrays), the 2-stage pipelined accumulator, SRAM buffer models with
+//! access counters (ping-pong / overlap / weight / bias / residual), and
+//! a DRAM channel with byte accounting.  Two fidelities:
+//!
+//! * [`engine::CycleExactEngine`] steps the PE plane cycle by cycle and
+//!   produces bit-exact outputs *and* exact cycle counts;
+//! * [`engine::AnalyticEngine`] uses the closed-form cycle model +
+//!   the `reference` conv for values.
+//!
+//! `rust/tests/sim_cross_check.rs` pins the two against each other.
+
+pub mod accum;
+pub mod dram;
+pub mod engine;
+pub mod pe;
+pub mod sram;
+
+pub use dram::DramChannel;
+pub use engine::{AnalyticEngine, CycleExactEngine, TileEngine};
+pub use sram::Sram;
+
+/// Aggregated execution statistics of a simulated run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunStats {
+    /// Compute cycles spent in the PE plane (incl. pipeline fill).
+    pub compute_cycles: u64,
+    /// Useful MAC operations actually contributing to outputs.
+    pub mac_ops: u64,
+    /// MAC issue slots available (`cycles * total_macs`).
+    pub mac_slots: u64,
+    /// DRAM traffic.
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    /// SRAM access counts (reads/writes of any buffer).
+    pub sram_reads: u64,
+    pub sram_writes: u64,
+    /// Peak bytes resident in each ping-pong buffer.
+    pub peak_pingpong_bytes: u64,
+    /// Bytes provisioned for the overlap queue.
+    pub overlap_bytes: u64,
+    /// Bytes provisioned for the residual buffer.
+    pub residual_bytes: u64,
+    /// Number of tiles processed.
+    pub tiles: u64,
+}
+
+impl RunStats {
+    pub fn merge(&mut self, o: &RunStats) {
+        self.compute_cycles += o.compute_cycles;
+        self.mac_ops += o.mac_ops;
+        self.mac_slots += o.mac_slots;
+        self.dram_read_bytes += o.dram_read_bytes;
+        self.dram_write_bytes += o.dram_write_bytes;
+        self.sram_reads += o.sram_reads;
+        self.sram_writes += o.sram_writes;
+        self.peak_pingpong_bytes =
+            self.peak_pingpong_bytes.max(o.peak_pingpong_bytes);
+        self.overlap_bytes = self.overlap_bytes.max(o.overlap_bytes);
+        self.residual_bytes = self.residual_bytes.max(o.residual_bytes);
+        self.tiles += o.tiles;
+    }
+
+    /// PE utilization: useful MACs / issued slots.
+    pub fn utilization(&self) -> f64 {
+        if self.mac_slots == 0 {
+            return 0.0;
+        }
+        self.mac_ops as f64 / self.mac_slots as f64
+    }
+
+    pub fn dram_total_bytes(&self) -> u64 {
+        self.dram_read_bytes + self.dram_write_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_and_maxes() {
+        let mut a = RunStats {
+            compute_cycles: 10,
+            mac_ops: 100,
+            mac_slots: 200,
+            peak_pingpong_bytes: 50,
+            ..Default::default()
+        };
+        let b = RunStats {
+            compute_cycles: 5,
+            mac_ops: 60,
+            mac_slots: 100,
+            peak_pingpong_bytes: 80,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.compute_cycles, 15);
+        assert_eq!(a.peak_pingpong_bytes, 80);
+        assert!((a.utilization() - 160.0 / 300.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_zero_when_idle() {
+        assert_eq!(RunStats::default().utilization(), 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! The PE plane, cycle by cycle (Fig. 4a / Fig. 5 / Fig. 6).
+//!
+//! One **PE array** is a 5x3 parallelogram of MACs: an input column of 7
+//! pixels (5 outputs + 2 halo) broadcasts horizontally, one weight
+//! column (3 taps) broadcasts vertically, and products reduce along the
+//! diagonal into 5 partial sums — one output-column segment.
+//!
+//! One **PE block** = 3 arrays (one per weight column), so a block
+//! finishes a full 3x3 convolution of a 5-pixel column segment for one
+//! (input-channel, output-channel) pair per cycle.  28 blocks run the 28
+//! input channels in parallel; the accumulator tree reduces them.
+
+/// Output-column-segment height (the "5" of the 5x3 array).
+pub const SEG: usize = 5;
+
+/// One 5x3 MAC array. Stateless combinational model — the pipeline
+/// registers live in the accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeArray;
+
+impl PeArray {
+    /// One cycle: `input` is the broadcast input column (SEG + 2 pixels,
+    /// top halo first), `wcol` the broadcast weight column (3 taps).
+    /// Returns the SEG diagonal partial sums.
+    ///
+    /// `out[r] = Σ_dr input[r + dr] * wcol[dr]` — the diagonal
+    /// reduction of Fig. 4(a).
+    #[inline]
+    pub fn cycle(&self, input: &[i32; SEG + 2], wcol: &[i8; 3]) -> [i32; SEG] {
+        let mut out = [0i32; SEG];
+        for r in 0..SEG {
+            let mut s = 0i32;
+            for (dr, &w) in wcol.iter().enumerate() {
+                s += input[r + dr] * w as i32;
+            }
+            out[r] = s;
+        }
+        out
+    }
+
+    /// MACs issued per cycle by this array.
+    pub const MACS: usize = SEG * 3;
+}
+
+/// One PE block: three arrays fed the three consecutive input columns
+/// and the three weight columns of a 3x3 kernel.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeBlock {
+    arrays: [PeArray; 3],
+}
+
+impl PeBlock {
+    /// One cycle of the block: `cols[j]` is the input column broadcast
+    /// to array `j` (input columns x-1, x, x+1 for output column x),
+    /// `wcols[j]` the j-th weight column `[w(0,j), w(1,j), w(2,j)]`.
+    /// Returns the block's SEG partial sums (the stage-1 adder of the
+    /// accumulator already folded: the three arrays' outputs summed).
+    #[inline]
+    pub fn cycle(
+        &self,
+        cols: &[[i32; SEG + 2]; 3],
+        wcols: &[[i8; 3]; 3],
+    ) -> [i32; SEG] {
+        let a = self.arrays[0].cycle(&cols[0], &wcols[0]);
+        let b = self.arrays[1].cycle(&cols[1], &wcols[1]);
+        let c = self.arrays[2].cycle(&cols[2], &wcols[2]);
+        let mut out = [0i32; SEG];
+        for r in 0..SEG {
+            out[r] = a[r] + b[r] + c[r];
+        }
+        out
+    }
+
+    pub const MACS: usize = 3 * PeArray::MACS;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn array_diagonal_reduction() {
+        let pe = PeArray;
+        let input = [1, 2, 3, 4, 5, 6, 7];
+        let wcol = [1i8, 10, 100];
+        let out = pe.cycle(&input, &wcol);
+        // out[r] = in[r] + 10*in[r+1] + 100*in[r+2]
+        assert_eq!(out[0], 1 + 20 + 300);
+        assert_eq!(out[4], 5 + 60 + 700);
+    }
+
+    #[test]
+    fn block_sums_three_arrays() {
+        let blk = PeBlock::default();
+        let col = [1i32; SEG + 2];
+        let cols = [col, col, col];
+        let wcols = [[1i8, 1, 1]; 3];
+        let out = blk.cycle(&cols, &wcols);
+        // every output: 3 taps * 3 arrays = 9
+        assert!(out.iter().all(|&v| v == 9));
+    }
+
+    #[test]
+    fn block_against_direct_3x3() {
+        // single channel 3x3 conv of a 7x3 patch -> 5x1 outputs
+        let mut patch = [[0i32; 3]; 7];
+        let mut w = [[0i8; 3]; 3];
+        let mut k = 1;
+        for r in 0..7 {
+            for c in 0..3 {
+                patch[r][c] = k;
+                k += 1;
+            }
+        }
+        for (i, row) in w.iter_mut().enumerate() {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (i * 3 + j) as i8 - 4;
+            }
+        }
+        // direct conv
+        let mut want = [0i32; SEG];
+        for (r, wr) in want.iter_mut().enumerate() {
+            let mut s = 0;
+            for dr in 0..3 {
+                for dc in 0..3 {
+                    s += patch[r + dr][dc] * w[dr][dc] as i32;
+                }
+            }
+            *wr = s;
+        }
+        // PE block: cols[j] = patch column j; wcols[j] = weight column j
+        let mut cols = [[0i32; SEG + 2]; 3];
+        for j in 0..3 {
+            for r in 0..7 {
+                cols[j][r] = patch[r][j];
+            }
+        }
+        let wcols = [
+            [w[0][0], w[1][0], w[2][0]],
+            [w[0][1], w[1][1], w[2][1]],
+            [w[0][2], w[1][2], w[2][2]],
+        ];
+        let got = PeBlock::default().cycle(&cols, &wcols);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn mac_counts() {
+        assert_eq!(PeArray::MACS, 15);
+        assert_eq!(PeBlock::MACS, 45);
+        // 28 blocks -> 1260 MACs, the paper's Table I row
+        assert_eq!(28 * PeBlock::MACS, 1260);
+    }
+}

@@ -1,0 +1,107 @@
+//! Fixed-point arithmetic helpers for the 8-bit datapath.
+//!
+//! The requantization step of the accelerator multiplies the 32-bit
+//! accumulator by `M = s_in*s_w/s_out`, represented as an integer
+//! multiplier `m0` with an arithmetic right shift — identical to
+//! `python/compile/quant.py` (the executable spec) so the two engines
+//! agree bit-for-bit.
+
+/// Fixed-point shift shared with `quant.SHIFT` on the Python side.
+pub const SHIFT: u32 = 24;
+
+/// A fixed-point multiplier `m0 * 2^-SHIFT`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FixedMul {
+    pub m0: i64,
+}
+
+impl FixedMul {
+    /// Build from a real-valued multiplier (used in tests and analysis;
+    /// production multipliers come from the `.apbnw` file).
+    pub fn from_real(m: f64) -> Self {
+        Self {
+            m0: (m * (1i64 << SHIFT) as f64).round() as i64,
+        }
+    }
+
+    pub fn to_real(self) -> f64 {
+        self.m0 as f64 / (1i64 << SHIFT) as f64
+    }
+
+    /// `round_half_up(acc * m0 * 2^-SHIFT)` with an arithmetic shift —
+    /// the silicon's requantizer.
+    #[inline]
+    pub fn apply(self, acc: i64) -> i64 {
+        requant_round_shift(acc, self.m0, SHIFT)
+    }
+}
+
+/// `(acc * m0 + 2^(shift-1)) >> shift` with arithmetic shift semantics.
+#[inline]
+pub fn requant_round_shift(acc: i64, m0: i64, shift: u32) -> i64 {
+    debug_assert!(shift > 0);
+    (acc.wrapping_mul(m0).wrapping_add(1i64 << (shift - 1))) >> shift
+}
+
+/// Clamp a requantized value into the uint8 activation range.
+#[inline]
+pub fn clamp_u8(v: i64) -> u8 {
+    v.clamp(0, 255) as u8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_multiplier_is_identity() {
+        let m = FixedMul { m0: 1 << SHIFT };
+        for v in [-1000i64, -1, 0, 1, 77, 255, 100_000] {
+            assert_eq!(m.apply(v), v);
+        }
+    }
+
+    #[test]
+    fn rounds_half_up_like_python() {
+        // 0.5 * 3 = 1.5 -> floor(1.5 + 0.5) = 2
+        let m = FixedMul::from_real(0.5);
+        assert_eq!(m.apply(3), 2);
+        // 0.5 * 1 = 0.5 -> 1
+        assert_eq!(m.apply(1), 1);
+        // negative: 0.5 * -1 = -0.5 -> floor(-0.5+0.5) = 0
+        assert_eq!(m.apply(-1), 0);
+        // 0.5 * -3 = -1.5 -> floor(-1.5+0.5) = -1
+        assert_eq!(m.apply(-3), -1);
+    }
+
+    #[test]
+    fn from_real_roundtrip() {
+        for m in [0.001, 0.33, 0.9999, 1.0, 2.5] {
+            let f = FixedMul::from_real(m);
+            assert!((f.to_real() - m).abs() < 1e-6, "{m}");
+        }
+    }
+
+    #[test]
+    fn clamp_behaviour() {
+        assert_eq!(clamp_u8(-5), 0);
+        assert_eq!(clamp_u8(0), 0);
+        assert_eq!(clamp_u8(128), 128);
+        assert_eq!(clamp_u8(300), 255);
+    }
+
+    #[test]
+    fn matches_python_formula_on_samples() {
+        // mirrored from quant.py: (acc*m0 + 2^23) >> 24
+        let cases = [
+            (123_456i64, 41_234i64),
+            (-987_654, 555_555),
+            (1, 1),
+            (-1, 1 << 24),
+        ];
+        for (acc, m0) in cases {
+            let want = (acc * m0 + (1i64 << 23)) >> 24;
+            assert_eq!(requant_round_shift(acc, m0, 24), want);
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Shared substrates: deterministic PRNG, statistics, fixed-point
+//! helpers, and a miniature property-testing framework.
+//!
+//! The build environment is offline (no `rand`, `proptest`, `criterion`
+//! crates), so these are first-class implementations rather than shims —
+//! see DESIGN.md §3 (S1/S2).
+
+pub mod fixed;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+
+pub use fixed::{requant_round_shift, FixedMul};
+pub use rng::Xoshiro256pp;
+pub use stats::Summary;
+
+/// FNV-1a 64-bit hash — the checksum shared with
+/// `python/compile/export_weights.py` for cross-language golden vectors.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_python_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -1,0 +1,174 @@
+//! Miniature property-testing framework (offline stand-in for proptest).
+//!
+//! Supports generator closures over [`Xoshiro256pp`], configurable case
+//! counts, and greedy shrinking for integer tuples via user-provided
+//! shrink functions.  Coordinator invariants (`fusion`, `coordinator`,
+//! `sim`) use this for their property tests per DESIGN.md §3 (S2).
+
+use super::rng::Xoshiro256pp;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xC0FFEE,
+            max_shrink_iters: 200,
+        }
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `cases` random inputs drawn by `gen`; on failure, try
+/// to shrink with `shrink` (return candidate simpler inputs) and panic
+/// with the smallest failing case.
+pub fn check<T, G, P, S>(cfg: &Config, mut gen: G, mut prop: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Xoshiro256pp) -> T,
+    P: FnMut(&T) -> PropResult,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // shrink greedily
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut iters = 0;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    iters += 1;
+                    if iters > cfg.max_shrink_iters {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}):\n  input: {best:?}\n  error: {best_msg}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// Convenience: property over inputs with no shrinking.
+pub fn check_no_shrink<T, G, P>(cfg: &Config, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Xoshiro256pp) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    check(cfg, gen, prop, |_| Vec::new());
+}
+
+/// Standard shrinker for a `Vec<usize>`-encoded tuple of dimensions:
+/// tries halving and decrementing each element toward a floor.
+pub fn shrink_dims(dims: &[usize], floors: &[usize]) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    for i in 0..dims.len() {
+        let floor = floors.get(i).copied().unwrap_or(0);
+        if dims[i] > floor {
+            let mut halved = dims.to_vec();
+            halved[i] = floor + (dims[i] - floor) / 2;
+            if halved[i] != dims[i] {
+                out.push(halved);
+            }
+            let mut dec = dims.to_vec();
+            dec[i] -= 1;
+            out.push(dec);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_no_shrink(
+            &Config {
+                cases: 17,
+                ..Default::default()
+            },
+            |r| r.range_u64(0, 100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check_no_shrink(
+            &Config::default(),
+            |r| r.range_u64(0, 100),
+            |&x| {
+                if x < 1000 {
+                    Err("always fails".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_small_case() {
+        // property: all dims < 10. Failing input shrinks toward 10.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                &Config {
+                    cases: 50,
+                    seed: 1,
+                    max_shrink_iters: 500,
+                },
+                |r| vec![r.range_usize(0, 40), r.range_usize(0, 40)],
+                |d| {
+                    if d.iter().any(|&x| x >= 10) {
+                        Err(format!("dim too big: {d:?}"))
+                    } else {
+                        Ok(())
+                    }
+                },
+                |d| shrink_dims(d, &[0, 0]),
+            )
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("expected failure"),
+        };
+        // the shrunk witness should contain a 10 (the boundary)
+        assert!(msg.contains("10"), "shrunk message: {msg}");
+    }
+
+    #[test]
+    fn shrink_dims_respects_floors() {
+        let shrunk = shrink_dims(&[5, 3], &[4, 3]);
+        for s in &shrunk {
+            assert!(s[0] >= 4 && s[1] >= 3, "{s:?}");
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! End-to-end coordinator tests: the serving pipeline over real engines
+//! and artifacts (requires `make artifacts` for the PJRT case).
+
+use sr_accel::config::AcceleratorConfig;
+use sr_accel::coordinator::{
+    run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
+    SimEngine,
+};
+use sr_accel::image::psnr_u8;
+use sr_accel::model::QuantModel;
+
+fn int8_factories(n: usize, seed: u64) -> Vec<EngineFactory> {
+    (0..n)
+        .map(|_| {
+            Box::new(move || {
+                Ok(Box::new(Int8Engine::new(QuantModel::test_model(
+                    3, 3, 6, 3, seed,
+                ))) as Box<dyn Engine>)
+            }) as EngineFactory
+        })
+        .collect()
+}
+
+fn tiny(frames: usize, workers: usize) -> PipelineConfig {
+    PipelineConfig {
+        frames,
+        queue_depth: 3,
+        workers,
+        lr_w: 30,
+        lr_h: 24,
+        seed: 5,
+        source_fps: None,
+        scale: 3,
+    }
+}
+
+#[test]
+fn pipeline_output_independent_of_worker_count() {
+    let mut one = Vec::new();
+    run_pipeline(&tiny(9, 1), int8_factories(1, 2), |_, hr| {
+        one.push(hr.clone())
+    })
+    .unwrap();
+    let mut two = Vec::new();
+    run_pipeline(&tiny(9, 2), int8_factories(2, 2), |_, hr| {
+        two.push(hr.clone())
+    })
+    .unwrap();
+    assert_eq!(one.len(), 9);
+    assert_eq!(one, two, "worker count must not change results");
+}
+
+#[test]
+fn backpressure_bounds_queue_wait() {
+    // with pacing slower than the engine, queue wait stays ~zero
+    let cfg = PipelineConfig {
+        source_fps: Some(500.0),
+        ..tiny(8, 1)
+    };
+    let rep = run_pipeline(&cfg, int8_factories(1, 3), |_, _| {}).unwrap();
+    assert_eq!(rep.frames, 8);
+    // paced source: median queue wait should be well under the latency
+    assert!(
+        rep.queue_wait_ms.median() <= rep.latency_ms.median(),
+        "queue wait exceeds total latency?"
+    );
+}
+
+#[test]
+fn sim_engine_through_pipeline_reports_stats() {
+    let qm = QuantModel::test_model(3, 3, 6, 3, 4);
+    let acc = AcceleratorConfig {
+        tile_rows: 12,
+        tile_cols: 4,
+        ..AcceleratorConfig::paper()
+    };
+    let mut eng = SimEngine::new(qm, acc);
+    let img = sr_accel::image::SceneGenerator::new(20, 12, 3).frame(0);
+    let hr = eng.upscale(&img).unwrap();
+    assert_eq!((hr.h, hr.w), (36, 60));
+    let stats = eng.last_stats().expect("sim engine must report stats");
+    assert!(stats.compute_cycles > 0);
+    assert!(stats.utilization() > 0.0 && stats.utilization() <= 1.0);
+}
+
+#[test]
+fn sim_and_int8_engines_agree_when_single_band() {
+    let qm = QuantModel::test_model(4, 3, 8, 3, 6);
+    let acc = AcceleratorConfig {
+        tile_rows: 16,
+        tile_cols: 8,
+        ..AcceleratorConfig::paper()
+    };
+    let img = sr_accel::image::SceneGenerator::new(40, 16, 9).frame(2);
+    let mut sim = SimEngine::new(qm.clone(), acc);
+    let mut int8 = Int8Engine::new(qm);
+    let a = sim.upscale(&img).unwrap();
+    let b = int8.upscale(&img).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn banded_vs_monolithic_psnr_penalty_small_on_natural_frames() {
+    // E5's Rust-side counterpart: band seams barely hurt on smooth
+    // synthetic video frames.  Uses the *trained* weights — a randomly
+    // initialized trunk has no smoothness prior and falls apart at
+    // seams, which is exactly why the paper trains before measuring.
+    let qm = sr_accel::model::load_apbnw(
+        &sr_accel::runtime::artifacts_dir().join("weights.apbnw"),
+    )
+    .expect("run `make artifacts`");
+    let acc = AcceleratorConfig::paper(); // 60-row bands
+    let img = sr_accel::image::SceneGenerator::new(160, 120, 11).frame(0);
+    let mut sim = SimEngine::new(qm.clone(), acc);
+    let banded = sim.upscale(&img).unwrap();
+    let mut int8 = Int8Engine::new(qm);
+    let mono = int8.upscale(&img).unwrap();
+    let p = psnr_u8(&banded, &mono);
+    assert!(
+        p > 35.0,
+        "band seams cost too much on smooth content: {p:.1} dB"
+    );
+}

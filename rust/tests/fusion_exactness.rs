@@ -1,0 +1,228 @@
+//! Property tests of the fusion schedulers (the coordinator invariants
+//! of DESIGN.md §5), using the in-repo quickcheck substrate.
+//!
+//! The central claim of the paper — tilted fusion loses nothing
+//! horizontally — is checked over randomized geometry: any band height,
+//! image width, tile width, layer count and channel mix.
+
+use sr_accel::config::AcceleratorConfig;
+use sr_accel::fusion::{
+    BlockConvScheduler, ClassicalScheduler, FusionScheduler,
+    LayerByLayerScheduler, TiltedScheduler,
+};
+use sr_accel::model::{QuantModel, Tensor};
+use sr_accel::reference;
+use sr_accel::util::quickcheck::{check, shrink_dims, Config};
+use sr_accel::util::Xoshiro256pp;
+
+fn rand_band(h: usize, w: usize, seed: u64) -> Tensor<u8> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut t = Tensor::new(h, w, 3);
+    rng.fill_u8(&mut t.data);
+    t
+}
+
+/// dims = [rows, width, tile_cols, n_layers, c_mid, seed]
+fn gen_dims(rng: &mut Xoshiro256pp) -> Vec<usize> {
+    vec![
+        rng.range_usize(3, 14),  // rows
+        rng.range_usize(4, 40),  // width
+        rng.range_usize(2, 12),  // tile_cols
+        rng.range_usize(1, 6),   // layers
+        rng.range_usize(1, 7),   // mid channels
+        rng.range_usize(0, 10_000),
+    ]
+}
+
+#[test]
+fn prop_tilted_band_bit_exact_any_geometry() {
+    let cfg = Config {
+        cases: 40,
+        seed: 0x7151,
+        max_shrink_iters: 60,
+    };
+    check(
+        &cfg,
+        gen_dims,
+        |d| {
+            let (rows, width, tile_cols, layers, c_mid, seed) =
+                (d[0], d[1], d[2], d[3], d[4], d[5] as u64);
+            let qm = QuantModel::test_model(layers.max(1), 3, c_mid.max(1), 3, seed);
+            let band = rand_band(rows, width, seed + 1);
+            let acc = AcceleratorConfig {
+                tile_rows: rows,
+                tile_cols,
+                ..AcceleratorConfig::paper()
+            };
+            let (hr, _) =
+                TiltedScheduler::default().run_band(&band, &qm, &acc);
+            let want = reference::forward_int(&band, &qm);
+            if hr.data != want.data {
+                return Err(format!(
+                    "tilted differs from reference at {rows}x{width}, C={tile_cols}, L={layers}"
+                ));
+            }
+            Ok(())
+        },
+        |d| shrink_dims(d, &[3, 4, 2, 1, 1, 0]),
+    );
+}
+
+#[test]
+fn prop_classical_recompute_bit_exact() {
+    let cfg = Config {
+        cases: 20,
+        seed: 0xC1A5,
+        max_shrink_iters: 40,
+    };
+    check(
+        &cfg,
+        gen_dims,
+        |d| {
+            let (rows, width, tile, layers, c_mid, seed) =
+                (d[0], d[1], d[2].max(3), d[3], d[4], d[5] as u64);
+            let qm = QuantModel::test_model(layers.max(1), 3, c_mid.max(1), 3, seed);
+            let frame = rand_band(rows, width, seed + 2);
+            let sched = ClassicalScheduler {
+                tile_rows: tile,
+                tile_cols: tile,
+            };
+            let res = sched.run_frame(&frame, &qm, &AcceleratorConfig::paper());
+            let want = reference::forward_int(&frame, &qm);
+            if res.hr.data != want.data {
+                return Err("classical recompute differs".into());
+            }
+            Ok(())
+        },
+        |d| shrink_dims(d, &[3, 4, 3, 1, 1, 0]),
+    );
+}
+
+#[test]
+fn prop_layer_by_layer_bit_exact() {
+    let cfg = Config {
+        cases: 15,
+        seed: 0x1B1,
+        max_shrink_iters: 30,
+    };
+    check(
+        &cfg,
+        gen_dims,
+        |d| {
+            let qm = QuantModel::test_model(d[3].max(1), 3, d[4].max(1), 3, d[5] as u64);
+            let frame = rand_band(d[0], d[1], d[5] as u64 + 3);
+            let res = LayerByLayerScheduler
+                .run_frame(&frame, &qm, &AcceleratorConfig::paper());
+            if res.hr.data != reference::forward_int(&frame, &qm).data {
+                return Err("layer-by-layer differs".into());
+            }
+            Ok(())
+        },
+        |d| shrink_dims(d, &[3, 4, 2, 1, 1, 0]),
+    );
+}
+
+#[test]
+fn prop_all_exact_schedulers_agree_with_each_other() {
+    // tilted (per band == whole frame here: one band) == classical ==
+    // layer-by-layer, for frames that fit a single band
+    let cfg = Config {
+        cases: 12,
+        seed: 0xA9,
+        max_shrink_iters: 30,
+    };
+    check(
+        &cfg,
+        gen_dims,
+        |d| {
+            let (rows, width) = (d[0], d[1]);
+            let qm = QuantModel::test_model(d[3].max(1), 3, d[4].max(1), 3, d[5] as u64);
+            let frame = rand_band(rows, width, d[5] as u64 + 9);
+            let acc = AcceleratorConfig {
+                tile_rows: rows, // one band
+                tile_cols: d[2],
+                ..AcceleratorConfig::paper()
+            };
+            let a = TiltedScheduler::default().run_frame(&frame, &qm, &acc);
+            let b = ClassicalScheduler::default().run_frame(&frame, &qm, &acc);
+            let c = LayerByLayerScheduler.run_frame(&frame, &qm, &acc);
+            if a.hr.data != b.hr.data || b.hr.data != c.hr.data {
+                return Err("exact schedulers disagree".into());
+            }
+            Ok(())
+        },
+        |d| shrink_dims(d, &[3, 4, 2, 1, 1, 0]),
+    );
+}
+
+#[test]
+fn tilted_dram_traffic_is_io_only_and_smallest() {
+    let qm = QuantModel::test_model(4, 3, 8, 3, 1);
+    let frame = rand_band(24, 32, 5);
+    let acc = AcceleratorConfig {
+        tile_rows: 12,
+        tile_cols: 8,
+        ..AcceleratorConfig::paper()
+    };
+    let tilted = TiltedScheduler::default().run_frame(&frame, &qm, &acc);
+    let lbl = LayerByLayerScheduler.run_frame(&frame, &qm, &acc);
+    let classical =
+        ClassicalScheduler { tile_rows: 12, tile_cols: 8 }
+            .run_frame(&frame, &qm, &acc);
+    assert!(
+        tilted.stats.dram_total_bytes() < lbl.stats.dram_total_bytes(),
+        "tilted must beat layer-by-layer on DRAM"
+    );
+    assert!(
+        tilted.stats.dram_total_bytes()
+            <= classical.stats.dram_total_bytes(),
+        "tilted must not exceed classical (halo re-reads)"
+    );
+    // tilted traffic = input + weights + output exactly
+    let expect = frame.byte_len() as u64
+        + (qm.weight_bytes() + qm.bias_bytes()) as u64
+        + (frame.h * 3 * frame.w * 3 * 3) as u64;
+    assert_eq!(tilted.stats.dram_total_bytes(), expect);
+}
+
+#[test]
+fn block_conv_loss_shrinks_with_tile_size() {
+    use sr_accel::image::{psnr_u8, ImageU8};
+    let qm = QuantModel::test_model(4, 3, 8, 3, 2);
+    let frame = rand_band(24, 48, 6);
+    let want = reference::forward_int(&frame, &qm);
+    let to_img = |t: &Tensor<u8>| {
+        ImageU8::from_vec(t.h, t.w, t.c, t.data.clone())
+    };
+    let mut prev_psnr = -1.0;
+    for tile in [4, 8, 24] {
+        let res = BlockConvScheduler {
+            tile_rows: tile,
+            tile_cols: tile,
+        }
+        .run_frame(&frame, &qm, &AcceleratorConfig::paper());
+        let p = psnr_u8(&to_img(&res.hr), &to_img(&want));
+        assert!(
+            p >= prev_psnr,
+            "block-conv PSNR should not fall as tiles grow: {p} after {prev_psnr}"
+        );
+        prev_psnr = p;
+    }
+}
+
+#[test]
+fn tilted_cycle_exact_and_analytic_agree_on_stats() {
+    let qm = QuantModel::test_model(3, 3, 6, 3, 7);
+    let band = rand_band(10, 24, 8);
+    let acc = AcceleratorConfig {
+        tile_rows: 10,
+        tile_cols: 4,
+        ..AcceleratorConfig::paper()
+    };
+    let (ha, sa) = TiltedScheduler::default().run_band(&band, &qm, &acc);
+    let (hc, sc) = TiltedScheduler::cycle_exact().run_band(&band, &qm, &acc);
+    assert_eq!(ha.data, hc.data);
+    assert_eq!(sa.compute_cycles, sc.compute_cycles);
+    assert_eq!(sa.mac_ops, sc.mac_ops);
+    assert_eq!(sa.mac_slots, sc.mac_slots);
+}
