@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 
-use sr_accel::config::AcceleratorConfig;
+use sr_accel::config::{AcceleratorConfig, HaloPolicy, ShardPlan};
 use sr_accel::coordinator::{
     run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
     SimEngine,
@@ -23,22 +23,30 @@ fn main() -> Result<()> {
     let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))?;
 
     // ---- 1. host serving: int8 engine on 320x180 (quarter frames,
-    //         keeps the demo quick on a 1-core CI host) ---------------
+    //         keeps the demo quick on a 1-core CI host), band-sharded
+    //         across two workers with exact halos -------------------
+    let workers = 2;
     let cfg = PipelineConfig {
         frames: 12,
         queue_depth: 4,
-        workers: 1,
+        workers,
         lr_w: 320,
         lr_h: 180,
         seed: 7,
         source_fps: None,
         scale: 3,
+        shard: ShardPlan::row_bands(45, HaloPolicy::Exact),
+        model_layers: qm.n_layers(),
     };
-    let qmc = qm.clone();
-    let factories: Vec<EngineFactory> = vec![Box::new(move || {
-        Ok(Box::new(Int8Engine::new(qmc)) as Box<dyn Engine>)
-    })];
-    println!("== host serving (int8 engine, 320x180 LR) ==");
+    let factories: Vec<EngineFactory> = (0..workers)
+        .map(|_| {
+            let qmc = qm.clone();
+            Box::new(move || {
+                Ok(Box::new(Int8Engine::new(qmc)) as Box<dyn Engine>)
+            }) as EngineFactory
+        })
+        .collect();
+    println!("== host serving (int8 engine, 320x180 LR, band-sharded) ==");
     let rep = run_pipeline(&cfg, factories, |_, _| {})?;
     println!("{}\n", rep.render());
 

@@ -1,38 +1,85 @@
 //! E7 — end-to-end serving benchmark: the coordinator pipeline over the
 //! int8 engine on synthetic video, reporting fps / latency percentiles
+//! for 1-worker whole-frame serving vs N-worker band-sharded serving
 //! (the Rust-host analog of the paper's real-time claim; the silicon
 //! fps comes from the simulator benches).
+//!
+//! Falls back to the deterministic test model when the trained
+//! artifacts are absent, so the bench runs on bare checkouts.
 
+use sr_accel::config::{HaloPolicy, ShardPlan};
 use sr_accel::coordinator::{
     run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
 };
-use sr_accel::model::load_apbnw;
-use sr_accel::runtime::artifacts_dir;
+use sr_accel::model::{load_apbnw, QuantModel};
+use sr_accel::runtime::{artifacts_available, artifacts_dir};
 
 fn main() {
-    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))
-        .expect("run `make artifacts`");
+    let qm = if artifacts_available() {
+        load_apbnw(&artifacts_dir().join("weights.apbnw"))
+            .expect("weights.apbnw unreadable")
+    } else {
+        eprintln!(
+            "artifacts missing — benchmarking with the APBN-shaped \
+             deterministic test model"
+        );
+        QuantModel::test_model(7, 3, 28, 3, 0)
+    };
+    let model_layers = qm.n_layers();
 
     for (w, h, frames) in [(160usize, 90usize, 24usize), (320, 180, 12)] {
-        let cfg = PipelineConfig {
-            frames,
-            queue_depth: 4,
-            workers: 1,
-            lr_w: w,
-            lr_h: h,
-            seed: 7,
-            source_fps: None,
-            scale: 3,
-        };
-        let qmc = qm.clone();
-        let factories: Vec<EngineFactory> = vec![Box::new(move || {
-            Ok(Box::new(Int8Engine::new(qmc)) as Box<dyn Engine>)
-        })];
-        let rep = run_pipeline(&cfg, factories, |_, _| {}).unwrap();
-        println!("--- {w}x{h} LR, {frames} frames ---");
-        println!("{}\n", rep.render());
-        assert_eq!(rep.frames, frames);
-        assert!(rep.fps > 0.5, "pipeline stalled");
+        let mut baseline_fps = 0.0f64;
+        for workers in [1usize, 2, 4] {
+            let shard = if workers == 1 {
+                ShardPlan::whole_frame()
+            } else {
+                // ~2 bands per worker keeps the pool busy through the
+                // frame tail
+                ShardPlan::row_bands(
+                    h.div_ceil(workers * 2),
+                    HaloPolicy::Exact,
+                )
+            };
+            let cfg = PipelineConfig {
+                frames,
+                queue_depth: 4,
+                workers,
+                lr_w: w,
+                lr_h: h,
+                seed: 7,
+                source_fps: None,
+                scale: 3,
+                shard,
+                model_layers,
+            };
+            let factories: Vec<EngineFactory> = (0..workers)
+                .map(|_| {
+                    let qmc = qm.clone();
+                    Box::new(move || {
+                        Ok(Box::new(Int8Engine::new(qmc)) as Box<dyn Engine>)
+                    }) as EngineFactory
+                })
+                .collect();
+            let rep = run_pipeline(&cfg, factories, |_, _| {}).unwrap();
+            println!(
+                "--- {w}x{h} LR, {frames} frames, {workers} worker(s), {} ---",
+                cfg.shard.describe()
+            );
+            println!("{}\n", rep.render());
+            assert_eq!(rep.frames, frames);
+            assert!(rep.fps > 0.1, "pipeline stalled");
+            if workers == 1 {
+                baseline_fps = rep.fps;
+            } else {
+                println!(
+                    "speedup vs 1 worker: {:.2}x\n",
+                    rep.fps / baseline_fps.max(1e-9)
+                );
+            }
+        }
     }
-    println!("SHAPE OK: pipeline saturates the engine (queue wait >> 0 when unpaced)");
+    println!(
+        "SHAPE OK: band-sharded N-worker throughput reported against \
+         1-worker whole-frame"
+    );
 }

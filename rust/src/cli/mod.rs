@@ -96,6 +96,8 @@ COMMANDS:
   serve      run the frame-serving pipeline on synthetic video
              --engine int8|pjrt|sim  --frames N  --workers N
              --queue-depth N  --width N --height N  --source-fps F
+             --shard frame|band  --band-rows N  --halo none|exact|N
+             --affinity any|modulo
   simulate   run one frame through a fusion schedule, print HW stats
              --fusion tilted|classical|block|layer  --width N --height N
              --tile-cols N --tile-rows N  --cycle-exact

@@ -10,8 +10,9 @@ mod types;
 
 pub use parser::{parse_toml, ParseError, Value};
 pub use types::{
-    AcceleratorConfig, FidelityKind, FusionKind, ModelConfig, ServeConfig,
-    SimConfig, SystemConfig,
+    AcceleratorConfig, FidelityKind, FusionKind, HaloPolicy, ModelConfig,
+    ServeConfig, ShardPlan, ShardStrategy, SimConfig, SystemConfig,
+    WorkerAffinity,
 };
 
 #[cfg(test)]

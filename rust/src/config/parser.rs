@@ -256,4 +256,26 @@ mod tests {
         let v = parse_toml("xs = []").unwrap();
         assert!(v.get_array("xs").unwrap().is_empty());
     }
+
+    #[test]
+    fn negative_integers_parse_as_ints() {
+        // serve.band_rows / serve.halo validation depends on negatives
+        // surviving the parse so typed config can reject them
+        let v = parse_toml("a = -5").unwrap();
+        assert_eq!(v.get_i64("a"), Some(-5));
+        assert_eq!(v.get_f64("a"), Some(-5.0));
+    }
+
+    #[test]
+    fn typed_getters_reject_wrong_kinds() {
+        // the string-vs-int distinction drives ShardPlan's halo field
+        // ("exact" vs a row count)
+        let v = parse_toml("s = \"exact\"\nn = 3\nf = 1.5").unwrap();
+        assert_eq!(v.get_str("s"), Some("exact"));
+        assert_eq!(v.get_i64("s"), None);
+        assert_eq!(v.get_str("n"), None);
+        assert_eq!(v.get_i64("n"), Some(3));
+        assert_eq!(v.get_i64("f"), None);
+        assert_eq!(v.get_i64_array("s"), None);
+    }
 }

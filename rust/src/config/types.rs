@@ -163,6 +163,155 @@ impl Default for SimConfig {
     }
 }
 
+/// How the serving pipeline splits a frame into worker work units.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardStrategy {
+    /// One work unit per frame (the classic frame-per-worker queue).
+    WholeFrame,
+    /// Split each frame into row bands — the fusion layer's natural
+    /// unit of independence (Section II, eq. (3)).
+    RowBands,
+}
+
+impl ShardStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "frame" | "whole-frame" => Self::WholeFrame,
+            "band" | "row-bands" => Self::RowBands,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::WholeFrame => "frame",
+            Self::RowBands => "band",
+        }
+    }
+}
+
+/// Halo policy for row-band sharding: how many extra LR rows of real
+/// context each band carries above/below the rows it owns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HaloPolicy {
+    /// No halo: bands see zero-padded seams, exactly the chip's
+    /// tilted-fusion band semantics (the only information loss the
+    /// paper accepts).
+    None,
+    /// Halo of exactly the model's conv depth: band-sharded output is
+    /// bit-identical to monolithic whole-frame inference.
+    Exact,
+    /// Fixed halo of N rows (approximate seams for N < depth).
+    Rows(usize),
+}
+
+impl HaloPolicy {
+    /// Resolve to a row count for a model `model_layers` convs deep.
+    pub fn rows(&self, model_layers: usize) -> usize {
+        match self {
+            HaloPolicy::None => 0,
+            HaloPolicy::Exact => model_layers,
+            HaloPolicy::Rows(n) => *n,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(Self::None),
+            "exact" => Some(Self::Exact),
+            _ => s.parse::<usize>().ok().map(Self::Rows),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Self::None => "none".into(),
+            Self::Exact => "exact".into(),
+            Self::Rows(n) => n.to_string(),
+        }
+    }
+}
+
+/// Worker assignment policy for band shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerAffinity {
+    /// Any idle worker takes the next band (one shared queue).
+    Any,
+    /// Band *i* always goes to worker `i % workers` (per-worker
+    /// queues; stable row-range ownership).
+    BandModulo,
+}
+
+impl WorkerAffinity {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "any" => Self::Any,
+            "modulo" | "band-modulo" => Self::BandModulo,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Any => "any",
+            Self::BandModulo => "modulo",
+        }
+    }
+}
+
+/// Frame-sharding plan threaded from config/CLI into the serving
+/// pipeline (`coordinator::shard` holds the band math).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    pub strategy: ShardStrategy,
+    /// LR rows per band (`RowBands` only); 0 = one band spanning the
+    /// whole frame height.
+    pub band_rows: usize,
+    pub halo: HaloPolicy,
+    pub affinity: WorkerAffinity,
+}
+
+impl ShardPlan {
+    /// The seed pipeline's behaviour: one work unit per frame.
+    pub fn whole_frame() -> Self {
+        Self {
+            strategy: ShardStrategy::WholeFrame,
+            band_rows: 0,
+            halo: HaloPolicy::None,
+            affinity: WorkerAffinity::Any,
+        }
+    }
+
+    /// Row-band sharding with any-worker dispatch.
+    pub fn row_bands(band_rows: usize, halo: HaloPolicy) -> Self {
+        Self {
+            strategy: ShardStrategy::RowBands,
+            band_rows,
+            halo,
+            affinity: WorkerAffinity::Any,
+        }
+    }
+
+    /// Human-readable form for reports and logs.
+    pub fn describe(&self) -> String {
+        match self.strategy {
+            ShardStrategy::WholeFrame => "whole-frame".to_string(),
+            ShardStrategy::RowBands => format!(
+                "row-bands(rows={}, halo={}, affinity={})",
+                self.band_rows,
+                self.halo.name(),
+                self.affinity.name()
+            ),
+        }
+    }
+}
+
+impl Default for ShardPlan {
+    fn default() -> Self {
+        Self::whole_frame()
+    }
+}
+
 /// Serving pipeline parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
@@ -171,6 +320,7 @@ pub struct ServeConfig {
     pub frames: usize,
     pub source: String,
     pub engine: String,
+    pub shard: ShardPlan,
 }
 
 impl Default for ServeConfig {
@@ -181,6 +331,7 @@ impl Default for ServeConfig {
             frames: 30,
             source: "synthetic".into(),
             engine: "int8".into(),
+            shard: ShardPlan::whole_frame(),
         }
     }
 }
@@ -265,12 +416,23 @@ fn apply(cfg: &mut SystemConfig, v: &Value) -> Result<(), ParseError> {
         cfg.sim.frame_height = x as usize;
     }
     if let Some(x) = v.get_i64("serve.workers") {
+        if x < 1 {
+            return Err(perr(format!("serve.workers must be >= 1, got {x}")));
+        }
         cfg.serve.workers = x as usize;
     }
     if let Some(x) = v.get_i64("serve.queue_depth") {
+        if x < 1 {
+            return Err(perr(format!(
+                "serve.queue_depth must be >= 1, got {x}"
+            )));
+        }
         cfg.serve.queue_depth = x as usize;
     }
     if let Some(x) = v.get_i64("serve.frames") {
+        if x < 0 {
+            return Err(perr(format!("serve.frames must be >= 0, got {x}")));
+        }
         cfg.serve.frames = x as usize;
     }
     if let Some(s) = v.get_str("serve.source") {
@@ -279,7 +441,47 @@ fn apply(cfg: &mut SystemConfig, v: &Value) -> Result<(), ParseError> {
     if let Some(s) = v.get_str("serve.engine") {
         cfg.serve.engine = s.to_string();
     }
+    if let Some(s) = v.get_str("serve.shard") {
+        cfg.serve.shard.strategy = ShardStrategy::parse(s).ok_or_else(|| {
+            perr(format!("unknown serve.shard {s:?} (frame|band)"))
+        })?;
+    }
+    if let Some(x) = v.get_i64("serve.band_rows") {
+        if x < 0 {
+            return Err(perr(format!(
+                "serve.band_rows must be >= 0, got {x}"
+            )));
+        }
+        cfg.serve.shard.band_rows = x as usize;
+    }
+    match v.get("serve.halo") {
+        None => {}
+        Some(Value::Str(s)) => {
+            cfg.serve.shard.halo = HaloPolicy::parse(s).ok_or_else(|| {
+                perr(format!("unknown serve.halo {s:?} (none|exact|N)"))
+            })?;
+        }
+        Some(Value::Int(i)) if *i >= 0 => {
+            cfg.serve.shard.halo = HaloPolicy::Rows(*i as usize);
+        }
+        Some(other) => {
+            return Err(perr(format!(
+                "serve.halo must be \"none\", \"exact\" or a non-negative \
+                 row count, got {other:?}"
+            )));
+        }
+    }
+    if let Some(s) = v.get_str("serve.affinity") {
+        cfg.serve.shard.affinity =
+            WorkerAffinity::parse(s).ok_or_else(|| {
+                perr(format!("unknown serve.affinity {s:?} (any|modulo)"))
+            })?;
+    }
     Ok(())
+}
+
+fn perr(msg: String) -> ParseError {
+    ParseError { line: 0, msg }
 }
 
 #[cfg(test)]
@@ -316,5 +518,81 @@ mod tests {
         let c = SystemConfig::from_toml("[accelerator]\npe_blocks = 14").unwrap();
         assert_eq!(c.accelerator.pe_blocks, 14);
         assert_eq!(c.accelerator.tile_rows, 60); // default kept
+    }
+
+    #[test]
+    fn serve_shard_fields_roundtrip() {
+        let c = SystemConfig::from_toml(
+            "[serve]\nworkers = 3\nshard = \"band\"\nband_rows = 30\n\
+             halo = \"exact\"\naffinity = \"modulo\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.serve.workers, 3);
+        assert_eq!(c.serve.shard.strategy, ShardStrategy::RowBands);
+        assert_eq!(c.serve.shard.band_rows, 30);
+        assert_eq!(c.serve.shard.halo, HaloPolicy::Exact);
+        assert_eq!(c.serve.shard.affinity, WorkerAffinity::BandModulo);
+        // and back through describe()
+        assert_eq!(
+            c.serve.shard.describe(),
+            "row-bands(rows=30, halo=exact, affinity=modulo)"
+        );
+    }
+
+    #[test]
+    fn serve_halo_accepts_integer_rows() {
+        let c = SystemConfig::from_toml("[serve]\nhalo = 4").unwrap();
+        assert_eq!(c.serve.shard.halo, HaloPolicy::Rows(4));
+        let c = SystemConfig::from_toml("[serve]\nhalo = \"2\"").unwrap();
+        assert_eq!(c.serve.shard.halo, HaloPolicy::Rows(2));
+        assert_eq!(c.serve.shard.halo.rows(7), 2);
+    }
+
+    #[test]
+    fn serve_shard_and_worker_rejections() {
+        for bad in [
+            "[serve]\nshard = \"bogus\"",
+            "[serve]\nhalo = \"nope\"",
+            "[serve]\nhalo = -1",
+            "[serve]\nhalo = 1.5",
+            "[serve]\naffinity = \"sticky\"",
+            "[serve]\nworkers = 0",
+            "[serve]\nworkers = -2",
+            "[serve]\nband_rows = -5",
+            "[serve]\nqueue_depth = 0",
+            "[serve]\nframes = -1",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn shard_enum_names_roundtrip() {
+        for s in [ShardStrategy::WholeFrame, ShardStrategy::RowBands] {
+            assert_eq!(ShardStrategy::parse(s.name()), Some(s));
+        }
+        for a in [WorkerAffinity::Any, WorkerAffinity::BandModulo] {
+            assert_eq!(WorkerAffinity::parse(a.name()), Some(a));
+        }
+        for h in [HaloPolicy::None, HaloPolicy::Exact, HaloPolicy::Rows(3)] {
+            assert_eq!(HaloPolicy::parse(&h.name()), Some(h));
+        }
+        assert_eq!(ShardStrategy::parse("nope"), None);
+        assert_eq!(WorkerAffinity::parse("nope"), None);
+        assert_eq!(HaloPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn halo_policy_resolves_rows() {
+        assert_eq!(HaloPolicy::None.rows(7), 0);
+        assert_eq!(HaloPolicy::Exact.rows(7), 7);
+        assert_eq!(HaloPolicy::Rows(2).rows(7), 2);
+    }
+
+    #[test]
+    fn default_shard_plan_is_whole_frame() {
+        let c = SystemConfig::default();
+        assert_eq!(c.serve.shard, ShardPlan::whole_frame());
+        assert_eq!(c.serve.shard.describe(), "whole-frame");
     }
 }

@@ -3,9 +3,17 @@
 //! * [`Int8Engine`] — the bit-exact integer datapath (the silicon's
 //!   arithmetic) running natively; the production CPU engine.
 //! * [`PjrtEngine`] — the AOT-compiled JAX/Pallas artifact executed via
-//!   the PJRT CPU client (float datapath).
+//!   the PJRT CPU client (float datapath).  Requires the `pjrt` cargo
+//!   feature; without it, construction fails with a clear error (the
+//!   `runtime::Executor` stub), so the type itself stays available to
+//!   configs and CLI parsing on bare builds.
 //! * [`SimEngine`] — the cycle-accounting tilted-fusion simulator; slow,
-//!   but returns hardware statistics with every frame.
+//!   but returns hardware statistics with every frame (merged per frame
+//!   by the band-sharded pipeline).
+//!
+//! Engines are frame-shape agnostic, which is what lets the pipeline
+//! feed them whole frames *or* halo-extended row bands interchangeably
+//! (`coordinator::shard`).
 
 use std::path::Path;
 

@@ -1,19 +1,32 @@
 //! Pipeline metrics: per-frame records and the aggregated report.
+//!
+//! With band sharding a "frame record" is the merge of its bands:
+//! latency spans first emit to last band completion, queue wait is the
+//! worst band's, compute is the summed engine time, and hardware
+//! [`RunStats`] (engines that model them) merge across bands via
+//! [`RunStats::merge`].
 
 use std::time::Duration;
 
+use crate::sim::RunStats;
 use crate::util::stats::Summary;
 
 /// Timing of one frame through the pipeline.
 #[derive(Clone, Debug)]
 pub struct FrameRecord {
     pub index: usize,
-    /// Time from source emit to completion.
+    /// Time from first band emit to last band completion.
     pub latency: Duration,
-    /// Time spent waiting in the input queue.
+    /// Worst band's wait in the input queue.
     pub queue_wait: Duration,
-    /// Pure engine time.
+    /// Total engine time summed over bands (exceeds latency when bands
+    /// run in parallel).
     pub compute: Duration,
+    /// Bands this frame was split into (1 = whole-frame).
+    pub bands: usize,
+    /// Merged hardware stats of the frame's bands, if the engine
+    /// models them.
+    pub stats: Option<RunStats>,
 }
 
 /// Aggregated serving report (printed by `sr-accel serve` and logged in
@@ -30,6 +43,11 @@ pub struct PipelineReport {
     pub workers: usize,
     /// HR megapixels per second of wall time.
     pub mpix_per_s: f64,
+    /// Shard-plan description (`ShardPlan::describe`).
+    pub plan: String,
+    /// Hardware stats merged across all frames (None for engines that
+    /// do not model hardware).
+    pub hw: Option<RunStats>,
 }
 
 impl PipelineReport {
@@ -39,10 +57,19 @@ impl PipelineReport {
         engine: &str,
         workers: usize,
         hr_pixels_per_frame: usize,
+        plan: &str,
     ) -> Self {
-        let to_ms =
-            |d: &Duration| d.as_secs_f64() * 1e3;
+        let to_ms = |d: &Duration| d.as_secs_f64() * 1e3;
         let fps = records.len() as f64 / wall.as_secs_f64().max(1e-12);
+        let mut hw: Option<RunStats> = None;
+        for r in records {
+            if let Some(s) = &r.stats {
+                match &mut hw {
+                    Some(acc) => acc.merge(s),
+                    None => hw = Some(s.clone()),
+                }
+            }
+        }
         Self {
             frames: records.len(),
             wall,
@@ -59,18 +86,21 @@ impl PipelineReport {
             engine: engine.to_string(),
             workers,
             mpix_per_s: fps * hr_pixels_per_frame as f64 / 1e6,
+            plan: plan.to_string(),
+            hw,
         }
     }
 
     pub fn render(&self) -> String {
-        format!(
-            "engine={} workers={} frames={} wall={:.2}s\n\
+        let mut out = format!(
+            "engine={} workers={} plan={} frames={} wall={:.2}s\n\
              throughput: {:.2} fps  ({:.1} HR Mpix/s)\n\
              latency  ms: p50 {:.2}  p95 {:.2}  max {:.2}\n\
              queue-wait ms: p50 {:.2}  p95 {:.2}\n\
              compute  ms: p50 {:.2}  p95 {:.2}",
             self.engine,
             self.workers,
+            self.plan,
             self.frames,
             self.wall.as_secs_f64(),
             self.fps,
@@ -82,7 +112,19 @@ impl PipelineReport {
             self.queue_wait_ms.percentile(95.0),
             self.compute_ms.median(),
             self.compute_ms.percentile(95.0),
-        )
+        );
+        if let Some(hw) = &self.hw {
+            let frames = self.frames.max(1) as f64;
+            out.push_str(&format!(
+                "\nhw: {:.2} Mcycles/frame  util {:.1} %  \
+                 dram {:.2} MB/frame  {} tiles",
+                hw.compute_cycles as f64 / frames / 1e6,
+                hw.utilization() * 100.0,
+                hw.dram_total_bytes() as f64 / frames / 1e6,
+                hw.tiles,
+            ));
+        }
+        out
     }
 }
 
@@ -96,6 +138,8 @@ mod tests {
             latency: Duration::from_millis(ms),
             queue_wait: Duration::from_millis(ms / 4),
             compute: Duration::from_millis(ms / 2),
+            bands: 1,
+            stats: None,
         }
     }
 
@@ -108,11 +152,46 @@ mod tests {
             "int8",
             2,
             1920 * 1080,
+            "whole-frame",
         );
         assert_eq!(rep.frames, 10);
         assert!((rep.fps - 10.0).abs() < 1e-9);
         assert!(rep.latency_ms.median() >= 10.0);
         assert!((rep.mpix_per_s - 20.736).abs() < 1e-3);
+        assert!(rep.hw.is_none());
         assert!(rep.render().contains("throughput"));
+        assert!(rep.render().contains("plan=whole-frame"));
+        assert!(!rep.render().contains("hw:"));
+    }
+
+    #[test]
+    fn report_merges_hw_stats_across_frames() {
+        let records: Vec<_> = (0..4)
+            .map(|i| FrameRecord {
+                stats: Some(RunStats {
+                    compute_cycles: 1000,
+                    mac_ops: 80,
+                    mac_slots: 100,
+                    tiles: 3,
+                    ..RunStats::default()
+                }),
+                bands: 2,
+                ..rec(i, 10)
+            })
+            .collect();
+        let rep = PipelineReport::from_records(
+            &records,
+            Duration::from_secs(1),
+            "sim",
+            2,
+            100,
+            "row-bands(rows=6, halo=none, affinity=any)",
+        );
+        let hw = rep.hw.as_ref().unwrap();
+        assert_eq!(hw.compute_cycles, 4000);
+        assert_eq!(hw.tiles, 12);
+        assert!((hw.utilization() - 0.8).abs() < 1e-12);
+        assert!(rep.render().contains("hw:"));
+        assert!(rep.render().contains("row-bands"));
     }
 }

@@ -1,9 +1,12 @@
 //! Serving coordinator (DESIGN.md S14): the Layer-3 "request path".
 //!
-//! A frame pipeline with bounded-channel backpressure, mirroring how the
-//! chip sits in a camera/display pipeline: a source produces LR frames
-//! at a target rate, worker threads upscale them through a pluggable
-//! [`Engine`], and the sink restores order and records latency.
+//! A band-sharded frame pipeline with bounded-channel backpressure,
+//! mirroring how the chip sits in a camera/display pipeline: a source
+//! produces LR frames at a target rate, splits them into the fusion
+//! layer's row bands per a [`ShardPlan`], worker threads upscale bands
+//! through a pluggable [`Engine`], and the reassembly sink stitches HR
+//! bands back into display-order frames while merging per-band
+//! hardware stats into per-frame reports.
 //!
 //! No tokio in this offline environment — std threads + `sync_channel`
 //! provide the same bounded-queue semantics (documented substitution,
@@ -12,9 +15,13 @@
 pub mod engine;
 pub mod metrics;
 pub mod pipeline;
+pub mod shard;
 
 pub use engine::{
     Engine, EngineFactory, EngineKind, Int8Engine, PjrtEngine, SimEngine,
 };
 pub use metrics::{FrameRecord, PipelineReport};
 pub use pipeline::{run_pipeline, PipelineConfig};
+pub use shard::{
+    crop_hr_band, plan_bands, BandSpec, DoneBand, Reassembler, ShardPlan,
+};

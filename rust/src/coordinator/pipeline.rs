@@ -1,23 +1,29 @@
-//! The threaded serving pipeline: source -> bounded queue -> workers ->
-//! reordering sink.
+//! The threaded serving pipeline: source -> band shards -> bounded
+//! queue(s) -> workers -> reassembly sink.
+//!
+//! Each LR frame is split per the configured [`ShardPlan`] (whole-frame
+//! or row bands, see `coordinator::shard`); bands are dispatched across
+//! the worker pool — through one shared queue, or per-worker queues
+//! under [`WorkerAffinity::BandModulo`] — and the sink stitches HR
+//! bands back into display-order frames.
 //!
 //! Backpressure: `sync_channel(queue_depth)` blocks the source when the
 //! workers fall behind — the chip-side analog is the camera stalling on
-//! a full line buffer.  Frame order is restored at the sink so the
-//! output stream is display-ready.
+//! a full line buffer.
 
-use std::collections::BTreeMap;
-use std::sync::mpsc::sync_channel;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::config::{ShardPlan, ShardStrategy, WorkerAffinity};
 use crate::image::{ImageU8, SceneGenerator};
 
 use super::engine::EngineFactory;
-use super::metrics::{FrameRecord, PipelineReport};
+use super::metrics::PipelineReport;
+use super::shard::{crop_hr_band, plan_bands, BandSpec, DoneBand, Reassembler};
 
 /// Pipeline parameters.
 pub struct PipelineConfig {
@@ -31,8 +37,12 @@ pub struct PipelineConfig {
     /// Optional pacing: source emits at this fps (None = as fast as
     /// the pipeline drains).
     pub source_fps: Option<f64>,
-    /// Upscale factor (for the Mpix/s report).
+    /// Upscale factor (for the Mpix/s report and band stitching).
     pub scale: usize,
+    /// How frames are split into worker work units.
+    pub shard: ShardPlan,
+    /// Conv depth of the served model — resolves `HaloPolicy::Exact`.
+    pub model_layers: usize,
 }
 
 impl Default for PipelineConfig {
@@ -46,21 +56,34 @@ impl Default for PipelineConfig {
             seed: 7,
             source_fps: None,
             scale: 3,
+            shard: ShardPlan::whole_frame(),
+            model_layers: 7,
         }
     }
 }
 
 struct WorkItem {
-    index: usize,
+    frame: usize,
+    spec: BandSpec,
+    n_bands: usize,
     emitted: Instant,
-    dequeued: Option<Instant>,
-    frame: ImageU8,
+    /// The extended band `[e0, e1)` of the LR frame.
+    lr: ImageU8,
 }
 
-struct DoneItem {
-    index: usize,
-    record: FrameRecord,
-    hr: ImageU8,
+/// Where a worker pulls work from: the shared queue, or its own.
+enum WorkSource {
+    Shared(Arc<Mutex<Receiver<WorkItem>>>),
+    Own(Receiver<WorkItem>),
+}
+
+impl WorkSource {
+    fn recv(&self) -> Option<WorkItem> {
+        match self {
+            WorkSource::Shared(rx) => rx.lock().unwrap().recv().ok(),
+            WorkSource::Own(rx) => rx.recv().ok(),
+        }
+    }
 }
 
 /// Run the pipeline; `factories` supplies one engine constructor per
@@ -72,79 +95,96 @@ pub fn run_pipeline(
     mut on_frame: impl FnMut(usize, &ImageU8),
 ) -> Result<PipelineReport> {
     assert_eq!(factories.len(), cfg.workers, "one engine per worker");
-    let (work_tx, work_rx) = sync_channel::<WorkItem>(cfg.queue_depth);
-    let work_rx = Arc::new(Mutex::new(work_rx));
-    let (done_tx, done_rx) = sync_channel::<DoneItem>(cfg.queue_depth * 2);
+    assert!(cfg.workers > 0, "pipeline needs at least one worker");
+    let specs = plan_bands(&cfg.shard, cfg.lr_h, cfg.model_layers);
+    let n_bands = specs.len();
+
+    // --- dispatch channels -------------------------------------------
+    // BandModulo pins band i to worker i % workers via per-worker
+    // queues; otherwise one shared queue feeds any idle worker.
+    let per_worker = cfg.workers > 1
+        && matches!(cfg.shard.strategy, ShardStrategy::RowBands)
+        && matches!(cfg.shard.affinity, WorkerAffinity::BandModulo);
+    let mut senders: Vec<SyncSender<WorkItem>> = Vec::new();
+    let mut sources: Vec<WorkSource> = Vec::new();
+    if per_worker {
+        for _ in 0..cfg.workers {
+            let (tx, rx) = sync_channel::<WorkItem>(cfg.queue_depth.max(1));
+            senders.push(tx);
+            sources.push(WorkSource::Own(rx));
+        }
+    } else {
+        let (tx, rx) = sync_channel::<WorkItem>(cfg.queue_depth.max(1));
+        senders.push(tx);
+        let shared = Arc::new(Mutex::new(rx));
+        for _ in 0..cfg.workers {
+            sources.push(WorkSource::Shared(Arc::clone(&shared)));
+        }
+    }
+
+    // The collector never blocks on downstream work, so this capacity
+    // only needs to absorb bursts of bands completing together.
+    let done_cap = (cfg.queue_depth * n_bands.max(1) * 2).max(8);
+    let (done_tx, done_rx) = sync_channel::<DoneBand>(done_cap);
 
     let engine_name = Arc::new(Mutex::new(String::new()));
     let t0 = Instant::now();
+    let scale = cfg.scale;
 
     // --- workers -----------------------------------------------------
     let mut handles = Vec::new();
-    for factory in factories {
-        let rx = Arc::clone(&work_rx);
+    for (factory, source) in factories.into_iter().zip(sources) {
         let tx = done_tx.clone();
         let name_slot = Arc::clone(&engine_name);
         handles.push(thread::spawn(move || -> Result<()> {
             let mut engine = factory()?;
             *name_slot.lock().unwrap() = engine.name().to_string();
-            loop {
-                let item = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
+            while let Some(item) = source.recv() {
+                let dequeued = Instant::now();
+                let hr_ext = engine.upscale(&item.lr)?;
+                let hr = crop_hr_band(&hr_ext, &item.spec, scale);
+                let done = DoneBand {
+                    frame: item.frame,
+                    spec: item.spec,
+                    n_bands: item.n_bands,
+                    hr,
+                    emitted: item.emitted,
+                    dequeued,
+                    completed: Instant::now(),
+                    stats: engine.last_stats(),
                 };
-                let Ok(mut item) = item else {
-                    return Ok(()); // source closed
-                };
-                let dq = Instant::now();
-                item.dequeued = Some(dq);
-                let hr = engine.upscale(&item.frame)?;
-                let now = Instant::now();
-                let record = FrameRecord {
-                    index: item.index,
-                    latency: now - item.emitted,
-                    queue_wait: dq - item.emitted,
-                    compute: now - dq,
-                };
-                if tx
-                    .send(DoneItem {
-                        index: item.index,
-                        record,
-                        hr,
-                    })
-                    .is_err()
-                {
-                    return Ok(());
+                if tx.send(done).is_err() {
+                    return Ok(()); // sink gone
                 }
             }
+            Ok(()) // source closed
         }));
     }
     drop(done_tx);
 
-    // --- source (this thread feeds; a collector thread drains) --------
+    // --- reassembly sink (collector thread drains while we feed) -----
+    let (lr_h, lr_w) = (cfg.lr_h, cfg.lr_w);
     let frames = cfg.frames;
     let collector = thread::spawn(move || {
+        let mut asm = Reassembler::new(lr_h, lr_w, 3, scale);
         let mut records = Vec::with_capacity(frames);
-        let mut pending: BTreeMap<usize, DoneItem> = BTreeMap::new();
-        let mut next = 0usize;
         let mut ordered: Vec<(usize, ImageU8)> = Vec::new();
         for done in done_rx.iter() {
-            pending.insert(done.index, done);
-            while let Some(d) = pending.remove(&next) {
-                records.push(d.record);
-                ordered.push((d.index, d.hr));
-                next += 1;
+            for (hr, record) in asm.push(done) {
+                ordered.push((record.index, hr));
+                records.push(record);
             }
         }
         (records, ordered)
     });
 
+    // --- source ------------------------------------------------------
     let gen = SceneGenerator::new(cfg.lr_w, cfg.lr_h, cfg.seed);
     let frame_interval = cfg
         .source_fps
         .map(|f| Duration::from_secs_f64(1.0 / f));
     let mut next_emit = Instant::now();
-    for i in 0..cfg.frames {
+    'source: for i in 0..cfg.frames {
         if let Some(iv) = frame_interval {
             let now = Instant::now();
             if now < next_emit {
@@ -153,21 +193,37 @@ pub fn run_pipeline(
             next_emit += iv;
         }
         let frame = gen.frame(i);
-        work_tx
-            .send(WorkItem {
-                index: i,
+        for spec in &specs {
+            let item = WorkItem {
+                frame: i,
+                spec: *spec,
+                n_bands,
                 emitted: Instant::now(),
-                dequeued: None,
-                frame,
-            })
-            .map_err(|_| anyhow::anyhow!("workers died"))?;
+                lr: frame.rows(spec.e0, spec.e1),
+            };
+            let tx = if per_worker {
+                &senders[spec.band % cfg.workers]
+            } else {
+                &senders[0]
+            };
+            if tx.send(item).is_err() {
+                // a worker died; stop feeding and surface its error
+                break 'source;
+            }
+        }
     }
-    drop(work_tx);
+    drop(senders);
 
+    let mut worker_err = None;
     for h in handles {
-        h.join().expect("worker panicked")?;
+        if let Err(e) = h.join().expect("worker panicked") {
+            worker_err.get_or_insert(e);
+        }
     }
     let (records, ordered) = collector.join().expect("collector panicked");
+    if let Some(e) = worker_err {
+        return Err(e);
+    }
     let wall = t0.elapsed();
     for (i, hr) in &ordered {
         on_frame(*i, hr);
@@ -180,12 +236,14 @@ pub fn run_pipeline(
         &name,
         cfg.workers,
         hr_px,
+        &cfg.shard.describe(),
     ))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::HaloPolicy;
     use crate::coordinator::engine::Int8Engine;
     use crate::model::QuantModel;
 
@@ -199,6 +257,8 @@ mod tests {
             seed: 1,
             source_fps: None,
             scale: 3,
+            shard: ShardPlan::whole_frame(),
+            model_layers: 2,
         }
     }
 
@@ -227,6 +287,7 @@ mod tests {
         assert_eq!(seen, (0..8).collect::<Vec<_>>());
         assert_eq!(rep.frames, 8);
         assert!(rep.fps > 0.0);
+        assert_eq!(rep.plan, "whole-frame");
     }
 
     #[test]
@@ -237,6 +298,32 @@ mod tests {
             .unwrap();
         assert_eq!(seen, (0..12).collect::<Vec<_>>());
         assert_eq!(rep.workers, 2);
+    }
+
+    #[test]
+    fn band_sharded_processes_all_frames_in_order() {
+        let mut cfg = tiny_cfg(6, 3);
+        cfg.shard = ShardPlan::row_bands(5, HaloPolicy::Exact);
+        let mut seen = Vec::new();
+        let rep = run_pipeline(&cfg, engines(3), |i, hr| {
+            assert_eq!((hr.h, hr.w), (54, 72));
+            seen.push(i);
+        })
+        .unwrap();
+        assert_eq!(seen, (0..6).collect::<Vec<_>>());
+        assert!(rep.plan.contains("row-bands"));
+    }
+
+    #[test]
+    fn band_modulo_affinity_preserves_order() {
+        let mut cfg = tiny_cfg(7, 2);
+        cfg.shard = ShardPlan {
+            affinity: crate::config::WorkerAffinity::BandModulo,
+            ..ShardPlan::row_bands(6, HaloPolicy::Exact)
+        };
+        let mut seen = Vec::new();
+        run_pipeline(&cfg, engines(2), |i, _| seen.push(i)).unwrap();
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
     }
 
     #[test]

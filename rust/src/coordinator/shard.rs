@@ -1,0 +1,415 @@
+//! Band sharding for the serving pipeline.
+//!
+//! The fusion layer already processes a frame as independent row bands
+//! (Section II, eq. (3)), which makes the band the natural unit of
+//! *serving-level* parallelism too: split the LR frame into bands,
+//! upscale them on a pool of engines, stitch the HR bands back in
+//! display order.  This module holds the pure parts of that path —
+//! planning ([`plan_bands`]), HR cropping ([`crop_hr_band`]) and
+//! out-of-order reassembly ([`Reassembler`]) — so they are unit- and
+//! property-testable without threads.
+//!
+//! Halo semantics (see [`HaloPolicy`]):
+//! * `Exact` extends each band by the model's conv depth on both sides
+//!   and crops after upscaling — the cropped rows have their full
+//!   receptive field, so the stitched frame is **bit-identical** to
+//!   monolithic whole-frame inference (proved by
+//!   `rust/tests/shard_equivalence.rs`).
+//! * `None` feeds the raw band — zero-padded seams, exactly the chip's
+//!   tilted-fusion behaviour.
+
+use std::collections::{BTreeMap, HashMap};
+use std::time::{Duration, Instant};
+
+pub use crate::config::{HaloPolicy, ShardPlan, ShardStrategy, WorkerAffinity};
+
+use crate::fusion::band_ranges;
+use crate::image::ImageU8;
+use crate::sim::RunStats;
+
+use super::metrics::FrameRecord;
+
+/// One band of one frame, in LR row coordinates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BandSpec {
+    /// Band index within the frame (top to bottom).
+    pub band: usize,
+    /// Rows this band *owns* in the output: `[y0, y1)`.
+    pub y0: usize,
+    pub y1: usize,
+    /// Rows actually fed to the engine (owned rows plus halo, clamped
+    /// to the frame): `[e0, e1)`.
+    pub e0: usize,
+    pub e1: usize,
+}
+
+impl BandSpec {
+    pub fn owned_rows(&self) -> usize {
+        self.y1 - self.y0
+    }
+
+    pub fn extended_rows(&self) -> usize {
+        self.e1 - self.e0
+    }
+}
+
+/// Expand a [`ShardPlan`] into concrete band specs for one frame
+/// geometry.  `model_layers` resolves [`HaloPolicy::Exact`].
+pub fn plan_bands(
+    plan: &ShardPlan,
+    lr_h: usize,
+    model_layers: usize,
+) -> Vec<BandSpec> {
+    match plan.strategy {
+        ShardStrategy::WholeFrame => vec![BandSpec {
+            band: 0,
+            y0: 0,
+            y1: lr_h,
+            e0: 0,
+            e1: lr_h,
+        }],
+        ShardStrategy::RowBands => {
+            let rows = if plan.band_rows == 0 {
+                lr_h.max(1)
+            } else {
+                plan.band_rows
+            };
+            let halo = plan.halo.rows(model_layers);
+            band_ranges(lr_h, rows)
+                .into_iter()
+                .enumerate()
+                .map(|(i, (y0, y1))| BandSpec {
+                    band: i,
+                    y0,
+                    y1,
+                    e0: y0.saturating_sub(halo),
+                    e1: (y1 + halo).min(lr_h),
+                })
+                .collect()
+        }
+    }
+}
+
+/// Crop an upscaled *extended* band down to the HR rows the band owns.
+pub fn crop_hr_band(hr_ext: &ImageU8, spec: &BandSpec, scale: usize) -> ImageU8 {
+    debug_assert_eq!(hr_ext.h, spec.extended_rows() * scale, "HR band height");
+    let top = (spec.y0 - spec.e0) * scale;
+    let rows = spec.owned_rows() * scale;
+    if top == 0 && hr_ext.h == rows {
+        return hr_ext.clone();
+    }
+    hr_ext.rows(top, top + rows)
+}
+
+/// A finished band on its way back from a worker.
+#[derive(Clone, Debug)]
+pub struct DoneBand {
+    pub frame: usize,
+    pub spec: BandSpec,
+    /// Total bands of this frame (so the sink knows completeness).
+    pub n_bands: usize,
+    /// HR pixels for the owned rows (already cropped).
+    pub hr: ImageU8,
+    pub emitted: Instant,
+    pub dequeued: Instant,
+    pub completed: Instant,
+    /// Hardware stats of this band, if the engine models them.
+    pub stats: Option<RunStats>,
+}
+
+struct PartialFrame {
+    hr: ImageU8,
+    received: usize,
+    n_bands: usize,
+    emitted: Instant,
+    queue_wait: Duration,
+    compute: Duration,
+    completed: Instant,
+    stats: Option<RunStats>,
+}
+
+/// Stitches out-of-order [`DoneBand`]s into display-order frames and
+/// merges per-band timings and [`RunStats`] into per-frame records.
+///
+/// Per-frame semantics: `latency` is first-emit to last-band-complete,
+/// `queue_wait` the worst band's queue wait, `compute` the *summed*
+/// engine time across bands (total work, which can exceed latency when
+/// bands run in parallel).
+pub struct Reassembler {
+    hr_h: usize,
+    hr_w: usize,
+    c: usize,
+    scale: usize,
+    pending: HashMap<usize, PartialFrame>,
+    next: usize,
+    parked: BTreeMap<usize, (ImageU8, FrameRecord)>,
+}
+
+impl Reassembler {
+    /// `lr_h` x `lr_w` x `c` input frames upscaled by `scale`.
+    pub fn new(lr_h: usize, lr_w: usize, c: usize, scale: usize) -> Self {
+        Self {
+            hr_h: lr_h * scale,
+            hr_w: lr_w * scale,
+            c,
+            scale,
+            pending: HashMap::new(),
+            next: 0,
+            parked: BTreeMap::new(),
+        }
+    }
+
+    /// Frames started but not yet emitted (incomplete or out of order).
+    pub fn in_flight(&self) -> usize {
+        self.pending.len() + self.parked.len()
+    }
+
+    /// Absorb one band; returns every frame that became emittable, in
+    /// display order.
+    pub fn push(&mut self, band: DoneBand) -> Vec<(ImageU8, FrameRecord)> {
+        assert_eq!(band.hr.w, self.hr_w, "band HR width mismatch");
+        assert_eq!(
+            band.hr.h,
+            band.spec.owned_rows() * self.scale,
+            "band HR height mismatch"
+        );
+        assert!(
+            band.spec.y1 * self.scale <= self.hr_h,
+            "band rows outside frame"
+        );
+        let entry =
+            self.pending.entry(band.frame).or_insert_with(|| PartialFrame {
+                hr: ImageU8::new(self.hr_h, self.hr_w, self.c),
+                received: 0,
+                n_bands: band.n_bands,
+                emitted: band.emitted,
+                queue_wait: Duration::ZERO,
+                compute: Duration::ZERO,
+                completed: band.completed,
+                stats: None,
+            });
+        assert_eq!(entry.n_bands, band.n_bands, "inconsistent band count");
+        let dst0 = band.spec.y0 * self.scale * self.hr_w * self.c;
+        entry.hr.data[dst0..dst0 + band.hr.data.len()]
+            .copy_from_slice(&band.hr.data);
+        entry.received += 1;
+        entry.emitted = entry.emitted.min(band.emitted);
+        entry.completed = entry.completed.max(band.completed);
+        entry.queue_wait =
+            entry.queue_wait.max(band.dequeued - band.emitted);
+        entry.compute += band.completed - band.dequeued;
+        if let Some(s) = band.stats {
+            match &mut entry.stats {
+                Some(acc) => acc.merge(&s),
+                None => entry.stats = Some(s),
+            }
+        }
+        if entry.received == entry.n_bands {
+            let pf = self.pending.remove(&band.frame).unwrap();
+            let record = FrameRecord {
+                index: band.frame,
+                latency: pf.completed - pf.emitted,
+                queue_wait: pf.queue_wait,
+                compute: pf.compute,
+                bands: pf.n_bands,
+                stats: pf.stats,
+            };
+            self.parked.insert(band.frame, (pf.hr, record));
+        }
+        let mut out = Vec::new();
+        while let Some(v) = self.parked.remove(&self.next) {
+            out.push(v);
+            self.next += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_frame_plan_is_one_band() {
+        let specs = plan_bands(&ShardPlan::whole_frame(), 360, 7);
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0], BandSpec { band: 0, y0: 0, y1: 360, e0: 0, e1: 360 });
+    }
+
+    #[test]
+    fn row_band_plan_covers_frame_with_clamped_halo() {
+        let plan = ShardPlan::row_bands(60, HaloPolicy::Exact);
+        let specs = plan_bands(&plan, 150, 7);
+        assert_eq!(specs.len(), 3);
+        // owned rows tile the frame exactly
+        assert_eq!(specs[0].y0, 0);
+        for w in specs.windows(2) {
+            assert_eq!(w[0].y1, w[1].y0);
+        }
+        assert_eq!(specs.last().unwrap().y1, 150);
+        // halo = 7 rows, clamped at the frame borders
+        assert_eq!((specs[0].e0, specs[0].e1), (0, 67));
+        assert_eq!((specs[1].e0, specs[1].e1), (53, 127));
+        assert_eq!((specs[2].e0, specs[2].e1), (113, 150));
+        assert_eq!(specs[2].owned_rows(), 30);
+    }
+
+    #[test]
+    fn halo_policies_resolve_in_plan() {
+        let none = plan_bands(&ShardPlan::row_bands(8, HaloPolicy::None), 24, 5);
+        assert!(none.iter().all(|s| (s.e0, s.e1) == (s.y0, s.y1)));
+        let fixed = plan_bands(&ShardPlan::row_bands(8, HaloPolicy::Rows(2)), 24, 5);
+        assert_eq!((fixed[1].e0, fixed[1].e1), (6, 18));
+    }
+
+    #[test]
+    fn zero_band_rows_means_full_height() {
+        let specs = plan_bands(&ShardPlan::row_bands(0, HaloPolicy::Exact), 90, 7);
+        assert_eq!(specs.len(), 1);
+        assert_eq!((specs[0].y0, specs[0].y1), (0, 90));
+    }
+
+    #[test]
+    fn crop_keeps_owned_rows() {
+        let spec = BandSpec { band: 1, y0: 4, y1: 8, e0: 2, e1: 10 };
+        let scale = 2;
+        // extended band HR: 16 rows; owned HR: rows [4, 12)
+        let mut hr_ext = ImageU8::new(16, 3, 1);
+        for y in 0..16 {
+            for x in 0..3 {
+                hr_ext.set(y, x, 0, y as u8);
+            }
+        }
+        let hr = crop_hr_band(&hr_ext, &spec, scale);
+        assert_eq!(hr.h, 8);
+        assert_eq!(hr.get(0, 0, 0), 4);
+        assert_eq!(hr.get(7, 2, 0), 11);
+    }
+
+    #[test]
+    fn crop_is_identity_without_halo() {
+        let spec = BandSpec { band: 0, y0: 0, y1: 5, e0: 0, e1: 5 };
+        let hr_ext = ImageU8::new(15, 2, 3);
+        let hr = crop_hr_band(&hr_ext, &spec, 3);
+        assert_eq!(hr, hr_ext);
+    }
+
+    // ---- reassembler ------------------------------------------------
+
+    fn band(
+        t0: Instant,
+        frame: usize,
+        band: usize,
+        n_bands: usize,
+        rows_per_band: usize,
+        w: usize,
+        scale: usize,
+        ms: (u64, u64, u64),
+        stats: Option<RunStats>,
+    ) -> DoneBand {
+        let y0 = band * rows_per_band;
+        let spec = BandSpec {
+            band,
+            y0,
+            y1: y0 + rows_per_band,
+            e0: y0,
+            e1: y0 + rows_per_band,
+        };
+        let mut hr = ImageU8::new(rows_per_band * scale, w * scale, 1);
+        hr.data.fill((10 * frame + band) as u8);
+        DoneBand {
+            frame,
+            spec,
+            n_bands,
+            hr,
+            emitted: t0 + Duration::from_millis(ms.0),
+            dequeued: t0 + Duration::from_millis(ms.1),
+            completed: t0 + Duration::from_millis(ms.2),
+            stats,
+        }
+    }
+
+    #[test]
+    fn out_of_order_bands_reassemble_in_display_order() {
+        let t0 = Instant::now();
+        // 2 frames x 3 bands of 2 LR rows, scale 2, LR 3 wide
+        let mut asm = Reassembler::new(6, 3, 1, 2);
+        let mk = |frame, b, ms| band(t0, frame, b, 3, 2, 3, 2, ms, None);
+
+        // frame 1 arrives completely before frame 0 finishes
+        assert!(asm.push(mk(1, 2, (1, 2, 9))).is_empty());
+        assert!(asm.push(mk(1, 0, (1, 3, 7))).is_empty());
+        assert!(asm.push(mk(1, 1, (1, 2, 8))).is_empty());
+        assert_eq!(asm.in_flight(), 2); // frame 1 parked, frame 0 pending
+
+        assert!(asm.push(mk(0, 1, (0, 1, 5))).is_empty());
+        assert!(asm.push(mk(0, 2, (0, 2, 6))).is_empty());
+        let out = asm.push(mk(0, 0, (0, 1, 4)));
+        // completing frame 0 releases both frames, in order
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1.index, 0);
+        assert_eq!(out[1].1.index, 1);
+        assert_eq!(asm.in_flight(), 0);
+
+        // stitching: band b of frame f filled rows [b*4, (b+1)*4) with
+        // value 10f + b
+        for (hr, rec) in &out {
+            assert_eq!((hr.h, hr.w), (12, 6));
+            assert_eq!(rec.bands, 3);
+            for b in 0..3u8 {
+                for y in (b as usize * 4)..((b as usize + 1) * 4) {
+                    assert_eq!(
+                        hr.get(y, 0, 0),
+                        10 * rec.index as u8 + b,
+                        "frame {} row {y}",
+                        rec.index
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_frame_timing_merges_bands() {
+        let t0 = Instant::now();
+        let mut asm = Reassembler::new(4, 2, 1, 1);
+        let mk = |b, ms| band(t0, 0, b, 2, 2, 2, 1, ms, None);
+        assert!(asm.push(mk(1, (2, 6, 11))).is_empty());
+        let out = asm.push(mk(0, (1, 3, 9)));
+        assert_eq!(out.len(), 1);
+        let rec = &out[0].1;
+        // latency: first emit (1 ms) to last completion (11 ms)
+        assert_eq!(rec.latency, Duration::from_millis(10));
+        // queue wait: worst band (6 - 2 = 4 ms)
+        assert_eq!(rec.queue_wait, Duration::from_millis(4));
+        // compute: summed engine time (5 + 6 ms)
+        assert_eq!(rec.compute, Duration::from_millis(11));
+    }
+
+    #[test]
+    fn band_stats_merge_into_frame_stats() {
+        let t0 = Instant::now();
+        let mut asm = Reassembler::new(4, 2, 1, 1);
+        let s = |cycles| {
+            Some(RunStats {
+                compute_cycles: cycles,
+                tiles: 1,
+                ..RunStats::default()
+            })
+        };
+        let mk = |b, st| band(t0, 0, b, 2, 2, 2, 1, (0, 1, 2), st);
+        assert!(asm.push(mk(0, s(100))).is_empty());
+        let out = asm.push(mk(1, s(40)));
+        let stats = out[0].1.stats.as_ref().unwrap();
+        assert_eq!(stats.compute_cycles, 140);
+        assert_eq!(stats.tiles, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "band HR width mismatch")]
+    fn rejects_wrong_width_band() {
+        let t0 = Instant::now();
+        let mut asm = Reassembler::new(4, 5, 1, 1);
+        asm.push(band(t0, 0, 0, 2, 2, 2, 1, (0, 1, 2), None));
+    }
+}

@@ -77,7 +77,11 @@ pub(crate) fn base_frame_traffic(
 }
 
 /// Split a frame height into bands of `rows` (last band may be short).
-pub(crate) fn band_ranges(h: usize, rows: usize) -> Vec<(usize, usize)> {
+///
+/// Shared with the serving layer: `coordinator::shard` reuses the same
+/// split so pipeline-level band sharding aligns with the fusion
+/// scheduler's bands.
+pub fn band_ranges(h: usize, rows: usize) -> Vec<(usize, usize)> {
     let mut out = Vec::new();
     let mut y = 0;
     while y < h {
@@ -88,7 +92,7 @@ pub(crate) fn band_ranges(h: usize, rows: usize) -> Vec<(usize, usize)> {
 }
 
 /// Extract rows `[y0, y1)` of a tensor.
-pub(crate) fn band_of(frame: &Tensor<u8>, y0: usize, y1: usize) -> Tensor<u8> {
+pub fn band_of(frame: &Tensor<u8>, y0: usize, y1: usize) -> Tensor<u8> {
     Tensor::from_vec(
         y1 - y0,
         frame.w,

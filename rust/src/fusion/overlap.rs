@@ -170,4 +170,62 @@ mod tests {
         q.push_back(lbl(0, 0), &[5; 4]);
         assert_eq!(q.read_front(lbl(0, 0)), vec![5; 4]);
     }
+
+    #[test]
+    fn scheduler_discipline_steady_state_occupancy() {
+        // Reproduce the tilted schedule's queue discipline for L maps
+        // over T tiles: tile t pushes (t, 0..L-1) going down the layer
+        // stack, and conv k of tile t pops (t-1, k-1) first.  Steady
+        // state must hold exactly L+1 entries (capacity L+2, eq. (2)).
+        let l = 4; // maps 0..=3 queued (final map never queued)
+        let mut q = OverlapQueue::new(l + 2, 8);
+        for t in 0..6usize {
+            // entering tile t: push map 0, then for each conv k pop the
+            // previous tile's map k-1 and push this tile's map k
+            q.push_back(lbl(t, 0), &[t as u8; 8]);
+            for k in 1..l {
+                if t >= 1 {
+                    assert_eq!(q.front_label(), Some(lbl(t - 1, k - 1)));
+                    q.pop_front(lbl(t - 1, k - 1));
+                }
+                q.push_back(lbl(t, k), &[(10 * t + k) as u8; 8]);
+            }
+            if t >= 1 {
+                q.pop_front(lbl(t - 1, l - 1));
+            }
+        }
+        assert_eq!(q.count(), l, "one full tile of maps resident");
+        assert!(
+            q.max_count() <= l + 1,
+            "steady-state occupancy {} exceeded L+1",
+            q.max_count()
+        );
+    }
+
+    #[test]
+    fn seam_payloads_round_trip_column_bytes() {
+        // the payload is the two rightmost columns; bytes must come
+        // back verbatim through the SRAM (seam correctness depends on
+        // this, not just on labels)
+        let mut q = OverlapQueue::new(3, 12);
+        let col_a = [1u8, 2, 3, 4, 5, 6];
+        let col_b = [7u8, 8, 9, 10, 11, 12];
+        let mut payload = col_a.to_vec();
+        payload.extend_from_slice(&col_b);
+        q.push_back(lbl(2, 1), &payload);
+        let back = q.read_front(lbl(2, 1));
+        assert_eq!(&back[..6], &col_a);
+        assert_eq!(&back[6..], &col_b);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of order")]
+    fn pop_with_stale_tile_label_panics() {
+        // popping tile t's entry while t-1's is still at the front is
+        // the classic seam bug; the queue must catch it
+        let mut q = OverlapQueue::new(4, 4);
+        q.push_back(lbl(0, 0), &[0; 4]);
+        q.push_back(lbl(1, 0), &[1; 4]);
+        q.pop_front(lbl(1, 0));
+    }
 }

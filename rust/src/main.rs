@@ -15,7 +15,10 @@ use sr_accel::analysis::{
 };
 use sr_accel::benchkit::Table;
 use sr_accel::cli::{Args, USAGE};
-use sr_accel::config::{AcceleratorConfig, FusionKind, ModelConfig, SystemConfig};
+use sr_accel::config::{
+    AcceleratorConfig, FusionKind, HaloPolicy, ModelConfig, ShardStrategy,
+    SystemConfig, WorkerAffinity,
+};
 use sr_accel::coordinator::{
     engine::{build_engine, engine_factory},
     run_pipeline, EngineKind, PipelineConfig,
@@ -64,11 +67,38 @@ fn load_system_config(args: &Args) -> Result<SystemConfig> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "engine", "frames", "workers", "queue-depth", "width", "height",
-        "source-fps", "seed", "config", "save-last",
+        "source-fps", "seed", "config", "save-last", "shard", "band-rows",
+        "halo", "affinity",
     ])?;
     let sys = load_system_config(args)?;
     let kind = EngineKind::parse(args.opt_str("engine", &sys.serve.engine))
         .context("unknown --engine (int8|pjrt|sim)")?;
+    let mut plan = sys.serve.shard.clone();
+    if let Some(s) = args.opt("shard") {
+        plan.strategy =
+            ShardStrategy::parse(s).context("unknown --shard (frame|band)")?;
+    }
+    // When band sharding is opted into *from the CLI* without an
+    // explicit row count, default to the accelerator's band height.
+    // A configured plan is honored verbatim (band_rows = 0 means one
+    // full-height band — the ShardPlan contract).
+    let default_band_rows = if plan.band_rows == 0
+        && args.opt("shard").is_some()
+        && sys.serve.shard.strategy == ShardStrategy::WholeFrame
+    {
+        sys.accelerator.tile_rows
+    } else {
+        plan.band_rows
+    };
+    plan.band_rows = args.opt_usize("band-rows", default_band_rows)?;
+    if let Some(s) = args.opt("halo") {
+        plan.halo =
+            HaloPolicy::parse(s).context("unknown --halo (none|exact|N)")?;
+    }
+    if let Some(s) = args.opt("affinity") {
+        plan.affinity = WorkerAffinity::parse(s)
+            .context("unknown --affinity (any|modulo)")?;
+    }
     let cfg = PipelineConfig {
         frames: args.opt_usize("frames", sys.serve.frames)?,
         queue_depth: args.opt_usize("queue-depth", sys.serve.queue_depth)?,
@@ -81,16 +111,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => None,
         },
         scale: sys.model.scale,
+        shard: plan,
+        model_layers: sys.model.n_layers(),
     };
-    // PJRT artifacts are fixed-shape; pick the matching one
-    let artifact = match (cfg.lr_w, cfg.lr_h) {
-        (640, 360) => "apbn_full.hlo.txt",
-        (32, 24) => "apbn_tile.hlo.txt",
-        (640, 60) => "apbn_band.hlo.txt",
-        _ if kind == EngineKind::Pjrt => bail!(
-            "pjrt engine requires an AOT shape: 640x360, 640x60 or 32x24"
-        ),
-        _ => "apbn_full.hlo.txt",
+    // PJRT artifacts are fixed-shape; pick the one matching the work
+    // unit the engine will actually see (whole frame or band)
+    let artifact = if kind == EngineKind::Pjrt
+        && cfg.shard.strategy == ShardStrategy::RowBands
+    {
+        if cfg.lr_w == 640
+            && cfg.shard.band_rows == 60
+            && cfg.shard.halo == HaloPolicy::None
+            && cfg.lr_h % 60 == 0
+        {
+            "apbn_band.hlo.txt"
+        } else {
+            bail!(
+                "pjrt band serving is AOT-shape bound: requires 640-wide \
+                 frames, height a multiple of 60, --band-rows 60 and \
+                 --halo none (the apbn_band artifact)"
+            );
+        }
+    } else {
+        match (cfg.lr_w, cfg.lr_h) {
+            (640, 360) => "apbn_full.hlo.txt",
+            (32, 24) => "apbn_tile.hlo.txt",
+            (640, 60) => "apbn_band.hlo.txt",
+            _ if kind == EngineKind::Pjrt => bail!(
+                "pjrt engine requires an AOT shape: 640x360, 640x60 or 32x24"
+            ),
+            _ => "apbn_full.hlo.txt",
+        }
     };
     let engines = (0..cfg.workers)
         .map(|_| {

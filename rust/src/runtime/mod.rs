@@ -8,6 +8,13 @@
 //! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the
 //! text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The XLA bindings are heavyweight and not available on bare machines,
+//! so the whole execution path is gated behind the `pjrt` cargo
+//! feature: without it, [`Executor`] is a thin stub that fails at
+//! `load()` with a clear message, and everything else in this module
+//! (manifest reading, artifact discovery, golden-vector loaders) still
+//! works.
 
 mod goldens;
 
@@ -17,101 +24,146 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::image::ImageF32;
+pub use executor::Executor;
 
-/// A compiled model executable bound to a PJRT client.
-pub struct Executor {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    /// LR input shape (h, w, c).
-    pub in_shape: (usize, usize, usize),
-    /// HR output shape (h, w, c).
-    pub out_shape: (usize, usize, usize),
-    pub artifact: PathBuf,
+/// True when this build carries the PJRT runtime (`--features pjrt`).
+pub const PJRT_ENABLED: bool = cfg!(feature = "pjrt");
+
+#[cfg(feature = "pjrt")]
+mod executor {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, Context, Result};
+
+    use crate::image::ImageF32;
+
+    /// A compiled model executable bound to a PJRT client.
+    pub struct Executor {
+        client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+        /// LR input shape (h, w, c).
+        pub in_shape: (usize, usize, usize),
+        /// HR output shape (h, w, c).
+        pub out_shape: (usize, usize, usize),
+        pub artifact: PathBuf,
+    }
+
+    impl Executor {
+        /// Compile an HLO-text artifact on the CPU PJRT client.
+        ///
+        /// `in_shape`/`out_shape` come from `artifacts/manifest.json`
+        /// (see [`super::Manifest`]).
+        pub fn load(
+            path: &Path,
+            in_shape: (usize, usize, usize),
+            out_shape: (usize, usize, usize),
+        ) -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .context("create PJRT CPU client")?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", path.display()))?;
+            Ok(Self {
+                client,
+                exe,
+                in_shape,
+                out_shape,
+                artifact: path.to_path_buf(),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Run one LR image through the model. The image must match
+        /// `in_shape` exactly (one executable per shape — AOT contract).
+        pub fn run(&self, img: &ImageF32) -> Result<ImageF32> {
+            let (h, w, c) = self.in_shape;
+            if (img.h, img.w, img.c) != (h, w, c) {
+                bail!(
+                    "executor expects {}x{}x{}, got {}x{}x{} (artifact {})",
+                    h,
+                    w,
+                    c,
+                    img.h,
+                    img.w,
+                    img.c,
+                    self.artifact.display()
+                );
+            }
+            let lit = xla::Literal::vec1(&img.data)
+                .reshape(&[h as i64, w as i64, c as i64])
+                .context("reshape input literal")?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&[lit])
+                .context("execute")?[0][0]
+                .to_literal_sync()
+                .context("read result buffer")?;
+            // aot.py lowers with return_tuple=True -> 1-tuple
+            let out = result.to_tuple1().context("unpack result tuple")?;
+            let data: Vec<f32> = out.to_vec().context("read result literal")?;
+            let (oh, ow, oc) = self.out_shape;
+            if data.len() != oh * ow * oc {
+                bail!(
+                    "output size {} != expected {}x{}x{}",
+                    data.len(),
+                    oh,
+                    ow,
+                    oc
+                );
+            }
+            Ok(ImageF32::from_vec(oh, ow, oc, data))
+        }
+    }
 }
 
-impl Executor {
-    /// Compile an HLO-text artifact on the CPU PJRT client.
-    ///
-    /// `in_shape`/`out_shape` come from `artifacts/manifest.json`
-    /// (see [`Manifest`]).
-    pub fn load(
-        path: &Path,
-        in_shape: (usize, usize, usize),
-        out_shape: (usize, usize, usize),
-    ) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(to_anyhow)
-            .context("create PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not UTF-8")?,
-        )
-        .map_err(to_anyhow)
-        .with_context(|| format!("parse HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client
-            .compile(&comp)
-            .map_err(to_anyhow)
-            .with_context(|| format!("compile {}", path.display()))?;
-        Ok(Self {
-            client,
-            exe,
-            in_shape,
-            out_shape,
-            artifact: path.to_path_buf(),
-        })
+#[cfg(not(feature = "pjrt"))]
+mod executor {
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, Result};
+
+    use crate::image::ImageF32;
+
+    /// Stub executor: keeps PJRT-typed call sites compiling when the
+    /// `pjrt` feature (and thus the `xla` runtime) is not linked in.
+    /// `load()` always fails with a clear message.
+    pub struct Executor {
+        /// LR input shape (h, w, c).
+        pub in_shape: (usize, usize, usize),
+        /// HR output shape (h, w, c).
+        pub out_shape: (usize, usize, usize),
+        pub artifact: PathBuf,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Run one LR image through the model. The image must match
-    /// `in_shape` exactly (one executable per shape — AOT contract).
-    pub fn run(&self, img: &ImageF32) -> Result<ImageF32> {
-        let (h, w, c) = self.in_shape;
-        if (img.h, img.w, img.c) != (h, w, c) {
+    impl Executor {
+        pub fn load(
+            path: &Path,
+            _in_shape: (usize, usize, usize),
+            _out_shape: (usize, usize, usize),
+        ) -> Result<Self> {
             bail!(
-                "executor expects {}x{}x{}, got {}x{}x{} (artifact {})",
-                h,
-                w,
-                c,
-                img.h,
-                img.w,
-                img.c,
-                self.artifact.display()
+                "PJRT runtime not built into this binary: rebuild with \
+                 `cargo build --features pjrt` to execute {}",
+                path.display()
             );
         }
-        let lit = xla::Literal::vec1(&img.data)
-            .reshape(&[h as i64, w as i64, c as i64])
-            .map_err(to_anyhow)
-            .context("reshape input literal")?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit])
-            .map_err(to_anyhow)
-            .context("execute")?[0][0]
-            .to_literal_sync()
-            .map_err(to_anyhow)?;
-        // aot.py lowers with return_tuple=True -> 1-tuple
-        let out = result.to_tuple1().map_err(to_anyhow)?;
-        let data: Vec<f32> = out.to_vec().map_err(to_anyhow)?;
-        let (oh, ow, oc) = self.out_shape;
-        if data.len() != oh * ow * oc {
-            bail!(
-                "output size {} != expected {}x{}x{}",
-                data.len(),
-                oh,
-                ow,
-                oc
-            );
-        }
-        Ok(ImageF32::from_vec(oh, ow, oc, data))
-    }
-}
 
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("{e}")
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn run(&self, _img: &ImageF32) -> Result<ImageF32> {
+            bail!("PJRT runtime not built (enable the `pjrt` feature)");
+        }
+    }
 }
 
 /// Minimal manifest.json reader (artifact name -> shapes).
@@ -189,6 +241,13 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// True when the AOT artifact bundle (at minimum the trained weights)
+/// is present.  Tests and benches that need `make artifacts` output use
+/// this to skip gracefully on bare checkouts instead of failing.
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("weights.apbnw").exists()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,5 +288,17 @@ mod tests {
     #[test]
     fn empty_manifest_rejected() {
         assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_executor_load_fails_clearly() {
+        let err = Executor::load(
+            Path::new("apbn_full.hlo.txt"),
+            (360, 640, 3),
+            (1080, 1920, 3),
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
     }
 }

@@ -1,0 +1,260 @@
+//! Property tests of the band-sharded serving pipeline: sharding a
+//! frame across workers must never change the pixels.
+//!
+//! Two equivalence regimes, both exercised over randomized geometry
+//! with the in-repo quickcheck substrate:
+//!
+//! * `HaloPolicy::Exact` — band-sharded output is **bit-identical** to
+//!   single-worker whole-frame inference, for any band height, worker
+//!   count and frame geometry (each band carries a halo of the model's
+//!   conv depth, so every cropped output row has its full receptive
+//!   field);
+//! * `HaloPolicy::None` — band-sharded output reproduces the *chip's*
+//!   zero-padded band semantics, i.e. exactly what the tilted-fusion
+//!   scheduler produces for the whole frame.
+
+use sr_accel::config::{
+    AcceleratorConfig, HaloPolicy, ShardPlan, ShardStrategy, WorkerAffinity,
+};
+use sr_accel::coordinator::{
+    run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
+    PipelineReport, SimEngine,
+};
+use sr_accel::fusion::{FusionScheduler, TiltedScheduler};
+use sr_accel::image::{ImageU8, SceneGenerator};
+use sr_accel::model::{QuantModel, Tensor};
+use sr_accel::util::quickcheck::{check, shrink_dims, Config};
+
+fn int8_factories(
+    n: usize,
+    layers: usize,
+    c_mid: usize,
+    seed: u64,
+) -> Vec<EngineFactory> {
+    (0..n)
+        .map(|_| {
+            Box::new(move || {
+                Ok(Box::new(Int8Engine::new(QuantModel::test_model(
+                    layers, 3, c_mid, 3, seed,
+                ))) as Box<dyn Engine>)
+            }) as EngineFactory
+        })
+        .collect()
+}
+
+fn base_cfg(
+    lr_w: usize,
+    lr_h: usize,
+    frames: usize,
+    model_layers: usize,
+) -> PipelineConfig {
+    PipelineConfig {
+        frames,
+        queue_depth: 2,
+        workers: 1,
+        lr_w,
+        lr_h,
+        seed: 11,
+        source_fps: None,
+        scale: 3,
+        shard: ShardPlan::whole_frame(),
+        model_layers,
+    }
+}
+
+fn run(
+    cfg: &PipelineConfig,
+    factories: Vec<EngineFactory>,
+) -> (Vec<ImageU8>, PipelineReport) {
+    let mut out = Vec::new();
+    let rep = run_pipeline(cfg, factories, |_, hr| out.push(hr.clone()))
+        .expect("pipeline run failed");
+    (out, rep)
+}
+
+/// The tentpole property: band-sharded serving with exact halos is
+/// bit-identical to single-worker whole-frame serving, across random
+/// geometries, band heights, worker counts and models.
+#[test]
+fn prop_band_sharded_bit_identical_to_whole_frame() {
+    let cfg = Config {
+        cases: 16,
+        seed: 0x5AAD,
+        max_shrink_iters: 40,
+    };
+    check(
+        &cfg,
+        |rng| {
+            vec![
+                rng.range_usize(6, 40),  // lr_w
+                rng.range_usize(4, 32),  // lr_h
+                rng.range_usize(1, 12),  // band_rows
+                rng.range_usize(1, 4),   // workers
+                rng.range_usize(1, 4),   // model layers
+                rng.range_usize(1, 6),   // mid channels
+                rng.range_usize(0, 999), // model seed
+            ]
+        },
+        |d| {
+            let (w, h, band_rows, workers, layers, c_mid) =
+                (d[0], d[1], d[2], d[3], d[4].max(1), d[5].max(1));
+            let seed = d[6] as u64;
+            let (whole, _) = run(
+                &base_cfg(w, h, 3, layers),
+                int8_factories(1, layers, c_mid, seed),
+            );
+            let sharded_cfg = PipelineConfig {
+                workers,
+                shard: ShardPlan::row_bands(band_rows, HaloPolicy::Exact),
+                ..base_cfg(w, h, 3, layers)
+            };
+            let (sharded, rep) = run(
+                &sharded_cfg,
+                int8_factories(workers, layers, c_mid, seed),
+            );
+            if whole.len() != sharded.len() {
+                return Err(format!(
+                    "frame count {} != {}",
+                    sharded.len(),
+                    whole.len()
+                ));
+            }
+            if whole != sharded {
+                return Err(format!(
+                    "band-sharded differs from whole-frame at {w}x{h}, \
+                     band_rows={band_rows}, workers={workers}, L={layers}"
+                ));
+            }
+            if rep.frames != 3 {
+                return Err(format!("report frames {}", rep.frames));
+            }
+            Ok(())
+        },
+        |d| shrink_dims(d, &[6, 4, 1, 1, 1, 1, 0]),
+    );
+}
+
+/// Acceptance pin: identical output for >= 3 explicit worker counts,
+/// under both dispatch affinities.
+#[test]
+fn band_sharded_identical_across_worker_counts_and_affinities() {
+    let (layers, c_mid, seed) = (3, 5, 21u64);
+    let (whole, _) = run(
+        &base_cfg(33, 26, 6, layers),
+        int8_factories(1, layers, c_mid, seed),
+    );
+    assert_eq!(whole.len(), 6);
+    for workers in [1, 2, 3, 4] {
+        for affinity in [WorkerAffinity::Any, WorkerAffinity::BandModulo] {
+            let cfg = PipelineConfig {
+                workers,
+                shard: ShardPlan {
+                    strategy: ShardStrategy::RowBands,
+                    band_rows: 5,
+                    halo: HaloPolicy::Exact,
+                    affinity,
+                },
+                ..base_cfg(33, 26, 6, layers)
+            };
+            let (got, rep) =
+                run(&cfg, int8_factories(workers, layers, c_mid, seed));
+            assert_eq!(
+                got, whole,
+                "output changed: workers={workers} affinity={affinity:?}"
+            );
+            assert_eq!(rep.workers, workers);
+        }
+    }
+}
+
+/// With no halo, serving-level band sharding reproduces the *chip's*
+/// band semantics: the stitched frame equals what the tilted-fusion
+/// scheduler produces (zero-padded seams and all).
+#[test]
+fn no_halo_band_sharding_matches_tilted_scheduler() {
+    let (layers, c_mid, seed) = (2, 4, 5u64);
+    let qm = QuantModel::test_model(layers, 3, c_mid, 3, seed);
+    let cfg = PipelineConfig {
+        workers: 2,
+        shard: ShardPlan::row_bands(6, HaloPolicy::None),
+        ..base_cfg(16, 15, 3, layers)
+    };
+    let (got, _) = run(&cfg, int8_factories(2, layers, c_mid, seed));
+    let acc = AcceleratorConfig {
+        tile_rows: 6, // same band split as the serving plan
+        tile_cols: 4,
+        ..AcceleratorConfig::paper()
+    };
+    let gen = SceneGenerator::new(16, 15, 11);
+    for (i, hr) in got.iter().enumerate() {
+        let img = gen.frame(i);
+        let frame = Tensor::from_vec(img.h, img.w, img.c, img.data);
+        let want = TiltedScheduler::default().run_frame(&frame, &qm, &acc);
+        assert_eq!(hr.data, want.hr.data, "frame {i}");
+    }
+}
+
+/// Band-sharding the *simulator* engine at its own tile_rows
+/// granularity preserves chip semantics exactly, and the pipeline
+/// merges per-band RunStats into per-frame hardware reports whose
+/// compute cycles match the monolithic run.
+#[test]
+fn sim_engine_band_sharding_preserves_output_and_merges_stats() {
+    let qm = QuantModel::test_model(2, 3, 4, 3, 9);
+    let acc = AcceleratorConfig {
+        tile_rows: 6,
+        tile_cols: 4,
+        ..AcceleratorConfig::paper()
+    };
+    let sim_factories = |n: usize| -> Vec<EngineFactory> {
+        (0..n)
+            .map(|_| {
+                let qm = qm.clone();
+                let acc = acc.clone();
+                Box::new(move || {
+                    Ok(Box::new(SimEngine::new(qm, acc)) as Box<dyn Engine>)
+                }) as EngineFactory
+            })
+            .collect()
+    };
+    let mono_cfg = base_cfg(20, 18, 4, 2);
+    let (whole, mono_rep) = run(&mono_cfg, sim_factories(1));
+    let sharded_cfg = PipelineConfig {
+        workers: 3,
+        // 18 rows / 6-row bands == the simulator's own band split, so
+        // zero-padded seams land in the same places
+        shard: ShardPlan::row_bands(6, HaloPolicy::None),
+        ..base_cfg(20, 18, 4, 2)
+    };
+    let (sharded, rep) = run(&sharded_cfg, sim_factories(3));
+    assert_eq!(sharded, whole, "sim band sharding changed pixels");
+
+    let hw = rep.hw.as_ref().expect("sim engine must report merged stats");
+    let mono_hw = mono_rep.hw.as_ref().unwrap();
+    // same bands -> same compute work and tile count, just sharded
+    assert_eq!(hw.compute_cycles, mono_hw.compute_cycles);
+    assert_eq!(hw.tiles, mono_hw.tiles);
+    assert!(hw.compute_cycles > 0);
+    assert!(rep.render().contains("hw:"));
+}
+
+/// Degenerate plans stay well-formed: a band taller than the frame, a
+/// one-row frame, and band_rows=0 (auto whole-height) all reduce to
+/// whole-frame behaviour.
+#[test]
+fn degenerate_band_plans_match_whole_frame() {
+    let (layers, c_mid, seed) = (2, 4, 3u64);
+    for (w, h, band_rows) in [(12, 5, 99), (9, 1, 3), (10, 7, 0)] {
+        let (whole, _) = run(
+            &base_cfg(w, h, 2, layers),
+            int8_factories(1, layers, c_mid, seed),
+        );
+        let cfg = PipelineConfig {
+            workers: 2,
+            shard: ShardPlan::row_bands(band_rows, HaloPolicy::Exact),
+            ..base_cfg(w, h, 2, layers)
+        };
+        let (got, _) = run(&cfg, int8_factories(2, layers, c_mid, seed));
+        assert_eq!(got, whole, "{w}x{h} band_rows={band_rows}");
+    }
+}

@@ -1,0 +1,233 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access, so — like the in-repo
+//! replacements for `rand`, `proptest` and `criterion` (DESIGN.md §3) —
+//! this crate implements the subset of anyhow's API that the workspace
+//! actually uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait on results and options, and the [`anyhow!`] / [`bail!`]
+//! macros.
+//!
+//! Differences from real anyhow, by design: causes are captured as
+//! rendered strings at wrap time (no downcasting, no backtraces).
+//! Display is the outermost message; `{:#}` renders the full
+//! `outer: inner: ...` chain; `Debug` renders the anyhow-style
+//! "Caused by:" block.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Drop-in subset of `anyhow::Error`: a message plus its rendered
+/// cause chain (outermost first).
+pub struct Error {
+    msg: String,
+    causes: Vec<String>,
+}
+
+/// `anyhow::Result`, with the usual defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self {
+            msg: message.to_string(),
+            causes: Vec::new(),
+        }
+    }
+
+    /// Wrap the error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        let inner = std::mem::replace(&mut self.msg, context.to_string());
+        self.causes.insert(0, inner);
+        self
+    }
+
+    /// The rendered message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        std::iter::once(self.msg.as_str())
+            .chain(self.causes.iter().map(|s| s.as_str()))
+    }
+}
+
+// The standard anyhow trick: `Error` itself does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` (and
+// thus `?` conversion from any std error) coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let msg = e.to_string();
+        let mut causes = Vec::new();
+        let mut cur = e.source();
+        while let Some(c) = cur {
+            causes.push(c.to_string());
+            cur = c.source();
+        }
+        Self { msg, causes }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            for c in &self.causes {
+                write!(f, ": {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if !self.causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Extension trait adding `.context()` / `.with_context()` to
+/// `Result` (std errors *and* already-anyhow errors) and `Option`.
+pub trait Context<T, E>: Sized {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+mod ext {
+    /// Sealed conversion helper. Both impls coexist because
+    /// [`super::Error`] does not implement `std::error::Error`.
+    pub trait IntoError {
+        fn into_error(self) -> super::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> super::Error {
+            super::Error::from(self)
+        }
+    }
+
+    impl IntoError for super::Error {
+        fn into_error(self) -> super::Error {
+            self
+        }
+    }
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let e: Error = io_err().into();
+        let e = e.context("reading config");
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+        assert!(format!("{e:?}").contains("Caused by:"));
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: gone");
+
+        let already: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = already.with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+
+        let n: Option<u32> = None;
+        assert!(n.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero not allowed (got {x})");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert!(f(0).unwrap_err().to_string().contains("zero"));
+    }
+}
