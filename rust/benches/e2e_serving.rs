@@ -4,9 +4,14 @@
 //! (the Rust-host analog of the paper's real-time claim; the silicon
 //! fps comes from the simulator benches).
 //!
+//! Emits `BENCH_e2e.json` with HR MP/s per configuration, compared
+//! against the paper's 1080p60 target (124.4 HR MP/s).  `--smoke`
+//! shrinks the workload for CI.
+//!
 //! Falls back to the deterministic test model when the trained
 //! artifacts are absent, so the bench runs on bare checkouts.
 
+use sr_accel::benchkit::{smoke_requested, BenchJson, BenchRecord};
 use sr_accel::config::{HaloPolicy, ShardPlan};
 use sr_accel::coordinator::{
     run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
@@ -26,10 +31,20 @@ fn main() {
         QuantModel::test_model(7, 3, 28, 3, 0)
     };
     let model_layers = qm.n_layers();
+    let smoke = smoke_requested();
+    let mut json = BenchJson::new("e2e");
 
-    for (w, h, frames) in [(160usize, 90usize, 24usize), (320, 180, 12)] {
+    let geometries: &[(usize, usize, usize)] = if smoke {
+        &[(96, 54, 4)]
+    } else {
+        &[(160, 90, 24), (320, 180, 12)]
+    };
+    for &(w, h, frames) in geometries {
         let mut baseline_fps = 0.0f64;
         for workers in [1usize, 2, 4] {
+            if smoke && workers == 4 {
+                continue;
+            }
             let shard = if workers == 1 {
                 ShardPlan::whole_frame()
             } else {
@@ -68,6 +83,16 @@ fn main() {
             println!("{}\n", rep.render());
             assert_eq!(rep.frames, frames);
             assert!(rep.fps > 0.1, "pipeline stalled");
+            json.push(BenchRecord {
+                name: format!(
+                    "e2e {w}x{h} w{workers} {}",
+                    cfg.shard.describe()
+                ),
+                ns_per_iter: rep.wall.as_nanos() as f64
+                    / rep.frames.max(1) as f64,
+                mp_per_s: Some(rep.mpix_per_s),
+                macs_per_s: None,
+            });
             if workers == 1 {
                 baseline_fps = rep.fps;
             } else {
@@ -76,6 +101,15 @@ fn main() {
                     rep.fps / baseline_fps.max(1e-9)
                 );
             }
+        }
+    }
+    // the paper's real-time claim in HR megapixels per second
+    json.push_extra("paper_hr_mp_per_s_1080p60", 124.4);
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_e2e.json: {e}");
+            std::process::exit(1);
         }
     }
     println!(

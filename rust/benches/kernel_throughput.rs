@@ -1,24 +1,68 @@
-//! L3 engine micro-benchmarks (the §Perf instrument): int8 conv layers,
-//! whole-frame inference, and the PJRT path, in wall-clock time and
-//! LR-Mpix/s.  These numbers feed EXPERIMENTS.md §Perf before/after.
+//! L3 engine micro-benchmarks (the §Perf instrument): int8 conv layers
+//! on the legacy pack-per-call path vs the prepared zero-alloc path,
+//! the tilted tile kernel, a whole tilted band, whole-frame inference,
+//! and the PJRT path — in wall-clock time and LR-Mpix/s.
+//!
+//! Emits machine-readable `BENCH_kernel.json` (name, ns/iter, MP/s,
+//! MACs/s, plus the tilted-tile speedup factor and the paper's 1080p60
+//! target) so the perf trajectory is recorded PR over PR.
+//!
+//! Falls back to the APBN-shaped deterministic test model when the
+//! trained artifacts are absent, so the bench (and the CI `--smoke`
+//! job) runs on bare checkouts.
 
-use sr_accel::benchkit::{black_box, Bencher, Table};
+use sr_accel::benchkit::{
+    black_box, fmt_ns, BenchJson, BenchRecord, Bencher, Measurement, Table,
+};
+use sr_accel::config::AcceleratorConfig;
 use sr_accel::coordinator::{Engine, Int8Engine, PjrtEngine};
+use sr_accel::fusion::TiltedScheduler;
 use sr_accel::image::SceneGenerator;
-use sr_accel::model::{load_apbnw, Tensor};
-use sr_accel::reference::{conv3x3_final, conv3x3_relu};
-use sr_accel::runtime::artifacts_dir;
+use sr_accel::model::{
+    load_apbnw, PreparedLayer, PreparedModel, QuantModel, Scratch, Tensor,
+};
+use sr_accel::reference::{
+    conv3x3_relu, conv3x3_relu_prepared, conv_patch_relu,
+    conv_patch_relu_prepared,
+};
+use sr_accel::runtime::{artifacts_available, artifacts_dir};
 
 fn main() {
-    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))
-        .expect("run `make artifacts`");
-    let bench = Bencher::default();
+    let qm = if artifacts_available() {
+        load_apbnw(&artifacts_dir().join("weights.apbnw"))
+            .expect("weights.apbnw unreadable")
+    } else {
+        eprintln!(
+            "artifacts missing — benchmarking with the APBN-shaped \
+             deterministic test model"
+        );
+        QuantModel::test_model(7, 3, 28, 3, 0)
+    };
+    let bench = Bencher::from_args(Bencher::default());
+    let quick = Bencher::from_args(Bencher::quick());
+    let mut json = BenchJson::new("kernel");
     let mut t = Table::new(
         "engine micro-benchmarks",
         &["benchmark", "median", "p95", "LR Mpix/s"],
     );
+    fn push(
+        t: &mut Table,
+        json: &mut BenchJson,
+        m: &Measurement,
+        px: f64,
+        macs: Option<f64>,
+    ) {
+        t.row(&[
+            m.name.clone(),
+            fmt_ns(m.summary_ns.median()),
+            fmt_ns(m.summary_ns.percentile(95.0)),
+            format!("{:.3}", px / m.summary_ns.median() * 1e3),
+        ]);
+        json.push(BenchRecord::from_measurement(m, Some(px), macs));
+    }
 
-    // -- single steady-state layer (28->28) on a 60x64 map -------------
+    // -- steady-state layer (28->28) on a 60x64 map: legacy (repacks
+    //    weights every call) vs prepared (packed once) ----------------
     let fm = {
         let g = SceneGenerator::new(64, 60, 1).frame(0);
         // build a 28-channel map by running the first layer once
@@ -26,69 +70,116 @@ fn main() {
         conv3x3_relu(&t0, &qm.layers[0])
     };
     let layer = &qm.layers[1];
-    let m = bench.run("conv3x3 28->28 (60x64)", || {
+    let px = (fm.h * fm.w) as f64;
+    let layer_macs =
+        9.0 * px * layer.cin as f64 * layer.cout as f64;
+
+    let m_legacy = bench.run("conv3x3 28->28 60x64 (pack per call)", || {
         black_box(conv3x3_relu(black_box(&fm), layer));
     });
-    let px = (fm.h * fm.w) as f64;
-    t.row(&[
-        m.name.clone(),
-        sr_accel::benchkit::fmt_ns(m.summary_ns.median()),
-        sr_accel::benchkit::fmt_ns(m.summary_ns.percentile(95.0)),
-        format!("{:.3}", px / m.summary_ns.median() * 1e3),
-    ]);
+    push(&mut t, &mut json, &m_legacy, px, Some(layer_macs));
 
-    // -- final layer 28->27 --------------------------------------------
-    let m2 = bench.run("conv3x3 final 28->27 (60x64)", || {
-        black_box(conv3x3_final(black_box(&fm), qm.layers.last().unwrap()));
+    let pl = PreparedLayer::new(layer);
+    let mut scratch = Scratch::new();
+    let m_prepared = bench.run("conv3x3 28->28 60x64 (prepared)", || {
+        let out = conv3x3_relu_prepared(black_box(&fm), &pl, &mut scratch);
+        scratch.recycle_u8(black_box(out));
     });
-    t.row(&[
-        m2.name.clone(),
-        sr_accel::benchkit::fmt_ns(m2.summary_ns.median()),
-        sr_accel::benchkit::fmt_ns(m2.summary_ns.percentile(95.0)),
-        format!("{:.3}", px / m2.summary_ns.median() * 1e3),
-    ]);
+    push(&mut t, &mut json, &m_prepared, px, Some(layer_macs));
+    json.push_extra(
+        "row_path_speedup",
+        m_legacy.summary_ns.median() / m_prepared.summary_ns.median(),
+    );
 
-    // -- whole-frame int8 engine (320x180) ------------------------------
+    // -- the tilted tile kernel: one 60x8 tile patch, 28->28 ----------
+    //    (pre-PR baseline = the scalar per-pixel patch path)
+    let (tile_rows, tile_cols) = (60usize, 8usize);
+    let patch = {
+        let mut p = Tensor::new(tile_rows + 2, tile_cols + 2, layer.cin);
+        for (i, v) in p.data.iter_mut().enumerate() {
+            *v = (i * 37 % 251) as u8;
+        }
+        p
+    };
+    let tile_px = (tile_rows * tile_cols) as f64;
+    let tile_macs =
+        9.0 * tile_px * layer.cin as f64 * layer.cout as f64;
+    let m_tile_legacy = bench.run("tilted tile 60x8 28->28 (baseline)", || {
+        black_box(conv_patch_relu(black_box(&patch), layer));
+    });
+    push(&mut t, &mut json, &m_tile_legacy, tile_px, Some(tile_macs));
+    let m_tile = bench.run("tilted tile 60x8 28->28 (prepared)", || {
+        let out =
+            conv_patch_relu_prepared(black_box(&patch), &pl, &mut scratch);
+        scratch.recycle_u8(black_box(out));
+    });
+    push(&mut t, &mut json, &m_tile, tile_px, Some(tile_macs));
+    let tile_speedup =
+        m_tile_legacy.summary_ns.median() / m_tile.summary_ns.median();
+    json.push_extra("tilted_tile_speedup", tile_speedup);
+
+    // -- a whole tilted band through the scheduler (prepared path) ----
+    let pm = PreparedModel::new(&qm);
+    let band = {
+        let g = SceneGenerator::new(64, 60, 3).frame(0);
+        Tensor::from_vec(g.h, g.w, g.c, g.data)
+    };
+    let cfg = AcceleratorConfig::paper();
+    let sched = TiltedScheduler::default();
+    let band_px = (band.h * band.w) as f64;
+    let m_band = quick.run("tilted band 60x64 (prepared sched)", || {
+        let (hr, stats) = sched.run_band_prepared(
+            black_box(&band),
+            &pm,
+            &cfg,
+            &mut scratch,
+        );
+        black_box((hr, stats));
+    });
+    push(&mut t, &mut json, &m_band, band_px, None);
+
+    // -- whole-frame int8 engine (320x180) ----------------------------
     let img = SceneGenerator::new(320, 180, 2).frame(0);
     let mut engine = Int8Engine::new(qm.clone());
-    let quick = Bencher::quick();
-    let m3 = quick.run("int8 full frame (320x180)", || {
+    let m_frame = quick.run("int8 full frame (320x180)", || {
         black_box(engine.upscale(black_box(&img)).unwrap());
     });
     let fpx = (img.h * img.w) as f64;
-    t.row(&[
-        m3.name.clone(),
-        sr_accel::benchkit::fmt_ns(m3.summary_ns.median()),
-        sr_accel::benchkit::fmt_ns(m3.summary_ns.percentile(95.0)),
-        format!("{:.3}", fpx / m3.summary_ns.median() * 1e3),
-    ]);
+    push(&mut t, &mut json, &m_frame, fpx, None);
 
-    // -- PJRT float path on the same tile size --------------------------
+    // -- PJRT float path on the same tile size ------------------------
     match PjrtEngine::from_artifact("apbn_tile.hlo.txt") {
         Ok(mut pjrt) => {
             let tile = SceneGenerator::new(32, 24, 3).frame(0);
             let m4 = quick.run("pjrt tile (32x24)", || {
                 black_box(pjrt.upscale(black_box(&tile)).unwrap());
             });
-            t.row(&[
-                m4.name.clone(),
-                sr_accel::benchkit::fmt_ns(m4.summary_ns.median()),
-                sr_accel::benchkit::fmt_ns(m4.summary_ns.percentile(95.0)),
-                format!(
-                    "{:.3}",
-                    (32.0 * 24.0) / m4.summary_ns.median() * 1e3
-                ),
-            ]);
+            push(&mut t, &mut json, &m4, 32.0 * 24.0, None);
         }
         Err(e) => println!("pjrt bench skipped: {e}"),
     }
     t.print();
 
     // MAC-rate summary for §Perf bookkeeping
-    let macs_per_px = 9.0 * 28.0 * 28.0;
-    let gmacs = px * macs_per_px / m.summary_ns.median();
+    let gmacs = px * 9.0 * 28.0 * 28.0 / m_prepared.summary_ns.median();
     println!(
-        "\nint8 steady-state layer: {gmacs:.2} GMAC/s on this host \
-         (silicon target: 756 GMAC/s at 600 MHz x 1260 MACs)"
+        "\nint8 prepared steady-state layer: {gmacs:.2} GMAC/s on this \
+         host (silicon target: 756 GMAC/s at 600 MHz x 1260 MACs)"
     );
+    println!(
+        "tilted tile path speedup (prepared vs pre-§Perf baseline): \
+         {tile_speedup:.2}x"
+    );
+
+    // the paper's real-time target: 1920x1080@60fps HR = 124.4 MP/s
+    // (13.8 MP/s in LR pixels at x3)
+    json.push_extra("paper_hr_mp_per_s_1080p60", 124.4);
+    json.push_extra("paper_lr_mp_per_s_1080p60", 124.4 / 9.0);
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_kernel.json: {e}");
+            std::process::exit(1);
+        }
+    }
 }

@@ -3,7 +3,13 @@
 //! Every `rust/benches/*.rs` target (`harness = false`) uses this: warmup
 //! + timed iterations, median/p95 reporting, and aligned table printing
 //! that regenerates the paper's tables (DESIGN.md §4).
+//!
+//! §Perf trajectory: [`BenchJson`] additionally emits machine-readable
+//! `BENCH_<target>.json` files (name, ns/iter, MP/s, MACs/s per record)
+//! so successive PRs can compare kernel and end-to-end throughput
+//! against each other and against the paper's 1080p60 target.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use crate::util::stats::Summary;
@@ -77,6 +83,28 @@ impl Bencher {
         }
     }
 
+    /// CI smoke mode (`cargo bench ... -- --smoke`): one warmup, one
+    /// measured iteration — enough to produce well-formed numbers
+    /// without burning CI minutes.
+    pub fn smoke() -> Self {
+        Self {
+            warmup: 1,
+            target_time: Duration::ZERO,
+            min_iters: 1,
+            max_iters: 1,
+        }
+    }
+
+    /// [`Bencher::smoke`] when `--smoke` is among the args (cargo
+    /// forwards everything after `--`), otherwise the given default.
+    pub fn from_args(default: Self) -> Self {
+        if smoke_requested() {
+            Self::smoke()
+        } else {
+            default
+        }
+    }
+
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
         for _ in 0..self.warmup {
             f();
@@ -105,6 +133,149 @@ impl Bencher {
 #[inline]
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
+}
+
+/// True when `--smoke` was passed to the bench binary.
+pub fn smoke_requested() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// One machine-readable benchmark record of a `BENCH_*.json` file.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    /// Median nanoseconds per iteration.
+    pub ns_per_iter: f64,
+    /// Megapixels per second (LR unless the name says otherwise).
+    pub mp_per_s: Option<f64>,
+    /// MAC operations per second.
+    pub macs_per_s: Option<f64>,
+}
+
+impl BenchRecord {
+    /// Build from a [`Measurement`] plus optional pixel/MAC counts per
+    /// iteration (rates derive from the median).
+    pub fn from_measurement(
+        m: &Measurement,
+        pixels_per_iter: Option<f64>,
+        macs_per_iter: Option<f64>,
+    ) -> Self {
+        let ns = m.summary_ns.median();
+        let rate = |per_iter: f64| {
+            if ns > 0.0 {
+                per_iter / ns * 1e9
+            } else {
+                0.0
+            }
+        };
+        Self {
+            name: m.name.clone(),
+            ns_per_iter: ns,
+            mp_per_s: pixels_per_iter.map(|p| rate(p) / 1e6),
+            macs_per_s: macs_per_iter.map(rate),
+        }
+    }
+}
+
+/// Collects [`BenchRecord`]s and scalar context values, and writes them
+/// as `BENCH_<target>.json` (in `$BENCH_DIR` or the working directory —
+/// the workspace root under `cargo bench`).
+#[derive(Clone, Debug, Default)]
+pub struct BenchJson {
+    target: String,
+    records: Vec<BenchRecord>,
+    extra: Vec<(String, f64)>,
+}
+
+impl BenchJson {
+    pub fn new(target: &str) -> Self {
+        Self {
+            target: target.to_string(),
+            records: Vec::new(),
+            extra: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, r: BenchRecord) {
+        self.records.push(r);
+    }
+
+    /// Attach a named scalar (speedup factor, paper target, ...).
+    pub fn push_extra(&mut self, key: &str, value: f64) {
+        self.extra.push((key.to_string(), value));
+    }
+
+    pub fn records_len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// Render the JSON document (hand-rolled — the workspace is
+    /// offline, no serde).
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!(
+            "  \"target\": {},\n",
+            json_str(&self.target)
+        ));
+        out.push_str("  \"benchmarks\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"ns_per_iter\": {}, \
+                 \"mp_per_s\": {}, \"macs_per_s\": {}}}{}\n",
+                json_str(&r.name),
+                json_f64(r.ns_per_iter),
+                r.mp_per_s.map(json_f64).unwrap_or_else(|| "null".into()),
+                r.macs_per_s.map(json_f64).unwrap_or_else(|| "null".into()),
+                if i + 1 < self.records.len() { "," } else { "" },
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"extra\": {");
+        for (i, (k, v)) in self.extra.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("{}: {}", json_str(k), json_f64(*v)));
+        }
+        out.push_str("}\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<target>.json`; returns the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var_os("BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let path = dir.join(format!("BENCH_{}.json", self.target));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
 }
 
 /// Aligned-table printer used by the table benches to mirror the paper's
@@ -204,6 +375,63 @@ mod tests {
     fn table_rejects_bad_arity() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn smoke_bencher_runs_exactly_once() {
+        let b = Bencher::smoke();
+        let mut calls = 0;
+        let m = b.run("spin", || calls += 1);
+        // 1 warmup + 1 measured
+        assert_eq!(calls, 2);
+        assert_eq!(m.iters, 1);
+    }
+
+    #[test]
+    fn bench_json_renders_valid_structure() {
+        let mut j = BenchJson::new("kernel");
+        j.push(BenchRecord {
+            name: "conv \"tile\"".into(),
+            ns_per_iter: 1234.5,
+            mp_per_s: Some(2.5),
+            macs_per_s: None,
+        });
+        j.push(BenchRecord {
+            name: "band".into(),
+            ns_per_iter: 10.0,
+            mp_per_s: None,
+            macs_per_s: Some(1e9),
+        });
+        j.push_extra("tilted_tile_speedup", 1.75);
+        let r = j.render();
+        assert!(r.contains("\"target\": \"kernel\""));
+        assert!(r.contains("\\\"tile\\\""), "quotes escaped: {r}");
+        assert!(r.contains("\"ns_per_iter\": 1234.5"));
+        assert!(r.contains("\"mp_per_s\": null"));
+        assert!(r.contains("\"tilted_tile_speedup\": 1.75"));
+        assert_eq!(j.records_len(), 2);
+        // exactly one comma between the two records
+        assert_eq!(r.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn bench_record_rates_from_measurement() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 3,
+            summary_ns: Summary::from_samples(vec![1e6, 1e6, 1e6]),
+        };
+        let r = BenchRecord::from_measurement(&m, Some(1e6), Some(9e6));
+        // 1e6 px per 1e6 ns = 1e9 px/s = 1000 MP/s
+        assert!((r.mp_per_s.unwrap() - 1000.0).abs() < 1e-9);
+        assert!((r.macs_per_s.unwrap() - 9e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn json_f64_handles_non_finite() {
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64(1.5), "1.5");
     }
 
     #[test]

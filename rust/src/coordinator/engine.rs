@@ -20,9 +20,9 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::config::AcceleratorConfig;
-use crate::fusion::{FusionScheduler, TiltedScheduler};
+use crate::fusion::TiltedScheduler;
 use crate::image::ImageU8;
-use crate::model::{QuantModel, Tensor};
+use crate::model::{PreparedModel, QuantModel, Scratch};
 use crate::reference;
 use crate::runtime::{artifacts_dir, Executor, Manifest};
 use crate::sim::RunStats;
@@ -63,13 +63,24 @@ impl EngineKind {
 }
 
 /// Bit-exact integer engine (the chip's arithmetic on CPU).
+///
+/// Weights are packed into a [`PreparedModel`] once at construction and
+/// the per-worker [`Scratch`] arena is reused across frames — the
+/// serving hot loop performs no per-frame weight repacking (§Perf).
 pub struct Int8Engine {
     qm: QuantModel,
+    pm: PreparedModel,
+    scratch: Scratch,
 }
 
 impl Int8Engine {
     pub fn new(qm: QuantModel) -> Self {
-        Self { qm }
+        let pm = PreparedModel::new(&qm);
+        Self {
+            qm,
+            pm,
+            scratch: Scratch::new(),
+        }
     }
 
     pub fn from_artifacts() -> Result<Self> {
@@ -84,7 +95,7 @@ impl Int8Engine {
 
 impl Engine for Int8Engine {
     fn upscale(&mut self, lr: &ImageU8) -> Result<ImageU8> {
-        Ok(reference::upscale(lr, &self.qm))
+        Ok(reference::upscale_prepared(lr, &self.pm, &mut self.scratch))
     }
 
     fn name(&self) -> &'static str {
@@ -126,8 +137,13 @@ impl Engine for PjrtEngine {
 }
 
 /// Simulator engine: tilted fusion with full hardware accounting.
+///
+/// Like [`Int8Engine`], the model is prepared once and the scratch
+/// arena is owned per worker, so the tilted band loop stays
+/// allocation-free across frames.
 pub struct SimEngine {
-    qm: QuantModel,
+    pm: PreparedModel,
+    scratch: Scratch,
     cfg: AcceleratorConfig,
     sched: TiltedScheduler,
     last: Option<RunStats>,
@@ -136,7 +152,8 @@ pub struct SimEngine {
 impl SimEngine {
     pub fn new(qm: QuantModel, cfg: AcceleratorConfig) -> Self {
         Self {
-            qm,
+            pm: PreparedModel::new(&qm),
+            scratch: Scratch::new(),
             cfg,
             sched: TiltedScheduler::default(),
             last: None,
@@ -151,8 +168,15 @@ impl SimEngine {
 
 impl Engine for SimEngine {
     fn upscale(&mut self, lr: &ImageU8) -> Result<ImageU8> {
-        let t = Tensor::from_vec(lr.h, lr.w, lr.c, lr.data.clone());
-        let res = self.sched.run_frame(&t, &self.qm, &self.cfg);
+        let mut t = self.scratch.take_u8(lr.h, lr.w, lr.c);
+        t.data.copy_from_slice(&lr.data);
+        let res = self.sched.run_frame_prepared(
+            &t,
+            &self.pm,
+            &self.cfg,
+            &mut self.scratch,
+        );
+        self.scratch.recycle_u8(t);
         self.last = Some(res.stats);
         Ok(ImageU8::from_vec(
             res.hr.h,

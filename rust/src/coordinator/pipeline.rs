@@ -10,6 +10,12 @@
 //! Backpressure: `sync_channel(queue_depth)` blocks the source when the
 //! workers fall behind — the chip-side analog is the camera stalling on
 //! a full line buffer.
+//!
+//! §Perf: threads are scoped, `on_frame` runs inside the collector as
+//! frames become emittable (display order preserved), and each
+//! delivered frame's buffer is recycled back into the
+//! [`Reassembler`]'s pool — steady-state serving reuses a bounded set
+//! of HR staging frames instead of allocating one per frame.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -88,11 +94,13 @@ impl WorkSource {
 
 /// Run the pipeline; `factories` supplies one engine constructor per
 /// worker — each engine is built *inside* its thread (PJRT clients are
-/// not `Send`).
+/// not `Send`).  `on_frame` is invoked from the collector thread, in
+/// display order, while the pipeline is still running; the frame buffer
+/// it borrows is recycled immediately after it returns.
 pub fn run_pipeline(
     cfg: &PipelineConfig,
     factories: Vec<EngineFactory>,
-    mut on_frame: impl FnMut(usize, &ImageU8),
+    mut on_frame: impl FnMut(usize, &ImageU8) + Send,
 ) -> Result<PipelineReport> {
     assert_eq!(factories.len(), cfg.workers, "one engine per worker");
     assert!(cfg.workers > 0, "pipeline needs at least one worker");
@@ -130,104 +138,106 @@ pub fn run_pipeline(
     let engine_name = Arc::new(Mutex::new(String::new()));
     let t0 = Instant::now();
     let scale = cfg.scale;
-
-    // --- workers -----------------------------------------------------
-    let mut handles = Vec::new();
-    for (factory, source) in factories.into_iter().zip(sources) {
-        let tx = done_tx.clone();
-        let name_slot = Arc::clone(&engine_name);
-        handles.push(thread::spawn(move || -> Result<()> {
-            let mut engine = factory()?;
-            *name_slot.lock().unwrap() = engine.name().to_string();
-            while let Some(item) = source.recv() {
-                let dequeued = Instant::now();
-                let hr_ext = engine.upscale(&item.lr)?;
-                let hr = crop_hr_band(&hr_ext, &item.spec, scale);
-                let done = DoneBand {
-                    frame: item.frame,
-                    spec: item.spec,
-                    n_bands: item.n_bands,
-                    hr,
-                    emitted: item.emitted,
-                    dequeued,
-                    completed: Instant::now(),
-                    stats: engine.last_stats(),
-                };
-                if tx.send(done).is_err() {
-                    return Ok(()); // sink gone
-                }
-            }
-            Ok(()) // source closed
-        }));
-    }
-    drop(done_tx);
-
-    // --- reassembly sink (collector thread drains while we feed) -----
     let (lr_h, lr_w) = (cfg.lr_h, cfg.lr_w);
     let frames = cfg.frames;
-    let collector = thread::spawn(move || {
-        let mut asm = Reassembler::new(lr_h, lr_w, 3, scale);
-        let mut records = Vec::with_capacity(frames);
-        let mut ordered: Vec<(usize, ImageU8)> = Vec::new();
-        for done in done_rx.iter() {
-            for (hr, record) in asm.push(done) {
-                ordered.push((record.index, hr));
-                records.push(record);
+
+    let (records, worker_err) = thread::scope(|s| {
+        // --- workers -------------------------------------------------
+        let mut handles = Vec::new();
+        for (factory, source) in factories.into_iter().zip(sources) {
+            let tx = done_tx.clone();
+            let name_slot = Arc::clone(&engine_name);
+            handles.push(s.spawn(move || -> Result<()> {
+                let mut engine = factory()?;
+                *name_slot.lock().unwrap() = engine.name().to_string();
+                while let Some(item) = source.recv() {
+                    let dequeued = Instant::now();
+                    let hr_ext = engine.upscale(&item.lr)?;
+                    let hr = crop_hr_band(&hr_ext, &item.spec, scale);
+                    let done = DoneBand {
+                        frame: item.frame,
+                        spec: item.spec,
+                        n_bands: item.n_bands,
+                        hr,
+                        emitted: item.emitted,
+                        dequeued,
+                        completed: Instant::now(),
+                        stats: engine.last_stats(),
+                    };
+                    if tx.send(done).is_err() {
+                        return Ok(()); // sink gone
+                    }
+                }
+                Ok(()) // source closed
+            }));
+        }
+        drop(done_tx);
+
+        // --- reassembly sink (collector drains while we feed, hands
+        // display-order frames to `on_frame` and recycles buffers) ----
+        let on_frame = &mut on_frame;
+        let collector = s.spawn(move || {
+            let mut asm = Reassembler::new(lr_h, lr_w, 3, scale);
+            let mut records = Vec::with_capacity(frames);
+            for done in done_rx.iter() {
+                for (hr, record) in asm.push(done) {
+                    on_frame(record.index, &hr);
+                    asm.recycle(hr);
+                    records.push(record);
+                }
+            }
+            records
+        });
+
+        // --- source --------------------------------------------------
+        let gen = SceneGenerator::new(cfg.lr_w, cfg.lr_h, cfg.seed);
+        let frame_interval = cfg
+            .source_fps
+            .map(|f| Duration::from_secs_f64(1.0 / f));
+        let mut next_emit = Instant::now();
+        'source: for i in 0..cfg.frames {
+            if let Some(iv) = frame_interval {
+                let now = Instant::now();
+                if now < next_emit {
+                    thread::sleep(next_emit - now);
+                }
+                next_emit += iv;
+            }
+            let frame = gen.frame(i);
+            for spec in &specs {
+                let item = WorkItem {
+                    frame: i,
+                    spec: *spec,
+                    n_bands,
+                    emitted: Instant::now(),
+                    lr: frame.rows(spec.e0, spec.e1),
+                };
+                let tx = if per_worker {
+                    &senders[spec.band % cfg.workers]
+                } else {
+                    &senders[0]
+                };
+                if tx.send(item).is_err() {
+                    // a worker died; stop feeding, surface its error
+                    break 'source;
+                }
             }
         }
-        (records, ordered)
+        drop(senders);
+
+        let mut worker_err = None;
+        for h in handles {
+            if let Err(e) = h.join().expect("worker panicked") {
+                worker_err.get_or_insert(e);
+            }
+        }
+        let records = collector.join().expect("collector panicked");
+        (records, worker_err)
     });
-
-    // --- source ------------------------------------------------------
-    let gen = SceneGenerator::new(cfg.lr_w, cfg.lr_h, cfg.seed);
-    let frame_interval = cfg
-        .source_fps
-        .map(|f| Duration::from_secs_f64(1.0 / f));
-    let mut next_emit = Instant::now();
-    'source: for i in 0..cfg.frames {
-        if let Some(iv) = frame_interval {
-            let now = Instant::now();
-            if now < next_emit {
-                thread::sleep(next_emit - now);
-            }
-            next_emit += iv;
-        }
-        let frame = gen.frame(i);
-        for spec in &specs {
-            let item = WorkItem {
-                frame: i,
-                spec: *spec,
-                n_bands,
-                emitted: Instant::now(),
-                lr: frame.rows(spec.e0, spec.e1),
-            };
-            let tx = if per_worker {
-                &senders[spec.band % cfg.workers]
-            } else {
-                &senders[0]
-            };
-            if tx.send(item).is_err() {
-                // a worker died; stop feeding and surface its error
-                break 'source;
-            }
-        }
-    }
-    drop(senders);
-
-    let mut worker_err = None;
-    for h in handles {
-        if let Err(e) = h.join().expect("worker panicked") {
-            worker_err.get_or_insert(e);
-        }
-    }
-    let (records, ordered) = collector.join().expect("collector panicked");
     if let Some(e) = worker_err {
         return Err(e);
     }
     let wall = t0.elapsed();
-    for (i, hr) in &ordered {
-        on_frame(*i, hr);
-    }
     let hr_px = cfg.lr_w * cfg.scale * cfg.lr_h * cfg.scale;
     let name = engine_name.lock().unwrap().clone();
     Ok(PipelineReport::from_records(

@@ -143,6 +143,10 @@ pub struct Reassembler {
     pending: HashMap<usize, PartialFrame>,
     next: usize,
     parked: BTreeMap<usize, (ImageU8, FrameRecord)>,
+    /// Recycled HR frame buffers ([`Reassembler::recycle`]): the
+    /// steady-state serving loop reuses a bounded set of staging
+    /// frames instead of allocating one per frame (§Perf).
+    pool: Vec<ImageU8>,
 }
 
 impl Reassembler {
@@ -156,12 +160,34 @@ impl Reassembler {
             pending: HashMap::new(),
             next: 0,
             parked: BTreeMap::new(),
+            pool: Vec::new(),
         }
     }
 
     /// Frames started but not yet emitted (incomplete or out of order).
     pub fn in_flight(&self) -> usize {
         self.pending.len() + self.parked.len()
+    }
+
+    /// Hand a delivered frame's buffer back for reuse by later frames.
+    pub fn recycle(&mut self, hr: ImageU8) {
+        self.pool.push(hr);
+    }
+
+    /// A zeroed HR staging frame, reusing recycled storage when
+    /// available.
+    fn take_frame_buf(&mut self) -> ImageU8 {
+        match self.pool.pop() {
+            Some(mut img) => {
+                img.h = self.hr_h;
+                img.w = self.hr_w;
+                img.c = self.c;
+                img.data.clear();
+                img.data.resize(self.hr_h * self.hr_w * self.c, 0);
+                img
+            }
+            None => ImageU8::new(self.hr_h, self.hr_w, self.c),
+        }
     }
 
     /// Absorb one band; returns every frame that became emittable, in
@@ -177,17 +203,23 @@ impl Reassembler {
             band.spec.y1 * self.scale <= self.hr_h,
             "band rows outside frame"
         );
-        let entry =
-            self.pending.entry(band.frame).or_insert_with(|| PartialFrame {
-                hr: ImageU8::new(self.hr_h, self.hr_w, self.c),
-                received: 0,
-                n_bands: band.n_bands,
-                emitted: band.emitted,
-                queue_wait: Duration::ZERO,
-                compute: Duration::ZERO,
-                completed: band.completed,
-                stats: None,
-            });
+        if !self.pending.contains_key(&band.frame) {
+            let hr = self.take_frame_buf();
+            self.pending.insert(
+                band.frame,
+                PartialFrame {
+                    hr,
+                    received: 0,
+                    n_bands: band.n_bands,
+                    emitted: band.emitted,
+                    queue_wait: Duration::ZERO,
+                    compute: Duration::ZERO,
+                    completed: band.completed,
+                    stats: None,
+                },
+            );
+        }
+        let entry = self.pending.get_mut(&band.frame).unwrap();
         assert_eq!(entry.n_bands, band.n_bands, "inconsistent band count");
         let dst0 = band.spec.y0 * self.scale * self.hr_w * self.c;
         entry.hr.data[dst0..dst0 + band.hr.data.len()]
@@ -403,6 +435,32 @@ mod tests {
         let stats = out[0].1.stats.as_ref().unwrap();
         assert_eq!(stats.compute_cycles, 140);
         assert_eq!(stats.tiles, 2);
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused_and_rezeroed() {
+        let t0 = Instant::now();
+        let mut asm = Reassembler::new(4, 2, 1, 1);
+        let mk = |f, b, ms| band(t0, f, b, 2, 2, 2, 1, ms, None);
+        assert!(asm.push(mk(0, 0, (0, 1, 2))).is_empty());
+        let out = asm.push(mk(0, 1, (0, 1, 3)));
+        assert_eq!(out.len(), 1);
+        let (hr, _) = out.into_iter().next().unwrap();
+        let ptr = hr.data.as_ptr();
+        asm.recycle(hr);
+        // the next frame reuses the recycled storage...
+        assert!(asm.push(mk(1, 1, (4, 5, 6))).is_empty());
+        let out = asm.push(mk(1, 0, (4, 5, 7)));
+        assert_eq!(out.len(), 1);
+        let (hr1, rec1) = out.into_iter().next().unwrap();
+        assert_eq!(rec1.index, 1);
+        assert_eq!(hr1.data.as_ptr(), ptr);
+        // ...and carries only frame 1's pixels (10*1 + band)
+        for b in 0..2usize {
+            for y in (b * 2)..((b + 1) * 2) {
+                assert_eq!(hr1.get(y, 0, 0), 10 + b as u8);
+            }
+        }
     }
 
     #[test]

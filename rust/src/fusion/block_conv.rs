@@ -7,8 +7,11 @@
 //! effect `benches/fig1_boundary.rs` quantifies.
 
 use crate::config::{AcceleratorConfig, FusionKind};
-use crate::model::{QuantModel, Tensor};
-use crate::reference::{self, add_anchor_and_shuffle};
+use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};
+use crate::reference::{
+    add_anchor_and_shuffle_into, conv3x3_final_prepared,
+    conv3x3_relu_prepared,
+};
 use crate::sim::engine::{layer_cycles, EngineGeometry};
 use crate::sim::RunStats;
 
@@ -90,13 +93,16 @@ impl FusionScheduler for BlockConvScheduler {
         qm: &QuantModel,
         cfg: &AcceleratorConfig,
     ) -> FrameResult {
+        // prepared once per frame call; every tile shares it
+        let pm = PreparedModel::new(qm);
+        let mut scratch = Scratch::new();
         let mut stats = RunStats::default();
         base_frame_traffic(frame, qm, &mut stats);
         let geo = EngineGeometry {
             pe_blocks: cfg.pe_blocks,
             macs_per_cycle: cfg.total_macs(),
         };
-        let scale = qm.scale;
+        let scale = pm.scale;
         let mut hr: Tensor<u8> =
             Tensor::new(frame.h * scale, frame.w * scale, frame.c);
         let mut peak_ping = 0u64;
@@ -109,7 +115,7 @@ impl FusionScheduler for BlockConvScheduler {
                 let tw = self.tile_cols.min(frame.w - tx);
                 stats.tiles += 1;
                 // the tile *is* the image: zero-padded SAME convs
-                let mut tile: Tensor<u8> = Tensor::new(th, tw, frame.c);
+                let mut tile = scratch.take_u8(th, tw, frame.c);
                 for y in 0..th {
                     for x in 0..tw {
                         for c in 0..frame.c {
@@ -117,7 +123,7 @@ impl FusionScheduler for BlockConvScheduler {
                         }
                     }
                 }
-                for layer in &qm.layers {
+                for layer in &pm.layers {
                     let cost =
                         layer_cycles(th, tw, layer.cin, layer.cout, &geo);
                     stats.compute_cycles +=
@@ -129,27 +135,42 @@ impl FusionScheduler for BlockConvScheduler {
                         (th * tw * (layer.cin + layer.cout)) as u64,
                     );
                 }
-                let mut h = tile.clone();
-                for layer in &qm.layers[..qm.n_layers() - 1] {
-                    h = reference::conv3x3_relu(&h, layer);
-                }
-                let pre = reference::conv3x3_final(
-                    &h,
-                    qm.layers.last().unwrap(),
-                );
-                let hr_tile = add_anchor_and_shuffle(&pre, &tile, scale);
-                for y in 0..hr_tile.h {
-                    for x in 0..hr_tile.w {
-                        for c in 0..frame.c {
-                            hr.set(
-                                ty * scale + y,
-                                tx * scale + x,
-                                c,
-                                hr_tile.get(y, x, c),
-                            );
-                        }
+                let mut h: Option<Tensor<u8>> = None;
+                for layer in &pm.layers[..pm.n_layers() - 1] {
+                    let next = {
+                        let input = h.as_ref().unwrap_or(&tile);
+                        conv3x3_relu_prepared(input, layer, &mut scratch)
+                    };
+                    if let Some(old) = h.replace(next) {
+                        scratch.recycle_u8(old);
                     }
                 }
+                let pre = {
+                    let input = h.as_ref().unwrap_or(&tile);
+                    conv3x3_final_prepared(
+                        input,
+                        pm.layers.last().unwrap(),
+                        &mut scratch,
+                    )
+                };
+                if let Some(old) = h.take() {
+                    scratch.recycle_u8(old);
+                }
+                let mut hr_tile =
+                    scratch.take_u8(th * scale, tw * scale, frame.c);
+                add_anchor_and_shuffle_into(&pre, &tile, scale, &mut hr_tile);
+                scratch.recycle_i32(pre);
+                // blit HR tile rows into the frame (contiguous runs)
+                let row_bytes = hr_tile.w * frame.c;
+                for y in 0..hr_tile.h {
+                    let src = y * row_bytes;
+                    let dst = hr.idx(ty * scale + y, tx * scale, 0);
+                    hr.data[dst..dst + row_bytes].copy_from_slice(
+                        &hr_tile.data[src..src + row_bytes],
+                    );
+                }
+                scratch.recycle_u8(hr_tile);
+                scratch.recycle_u8(tile);
                 tx += self.tile_cols;
             }
             ty += self.tile_rows;

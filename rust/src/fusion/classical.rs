@@ -10,8 +10,11 @@
 //! classical fusion cannot use an 8-wide tile.
 
 use crate::config::{AcceleratorConfig, FusionKind};
-use crate::model::{QuantModel, Tensor};
-use crate::reference::{add_anchor_and_shuffle, conv_patch_final, conv_patch_relu};
+use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};
+use crate::reference::{
+    add_anchor_and_shuffle_into, conv_patch_final_prepared,
+    conv_patch_relu_prepared,
+};
 use crate::sim::engine::{layer_cycles, EngineGeometry};
 use crate::sim::RunStats;
 
@@ -41,15 +44,18 @@ impl FusionScheduler for ClassicalScheduler {
         qm: &QuantModel,
         cfg: &AcceleratorConfig,
     ) -> FrameResult {
+        // prepared once per frame call; every tile shares it
+        let pm = PreparedModel::new(qm);
+        let mut scratch = Scratch::new();
         let mut stats = RunStats::default();
         base_frame_traffic(frame, qm, &mut stats);
         let geo = EngineGeometry {
             pe_blocks: cfg.pe_blocks,
             macs_per_cycle: cfg.total_macs(),
         };
-        let n = qm.n_layers();
+        let n = pm.n_layers();
         let halo = n; // one pixel per fused layer per side
-        let scale = qm.scale;
+        let scale = pm.scale;
         let mut hr: Tensor<u8> =
             Tensor::new(frame.h * scale, frame.w * scale, frame.c);
         let mut peak_ping: u64 = 0;
@@ -65,7 +71,7 @@ impl FusionScheduler for ClassicalScheduler {
                 // --- assemble the halo'd input tile (zero outside) ---
                 let ph = th + 2 * halo;
                 let pw = tw + 2 * halo;
-                let mut cur: Tensor<u8> = Tensor::new(ph, pw, frame.c);
+                let mut cur = scratch.take_u8(ph, pw, frame.c);
                 let mut halo_extra_bytes = 0u64;
                 for y in 0..ph {
                     for x in 0..pw {
@@ -105,7 +111,7 @@ impl FusionScheduler for ClassicalScheduler {
                 let mut region_y = ty as isize - halo as isize + 1;
                 let mut region_x = tx as isize - halo as isize + 1;
                 let mut pre: Option<Tensor<i32>> = None;
-                for (i, layer) in qm.layers.iter().enumerate() {
+                for (i, layer) in pm.layers.iter().enumerate() {
                     let orows = cur.h - 2;
                     let ocols = cur.w - 2;
                     let cost = layer_cycles(
@@ -126,7 +132,8 @@ impl FusionScheduler for ClassicalScheduler {
                             as u64,
                     );
                     if i < n - 1 {
-                        let mut next = conv_patch_relu(&cur, layer);
+                        let mut next =
+                            conv_patch_relu_prepared(&cur, layer, &mut scratch);
                         zero_outside(
                             &mut next,
                             region_y,
@@ -134,19 +141,24 @@ impl FusionScheduler for ClassicalScheduler {
                             frame.h,
                             frame.w,
                         );
-                        cur = next;
+                        scratch.recycle_u8(std::mem::replace(&mut cur, next));
                         region_y += 1;
                         region_x += 1;
                     } else {
-                        pre = Some(conv_patch_final(&cur, layer));
+                        pre = Some(conv_patch_final_prepared(
+                            &cur,
+                            layer,
+                            &mut scratch,
+                        ));
                     }
                 }
+                scratch.recycle_u8(cur);
                 let pre = pre.unwrap();
                 // core region of the final map = [halo-?]: after n
                 // layers the map shrank by n per side relative to the
                 // halo'd input; its top-left is at image (ty, tx).
                 debug_assert_eq!(pre.h, th + 2 * halo - 2 * n + 2 * 0);
-                let mut core: Tensor<i32> = Tensor::new(th, tw, pre.c);
+                let mut core = scratch.take_i32(th, tw, pre.c);
                 for y in 0..th {
                     for x in 0..tw {
                         for c in 0..pre.c {
@@ -154,7 +166,8 @@ impl FusionScheduler for ClassicalScheduler {
                         }
                     }
                 }
-                let mut anchor: Tensor<u8> = Tensor::new(th, tw, frame.c);
+                scratch.recycle_i32(pre);
+                let mut anchor = scratch.take_u8(th, tw, frame.c);
                 for y in 0..th {
                     for x in 0..tw {
                         for c in 0..frame.c {
@@ -162,19 +175,20 @@ impl FusionScheduler for ClassicalScheduler {
                         }
                     }
                 }
-                let hr_tile = add_anchor_and_shuffle(&core, &anchor, scale);
+                let mut hr_tile =
+                    scratch.take_u8(th * scale, tw * scale, frame.c);
+                add_anchor_and_shuffle_into(&core, &anchor, scale, &mut hr_tile);
+                let row_bytes = hr_tile.w * frame.c;
                 for y in 0..hr_tile.h {
-                    for x in 0..hr_tile.w {
-                        for c in 0..frame.c {
-                            hr.set(
-                                ty * scale + y,
-                                tx * scale + x,
-                                c,
-                                hr_tile.get(y, x, c),
-                            );
-                        }
-                    }
+                    let src = y * row_bytes;
+                    let dst = hr.idx(ty * scale + y, tx * scale, 0);
+                    hr.data[dst..dst + row_bytes].copy_from_slice(
+                        &hr_tile.data[src..src + row_bytes],
+                    );
                 }
+                scratch.recycle_i32(core);
+                scratch.recycle_u8(anchor);
+                scratch.recycle_u8(hr_tile);
                 tx += self.tile_cols;
             }
             ty += self.tile_rows;

@@ -6,8 +6,10 @@
 //! versus 0.41 GB/s for tilted fusion.
 
 use crate::config::{AcceleratorConfig, FusionKind};
-use crate::model::{QuantModel, Tensor};
-use crate::reference::{self, conv3x3_final, conv3x3_relu};
+use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};
+use crate::reference::{
+    self, conv3x3_final_prepared, conv3x3_relu_prepared,
+};
 use crate::sim::engine::{layer_cycles, EngineGeometry};
 use crate::sim::RunStats;
 
@@ -24,6 +26,9 @@ impl FusionScheduler for LayerByLayerScheduler {
         qm: &QuantModel,
         cfg: &AcceleratorConfig,
     ) -> FrameResult {
+        // prepared once per frame call; all layers share it
+        let pm = PreparedModel::new(qm);
+        let mut scratch = Scratch::new();
         let mut stats = RunStats::default();
         base_frame_traffic(frame, qm, &mut stats);
         let geo = EngineGeometry {
@@ -31,9 +36,9 @@ impl FusionScheduler for LayerByLayerScheduler {
             macs_per_cycle: cfg.total_macs(),
         };
 
-        let n = qm.n_layers();
-        let mut h = frame.clone();
-        for (i, layer) in qm.layers.iter().enumerate() {
+        let n = pm.n_layers();
+        let mut h: Option<Tensor<u8>> = None;
+        for (i, layer) in pm.layers.iter().enumerate() {
             let cost = layer_cycles(
                 frame.h,
                 frame.w,
@@ -45,18 +50,31 @@ impl FusionScheduler for LayerByLayerScheduler {
             stats.mac_ops += cost.mac_ops;
             stats.mac_slots += cost.mac_slots;
             if i < n - 1 {
-                h = conv3x3_relu(&h, layer);
+                let next = {
+                    let input = h.as_ref().unwrap_or(frame);
+                    conv3x3_relu_prepared(input, layer, &mut scratch)
+                };
                 // intermediate map: written to DRAM, read back next layer
-                let bytes = h.byte_len() as u64;
+                let bytes = next.byte_len() as u64;
                 stats.dram_write_bytes += bytes;
                 stats.dram_read_bytes += bytes;
+                if let Some(old) = h.replace(next) {
+                    scratch.recycle_u8(old);
+                }
             }
         }
-        let pre = conv3x3_final(&h, qm.layers.last().unwrap());
-        let hr = reference::add_anchor_and_shuffle(&pre, frame, qm.scale);
+        let pre = {
+            let input = h.as_ref().unwrap_or(frame);
+            conv3x3_final_prepared(
+                input,
+                pm.layers.last().unwrap(),
+                &mut scratch,
+            )
+        };
+        let hr = reference::add_anchor_and_shuffle(&pre, frame, pm.scale);
         // line buffers only: 3 input rows + weights resident
         stats.peak_pingpong_bytes =
-            (3 * frame.w * qm.max_channels()) as u64;
+            (3 * frame.w * pm.max_channels()) as u64;
         stats.tiles = 1;
         FrameResult { hr, stats }
     }

@@ -68,10 +68,25 @@ pub(crate) fn base_frame_traffic(
     qm: &QuantModel,
     stats: &mut RunStats,
 ) {
+    base_frame_traffic_parts(
+        frame,
+        qm.weight_bytes() + qm.bias_bytes(),
+        qm.scale,
+        stats,
+    );
+}
+
+/// [`base_frame_traffic`] from pre-computed model byte counts — the
+/// prepared execution paths carry these in
+/// [`crate::model::PreparedModel`] instead of a `QuantModel`.
+pub(crate) fn base_frame_traffic_parts(
+    frame: &Tensor<u8>,
+    model_bytes: usize,
+    scale: usize,
+    stats: &mut RunStats,
+) {
     stats.dram_read_bytes += frame.byte_len() as u64;
-    stats.dram_read_bytes +=
-        (qm.weight_bytes() + qm.bias_bytes()) as u64;
-    let scale = qm.scale;
+    stats.dram_read_bytes += model_bytes as u64;
     stats.dram_write_bytes +=
         (frame.h * scale * frame.w * scale * frame.c) as u64;
 }

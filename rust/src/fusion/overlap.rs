@@ -91,15 +91,24 @@ impl OverlapQueue {
 
     /// Read the front payload, asserting it carries `expect`.
     pub fn read_front(&self, expect: EntryLabel) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.read_front_into(expect, &mut out);
+        out
+    }
+
+    /// [`OverlapQueue::read_front`] into a reusable buffer (cleared
+    /// first) — the zero-allocation variant of the tilted band loop.
+    pub fn read_front_into(&self, expect: EntryLabel, out: &mut Vec<u8>) {
         let (label, len) = self.labels[self.front]
             .unwrap_or_else(|| panic!("overlap queue empty reading {expect:?}"));
         assert_eq!(
             label, expect,
             "overlap queue out of order: front {label:?}, expected {expect:?}"
         );
-        self.sram
-            .read(self.front * self.entry_bytes, len)
-            .to_vec()
+        out.clear();
+        out.extend_from_slice(
+            self.sram.read(self.front * self.entry_bytes, len),
+        );
     }
 
     /// Pop the front entry (it must carry `expect`).

@@ -20,17 +20,28 @@
 //! The band output is bit-identical to monolithic band inference
 //! (`reference::forward_int` on the band) — asserted by
 //! `rust/tests/fusion_exactness.rs`.
+//!
+//! §Perf: [`TiltedScheduler::run_band_prepared`] is the steady-state
+//! serving path — weights arrive packed in a [`PreparedModel`] (once
+//! per model/worker, not per call) and all tile-loop working memory
+//! (patches, column/payload staging, engine outputs) is borrowed from
+//! a per-worker [`Scratch`], so the band loop performs **no heap
+//! allocation per tile**.  The unprepared [`TiltedScheduler::run_band`]
+//! wrapper packs on the fly for tests and one-shot callers.
 
 use crate::config::{AcceleratorConfig, FidelityKind, FusionKind};
-use crate::model::{QuantModel, Tensor};
-use crate::reference::add_anchor_and_shuffle;
+use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};
+use crate::reference::add_anchor_and_shuffle_into;
 use crate::sim::engine::{
     AnalyticEngine, CycleExactEngine, LayerOut, TileEngine,
 };
 use crate::sim::{RunStats, Sram};
 
 use super::overlap::{EntryLabel, OverlapQueue};
-use super::{band_of, band_ranges, base_frame_traffic, FrameResult, FusionScheduler};
+use super::{
+    band_of, band_ranges, base_frame_traffic_parts, FrameResult,
+    FusionScheduler,
+};
 
 /// The paper's scheduler.
 #[derive(Clone, Copy, Debug)]
@@ -60,21 +71,36 @@ impl TiltedScheduler {
         }
     }
 
-    /// Run one band; returns the HR band and its stats.
+    /// Run one band; returns the HR band and its stats.  One-shot
+    /// wrapper: packs the model and allocates scratch per call.
     pub fn run_band(
         &self,
         band: &Tensor<u8>,
         qm: &QuantModel,
         cfg: &AcceleratorConfig,
     ) -> (Tensor<u8>, RunStats) {
+        let pm = PreparedModel::new(qm);
+        let mut scratch = Scratch::new();
+        self.run_band_prepared(band, &pm, cfg, &mut scratch)
+    }
+
+    /// Run one band over prepared weights and a reusable scratch arena —
+    /// the steady-state serving path (§Perf).
+    pub fn run_band_prepared(
+        &self,
+        band: &Tensor<u8>,
+        pm: &PreparedModel,
+        cfg: &AcceleratorConfig,
+        scratch: &mut Scratch,
+    ) -> (Tensor<u8>, RunStats) {
         let engine = self.engine();
         let rows = band.h;
         let width = band.w;
         let c_tile = cfg.tile_cols.max(2); // sliding-2 window needs C >= 2
-        let n_layers = qm.n_layers();
-        let max_ch = qm.max_channels();
-        let ch0 = qm.layers[0].cin;
-        let scale = qm.scale;
+        let n_layers = pm.n_layers();
+        let max_ch = pm.max_channels();
+        let ch0 = pm.in_channels();
+        let scale = pm.scale;
 
         // --- on-chip memories, provisioned per eqs. (1)-(3) -----------
         let col_stride = cfg.tile_rows * max_ch; // bytes per buffered column
@@ -90,17 +116,17 @@ impl TiltedScheduler {
         let mut residual =
             Sram::new("residual", ch0 * cfg.tile_rows * res_cols);
 
-        // functional bookkeeping of what each queue entry contains
-        // (payload bytes + image-space column indices), keyed by
-        // (tile, map); the authoritative bytes live in the queue SRAM
-        // and are read back through it
-        let mut pending: std::collections::HashMap<
-            (usize, usize),
-            (usize, usize),
-        > = std::collections::HashMap::new();
+        // Functional bookkeeping of what each queue entry contains
+        // (image-space column indices); the authoritative bytes live in
+        // the queue SRAM and are read back through it.  The schedule
+        // only ever holds entries of tiles t-1 and t, so two per-map
+        // slots replace a hash map: `prev_cols[k]` = the two columns of
+        // map k pushed during tile t-1, `cur_cols[k]` during tile t.
+        let mut prev_cols: Vec<Option<(usize, usize)>> =
+            vec![None; n_layers + 1];
+        let mut cur_cols: Vec<Option<(usize, usize)>> =
+            vec![None; n_layers + 1];
 
-        // region of map k-1 currently resident in the ping buffer
-        // (cur_lo, width) per tile step; index of buffer holding it
         let mut stats = RunStats::default();
         let mut hr_band: Tensor<u8> =
             Tensor::new(rows * scale, width * scale, ch0);
@@ -129,39 +155,44 @@ impl TiltedScheduler {
             };
             if let Some((lo, hi)) = in_region {
                 for c in lo..=hi {
-                    let col = band.column(c);
-                    ping[0].write((c - lo) * col_stride, &col);
+                    band.column_into(c, &mut scratch.colbuf);
+                    ping[0].write((c - lo) * col_stride, &scratch.colbuf);
                     // residual ring keeps the anchor columns
-                    residual
-                        .write((c % res_cols) * ch0 * cfg.tile_rows, &col);
+                    residual.write(
+                        (c % res_cols) * ch0 * cfg.tile_rows,
+                        &scratch.colbuf,
+                    );
                 }
                 // push the sliding last-2 window of the input map
-                let payload = two_col_payload(
-                    &shift_map(band, 0),
+                push_two_cols(
+                    band,
+                    0,
                     hi.saturating_sub(1),
                     hi,
+                    &mut scratch.payload,
                 );
-                queue.push_back(EntryLabel { tile: t, map: 0 }, &payload);
-                pending.insert((t, 0), (hi.saturating_sub(1), hi));
+                queue.push_back(
+                    EntryLabel { tile: t, map: 0 },
+                    &scratch.payload,
+                );
+                cur_cols[0] = Some((hi.saturating_sub(1), hi));
                 stats.tiles += 1;
             }
 
             // -- 2. run the L convs of this tile step, tilted ----------
             // prev-tile region of map k-1 while it was current
             for k in 1..=n_layers {
-                let layer = &qm.layers[k - 1];
+                let layer = &pm.layers[k - 1];
                 // consume the overlap entry of map k-1 from tile t-1
-                let prev_payload: Option<(Vec<u8>, (usize, usize))> = if t
-                    >= 1
-                {
-                    pending.remove(&(t - 1, k - 1)).map(|cols| {
+                let overlap_cols: Option<(usize, usize)> = if t >= 1 {
+                    prev_cols[k - 1].take().map(|cols| {
                         let label = EntryLabel {
                             tile: t - 1,
                             map: k - 1,
                         };
-                        let bytes = queue.read_front(label);
+                        queue.read_front_into(label, &mut scratch.overlap);
                         queue.pop_front(label);
-                        (bytes, cols)
+                        cols
                     })
                 } else {
                     None
@@ -173,8 +204,7 @@ impl TiltedScheduler {
                 let cur = region(t, k - 1); // map k-1 region this tile
                 let cin = layer.cin;
                 let pw = hi - lo + 3;
-                let mut patch: Tensor<u8> =
-                    Tensor::new(rows + 2, pw, cin);
+                let mut patch = scratch.take_u8(rows + 2, pw, cin);
                 for (px, c_img) in
                     (lo as isize - 1..=hi as isize + 1).enumerate()
                 {
@@ -182,26 +212,17 @@ impl TiltedScheduler {
                         continue; // image border: stays zero
                     }
                     let c_img = c_img as usize;
-                    let col: Vec<u8> = if let Some((cl, chi)) = cur {
-                        if c_img >= cl && c_img <= chi {
-                            ping[cur_buf]
-                                .read(
-                                    (c_img - cl) * col_stride,
-                                    rows * cin,
-                                )
-                                .to_vec()
-                        } else {
-                            read_overlap_col(
-                                &prev_payload,
-                                c_img,
-                                rows * cin,
-                                t,
-                                k,
-                            )
-                        }
+                    let from_cur = cur
+                        .map(|(cl, chi)| c_img >= cl && c_img <= chi)
+                        .unwrap_or(false);
+                    let col: &[u8] = if from_cur {
+                        let (cl, _) = cur.unwrap();
+                        ping[cur_buf]
+                            .read((c_img - cl) * col_stride, rows * cin)
                     } else {
-                        read_overlap_col(
-                            &prev_payload,
+                        overlap_col(
+                            overlap_cols,
+                            &scratch.overlap,
                             c_img,
                             rows * cin,
                             t,
@@ -210,18 +231,14 @@ impl TiltedScheduler {
                     };
                     // place into the patch (vertical zero halo = seam)
                     for y in 0..rows {
-                        for ch in 0..cin {
-                            patch.set(
-                                y + 1,
-                                px,
-                                ch,
-                                col[y * cin + ch],
-                            );
-                        }
+                        let dst = patch.idx(y + 1, px, 0);
+                        patch.data[dst..dst + cin]
+                            .copy_from_slice(&col[y * cin..(y + 1) * cin]);
                     }
                 }
 
-                let (out, cost) = engine.run_layer(&patch, layer);
+                let (out, cost) = engine.run_layer(&patch, layer, scratch);
+                scratch.recycle_u8(patch);
                 stats.compute_cycles +=
                     cost.cycles + cfg.buffer_swap_cycles;
                 stats.mac_ops += cost.mac_ops;
@@ -233,9 +250,11 @@ impl TiltedScheduler {
                         // store region into the other ping buffer
                         let dst = 1 - cur_buf;
                         for c in lo..=hi {
-                            let col = map_k.column(c - lo);
-                            ping[dst]
-                                .write((c - lo) * col_stride, &col);
+                            map_k.column_into(c - lo, &mut scratch.colbuf);
+                            ping[dst].write(
+                                (c - lo) * col_stride,
+                                &scratch.colbuf,
+                            );
                         }
                         // push the sliding last-2 window of map k
                         if k < n_layers {
@@ -245,21 +264,27 @@ impl TiltedScheduler {
                                 (hi, hi) // single col: duplicate; the
                                          // left one comes from prev win
                             };
-                            let payload =
-                                two_col_payload(&shift_map(&map_k, lo), c1, c2);
+                            push_two_cols(
+                                &map_k,
+                                lo,
+                                c1,
+                                c2,
+                                &mut scratch.payload,
+                            );
                             queue.push_back(
                                 EntryLabel { tile: t, map: k },
-                                &payload,
+                                &scratch.payload,
                             );
-                            pending.insert((t, k), (c1, c2));
+                            cur_cols[k] = Some((c1, c2));
                         }
+                        scratch.recycle_u8(map_k);
                         cur_buf = dst;
                     }
                     LayerOut::I32(pre) => {
                         // final conv: residual add + shuffle, column-wise
                         debug_assert_eq!(k, n_layers);
-                        let mut anchor: Tensor<u8> =
-                            Tensor::new(rows, hi - lo + 1, ch0);
+                        let tile_w = hi - lo + 1;
+                        let mut anchor = scratch.take_u8(rows, tile_w, ch0);
                         for c in lo..=hi {
                             let bytes = residual.read(
                                 (c % res_cols) * ch0 * cfg.tile_rows,
@@ -267,23 +292,35 @@ impl TiltedScheduler {
                             );
                             anchor.set_column(c - lo, bytes);
                         }
-                        let hr_tile =
-                            add_anchor_and_shuffle(&pre, &anchor, scale);
+                        let mut hr_tile = scratch.take_u8(
+                            rows * scale,
+                            tile_w * scale,
+                            ch0,
+                        );
+                        add_anchor_and_shuffle_into(
+                            &pre, &anchor, scale, &mut hr_tile,
+                        );
+                        // blit HR tile rows into the band (contiguous)
+                        let row_bytes = hr_tile.w * ch0;
                         for y in 0..hr_tile.h {
-                            for x in 0..hr_tile.w {
-                                for ch in 0..ch0 {
-                                    hr_band.set(
-                                        y,
-                                        lo * scale + x,
-                                        ch,
-                                        hr_tile.get(y, x, ch),
-                                    );
-                                }
-                            }
+                            let src = y * row_bytes;
+                            let dst = hr_band.idx(y, lo * scale, 0);
+                            hr_band.data[dst..dst + row_bytes]
+                                .copy_from_slice(
+                                    &hr_tile.data[src..src + row_bytes],
+                                );
                         }
+                        scratch.recycle_u8(anchor);
+                        scratch.recycle_u8(hr_tile);
+                        scratch.recycle_i32(pre);
                     }
                 }
             }
+
+            // entering the next tile step: this tile's windows become
+            // the previous tile's
+            std::mem::swap(&mut prev_cols, &mut cur_cols);
+            cur_cols.fill(None);
         }
 
         stats.sram_reads = ping[0].reads()
@@ -305,54 +342,75 @@ impl TiltedScheduler {
         );
         (hr_band, stats)
     }
+
+    /// Frame-level prepared path: bands share the packed weights and
+    /// the scratch arena.
+    pub fn run_frame_prepared(
+        &self,
+        frame: &Tensor<u8>,
+        pm: &PreparedModel,
+        cfg: &AcceleratorConfig,
+        scratch: &mut Scratch,
+    ) -> FrameResult {
+        let mut stats = RunStats::default();
+        base_frame_traffic_parts(
+            frame,
+            pm.weight_bytes + pm.bias_bytes,
+            pm.scale,
+            &mut stats,
+        );
+        let scale = pm.scale;
+        let mut hr: Tensor<u8> =
+            Tensor::new(frame.h * scale, frame.w * scale, frame.c);
+        for (y0, y1) in band_ranges(frame.h, cfg.tile_rows) {
+            let band = band_of(frame, y0, y1);
+            let (hr_band, band_stats) =
+                self.run_band_prepared(&band, pm, cfg, scratch);
+            stats.merge(&band_stats);
+            let dst0 = y0 * scale * hr.w * hr.c;
+            hr.data[dst0..dst0 + hr_band.data.len()]
+                .copy_from_slice(&hr_band.data);
+        }
+        FrameResult { hr, stats }
+    }
 }
 
-/// Payload = the two columns `c1`, `c2` of a map tensor indexed from 0.
-fn two_col_payload(map: &MapView, c1: usize, c2: usize) -> Vec<u8> {
-    let mut p = map.column(c1);
-    p.extend(map.column(c2));
-    p
-}
-
-/// Minimal column view abstraction so both band input (full width) and
-/// freshly computed region maps (offset by `lo`) can feed the payload
-/// builder with *image-space* column indices.
-struct MapViewOwned {
-    t: Tensor<u8>,
+/// Append the two columns `c1`, `c2` (image-space, offset by `offset`
+/// into `t`) into the reusable payload buffer.
+fn push_two_cols(
+    t: &Tensor<u8>,
     offset: usize,
-}
-
-type MapView = MapViewOwned;
-
-impl MapViewOwned {
-    fn column(&self, c_img: usize) -> Vec<u8> {
-        self.t.column(c_img - self.offset)
+    c1: usize,
+    c2: usize,
+    buf: &mut Vec<u8>,
+) {
+    buf.clear();
+    for &c in &[c1, c2] {
+        let x = c - offset;
+        for y in 0..t.h {
+            let base = t.idx(y, x, 0);
+            buf.extend_from_slice(&t.data[base..base + t.c]);
+        }
     }
 }
 
-fn shift_map(t: &Tensor<u8>, offset: usize) -> MapViewOwned {
-    MapViewOwned {
-        t: t.clone(),
-        offset,
-    }
-}
-
-/// Read one overlap-sourced column out of the popped payload.
-fn read_overlap_col(
-    payload: &Option<(Vec<u8>, (usize, usize))>,
+/// Borrow one overlap-sourced column out of the popped payload bytes.
+fn overlap_col<'a>(
+    cols: Option<(usize, usize)>,
+    bytes: &'a [u8],
     c_img: usize,
     col_bytes: usize,
     t: usize,
     k: usize,
-) -> Vec<u8> {
-    let (bytes, (c1, c2)) = payload.as_ref().unwrap_or_else(|| {
+) -> &'a [u8] {
+    let (c1, c2) = cols.unwrap_or_else(|| {
         panic!("tilt violated: tile {t} conv {k} needs col {c_img} with no overlap entry")
     });
     let half = bytes.len() / 2;
-    if c_img == *c1 {
-        bytes[..half][..col_bytes].to_vec()
-    } else if c_img == *c2 {
-        bytes[half..][..col_bytes].to_vec()
+    if c_img == c1 {
+        &bytes[..half][..col_bytes]
+    } else if c_img == c2 {
+        &bytes[half..][..col_bytes]
     } else {
         panic!(
             "tilt violated: tile {t} conv {k} needs col {c_img}, overlap has ({c1},{c2})"
@@ -367,20 +425,9 @@ impl FusionScheduler for TiltedScheduler {
         qm: &QuantModel,
         cfg: &AcceleratorConfig,
     ) -> FrameResult {
-        let mut stats = RunStats::default();
-        base_frame_traffic(frame, qm, &mut stats);
-        let scale = qm.scale;
-        let mut hr: Tensor<u8> =
-            Tensor::new(frame.h * scale, frame.w * scale, frame.c);
-        for (y0, y1) in band_ranges(frame.h, cfg.tile_rows) {
-            let band = band_of(frame, y0, y1);
-            let (hr_band, band_stats) = self.run_band(&band, qm, cfg);
-            stats.merge(&band_stats);
-            let dst0 = y0 * scale * hr.w * hr.c;
-            hr.data[dst0..dst0 + hr_band.data.len()]
-                .copy_from_slice(&hr_band.data);
-        }
-        FrameResult { hr, stats }
+        let pm = PreparedModel::new(qm);
+        let mut scratch = Scratch::new();
+        self.run_frame_prepared(frame, &pm, cfg, &mut scratch)
     }
 
     fn kind(&self) -> FusionKind {
@@ -430,6 +477,25 @@ mod tests {
         let (hr, _) = TiltedScheduler::default().run_band(&band, &qm, &cfg);
         let want = reference::forward_int(&band, &qm);
         assert_eq!(hr.data, want.data);
+    }
+
+    #[test]
+    fn prepared_band_reuses_scratch_across_bands() {
+        // one PreparedModel + Scratch serving several bands must match
+        // the one-shot wrapper bit for bit
+        let qm = QuantModel::test_model(3, 3, 5, 3, 33);
+        let cfg = small_cfg(6, 4);
+        let pm = PreparedModel::new(&qm);
+        let mut scratch = Scratch::new();
+        let sched = TiltedScheduler::default();
+        for seed in 0..3u64 {
+            let band = rand_frame(6, 17, 3, 40 + seed);
+            let (a, sa) =
+                sched.run_band_prepared(&band, &pm, &cfg, &mut scratch);
+            let (b, sb) = sched.run_band(&band, &qm, &cfg);
+            assert_eq!(a.data, b.data, "band {seed}");
+            assert_eq!(sa, sb, "band {seed} stats");
+        }
     }
 
     #[test]

@@ -2,9 +2,11 @@
 //! it — tensor container, quantized layer/model types, the `.apbnw`
 //! loader shared with Python, and deterministic test-model builders.
 
+pub mod prepared;
 pub mod quant;
 pub mod weights;
 
+pub use prepared::{PreparedLayer, PreparedModel, Scratch};
 pub use quant::{QuantLayer, QuantModel};
 pub use weights::load_apbnw;
 
@@ -53,11 +55,19 @@ impl<T: Copy + Default> Tensor<T> {
     /// the unit of transfer into the overlap buffer.
     pub fn column(&self, x: usize) -> Vec<T> {
         let mut out = Vec::with_capacity(self.h * self.c);
+        self.column_into(x, &mut out);
+        out
+    }
+
+    /// [`Tensor::column`] into a reusable buffer (cleared first) — the
+    /// zero-allocation variant the tilted band loop uses.
+    pub fn column_into(&self, x: usize, out: &mut Vec<T>) {
+        out.clear();
+        out.reserve(self.h * self.c);
         for y in 0..self.h {
             let base = self.idx(y, x, 0);
             out.extend_from_slice(&self.data[base..base + self.c]);
         }
-        out
     }
 
     /// Write a flat column (as produced by [`Tensor::column`]) at `x`.

@@ -1,0 +1,293 @@
+//! Prepared-weight execution state (§Perf): pack each [`QuantLayer`]'s
+//! weights into the kernel-friendly layouts **once per model**, and own
+//! the reusable scratch buffers of every conv hot path.
+//!
+//! Before this module existed, `reference::conv` rebuilt the AVX2
+//! pair-interleaved weight layout and reallocated its accumulator strip
+//! on *every call*, so the repack cost scaled
+//! `O(frames x bands x tiles x layers)`.  Now:
+//!
+//! * [`PreparedLayer`] / [`PreparedModel`] hold the packed layouts
+//!   (pair-interleaved `u32` lanes for `vpmaddwd`, zero-padded `i32`
+//!   rows for the scalar kernel, and the raw HWIO `i8` view the
+//!   cycle-exact engine reads) — built once, shared by every frame.
+//! * [`Scratch`] is a per-worker arena: accumulator strips, padded
+//!   pixel staging, the cycle-exact engine's partial-sum registers and
+//!   accumulator pipeline, column/payload staging for the tilted
+//!   scheduler, and a recycling pool of tensor buffers.  In steady
+//!   state the tilted band loop performs **no heap allocation**: every
+//!   `vec!` the old per-tile path created now lives here.
+//!
+//! Lifetime contract: a `PreparedModel` is immutable and cheap to share
+//! (`&PreparedModel` across frames); a `Scratch` is mutable state owned
+//! by exactly one worker thread and passed `&mut` down the call stack.
+
+use crate::model::{QuantLayer, QuantModel, Tensor};
+use crate::sim::accum::Accumulator;
+use crate::sim::pe::SEG;
+use crate::util::fixed::FixedMul;
+
+/// One conv layer with its weights packed for every kernel variant.
+#[derive(Clone, Debug)]
+pub struct PreparedLayer {
+    pub cin: usize,
+    pub cout: usize,
+    /// `cin` padded to even — the AVX2 kernel consumes channel *pairs*.
+    pub cin_p: usize,
+    /// `cout` padded to a multiple of 8 — one 256-bit lane of i32 accs.
+    pub cout_p: usize,
+    pub relu: bool,
+    /// Fixed-point requant multiplier.
+    pub m: FixedMul,
+    /// int32 bias, length `cout`.
+    pub bias: Vec<i32>,
+    /// Pair-interleaved weights `[tap][ci/2][co_p]`: each u32 lane holds
+    /// `(w[2*ci2][co] as u16) | (w[2*ci2+1][co] as u16) << 16`,
+    /// zero-padded in both ci and co.
+    pub wp: Vec<u32>,
+    /// Widened weights `[tap][ci][co_p]` for the scalar kernel
+    /// (co zero-padded so accumulator rows stay `cout_p` long).
+    pub w32: Vec<i32>,
+    /// Raw int8 weights, HWIO row-major — the cycle-exact engine's view.
+    pub w: Vec<i8>,
+}
+
+impl PreparedLayer {
+    /// Pack one layer. This is the *only* place the repack happens now.
+    pub fn new(layer: &QuantLayer) -> Self {
+        let (cin, cout) = (layer.cin, layer.cout);
+        let cout_p = cout.next_multiple_of(8);
+        let cin_p = cin.next_multiple_of(2);
+        let taps = 9;
+        let mut wp = vec![0u32; taps * (cin_p / 2) * cout_p];
+        let mut w32 = vec![0i32; taps * cin * cout_p];
+        for tap in 0..taps {
+            for ci in 0..cin {
+                for co in 0..cout {
+                    let v = layer.w[(tap * cin + ci) * cout + co];
+                    w32[(tap * cin + ci) * cout_p + co] = v as i32;
+                    let slot = (tap * (cin_p / 2) + ci / 2) * cout_p + co;
+                    wp[slot] |= (v as i16 as u16 as u32) << (16 * (ci % 2));
+                }
+            }
+        }
+        Self {
+            cin,
+            cout,
+            cin_p,
+            cout_p,
+            relu: layer.relu,
+            m: layer.m,
+            bias: layer.bias.clone(),
+            wp,
+            w32,
+            w: layer.w.clone(),
+        }
+    }
+
+    /// HWIO weight accessor (mirrors [`QuantLayer::weight`]).
+    #[inline(always)]
+    pub fn weight(&self, dr: usize, dc: usize, ci: usize, co: usize) -> i8 {
+        self.w[((dr * 3 + dc) * self.cin + ci) * self.cout + co]
+    }
+}
+
+/// A whole model packed once — share `&PreparedModel` across frames
+/// and workers.
+#[derive(Clone, Debug)]
+pub struct PreparedModel {
+    pub layers: Vec<PreparedLayer>,
+    pub scale: usize,
+    /// Total weight bytes of the source model (DRAM accounting).
+    pub weight_bytes: usize,
+    /// Total bias bytes of the source model (DRAM accounting).
+    pub bias_bytes: usize,
+    max_channels: usize,
+}
+
+impl PreparedModel {
+    pub fn new(qm: &QuantModel) -> Self {
+        Self {
+            layers: qm.layers.iter().map(PreparedLayer::new).collect(),
+            scale: qm.scale,
+            weight_bytes: qm.weight_bytes(),
+            bias_bytes: qm.bias_bytes(),
+            max_channels: qm.max_channels(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Channel count of the LR input (layer 0's `cin`).
+    pub fn in_channels(&self) -> usize {
+        self.layers[0].cin
+    }
+
+    pub fn max_channels(&self) -> usize {
+        self.max_channels
+    }
+}
+
+/// Per-worker scratch arena: all reusable buffers of the conv engines
+/// and the tilted scheduler, plus a recycling pool of tensor storage.
+///
+/// Buffers only ever grow; in steady state `take_*`/`recycle_*` and the
+/// named buffers reuse capacity and never touch the allocator.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Row accumulator strip (`w * cout_p`) of the whole-map conv.
+    pub(crate) acc_row: Vec<i32>,
+    /// Per-pixel accumulator (`cout_p`) of the patch conv.
+    pub(crate) acc: Vec<i32>,
+    /// Zero-padded pixel staging (`cin_p`) for odd-`cin` AVX2 rows.
+    pub(crate) px: Vec<u8>,
+    /// Column staging of the tilted scheduler's SRAM transfers.
+    pub(crate) colbuf: Vec<u8>,
+    /// Two-column overlap payload under assembly.
+    pub(crate) payload: Vec<u8>,
+    /// Overlap payload read back from the queue SRAM.
+    pub(crate) overlap: Vec<u8>,
+    /// Cycle-exact engine: per-PE-block partial sums.
+    pub(crate) partials: Vec<[i32; SEG]>,
+    /// Cycle-exact engine: the pipelined accumulator (reset per layer).
+    pub(crate) accum: Accumulator,
+    pool_u8: Vec<Vec<u8>>,
+    pool_i32: Vec<Vec<i32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a zero-filled `(h, w, c)` tensor, reusing pooled storage.
+    pub fn take_u8(&mut self, h: usize, w: usize, c: usize) -> Tensor<u8> {
+        let mut data = self.pool_u8.pop().unwrap_or_default();
+        data.clear();
+        data.resize(h * w * c, 0);
+        Tensor { h, w, c, data }
+    }
+
+    /// Return a tensor's storage to the pool for reuse.
+    pub fn recycle_u8(&mut self, t: Tensor<u8>) {
+        self.pool_u8.push(t.data);
+    }
+
+    /// Take a zero-filled `(h, w, c)` i32 tensor from the pool.
+    pub fn take_i32(&mut self, h: usize, w: usize, c: usize) -> Tensor<i32> {
+        let mut data = self.pool_i32.pop().unwrap_or_default();
+        data.clear();
+        data.resize(h * w * c, 0);
+        Tensor { h, w, c, data }
+    }
+
+    pub fn recycle_i32(&mut self, t: Tensor<i32>) {
+        self.pool_i32.push(t.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packing_matches_quant_layer() {
+        let qm = QuantModel::test_model(2, 3, 5, 3, 9);
+        for layer in &qm.layers {
+            let pl = PreparedLayer::new(layer);
+            assert_eq!(pl.cout_p % 8, 0);
+            assert_eq!(pl.cin_p % 2, 0);
+            for dr in 0..3 {
+                for dc in 0..3 {
+                    for ci in 0..layer.cin {
+                        for co in 0..layer.cout {
+                            let v = layer.weight(dr, dc, ci, co);
+                            assert_eq!(pl.weight(dr, dc, ci, co), v);
+                            let tap = dr * 3 + dc;
+                            assert_eq!(
+                                pl.w32[(tap * pl.cin + ci) * pl.cout_p + co],
+                                v as i32
+                            );
+                            let slot = (tap * (pl.cin_p / 2) + ci / 2)
+                                * pl.cout_p
+                                + co;
+                            let half = (pl.wp[slot]
+                                >> (16 * (ci % 2)))
+                                as u16;
+                            assert_eq!(half as i16, v as i16);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padded_tails_are_zero() {
+        // odd cin, cout not a multiple of 8
+        let qm = QuantModel::test_model(1, 3, 5, 3, 4);
+        let pl = PreparedLayer::new(&qm.layers[0]);
+        assert_eq!((pl.cin, pl.cin_p), (3, 4));
+        assert_eq!(pl.cout_p, pl.cout.next_multiple_of(8));
+        // the padded co columns of w32 must be zero
+        for tap in 0..9 {
+            for ci in 0..pl.cin {
+                for co in pl.cout..pl.cout_p {
+                    assert_eq!(
+                        pl.w32[(tap * pl.cin + ci) * pl.cout_p + co],
+                        0
+                    );
+                }
+            }
+            // the padded ci pair-half must be zero
+            if pl.cin % 2 == 1 {
+                let ci2 = pl.cin / 2;
+                for co in 0..pl.cout_p {
+                    let lane =
+                        pl.wp[(tap * (pl.cin_p / 2) + ci2) * pl.cout_p + co];
+                    assert_eq!(lane >> 16, 0, "odd-cin pad half");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prepared_model_mirrors_quant_model() {
+        let qm = QuantModel::test_model(3, 3, 6, 3, 2);
+        let pm = PreparedModel::new(&qm);
+        assert_eq!(pm.n_layers(), 3);
+        assert_eq!(pm.in_channels(), 3);
+        assert_eq!(pm.max_channels(), qm.max_channels());
+        assert_eq!(pm.weight_bytes, qm.weight_bytes());
+        assert_eq!(pm.bias_bytes, qm.bias_bytes());
+        assert_eq!(pm.scale, 3);
+    }
+
+    #[test]
+    fn scratch_pool_recycles_storage() {
+        let mut s = Scratch::new();
+        let mut t = s.take_u8(2, 3, 4);
+        t.data[5] = 99;
+        let ptr = t.data.as_ptr();
+        let cap = t.data.capacity();
+        s.recycle_u8(t);
+        let t2 = s.take_u8(2, 3, 4);
+        // same storage, re-zeroed
+        assert_eq!(t2.data.as_ptr(), ptr);
+        assert_eq!(t2.data.capacity(), cap);
+        assert!(t2.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn scratch_pool_resizes_on_reuse() {
+        let mut s = Scratch::new();
+        let t = s.take_u8(4, 4, 4);
+        s.recycle_u8(t);
+        let t2 = s.take_u8(2, 2, 2);
+        assert_eq!(t2.data.len(), 8);
+        let t3 = s.take_i32(3, 3, 3);
+        assert_eq!(t3.data.len(), 27);
+    }
+}

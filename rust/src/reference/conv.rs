@@ -5,41 +5,98 @@
 //! Accumulation is i32 (the silicon's accumulator width; the worst case
 //! `255 * 127 * 9 * 28 ≈ 8.2e6` fits comfortably), requantization
 //! widens to i64 exactly like `quant.py`.
+//!
+//! §Perf architecture: weights are packed **once per model** into a
+//! [`PreparedLayer`] (AVX2 pair-interleaved `wp` + padded scalar `w32`)
+//! and every kernel borrows its working memory from a per-worker
+//! [`Scratch`] arena — the `*_prepared` entry points are the hot path
+//! and perform no steady-state allocation.  The unprepared wrappers
+//! (`conv3x3_relu` & co.) pack on the fly and exist for tests, one-shot
+//! callers, and as the pre-§Perf baseline the benches compare against.
 
-use crate::model::{QuantLayer, Tensor};
+use crate::model::{PreparedLayer, QuantLayer, Scratch, Tensor};
 use crate::util::fixed::clamp_u8;
 
 /// SAME 3x3 conv + requant + ReLU over a whole map (zero padding).
+/// One-shot wrapper: packs the layer and allocates scratch per call.
 pub fn conv3x3_relu(x: &Tensor<u8>, layer: &QuantLayer) -> Tensor<u8> {
     assert_eq!(x.c, layer.cin, "conv3x3_relu: cin mismatch");
-    assert!(layer.relu, "conv3x3_relu called on a non-ReLU layer");
-    let mut out = Tensor::new(x.h, x.w, layer.cout);
-    let (w, cout) = (x.w, layer.cout);
-    conv_rows(x, layer, |y, acc_row, cout_p| {
+    let pl = PreparedLayer::new(layer);
+    let mut scratch = Scratch::new();
+    conv3x3_relu_prepared(x, &pl, &mut scratch)
+}
+
+/// SAME 3x3 conv + requant of the final layer (no ReLU, i32 output in
+/// 1/255 units, pre-residual).  One-shot wrapper.
+pub fn conv3x3_final(x: &Tensor<u8>, layer: &QuantLayer) -> Tensor<i32> {
+    assert_eq!(x.c, layer.cin, "conv3x3_final: cin mismatch");
+    let pl = PreparedLayer::new(layer);
+    let mut scratch = Scratch::new();
+    conv3x3_final_prepared(x, &pl, &mut scratch)
+}
+
+/// SAME 3x3 conv + requant + ReLU using prepared weights and scratch.
+/// The returned tensor's storage comes from the scratch pool — hand it
+/// back with [`Scratch::recycle_u8`] when done to stay allocation-free.
+pub fn conv3x3_relu_prepared(
+    x: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+) -> Tensor<u8> {
+    conv3x3_relu_impl(x, pl, scratch, false)
+}
+
+/// SAME final-layer conv using prepared weights and scratch.
+pub fn conv3x3_final_prepared(
+    x: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+) -> Tensor<i32> {
+    conv3x3_final_impl(x, pl, scratch, false)
+}
+
+/// Kernel-dispatch override for the equivalence tests: `force_scalar`
+/// bypasses the AVX2 path so both kernels can be compared on one host.
+#[doc(hidden)]
+pub fn conv3x3_relu_impl(
+    x: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    force_scalar: bool,
+) -> Tensor<u8> {
+    assert_eq!(x.c, pl.cin, "conv3x3_relu: cin mismatch");
+    assert!(pl.relu, "conv3x3_relu called on a non-ReLU layer");
+    let mut out = scratch.take_u8(x.h, x.w, pl.cout);
+    let (w, cout, m) = (x.w, pl.cout, pl.m);
+    conv_rows(x, pl, scratch, force_scalar, |y, acc_row, cout_p| {
         for xx in 0..w {
             let a = &acc_row[xx * cout_p..xx * cout_p + cout];
             let o = &mut out.data[(y * w + xx) * cout..][..cout];
             for (oo, &av) in o.iter_mut().zip(a) {
-                *oo = clamp_u8(layer.m.apply(av as i64));
+                *oo = clamp_u8(m.apply(av as i64));
             }
         }
     });
     out
 }
 
-/// SAME 3x3 conv + requant of the final layer (no ReLU, i32 output in
-/// 1/255 units, pre-residual).
-pub fn conv3x3_final(x: &Tensor<u8>, layer: &QuantLayer) -> Tensor<i32> {
-    assert_eq!(x.c, layer.cin, "conv3x3_final: cin mismatch");
-    assert!(!layer.relu, "conv3x3_final called on a ReLU layer");
-    let mut out = Tensor::new(x.h, x.w, layer.cout);
-    let (w, cout) = (x.w, layer.cout);
-    conv_rows(x, layer, |y, acc_row, cout_p| {
+#[doc(hidden)]
+pub fn conv3x3_final_impl(
+    x: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    force_scalar: bool,
+) -> Tensor<i32> {
+    assert_eq!(x.c, pl.cin, "conv3x3_final: cin mismatch");
+    assert!(!pl.relu, "conv3x3_final called on a ReLU layer");
+    let mut out = scratch.take_i32(x.h, x.w, pl.cout);
+    let (w, cout, m) = (x.w, pl.cout, pl.m);
+    conv_rows(x, pl, scratch, force_scalar, |y, acc_row, cout_p| {
         for xx in 0..w {
             let a = &acc_row[xx * cout_p..xx * cout_p + cout];
             let o = &mut out.data[(y * w + xx) * cout..][..cout];
             for (oo, &av) in o.iter_mut().zip(a) {
-                *oo = layer.m.apply(av as i64) as i32;
+                *oo = m.apply(av as i64) as i32;
             }
         }
     });
@@ -55,53 +112,38 @@ pub fn conv3x3_final(x: &Tensor<u8>, layer: &QuantLayer) -> Tensor<i32> {
 ///
 /// * **AVX2 `vpmaddwd`**: `u8 x i8` products fit i16 (255*127 < 2^15),
 ///   so input-channel *pairs* are packed `(x_ci, x_ci+1)` into 32-bit
-///   lanes and multiplied against pair-interleaved i16 weights — 16
-///   MACs per instruction.  Weights repack once per call into
-///   `[tap][ci/2][co]` pair layout, zero-padded in both ci and co.
-/// * scalar fallback (also the reference for the dispatch test).
+///   lanes and multiplied against the pair-interleaved i16 weights of
+///   the [`PreparedLayer`] — 16 MACs per instruction.
+/// * scalar fallback over `w32` (also the reference for the dispatch
+///   test).
 ///
+/// The accumulator strip and the odd-`cin` staging buffer live in
+/// `scratch`; weights were packed when the [`PreparedLayer`] was built.
 /// `emit(y, acc_row, cout_p)` requantizes each finished row.
 fn conv_rows<F: FnMut(usize, &[i32], usize)>(
     x: &Tensor<u8>,
-    layer: &QuantLayer,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    force_scalar: bool,
     mut emit: F,
 ) {
     let (h, w) = (x.h, x.w);
-    let (cin, cout) = (layer.cin, layer.cout);
-    let cout_p = cout.next_multiple_of(8);
-    let cin_p = cin.next_multiple_of(2);
+    let (cin, cout) = (pl.cin, pl.cout);
+    let (cin_p, cout_p) = (pl.cin_p, pl.cout_p);
 
-    #[cfg(target_arch = "x86_64")]
-    let use_avx2 = std::arch::is_x86_feature_detected!("avx2");
-    #[cfg(not(target_arch = "x86_64"))]
-    let use_avx2 = false;
+    let use_avx2 = avx2_available() && !force_scalar;
 
-    // pair-interleaved i16 weights: wp[tap][ci2][co] holds the u32
-    // (w[2*ci2][co] as u16) | (w[2*ci2+1][co] as u16) << 16
-    let taps = 9;
-    let mut wp = vec![0u32; taps * (cin_p / 2) * cout_p];
-    // plain i32 weights for the scalar path
-    let mut w32 = vec![0i32; taps * cin * cout_p];
-    for tap in 0..taps {
-        for ci in 0..cin {
-            for co in 0..cout {
-                let v = layer.w[(tap * cin + ci) * cout + co];
-                w32[(tap * cin + ci) * cout_p + co] = v as i32;
-                let slot =
-                    (tap * (cin_p / 2) + ci / 2) * cout_p + co;
-                let half = (v as i16 as u16 as u32) << (16 * (ci % 2));
-                wp[slot] |= half;
-            }
-        }
-    }
-
-    let mut acc_row = vec![0i32; w * cout_p];
+    let acc_row = &mut scratch.acc_row;
+    acc_row.clear();
+    acc_row.resize(w * cout_p, 0);
     // input pixel staging padded to cin_p (zero tail)
-    let mut px = vec![0u8; cin_p];
+    let px = &mut scratch.px;
+    px.clear();
+    px.resize(cin_p, 0);
     for y in 0..h {
         for xx in 0..w {
             acc_row[xx * cout_p..xx * cout_p + cout]
-                .copy_from_slice(&layer.bias);
+                .copy_from_slice(&pl.bias);
             acc_row[xx * cout_p + cout..(xx + 1) * cout_p].fill(0);
         }
         for dr in 0..3usize {
@@ -127,9 +169,9 @@ fn conv_rows<F: FnMut(usize, &[i32], usize)>(
                         } else {
                             px[..cin]
                                 .copy_from_slice(&in_row[src..src + cin]);
-                            &px
+                            &px[..]
                         };
-                        let wtap = &wp[tap * (cin_p / 2) * cout_p..]
+                        let wtap = &pl.wp[tap * (cin_p / 2) * cout_p..]
                             [..(cin_p / 2) * cout_p];
                         // SAFETY: avx2 confirmed by runtime detection;
                         // all slices are exactly sized above.
@@ -138,7 +180,8 @@ fn conv_rows<F: FnMut(usize, &[i32], usize)>(
                         };
                         continue;
                     }
-                    let wtap = &w32[tap * cin * cout_p..][..cin * cout_p];
+                    let wtap =
+                        &pl.w32[tap * cin * cout_p..][..cin * cout_p];
                     for ci in 0..cin {
                         let xv = in_row[src + ci] as i32;
                         if xv == 0 {
@@ -152,7 +195,19 @@ fn conv_rows<F: FnMut(usize, &[i32], usize)>(
                 }
             }
         }
-        emit(y, &acc_row, cout_p);
+        emit(y, &acc_row[..], cout_p);
+    }
+}
+
+#[inline]
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
     }
 }
 
@@ -199,7 +254,9 @@ unsafe fn madd_avx2(
 
 /// VALID conv over an explicitly assembled `(rows+2, cols+2, cin)` patch
 /// (the scheduler fills halos from its ping-pong/overlap memories; zero
-/// rows/columns stand for image borders).  ReLU layers.
+/// rows/columns stand for image borders).  ReLU layers.  One-shot
+/// wrapper around the prepared tile kernel — and, because it runs the
+/// scalar per-pixel path, the pre-§Perf baseline for the tile benches.
 pub fn conv_patch_relu(patch: &Tensor<u8>, layer: &QuantLayer) -> Tensor<u8> {
     assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
     assert_eq!(patch.c, layer.cin);
@@ -218,7 +275,7 @@ pub fn conv_patch_relu(patch: &Tensor<u8>, layer: &QuantLayer) -> Tensor<u8> {
     out
 }
 
-/// VALID conv over a patch, final (no-ReLU) layer.
+/// VALID conv over a patch, final (no-ReLU) layer.  One-shot wrapper.
 pub fn conv_patch_final(patch: &Tensor<u8>, layer: &QuantLayer) -> Tensor<i32> {
     assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
     assert_eq!(patch.c, layer.cin);
@@ -235,6 +292,141 @@ pub fn conv_patch_final(patch: &Tensor<u8>, layer: &QuantLayer) -> Tensor<i32> {
         }
     }
     out
+}
+
+/// VALID patch conv + ReLU on the prepared tile path: AVX2 `vpmaddwd`
+/// per tap with prepared weights, zero per-call allocation.  This is
+/// the kernel the tilted scheduler's steady-state band loop runs.
+pub fn conv_patch_relu_prepared(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+) -> Tensor<u8> {
+    conv_patch_relu_impl(patch, pl, scratch, false)
+}
+
+/// VALID patch conv of the final layer on the prepared tile path.
+pub fn conv_patch_final_prepared(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+) -> Tensor<i32> {
+    conv_patch_final_impl(patch, pl, scratch, false)
+}
+
+#[doc(hidden)]
+pub fn conv_patch_relu_impl(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    force_scalar: bool,
+) -> Tensor<u8> {
+    assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
+    assert_eq!(patch.c, pl.cin);
+    assert!(pl.relu);
+    let (oh, ow) = (patch.h - 2, patch.w - 2);
+    let mut out = scratch.take_u8(oh, ow, pl.cout);
+    let (cout, m) = (pl.cout, pl.m);
+    patch_pixels(patch, pl, scratch, force_scalar, |y, x, acc| {
+        let o = &mut out.data[(y * ow + x) * cout..][..cout];
+        for (oo, &av) in o.iter_mut().zip(acc) {
+            *oo = clamp_u8(m.apply(av as i64));
+        }
+    });
+    out
+}
+
+#[doc(hidden)]
+pub fn conv_patch_final_impl(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    force_scalar: bool,
+) -> Tensor<i32> {
+    assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
+    assert_eq!(patch.c, pl.cin);
+    assert!(!pl.relu);
+    let (oh, ow) = (patch.h - 2, patch.w - 2);
+    let mut out = scratch.take_i32(oh, ow, pl.cout);
+    let (cout, m) = (pl.cout, pl.m);
+    patch_pixels(patch, pl, scratch, force_scalar, |y, x, acc| {
+        let o = &mut out.data[(y * ow + x) * cout..][..cout];
+        for (oo, &av) in o.iter_mut().zip(acc) {
+            *oo = m.apply(av as i64) as i32;
+        }
+    });
+    out
+}
+
+/// Patch conv core: per output pixel, accumulate all 9 taps over the
+/// prepared layouts and hand `acc[..cout]` to `emit(y, x, acc)`.
+///
+/// The three taps of one kernel row are contiguous in the patch
+/// (`(y+dr, x..x+3, :)`), so each row slice feeds all three `dc`
+/// kernels without re-indexing.
+fn patch_pixels<F: FnMut(usize, usize, &[i32])>(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    force_scalar: bool,
+    mut emit: F,
+) {
+    let (oh, ow) = (patch.h - 2, patch.w - 2);
+    let (cin, cout) = (pl.cin, pl.cout);
+    let (cin_p, cout_p) = (pl.cin_p, pl.cout_p);
+    let use_avx2 = avx2_available() && !force_scalar;
+
+    let acc = &mut scratch.acc;
+    acc.clear();
+    acc.resize(cout_p, 0);
+    let px = &mut scratch.px;
+    px.clear();
+    px.resize(cin_p, 0);
+
+    for y in 0..oh {
+        for x in 0..ow {
+            acc[..cout].copy_from_slice(&pl.bias);
+            acc[cout..].fill(0);
+            for dr in 0..3usize {
+                let base = patch.idx(y + dr, x, 0);
+                let row = &patch.data[base..base + 3 * cin];
+                for dc in 0..3usize {
+                    let tap = dr * 3 + dc;
+                    let src = &row[dc * cin..(dc + 1) * cin];
+                    #[cfg(target_arch = "x86_64")]
+                    if use_avx2 {
+                        let src_px: &[u8] = if cin == cin_p {
+                            src
+                        } else {
+                            px[..cin].copy_from_slice(src);
+                            &px[..]
+                        };
+                        let wtap = &pl.wp[tap * (cin_p / 2) * cout_p..]
+                            [..(cin_p / 2) * cout_p];
+                        // SAFETY: avx2 confirmed by runtime detection;
+                        // slices sized by the PreparedLayer invariants.
+                        unsafe {
+                            madd_avx2(acc, src_px, wtap, cin_p, cout_p)
+                        };
+                        continue;
+                    }
+                    let wtap =
+                        &pl.w32[tap * cin * cout_p..][..cin * cout_p];
+                    for ci in 0..cin {
+                        let xv = src[ci] as i32;
+                        if xv == 0 {
+                            continue;
+                        }
+                        let wrow = &wtap[ci * cout_p..(ci + 1) * cout_p];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+            emit(y, x, &acc[..cout]);
+        }
+    }
 }
 
 #[inline]
@@ -302,6 +494,11 @@ mod tests {
         }
         let via_patch = conv_patch_relu(&patch, l);
         assert_eq!(whole.data, via_patch.data);
+        // and the prepared tile kernel agrees bit for bit
+        let pl = PreparedLayer::new(l);
+        let mut s = Scratch::new();
+        let via_prepared = conv_patch_relu_prepared(&patch, &pl, &mut s);
+        assert_eq!(whole.data, via_prepared.data);
     }
 
     #[test]
@@ -320,6 +517,10 @@ mod tests {
         }
         let via_patch = conv_patch_final(&patch, l);
         assert_eq!(whole.data, via_patch.data);
+        let pl = PreparedLayer::new(l);
+        let mut s = Scratch::new();
+        let via_prepared = conv_patch_final_prepared(&patch, &pl, &mut s);
+        assert_eq!(whole.data, via_prepared.data);
     }
 
     #[test]
@@ -330,6 +531,35 @@ mod tests {
         let x = Tensor::from_vec(2, 2, 1, vec![10, 20, 30, 40]);
         let y = conv3x3_relu(&x, &l);
         assert_eq!(y.get(0, 0, 0), 100); // 10+20+30+40
+    }
+
+    #[test]
+    fn prepared_scalar_and_dispatch_agree() {
+        // force_scalar vs auto-dispatch (AVX2 where the host has it)
+        let qm = QuantModel::test_model(2, 3, 5, 3, 6);
+        let l = &qm.layers[0];
+        let pl = PreparedLayer::new(l);
+        let x = rand_map(7, 9, 3, 5);
+        let mut s = Scratch::new();
+        let auto = conv3x3_relu_impl(&x, &pl, &mut s, false);
+        let scalar = conv3x3_relu_impl(&x, &pl, &mut s, true);
+        assert_eq!(auto.data, scalar.data);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        // the same scratch serving many calls must not leak state
+        let qm = QuantModel::test_model(2, 3, 5, 3, 8);
+        let l = &qm.layers[0];
+        let pl = PreparedLayer::new(l);
+        let mut s = Scratch::new();
+        let x1 = rand_map(6, 8, 3, 11);
+        let x2 = rand_map(4, 5, 3, 12);
+        let a1 = conv3x3_relu_prepared(&x1, &pl, &mut s);
+        let b = conv3x3_relu_prepared(&x2, &pl, &mut s);
+        s.recycle_u8(b);
+        let a2 = conv3x3_relu_prepared(&x1, &pl, &mut s);
+        assert_eq!(a1.data, a2.data);
     }
 
     #[test]

@@ -5,25 +5,63 @@
 //! also the production CPU engine behind the serving coordinator.  Its
 //! arithmetic mirrors `python/compile/quant.py` exactly; the
 //! cross-language golden-vector test (`rust/tests/golden.rs`) proves it.
+//!
+//! The `*_prepared` entry points take a [`PreparedModel`] (weights
+//! packed once) and a per-worker [`Scratch`] arena, and are what the
+//! serving engines call per frame; the plain wrappers pack on the fly.
 
 pub mod conv;
 
-pub use conv::{conv3x3_final, conv3x3_relu, conv_patch_final, conv_patch_relu};
+pub use conv::{
+    conv3x3_final, conv3x3_final_prepared, conv3x3_relu,
+    conv3x3_relu_prepared, conv_patch_final, conv_patch_final_prepared,
+    conv_patch_relu, conv_patch_relu_prepared,
+};
 
 use crate::image::ImageU8;
-use crate::model::{QuantModel, Tensor};
+use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};
 
 /// Full integer APBN forward: uint8 LR -> uint8 HR.
 ///
 /// SAME zero padding at every layer (the frame-border behaviour of the
 /// chip when run monolithically; band seams are the schedulers' job).
+/// One-shot wrapper: packs weights and allocates scratch per call.
 pub fn forward_int(x: &Tensor<u8>, qm: &QuantModel) -> Tensor<u8> {
-    let mut h = x.clone();
-    for layer in &qm.layers[..qm.layers.len() - 1] {
-        h = conv3x3_relu(&h, layer);
+    let pm = PreparedModel::new(qm);
+    let mut scratch = Scratch::new();
+    forward_int_prepared(x, &pm, &mut scratch)
+}
+
+/// [`forward_int`] over prepared weights and reusable scratch — the
+/// per-frame hot path of [`crate::coordinator::Int8Engine`].
+/// Intermediate feature maps are recycled through the scratch pool, so
+/// steady-state serving performs no per-layer allocation.
+pub fn forward_int_prepared(
+    x: &Tensor<u8>,
+    pm: &PreparedModel,
+    scratch: &mut Scratch,
+) -> Tensor<u8> {
+    let n = pm.n_layers();
+    let mut h: Option<Tensor<u8>> = None;
+    for pl in &pm.layers[..n - 1] {
+        let next = {
+            let input = h.as_ref().unwrap_or(x);
+            conv3x3_relu_prepared(input, pl, scratch)
+        };
+        if let Some(old) = h.replace(next) {
+            scratch.recycle_u8(old);
+        }
     }
-    let pre = conv3x3_final(&h, qm.layers.last().unwrap());
-    add_anchor_and_shuffle(&pre, x, qm.scale)
+    let pre = {
+        let input = h.as_ref().unwrap_or(x);
+        conv3x3_final_prepared(input, pm.layers.last().unwrap(), scratch)
+    };
+    if let Some(old) = h {
+        scratch.recycle_u8(old);
+    }
+    let out = add_anchor_and_shuffle(&pre, x, pm.scale);
+    scratch.recycle_i32(pre);
+    out
 }
 
 /// Residual add + clamp + depth-to-space (the tail of the datapath).
@@ -35,10 +73,28 @@ pub fn add_anchor_and_shuffle(
     lr: &Tensor<u8>,
     scale: usize,
 ) -> Tensor<u8> {
+    let mut out: Tensor<u8> = Tensor::new(lr.h * scale, lr.w * scale, lr.c);
+    add_anchor_and_shuffle_into(pre, lr, scale, &mut out);
+    out
+}
+
+/// [`add_anchor_and_shuffle`] into a caller-provided output tensor
+/// (shape `(lr.h*scale, lr.w*scale, lr.c)`) — the tilted band loop
+/// feeds it pool-recycled tiles so no per-tile output is allocated.
+pub fn add_anchor_and_shuffle_into(
+    pre: &Tensor<i32>,
+    lr: &Tensor<u8>,
+    scale: usize,
+    out: &mut Tensor<u8>,
+) {
     let r2 = scale * scale;
     assert_eq!(pre.c, lr.c * r2, "pre-residual channel mismatch");
     assert_eq!((pre.h, pre.w), (lr.h, lr.w));
-    let mut out: Tensor<u8> = Tensor::new(lr.h * scale, lr.w * scale, lr.c);
+    assert_eq!(
+        (out.h, out.w, out.c),
+        (lr.h * scale, lr.w * scale, lr.c),
+        "shuffle output shape mismatch"
+    );
     for y in 0..lr.h {
         for x in 0..lr.w {
             for i in 0..scale {
@@ -60,13 +116,26 @@ pub fn add_anchor_and_shuffle(
             }
         }
     }
-    out
 }
 
 /// Convenience wrapper over [`ImageU8`].
 pub fn upscale(img: &ImageU8, qm: &QuantModel) -> ImageU8 {
-    let t = Tensor::from_vec(img.h, img.w, img.c, img.data.clone());
-    let out = forward_int(&t, qm);
+    let pm = PreparedModel::new(qm);
+    let mut scratch = Scratch::new();
+    upscale_prepared(img, &pm, &mut scratch)
+}
+
+/// [`upscale`] over prepared state: the serving engines hold a
+/// [`PreparedModel`] + [`Scratch`] per worker and call this per frame.
+pub fn upscale_prepared(
+    img: &ImageU8,
+    pm: &PreparedModel,
+    scratch: &mut Scratch,
+) -> ImageU8 {
+    let mut t = scratch.take_u8(img.h, img.w, img.c);
+    t.data.copy_from_slice(&img.data);
+    let out = forward_int_prepared(&t, pm, scratch);
+    scratch.recycle_u8(t);
     ImageU8::from_vec(out.h, out.w, out.c, out.data)
 }
 
@@ -75,13 +144,20 @@ pub fn forward_layers(
     x: &Tensor<u8>,
     qm: &QuantModel,
 ) -> (Vec<Tensor<u8>>, Tensor<i32>) {
-    let mut outs = Vec::new();
-    let mut h = x.clone();
-    for layer in &qm.layers[..qm.layers.len() - 1] {
-        h = conv3x3_relu(&h, layer);
-        outs.push(h.clone());
+    let pm = PreparedModel::new(qm);
+    let mut scratch = Scratch::new();
+    let mut outs: Vec<Tensor<u8>> = Vec::new();
+    for pl in &pm.layers[..pm.n_layers() - 1] {
+        let next = {
+            let input = outs.last().unwrap_or(x);
+            conv3x3_relu_prepared(input, pl, &mut scratch)
+        };
+        outs.push(next);
     }
-    let pre = conv3x3_final(&h, qm.layers.last().unwrap());
+    let pre = {
+        let input = outs.last().unwrap_or(x);
+        conv3x3_final_prepared(input, pm.layers.last().unwrap(), &mut scratch)
+    };
     (outs, pre)
 }
 
@@ -111,6 +187,30 @@ mod tests {
         let qm = QuantModel::test_model(3, 3, 6, 3, 1);
         let x = rand_input(6, 6, 3, 3);
         assert_eq!(forward_int(&x, &qm).data, forward_int(&x, &qm).data);
+    }
+
+    #[test]
+    fn prepared_forward_matches_wrapper_across_frames() {
+        // one PreparedModel + Scratch serving several frames must stay
+        // bit-identical to the pack-per-call wrapper
+        let qm = QuantModel::test_model(3, 3, 6, 3, 5);
+        let pm = PreparedModel::new(&qm);
+        let mut scratch = Scratch::new();
+        for seed in 0..4u64 {
+            let x = rand_input(6, 7, 3, 10 + seed);
+            let want = forward_int(&x, &qm);
+            let got = forward_int_prepared(&x, &pm, &mut scratch);
+            assert_eq!(got.data, want.data, "frame {seed}");
+        }
+    }
+
+    #[test]
+    fn single_layer_model_forwards() {
+        // n_layers == 1: the final conv reads the input directly
+        let qm = QuantModel::test_model(1, 2, 4, 2, 3);
+        let x = rand_input(4, 5, 2, 1);
+        let y = forward_int(&x, &qm);
+        assert_eq!((y.h, y.w, y.c), (8, 10, 2));
     }
 
     #[test]

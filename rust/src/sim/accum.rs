@@ -49,6 +49,15 @@ impl Accumulator {
         Self::default()
     }
 
+    /// Clear all pipeline state, retaining allocated capacity — lets a
+    /// [`crate::model::Scratch`]-owned accumulator be reused across
+    /// layers without reallocating.
+    pub fn reset(&mut self) {
+        self.pipe.clear();
+        self.retired.clear();
+        self.cycles = 0;
+    }
+
     /// Issue the per-block partial sums of one cycle. `blocks[b][r]` is
     /// block b's partial for segment row r. Returns nothing; the result
     /// retires `STAGES` cycles later via [`Self::tick`].
@@ -146,6 +155,19 @@ mod tests {
         acc.tick();
         acc.tick();
         assert!(acc.retired[0].1.iter().all(|&v| v == 105));
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut acc = Accumulator::new();
+        acc.issue(&[[1; SEG]], Stage2Add::Nothing, 0);
+        acc.tick();
+        acc.tick();
+        assert_eq!(acc.retired.len(), 1);
+        acc.reset();
+        assert_eq!(acc.retired.len(), 0);
+        assert_eq!(acc.in_flight(), 0);
+        assert_eq!(acc.cycles(), 0);
     }
 
     #[test]

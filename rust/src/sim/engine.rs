@@ -5,12 +5,20 @@
 //! ping-pong / overlap memories), returning the `(rows, cols, cout)`
 //! output plus the cycles/MACs spent.  The two implementations must
 //! agree exactly on both values and cycles — `rust/tests/` pins this.
+//!
+//! §Perf contract: layers arrive as [`PreparedLayer`]s (weights packed
+//! once per model) and every engine borrows its working memory — the
+//! output tensors, the cycle-exact partial-sum registers and the
+//! accumulator pipeline — from the caller's [`Scratch`], so a tile
+//! execution allocates nothing in steady state.  Callers should
+//! [`Scratch::recycle_u8`]/[`Scratch::recycle_i32`] the output when
+//! they are done with it.
 
-use crate::model::{QuantLayer, Tensor};
-use crate::reference::{conv_patch_final, conv_patch_relu};
+use crate::model::{PreparedLayer, Scratch, Tensor};
+use crate::reference::{conv_patch_final_prepared, conv_patch_relu_prepared};
 use crate::util::fixed::clamp_u8;
 
-use super::accum::{Accumulator, Stage2Add, STAGES};
+use super::accum::{Stage2Add, STAGES};
 use super::pe::{PeBlock, SEG};
 
 /// Output of one tile-layer execution.
@@ -47,8 +55,13 @@ pub struct LayerCost {
 /// A conv-layer execution engine over patches.
 pub trait TileEngine {
     /// `patch` is `(rows+2, cols+2, cin)`; returns `(rows, cols, cout)`.
-    fn run_layer(&self, patch: &Tensor<u8>, layer: &QuantLayer)
-        -> (LayerOut, LayerCost);
+    /// Output storage comes from `scratch`'s pool.
+    fn run_layer(
+        &self,
+        patch: &Tensor<u8>,
+        layer: &PreparedLayer,
+        scratch: &mut Scratch,
+    ) -> (LayerOut, LayerCost);
 
     fn name(&self) -> &'static str;
 }
@@ -71,10 +84,6 @@ impl EngineGeometry {
     }
 }
 
-fn div_ceil(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
-}
-
 /// Closed-form cycle cost of one layer over a (rows x cols) tile.
 ///
 /// One cycle produces one SEG-row segment of one output column for one
@@ -89,8 +98,8 @@ pub fn layer_cycles(
 ) -> LayerCost {
     let issues = cols as u64
         * cout as u64
-        * div_ceil(rows, SEG) as u64
-        * div_ceil(cin, geo.pe_blocks) as u64;
+        * rows.div_ceil(SEG) as u64
+        * cin.div_ceil(geo.pe_blocks) as u64;
     // a segment retires STAGES cycles after issue and issues overlap, so
     // the tail adds STAGES-1 cycles beyond the issue stream
     let cycles = issues + (STAGES as u64 - 1);
@@ -101,7 +110,8 @@ pub fn layer_cycles(
     }
 }
 
-/// Analytic engine: values via the reference conv, cycles closed-form.
+/// Analytic engine: values via the prepared reference conv, cycles
+/// closed-form.
 #[derive(Clone, Copy, Debug)]
 pub struct AnalyticEngine {
     pub geo: EngineGeometry,
@@ -119,15 +129,16 @@ impl TileEngine for AnalyticEngine {
     fn run_layer(
         &self,
         patch: &Tensor<u8>,
-        layer: &QuantLayer,
+        layer: &PreparedLayer,
+        scratch: &mut Scratch,
     ) -> (LayerOut, LayerCost) {
         let rows = patch.h - 2;
         let cols = patch.w - 2;
         let cost = layer_cycles(rows, cols, layer.cin, layer.cout, &self.geo);
         let out = if layer.relu {
-            LayerOut::U8(conv_patch_relu(patch, layer))
+            LayerOut::U8(conv_patch_relu_prepared(patch, layer, scratch))
         } else {
-            LayerOut::I32(conv_patch_final(patch, layer))
+            LayerOut::I32(conv_patch_final_prepared(patch, layer, scratch))
         };
         (out, cost)
     }
@@ -157,7 +168,8 @@ impl TileEngine for CycleExactEngine {
     fn run_layer(
         &self,
         patch: &Tensor<u8>,
-        layer: &QuantLayer,
+        layer: &PreparedLayer,
+        scratch: &mut Scratch,
     ) -> (LayerOut, LayerCost) {
         assert!(
             layer.cin <= self.geo.pe_blocks,
@@ -167,15 +179,16 @@ impl TileEngine for CycleExactEngine {
         );
         let rows = patch.h - 2;
         let cols = patch.w - 2;
-        let segs = div_ceil(rows, SEG);
+        let segs = rows.div_ceil(SEG);
+        // PE blocks are stateless combinational models (zero-sized).
         let blocks: Vec<PeBlock> =
             vec![PeBlock::default(); self.geo.pe_blocks];
-        let mut acc = Accumulator::new();
+        scratch.accum.reset();
+        if scratch.partials.len() < layer.cin {
+            scratch.partials.resize(layer.cin, [0i32; SEG]);
+        }
 
-        // raw (pre-requant) accumulator results indexed by tag
         let mut mac_ops: u64 = 0;
-        let mut block_partials = vec![[0i32; SEG]; layer.cin];
-
         for x in 0..cols {
             for co in 0..layer.cout {
                 // weight columns for (all cin, this co): wcols[j][dr]
@@ -183,8 +196,11 @@ impl TileEngine for CycleExactEngine {
                     let y0 = s * SEG;
                     let valid = (rows - y0).min(SEG);
                     // each PE block ci processes input channel ci
-                    for (ci, partial) in
-                        block_partials.iter_mut().enumerate().take(layer.cin)
+                    for (ci, partial) in scratch
+                        .partials
+                        .iter_mut()
+                        .enumerate()
+                        .take(layer.cin)
                     {
                         // input columns x, x+1, x+2 of the padded patch,
                         // rows y0 .. y0+SEG+2 (zero beyond patch)
@@ -219,20 +235,20 @@ impl TileEngine for CycleExactEngine {
                     }
                     mac_ops += 9 * valid as u64 * layer.cin as u64;
                     let tag = ((x * layer.cout + co) * segs + s) as u64;
-                    acc.issue(
-                        &block_partials[..layer.cin],
+                    scratch.accum.issue(
+                        &scratch.partials[..layer.cin],
                         Stage2Add::Bias(layer.bias[co]),
                         tag,
                     );
-                    acc.tick();
+                    scratch.accum.tick();
                 }
             }
         }
         // drain the accumulator pipeline
-        while acc.in_flight() > 0 {
-            acc.tick();
+        while scratch.accum.in_flight() > 0 {
+            scratch.accum.tick();
         }
-        let cycles = acc.cycles();
+        let cycles = scratch.accum.cycles();
 
         // requantize retired segments into the output tensor
         let cost = LayerCost {
@@ -241,8 +257,8 @@ impl TileEngine for CycleExactEngine {
             mac_slots: cycles * self.geo.macs_per_cycle as u64,
         };
         if layer.relu {
-            let mut out: Tensor<u8> = Tensor::new(rows, cols, layer.cout);
-            for &(tag, vals) in &acc.retired {
+            let mut out = scratch.take_u8(rows, cols, layer.cout);
+            for &(tag, vals) in &scratch.accum.retired {
                 let (x, co, s) = untag(tag, layer.cout, segs);
                 for (r, &v) in vals.iter().enumerate() {
                     let y = s * SEG + r;
@@ -253,8 +269,8 @@ impl TileEngine for CycleExactEngine {
             }
             (LayerOut::U8(out), cost)
         } else {
-            let mut out: Tensor<i32> = Tensor::new(rows, cols, layer.cout);
-            for &(tag, vals) in &acc.retired {
+            let mut out = scratch.take_i32(rows, cols, layer.cout);
+            for &(tag, vals) in &scratch.accum.retired {
                 let (x, co, s) = untag(tag, layer.cout, segs);
                 for (r, &v) in vals.iter().enumerate() {
                     let y = s * SEG + r;
@@ -283,7 +299,7 @@ fn untag(tag: u64, cout: usize, segs: usize) -> (usize, usize, usize) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::QuantModel;
+    use crate::model::{PreparedLayer, QuantModel};
     use crate::util::Xoshiro256pp;
 
     fn rand_patch(rows: usize, cols: usize, c: usize, seed: u64) -> Tensor<u8> {
@@ -303,13 +319,14 @@ mod tests {
     #[test]
     fn engines_agree_on_values_and_cycles() {
         let qm = QuantModel::test_model(2, 3, 6, 3, 11);
+        let mut scratch = Scratch::new();
         for (rows, cols) in [(5, 4), (7, 3), (12, 8), (6, 1)] {
             let patch = rand_patch(rows, cols, 3, rows as u64 * 31);
-            let l = &qm.layers[0];
+            let l = PreparedLayer::new(&qm.layers[0]);
             let (a_out, a_cost) =
-                AnalyticEngine::paper().run_layer(&patch, l);
-            let (c_out, c_cost) =
-                CycleExactEngine::paper().run_layer(&patch, l);
+                AnalyticEngine::paper().run_layer(&patch, &l, &mut scratch);
+            let (c_out, c_cost) = CycleExactEngine::paper()
+                .run_layer(&patch, &l, &mut scratch);
             assert_eq!(
                 a_out.unwrap_u8().data,
                 c_out.unwrap_u8().data,
@@ -322,10 +339,13 @@ mod tests {
     #[test]
     fn engines_agree_on_final_layer() {
         let qm = QuantModel::test_model(2, 3, 6, 3, 5);
-        let l = qm.layers.last().unwrap();
+        let l = PreparedLayer::new(qm.layers.last().unwrap());
         let patch = rand_patch(9, 5, 6, 77);
-        let (a, ac) = AnalyticEngine::paper().run_layer(&patch, l);
-        let (c, cc) = CycleExactEngine::paper().run_layer(&patch, l);
+        let mut scratch = Scratch::new();
+        let (a, ac) =
+            AnalyticEngine::paper().run_layer(&patch, &l, &mut scratch);
+        let (c, cc) =
+            CycleExactEngine::paper().run_layer(&patch, &l, &mut scratch);
         assert_eq!(a.unwrap_i32().data, c.unwrap_i32().data);
         assert_eq!(ac, cc);
     }

@@ -1,0 +1,254 @@
+//! §Perf equivalence properties: the prepared-weight execution paths
+//! (packed once per model, scratch reused across calls) must be
+//! **bit-identical** to the legacy pack-per-call paths and to a naive
+//! direct convolution written independently here — across randomized
+//! `cin`/`cout`/geometry, explicitly including odd `cin` and `cout`
+//! not divisible by 8 (the padded-lane edge cases).  Where the host has
+//! AVX2, the vector and scalar kernels are additionally pinned against
+//! each other via the `force_scalar` dispatch override.
+
+use sr_accel::model::{
+    PreparedLayer, PreparedModel, QuantLayer, QuantModel, Scratch, Tensor,
+};
+use sr_accel::reference::{
+    self, conv3x3_final, conv3x3_relu, conv_patch_final, conv_patch_relu,
+};
+use sr_accel::reference::conv::{
+    conv3x3_final_impl, conv3x3_relu_impl, conv_patch_final_impl,
+    conv_patch_relu_impl,
+};
+use sr_accel::util::fixed::clamp_u8;
+use sr_accel::util::quickcheck::{check_no_shrink, Config};
+use sr_accel::util::{FixedMul, Xoshiro256pp};
+
+fn rand_layer(cin: usize, cout: usize, relu: bool, seed: u64) -> QuantLayer {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    QuantLayer {
+        cin,
+        cout,
+        relu,
+        s_in: 1.0 / 255.0,
+        s_w: 0.01,
+        s_out: 1.0 / 255.0,
+        m: FixedMul::from_real(0.05),
+        bias: (0..cout)
+            .map(|_| rng.range_u64(0, 200) as i32 - 100)
+            .collect(),
+        w: (0..9 * cin * cout)
+            .map(|_| (rng.range_u64(0, 255) as i64 - 128) as i8)
+            .collect(),
+    }
+}
+
+fn rand_map(h: usize, w: usize, c: usize, seed: u64) -> Tensor<u8> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut t = Tensor::new(h, w, c);
+    rng.fill_u8(&mut t.data);
+    // sprinkle zeros so the sparsity-skip branches are exercised
+    for i in (0..t.data.len()).step_by(7) {
+        t.data[i] = 0;
+    }
+    t
+}
+
+/// Independent oracle: direct SAME 3x3 conv, no packing, no scratch.
+fn naive_conv3x3(x: &Tensor<u8>, l: &QuantLayer) -> (Vec<u8>, Vec<i32>) {
+    let mut out_u8 = vec![0u8; x.h * x.w * l.cout];
+    let mut out_i32 = vec![0i32; x.h * x.w * l.cout];
+    for y in 0..x.h {
+        for xx in 0..x.w {
+            for co in 0..l.cout {
+                let mut acc: i32 = l.bias[co];
+                for dr in 0..3usize {
+                    for dc in 0..3usize {
+                        let sy = y as isize + dr as isize - 1;
+                        let sx = xx as isize + dc as isize - 1;
+                        if sy < 0
+                            || sy >= x.h as isize
+                            || sx < 0
+                            || sx >= x.w as isize
+                        {
+                            continue;
+                        }
+                        for ci in 0..l.cin {
+                            let xv = x.get(sy as usize, sx as usize, ci)
+                                as i32;
+                            acc += xv
+                                * l.weight(dr, dc, ci, co) as i32;
+                        }
+                    }
+                }
+                let q = l.m.apply(acc as i64);
+                out_u8[(y * x.w + xx) * l.cout + co] = clamp_u8(q);
+                out_i32[(y * x.w + xx) * l.cout + co] = q as i32;
+            }
+        }
+    }
+    (out_u8, out_i32)
+}
+
+/// Zero-halo patch so the VALID patch kernels compute the SAME conv.
+fn zero_halo_patch(x: &Tensor<u8>) -> Tensor<u8> {
+    let mut p: Tensor<u8> = Tensor::new(x.h + 2, x.w + 2, x.c);
+    for y in 0..x.h {
+        for xx in 0..x.w {
+            for c in 0..x.c {
+                p.set(y + 1, xx + 1, c, x.get(y, xx, c));
+            }
+        }
+    }
+    p
+}
+
+fn geometry_gen(rng: &mut Xoshiro256pp) -> (usize, usize, usize, usize, u64) {
+    (
+        rng.range_usize(1, 10),  // h
+        rng.range_usize(1, 12),  // w
+        rng.range_usize(1, 10),  // cin (odd values included)
+        rng.range_usize(1, 20),  // cout (rarely divisible by 8)
+        rng.next_u64(),
+    )
+}
+
+#[test]
+fn prop_prepared_relu_matches_naive_and_legacy() {
+    let cfg = Config {
+        cases: 40,
+        seed: 0xBEEF,
+        max_shrink_iters: 0,
+    };
+    // one scratch across all cases: reuse must never leak state
+    let mut scratch = Scratch::new();
+    check_no_shrink(&cfg, geometry_gen, |&(h, w, cin, cout, seed)| {
+        let l = rand_layer(cin, cout, true, seed);
+        let pl = PreparedLayer::new(&l);
+        let x = rand_map(h, w, cin, seed ^ 0x55);
+        let (want, _) = naive_conv3x3(&x, &l);
+
+        let legacy = conv3x3_relu(&x, &l);
+        if legacy.data != want {
+            return Err(format!(
+                "legacy row path diverged at {h}x{w} {cin}->{cout}"
+            ));
+        }
+        let scalar = conv3x3_relu_impl(&x, &pl, &mut scratch, true);
+        if scalar.data != want {
+            return Err(format!(
+                "prepared scalar diverged at {h}x{w} {cin}->{cout}"
+            ));
+        }
+        let auto = conv3x3_relu_impl(&x, &pl, &mut scratch, false);
+        if auto.data != want {
+            return Err(format!(
+                "prepared dispatch (AVX2 if present) diverged at \
+                 {h}x{w} {cin}->{cout}"
+            ));
+        }
+        scratch.recycle_u8(scalar);
+        scratch.recycle_u8(auto);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prepared_patch_matches_legacy_patch() {
+    let cfg = Config {
+        cases: 40,
+        seed: 0xF00D,
+        max_shrink_iters: 0,
+    };
+    let mut scratch = Scratch::new();
+    check_no_shrink(&cfg, geometry_gen, |&(h, w, cin, cout, seed)| {
+        let l = rand_layer(cin, cout, true, seed);
+        let pl = PreparedLayer::new(&l);
+        let x = rand_map(h, w, cin, seed ^ 0x99);
+        let patch = zero_halo_patch(&x);
+
+        let legacy = conv_patch_relu(&patch, &l);
+        let scalar = conv_patch_relu_impl(&patch, &pl, &mut scratch, true);
+        if scalar.data != legacy.data {
+            return Err(format!(
+                "prepared patch scalar diverged at {h}x{w} {cin}->{cout}"
+            ));
+        }
+        let auto = conv_patch_relu_impl(&patch, &pl, &mut scratch, false);
+        if auto.data != legacy.data {
+            return Err(format!(
+                "prepared patch dispatch diverged at {h}x{w} {cin}->{cout}"
+            ));
+        }
+        scratch.recycle_u8(scalar);
+        scratch.recycle_u8(auto);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prepared_final_layer_matches() {
+    let cfg = Config {
+        cases: 30,
+        seed: 0xD00D,
+        max_shrink_iters: 0,
+    };
+    let mut scratch = Scratch::new();
+    check_no_shrink(&cfg, geometry_gen, |&(h, w, cin, cout, seed)| {
+        let l = rand_layer(cin, cout, false, seed);
+        let pl = PreparedLayer::new(&l);
+        let x = rand_map(h, w, cin, seed ^ 0x33);
+        let (_, want) = naive_conv3x3(&x, &l);
+
+        let legacy = conv3x3_final(&x, &l);
+        if legacy.data != want {
+            return Err("legacy final row path diverged".into());
+        }
+        for force_scalar in [true, false] {
+            let got = conv3x3_final_impl(&x, &pl, &mut scratch, force_scalar);
+            if got.data != want {
+                return Err(format!(
+                    "prepared final (force_scalar={force_scalar}) \
+                     diverged at {h}x{w} {cin}->{cout}"
+                ));
+            }
+            scratch.recycle_i32(got);
+        }
+        let patch = zero_halo_patch(&x);
+        let legacy_patch = conv_patch_final(&patch, &l);
+        if legacy_patch.data != want {
+            return Err("legacy final patch path diverged".into());
+        }
+        for force_scalar in [true, false] {
+            let got =
+                conv_patch_final_impl(&patch, &pl, &mut scratch, force_scalar);
+            if got.data != want {
+                return Err(format!(
+                    "prepared final patch (force_scalar={force_scalar}) \
+                     diverged at {h}x{w} {cin}->{cout}"
+                ));
+            }
+            scratch.recycle_i32(got);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prepared_full_model_forward_is_bit_identical() {
+    // whole-model check over awkward channel counts (odd cin, cout % 8
+    // != 0 in the trunk and the x3 shuffle tail)
+    for (n_layers, c_in, c_mid, scale, seed) in
+        [(3usize, 3usize, 5usize, 3usize, 1u64), (2, 1, 7, 2, 2), (4, 3, 9, 3, 3)]
+    {
+        let qm = QuantModel::test_model(n_layers, c_in, c_mid, scale, seed);
+        let pm = PreparedModel::new(&qm);
+        let mut scratch = Scratch::new();
+        for frame_seed in 0..3u64 {
+            let x = rand_map(9, 11, c_in, 100 + frame_seed);
+            let want = reference::forward_int(&x, &qm);
+            let got = reference::forward_int_prepared(&x, &pm, &mut scratch);
+            assert_eq!(
+                got.data, want.data,
+                "model {n_layers}l c{c_in}->{c_mid} x{scale} frame {frame_seed}"
+            );
+        }
+    }
+}

@@ -5,7 +5,7 @@
 
 use sr_accel::config::AcceleratorConfig;
 use sr_accel::fusion::TiltedScheduler;
-use sr_accel::model::{QuantModel, Tensor};
+use sr_accel::model::{PreparedLayer, QuantModel, Scratch, Tensor};
 use sr_accel::sim::engine::{
     layer_cycles, AnalyticEngine, CycleExactEngine, EngineGeometry,
     TileEngine,
@@ -62,11 +62,13 @@ fn prop_engines_agree_over_random_layers() {
                     .map(|_| (rng.range_u64(0, 14) as i64 - 7) as i8)
                     .collect(),
             };
-            let layer = &layer;
+            let layer = PreparedLayer::new(&layer);
             let patch = rand_patch(rows, cols, cin, seed ^ 0xabc);
-            let (a, ca) = AnalyticEngine::paper().run_layer(&patch, layer);
-            let (c, cc) =
-                CycleExactEngine::paper().run_layer(&patch, layer);
+            let mut scratch = Scratch::new();
+            let (a, ca) =
+                AnalyticEngine::paper().run_layer(&patch, &layer, &mut scratch);
+            let (c, cc) = CycleExactEngine::paper()
+                .run_layer(&patch, &layer, &mut scratch);
             if a.unwrap_u8().data != c.unwrap_u8().data {
                 return Err(format!(
                     "values differ at {rows}x{cols} {cin}->{cout}"
