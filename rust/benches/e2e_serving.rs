@@ -5,16 +5,21 @@
 //! fps comes from the simulator benches).
 //!
 //! Emits `BENCH_e2e.json` with HR MP/s per configuration, compared
-//! against the paper's 1080p60 target (124.4 HR MP/s).  `--smoke`
+//! against the paper's 1080p60 target (124.4 HR MP/s), and
+//! `BENCH_serving_multi.json` for the multi-stream front-end
+//! (aggregate + per-stream HR MP/s per record; `extra` carries p95
+//! latency and drop rate keyed by stream count and policy).  `--smoke`
 //! shrinks the workload for CI.
 //!
 //! Falls back to the deterministic test model when the trained
 //! artifacts are absent, so the bench runs on bare checkouts.
 
 use sr_accel::benchkit::{smoke_requested, BenchJson, BenchRecord};
-use sr_accel::config::{HaloPolicy, ShardPlan};
+use sr_accel::config::{HaloPolicy, RtPolicy, ShardPlan, StreamSpec};
 use sr_accel::coordinator::{
-    run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
+    engine::model_for_scale, run_pipeline, serve_multi, Engine,
+    EngineFactory, Int8Engine, MultiServeConfig, PipelineConfig,
+    ScaleEngineFactory,
 };
 use sr_accel::model::{load_apbnw, QuantModel};
 use sr_accel::runtime::{artifacts_available, artifacts_dir};
@@ -112,8 +117,96 @@ fn main() {
             std::process::exit(1);
         }
     }
+
+    // ---- multi-stream front-end: aggregate HR MP/s, p95 latency and
+    //      drop rate vs stream count, best-effort vs drop-late --------
+    let mut mjson = BenchJson::new("serving_multi");
+    // >= 2 distinct (geometry, scale) pairs at every stream count >= 2
+    let spec_pool = ["96x54@x3", "80x45@x4", "128x72@x2", "96x54@x2"];
+    let counts: &[usize] = if smoke { &[3] } else { &[1, 2, 3, 4] };
+    let mframes = if smoke { 3 } else { 10 };
+    let mworkers = 2usize;
+    for &n in counts {
+        let streams =
+            StreamSpec::parse_list(&spec_pool[..n].join(","))
+                .expect("bench stream specs");
+        for (policy, tag) in [
+            (RtPolicy::BestEffort, "best-effort"),
+            (RtPolicy::DropLate { deadline_ms: 5.0 }, "drop5ms"),
+        ] {
+            let mcfg = MultiServeConfig {
+                streams: streams.clone(),
+                frames: mframes,
+                workers: mworkers,
+                queue_depth: 2,
+                policy,
+                seed: 7,
+            };
+            let factories: Vec<ScaleEngineFactory> = (0..mworkers)
+                .map(|_| {
+                    let qmc = qm.clone();
+                    Box::new(move |scale: usize| {
+                        // same fallback rule as `sr-accel serve-multi`
+                        let qm = model_for_scale(Some(&qmc), scale);
+                        Ok(Box::new(Int8Engine::new(qm))
+                            as Box<dyn Engine>)
+                    }) as ScaleEngineFactory
+                })
+                .collect();
+            let rep = serve_multi(&mcfg, factories, |_, _, _| {})
+                .expect("multi-stream serve failed");
+            println!(
+                "--- serving_multi: {n} stream(s), {mworkers} workers, \
+                 {tag} ---"
+            );
+            println!("{}\n", rep.render());
+            let offered: usize =
+                rep.streams.iter().map(|s| s.meta.offered).sum();
+            assert_eq!(offered, mframes * n, "sources must run to end");
+            assert_eq!(
+                offered,
+                rep.frames + rep.dropped + rep.incomplete,
+                "every offered frame accounted for"
+            );
+            if matches!(policy, RtPolicy::BestEffort) {
+                assert_eq!(rep.frames, mframes * n, "best-effort drops");
+            }
+            mjson.push(BenchRecord {
+                name: format!("serving_multi s{n} {tag} aggregate"),
+                ns_per_iter: rep.wall.as_nanos() as f64
+                    / rep.frames.max(1) as f64,
+                mp_per_s: Some(rep.mpix_per_s),
+                macs_per_s: None,
+            });
+            for s in &rep.streams {
+                mjson.push(BenchRecord {
+                    name: format!(
+                        "serving_multi s{n} {tag} stream{} {}",
+                        s.meta.id, s.meta.label
+                    ),
+                    ns_per_iter: rep.wall.as_nanos() as f64
+                        / s.delivered.max(1) as f64,
+                    mp_per_s: Some(s.mpix_per_s),
+                    macs_per_s: None,
+                });
+            }
+            mjson.push_extra(
+                &format!("p95_latency_ms_s{n}_{tag}"),
+                rep.latency_ms.percentile(95.0),
+            );
+            mjson.push_extra(&format!("drop_rate_s{n}_{tag}"), rep.drop_rate);
+        }
+    }
+    match mjson.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_serving_multi.json: {e}");
+            std::process::exit(1);
+        }
+    }
     println!(
         "SHAPE OK: band-sharded N-worker throughput reported against \
-         1-worker whole-frame"
+         1-worker whole-frame; multi-stream aggregate/per-stream MP/s, \
+         p95 latency and drop rate reported vs stream count"
     );
 }

@@ -30,7 +30,9 @@ impl TrafficBreakdown {
 ///
 /// `lr_w x lr_h` LR frame, `scale` upsampling, 8-bit pixels/weights.
 /// For `fused = true` intermediates stay on chip; `halo_frac` adds the
-/// classical-fusion re-read overhead (0 for tilted).
+/// classical-fusion re-read overhead (0 for tilted), accounted in
+/// [`TrafficBreakdown::halo_read`] — `input_read` stays the bare frame
+/// so the two contributions remain separable.
 pub fn frame_traffic_bytes(
     model: &ModelConfig,
     lr_w: usize,
@@ -57,12 +59,12 @@ pub fn frame_traffic_bytes(
         (inter, inter)
     };
     TrafficBreakdown {
-        input_read: input + (input as f64 * halo_frac) as u64,
+        input_read: input,
         output_write: output,
         weight_read: weights,
         intermediate_read: ir,
         intermediate_write: iw,
-        halo_read: 0,
+        halo_read: (input as f64 * halo_frac) as u64,
     }
 }
 
@@ -125,6 +127,26 @@ mod tests {
         assert_eq!(t.intermediate_write, 0);
         assert_eq!(t.input_read, 640 * 360 * 3);
         assert_eq!(t.output_write, 1920 * 1080 * 3);
+        assert_eq!(t.halo_read, 0);
+    }
+
+    #[test]
+    fn halo_traffic_lands_in_halo_read_not_input_read() {
+        // regression: halo bytes used to be folded into input_read
+        // while halo_read stayed 0 forever
+        let base = frame_traffic_bytes(&apbn(), 640, 360, true, 0.0);
+        let haloed = frame_traffic_bytes(&apbn(), 640, 360, true, 0.25);
+        assert_eq!(
+            haloed.input_read, base.input_read,
+            "halo must not inflate input_read"
+        );
+        assert_eq!(haloed.halo_read, 640 * 360 * 3 / 4);
+        assert!(haloed.halo_read > 0);
+        assert_eq!(haloed.total(), base.total() + haloed.halo_read);
+        // and the unfused path accounts the same way
+        let lbl = frame_traffic_bytes(&apbn(), 640, 360, false, 0.5);
+        assert_eq!(lbl.input_read, 640 * 360 * 3);
+        assert_eq!(lbl.halo_read, 640 * 360 * 3 / 2);
     }
 
     #[test]

@@ -96,8 +96,14 @@ COMMANDS:
   serve      run the frame-serving pipeline on synthetic video
              --engine int8|pjrt|sim  --frames N  --workers N
              --queue-depth N  --width N --height N  --source-fps F
-             --shard frame|band  --band-rows N  --halo none|exact|N
+             --shard frame|band  --halo none|exact|N  --band-rows N
              --affinity any|modulo
+  serve-multi  run N concurrent streams over one shared worker pool
+             --streams SPEC[,SPEC...] with SPEC = GEOM@xS[@FPS]
+             (GEOM = WxH or 270p|360p|540p|720p|1080p; e.g.
+              360p@x3,270p@x4@30,960x540@x2)
+             --engine int8|sim  --frames N (per stream)  --workers N
+             --queue-depth N  --policy best-effort|drop:MS  --seed N
   simulate   run one frame through a fusion schedule, print HW stats
              --fusion tilted|classical|block|layer  --width N --height N
              --tile-cols N --tile-rows N  --cycle-exact

@@ -11,8 +11,8 @@ mod types;
 pub use parser::{parse_toml, ParseError, Value};
 pub use types::{
     AcceleratorConfig, FidelityKind, FusionKind, HaloPolicy, ModelConfig,
-    ServeConfig, ShardPlan, ShardStrategy, SimConfig, SystemConfig,
-    WorkerAffinity,
+    RtPolicy, ServeConfig, ShardPlan, ShardStrategy, SimConfig, StreamSpec,
+    SystemConfig, WorkerAffinity,
 };
 
 #[cfg(test)]

@@ -91,6 +91,16 @@ impl Value {
             })
             .collect()
     }
+
+    pub fn get_str_array(&self, path: &str) -> Option<Vec<&str>> {
+        self.get_array(path)?
+            .iter()
+            .map(|v| match v {
+                Value::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect()
+    }
 }
 
 fn err(line: usize, msg: impl Into<String>) -> ParseError {
@@ -255,6 +265,18 @@ mod tests {
     fn empty_array() {
         let v = parse_toml("xs = []").unwrap();
         assert!(v.get_array("xs").unwrap().is_empty());
+    }
+
+    #[test]
+    fn string_arrays() {
+        // serve.streams is an array of stream-spec strings
+        let v = parse_toml("xs = [\"360p@x3\", \"270p@x4\"]").unwrap();
+        assert_eq!(
+            v.get_str_array("xs").unwrap(),
+            vec!["360p@x3", "270p@x4"]
+        );
+        let v = parse_toml("xs = [1, \"a\"]").unwrap();
+        assert_eq!(v.get_str_array("xs"), None, "mixed array must not coerce");
     }
 
     #[test]

@@ -312,6 +312,153 @@ impl Default for ShardPlan {
     }
 }
 
+/// Real-time policy of the multi-stream serving front-end
+/// (`coordinator::server`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RtPolicy {
+    /// Block the sources on a full admission queue; never shed a
+    /// frame.  Delivered output is bit-identical to running each
+    /// stream alone (`rust/tests/multi_stream_equivalence.rs`).
+    BestEffort,
+    /// Shed frames: at admission when the shared queue is full, and at
+    /// dequeue when a frame has outlived `emitted + deadline_ms`.
+    /// Sheds are counted per stream and reported as a drop rate.
+    DropLate {
+        /// Frame deadline in milliseconds from source emission.
+        deadline_ms: f64,
+    },
+}
+
+impl RtPolicy {
+    /// `best-effort` (alias `block`) or `drop:<deadline ms>`
+    /// (e.g. `drop:16.7` for a 60 fps display budget).
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "best-effort" || s == "block" {
+            return Some(Self::BestEffort);
+        }
+        let ms = s.strip_prefix("drop:")?;
+        let v: f64 = ms.parse().ok()?;
+        if v.is_finite() && v >= 0.0 {
+            Some(Self::DropLate { deadline_ms: v })
+        } else {
+            None
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Self::BestEffort => "best-effort".into(),
+            Self::DropLate { deadline_ms } => format!("drop:{deadline_ms}"),
+        }
+    }
+}
+
+/// One stream of the multi-stream serving front-end: LR geometry,
+/// upscale factor, optional source pacing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamSpec {
+    /// The spec string this was parsed from (report/log identity).
+    pub label: String,
+    pub lr_w: usize,
+    pub lr_h: usize,
+    pub scale: usize,
+    /// Source pacing in frames/s (None = as fast as the pool drains).
+    pub fps: Option<f64>,
+}
+
+impl StreamSpec {
+    /// Parse one spec: `GEOM@xSCALE[@FPS]` where `GEOM` is `WxH` or a
+    /// preset (`270p|360p|540p|720p|1080p`).  Examples: `360p@x3`,
+    /// `480x270@x4@30`, `960x540@x2@60fps`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        let mut parts = s.split('@');
+        let geom = parts
+            .next()
+            .filter(|g| !g.is_empty())
+            .ok_or_else(|| format!("empty geometry in stream spec {s:?}"))?;
+        let (lr_w, lr_h) = match geom {
+            "270p" => (480, 270),
+            "360p" => (640, 360),
+            "540p" => (960, 540),
+            "720p" => (1280, 720),
+            "1080p" => (1920, 1080),
+            _ => {
+                let (w, h) = geom.split_once('x').ok_or_else(|| {
+                    format!(
+                        "bad stream geometry {geom:?} \
+                         (WxH or 270p|360p|540p|720p|1080p)"
+                    )
+                })?;
+                let w: usize = w
+                    .parse()
+                    .map_err(|_| format!("bad stream width {w:?}"))?;
+                let h: usize = h
+                    .parse()
+                    .map_err(|_| format!("bad stream height {h:?}"))?;
+                (w, h)
+            }
+        };
+        let sc = parts.next().ok_or_else(|| {
+            format!("stream spec {s:?} is missing its scale (e.g. 360p@x3)")
+        })?;
+        let scale: usize = sc
+            .strip_prefix('x')
+            .ok_or_else(|| {
+                format!("stream scale must look like x3, got {sc:?}")
+            })?
+            .parse()
+            .map_err(|_| format!("bad stream scale {sc:?}"))?;
+        let fps = match parts.next() {
+            None => None,
+            Some(f) => {
+                let f = f.strip_suffix("fps").unwrap_or(f);
+                let v: f64 = f
+                    .parse()
+                    .map_err(|_| format!("bad stream fps {f:?}"))?;
+                if !v.is_finite() || v <= 0.0 {
+                    return Err(format!("stream fps must be > 0, got {v}"));
+                }
+                Some(v)
+            }
+        };
+        if let Some(extra) = parts.next() {
+            return Err(format!(
+                "trailing field {extra:?} in stream spec {s:?}"
+            ));
+        }
+        if lr_w == 0 || lr_h == 0 {
+            return Err(format!(
+                "stream geometry must be nonzero, got {lr_w}x{lr_h}"
+            ));
+        }
+        if scale == 0 || scale > 8 {
+            return Err(format!("stream scale must be in 1..=8, got {scale}"));
+        }
+        Ok(Self {
+            label: s.to_string(),
+            lr_w,
+            lr_h,
+            scale,
+            fps,
+        })
+    }
+
+    /// Parse a comma-separated spec list (the `--streams` syntax).
+    pub fn parse_list(s: &str) -> Result<Vec<Self>, String> {
+        let specs: Vec<Self> = s
+            .split(',')
+            .filter(|p| !p.trim().is_empty())
+            .map(Self::parse)
+            .collect::<Result<_, _>>()?;
+        if specs.is_empty() {
+            return Err("no stream specs given".into());
+        }
+        Ok(specs)
+    }
+
+}
+
 /// Serving pipeline parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
@@ -321,6 +468,10 @@ pub struct ServeConfig {
     pub source: String,
     pub engine: String,
     pub shard: ShardPlan,
+    /// Real-time policy of `serve-multi`.
+    pub policy: RtPolicy,
+    /// Streams served by `serve-multi` when the CLI gives none.
+    pub streams: Vec<StreamSpec>,
 }
 
 impl Default for ServeConfig {
@@ -332,6 +483,8 @@ impl Default for ServeConfig {
             source: "synthetic".into(),
             engine: "int8".into(),
             shard: ShardPlan::whole_frame(),
+            policy: RtPolicy::BestEffort,
+            streams: Vec::new(),
         }
     }
 }
@@ -477,6 +630,32 @@ fn apply(cfg: &mut SystemConfig, v: &Value) -> Result<(), ParseError> {
                 perr(format!("unknown serve.affinity {s:?} (any|modulo)"))
             })?;
     }
+    if let Some(s) = v.get_str("serve.policy") {
+        cfg.serve.policy = RtPolicy::parse(s).ok_or_else(|| {
+            perr(format!(
+                "unknown serve.policy {s:?} (best-effort|drop:MS)"
+            ))
+        })?;
+    }
+    match v.get("serve.streams") {
+        None => {}
+        Some(Value::Array(_)) => {
+            let xs = v.get_str_array("serve.streams").ok_or_else(|| {
+                perr("serve.streams must be an array of strings".into())
+            })?;
+            cfg.serve.streams = xs
+                .iter()
+                .map(|s| StreamSpec::parse(s))
+                .collect::<Result<_, _>>()
+                .map_err(perr)?;
+        }
+        Some(other) => {
+            return Err(perr(format!(
+                "serve.streams must be an array of stream specs, \
+                 got {other:?}"
+            )));
+        }
+    }
     Ok(())
 }
 
@@ -594,5 +773,112 @@ mod tests {
         let c = SystemConfig::default();
         assert_eq!(c.serve.shard, ShardPlan::whole_frame());
         assert_eq!(c.serve.shard.describe(), "whole-frame");
+    }
+
+    #[test]
+    fn rt_policy_parse_and_name() {
+        assert_eq!(RtPolicy::parse("best-effort"), Some(RtPolicy::BestEffort));
+        assert_eq!(RtPolicy::parse("block"), Some(RtPolicy::BestEffort));
+        assert_eq!(
+            RtPolicy::parse("drop:16.7"),
+            Some(RtPolicy::DropLate { deadline_ms: 16.7 })
+        );
+        assert_eq!(
+            RtPolicy::parse("drop:0"),
+            Some(RtPolicy::DropLate { deadline_ms: 0.0 })
+        );
+        assert_eq!(RtPolicy::parse("drop:-1"), None);
+        assert_eq!(RtPolicy::parse("drop:nope"), None);
+        assert_eq!(RtPolicy::parse("shed"), None);
+        assert_eq!(RtPolicy::BestEffort.name(), "best-effort");
+        assert_eq!(
+            RtPolicy::DropLate { deadline_ms: 16.7 }.name(),
+            "drop:16.7"
+        );
+        // name() round-trips through parse()
+        for p in [RtPolicy::BestEffort, RtPolicy::DropLate { deadline_ms: 5.0 }]
+        {
+            assert_eq!(RtPolicy::parse(&p.name()), Some(p));
+        }
+    }
+
+    #[test]
+    fn stream_spec_parses_presets_and_explicit_geometry() {
+        let s = StreamSpec::parse("360p@x3").unwrap();
+        assert_eq!((s.lr_w, s.lr_h, s.scale, s.fps), (640, 360, 3, None));
+        assert_eq!(s.label, "360p@x3");
+        let s = StreamSpec::parse("480x270@x4@30").unwrap();
+        assert_eq!((s.lr_w, s.lr_h, s.scale), (480, 270, 4));
+        assert_eq!(s.fps, Some(30.0));
+        let s = StreamSpec::parse("960x540@x2@60fps").unwrap();
+        assert_eq!((s.lr_w, s.lr_h, s.scale), (960, 540, 2));
+        assert_eq!(s.fps, Some(60.0));
+        for preset in ["270p", "540p", "720p", "1080p"] {
+            let s = StreamSpec::parse(&format!("{preset}@x2")).unwrap();
+            assert!(s.lr_w > 0 && s.lr_h > 0);
+        }
+    }
+
+    #[test]
+    fn stream_spec_rejections() {
+        for bad in [
+            "360p",            // no scale
+            "360p@3",          // scale missing the x
+            "360p@x0",         // zero scale
+            "360p@x9",         // scale out of range
+            "0x5@x2",          // zero width
+            "5x0@x2",          // zero height
+            "axb@x2",          // unparsable dims
+            "999p@x2",         // unknown preset
+            "360p@x3@0",       // zero fps
+            "360p@x3@-2",      // negative fps
+            "360p@x3@30@oops", // trailing field
+            "@x3",             // empty geometry
+            "",                // empty spec
+        ] {
+            assert!(StreamSpec::parse(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn stream_spec_list_parses_and_rejects() {
+        let specs =
+            StreamSpec::parse_list("360p@x3, 270p@x4,960x540@x2").unwrap();
+        assert_eq!(specs.len(), 3);
+        assert_eq!(specs[1].lr_h, 270);
+        assert_eq!(specs[2].scale, 2);
+        assert!(StreamSpec::parse_list("").is_err());
+        assert!(StreamSpec::parse_list(" , ").is_err());
+        assert!(StreamSpec::parse_list("360p@x3,bogus").is_err());
+    }
+
+    #[test]
+    fn serve_policy_and_streams_roundtrip_through_toml() {
+        let c = SystemConfig::from_toml(
+            "[serve]\npolicy = \"drop:16.7\"\n\
+             streams = [\"360p@x3\", \"270p@x4@30\"]\n",
+        )
+        .unwrap();
+        assert_eq!(c.serve.policy, RtPolicy::DropLate { deadline_ms: 16.7 });
+        assert_eq!(c.serve.streams.len(), 2);
+        assert_eq!(c.serve.streams[0].lr_w, 640);
+        assert_eq!(c.serve.streams[1].fps, Some(30.0));
+        // defaults: best-effort, no streams
+        let d = SystemConfig::default();
+        assert_eq!(d.serve.policy, RtPolicy::BestEffort);
+        assert!(d.serve.streams.is_empty());
+    }
+
+    #[test]
+    fn serve_policy_and_streams_rejections() {
+        for bad in [
+            "[serve]\npolicy = \"sometimes\"",
+            "[serve]\npolicy = \"drop:\"",
+            "[serve]\nstreams = [\"360p\"]",
+            "[serve]\nstreams = [3]",
+            "[serve]\nstreams = \"360p@x3\"",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
     }
 }

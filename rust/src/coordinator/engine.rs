@@ -195,6 +195,20 @@ impl Engine for SimEngine {
     }
 }
 
+/// Model for one upscale factor: `trained` when its scale matches,
+/// otherwise the APBN-shaped deterministic test model at that scale —
+/// the shared fallback rule of `serve-multi` and the serving benches,
+/// so the CLI and `BENCH_serving_multi.json` measure the same engines.
+pub fn model_for_scale(
+    trained: Option<&QuantModel>,
+    scale: usize,
+) -> QuantModel {
+    match trained {
+        Some(qm) if qm.scale == scale => qm.clone(),
+        _ => QuantModel::test_model(7, 3, 28, scale, 0),
+    }
+}
+
 /// Build an engine by kind; `artifact` lets callers pick AOT modules.
 pub fn build_engine(
     kind: EngineKind,
@@ -268,6 +282,23 @@ mod tests {
             int8.upscale(&lr).unwrap()
         );
         assert!(sim.last_stats().is_some());
+    }
+
+    #[test]
+    fn model_for_scale_prefers_matching_trained_weights() {
+        let trained = QuantModel::test_model(2, 3, 4, 3, 7);
+        let m = model_for_scale(Some(&trained), 3);
+        assert_eq!(m.scale, 3);
+        assert_eq!(m.channels(), trained.channels());
+        assert_eq!(m.layers[0].w, trained.layers[0].w);
+        // mismatched scale falls back to the APBN-shaped test model
+        let m = model_for_scale(Some(&trained), 2);
+        assert_eq!(m.scale, 2);
+        assert_eq!(m.n_layers(), 7);
+        let m = model_for_scale(None, 4);
+        assert_eq!(m.scale, 4);
+        // deterministic: same fallback every time
+        assert_eq!(model_for_scale(None, 4).layers[0].w, m.layers[0].w);
     }
 
     #[test]

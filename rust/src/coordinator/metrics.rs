@@ -1,10 +1,20 @@
-//! Pipeline metrics: per-frame records and the aggregated report.
+//! Pipeline metrics: per-frame records, per-stream delivery summaries
+//! and the aggregated report.
 //!
 //! With band sharding a "frame record" is the merge of its bands:
 //! latency spans first emit to last band completion, queue wait is the
 //! worst band's, compute is the summed engine time, and hardware
 //! [`RunStats`] (engines that model them) merge across bands via
 //! [`RunStats::merge`].
+//!
+//! With multi-stream serving (`coordinator::server`) every record also
+//! carries its stream id, and the report breaks delivery down per
+//! stream ([`StreamSummary`]): mixed geometries mean a single
+//! pixels-per-frame scalar cannot express throughput, so HR Mpix/s is
+//! accumulated per stream and summed for the aggregate.  Frames a
+//! stream *offered* but that were neither delivered nor dropped —
+//! e.g. lost inside a dead worker, or parked behind such a loss — are
+//! surfaced as `incomplete` instead of silently missing from `frames`.
 
 use std::time::Duration;
 
@@ -14,6 +24,8 @@ use crate::util::stats::Summary;
 /// Timing of one frame through the pipeline.
 #[derive(Clone, Debug)]
 pub struct FrameRecord {
+    /// Stream this frame belongs to (0 for single-stream pipelines).
+    pub stream: usize,
     pub index: usize,
     /// Time from first band emit to last band completion.
     pub latency: Duration,
@@ -29,38 +41,114 @@ pub struct FrameRecord {
     pub stats: Option<RunStats>,
 }
 
-/// Aggregated serving report (printed by `sr-accel serve` and logged in
-/// EXPERIMENTS.md E7).
+/// Identity and source-side accounting of one stream, supplied by the
+/// pipeline (single-stream runs pass exactly one).
+#[derive(Clone, Debug)]
+pub struct StreamMeta {
+    /// Stream id — must equal the `stream` field of its records.
+    pub id: usize,
+    /// Human-readable identity (the stream-spec string).
+    pub label: String,
+    pub lr_w: usize,
+    pub lr_h: usize,
+    pub scale: usize,
+    /// Frames the source actually generated for this stream.
+    pub offered: usize,
+    /// Frames shed by the drop policy (admission or deadline).
+    pub dropped: usize,
+}
+
+impl StreamMeta {
+    pub fn hr_pixels(&self) -> usize {
+        self.lr_w * self.scale * self.lr_h * self.scale
+    }
+}
+
+/// Per-stream delivery summary derived from the frame records.
+#[derive(Clone, Debug)]
+pub struct StreamSummary {
+    pub meta: StreamMeta,
+    /// Frames handed to `on_frame` in display order.
+    pub delivered: usize,
+    /// Offered but neither delivered nor dropped (lost to a dead
+    /// worker, or parked behind such a loss).
+    pub incomplete: usize,
+    /// `dropped / offered` (0 when nothing was offered).
+    pub drop_rate: f64,
+    pub latency_ms: Summary,
+    /// Delivered HR megapixels per second of wall time.
+    pub mpix_per_s: f64,
+}
+
+/// Aggregated serving report (printed by `sr-accel serve` /
+/// `serve-multi` and logged in EXPERIMENTS.md E7).
 #[derive(Clone, Debug)]
 pub struct PipelineReport {
+    /// Frames delivered in display order, across all streams.
     pub frames: usize,
     pub wall: Duration,
     pub fps: f64,
     pub latency_ms: Summary,
     pub queue_wait_ms: Summary,
     pub compute_ms: Summary,
+    /// Stable engine rendering: the single name when all workers
+    /// agree, else per-worker names joined with `+` in worker order.
     pub engine: String,
+    /// Per-worker engine names, indexed by worker id.  An empty slot
+    /// means the worker never built an engine: it failed before
+    /// construction, or — under a drop policy — only ever shed
+    /// already-late frames (check [`PipelineReport::errors`] to tell
+    /// the two apart).
+    pub engines: Vec<String>,
     pub workers: usize,
-    /// HR megapixels per second of wall time.
+    /// Aggregate delivered HR megapixels per second of wall time.
     pub mpix_per_s: f64,
-    /// Shard-plan description (`ShardPlan::describe`).
+    /// Shard/serving-plan description.
     pub plan: String,
+    /// Frames shed by the drop policy, across all streams.
+    pub dropped: usize,
+    /// Frames offered but neither delivered nor dropped.
+    pub incomplete: usize,
+    /// `dropped / offered` across all streams.
+    pub drop_rate: f64,
+    /// Per-stream breakdown (single-stream runs have exactly one).
+    pub streams: Vec<StreamSummary>,
+    /// Worker errors — a report with errors is partial.
+    pub errors: Vec<String>,
     /// Hardware stats merged across all frames (None for engines that
     /// do not model hardware).
     pub hw: Option<RunStats>,
+}
+
+/// Stable engine-name rendering: empty slots (a worker that never
+/// built an engine — early failure, or a drop-policy worker that only
+/// shed frames) show as `?`.
+fn render_engines(engines: &[String]) -> String {
+    let shown: Vec<&str> = engines
+        .iter()
+        .map(|e| if e.is_empty() { "?" } else { e.as_str() })
+        .collect();
+    match shown.first() {
+        None => "?".to_string(),
+        Some(first) if shown.iter().all(|e| e == first) => {
+            (*first).to_string()
+        }
+        _ => shown.join("+"),
+    }
 }
 
 impl PipelineReport {
     pub fn from_records(
         records: &[FrameRecord],
         wall: Duration,
-        engine: &str,
+        engines: &[String],
         workers: usize,
-        hr_pixels_per_frame: usize,
         plan: &str,
+        streams: Vec<StreamMeta>,
     ) -> Self {
         let to_ms = |d: &Duration| d.as_secs_f64() * 1e3;
-        let fps = records.len() as f64 / wall.as_secs_f64().max(1e-12);
+        let secs = wall.as_secs_f64().max(1e-12);
+        let fps = records.len() as f64 / secs;
         let mut hw: Option<RunStats> = None;
         for r in records {
             if let Some(s) = &r.stats {
@@ -70,6 +158,34 @@ impl PipelineReport {
                 }
             }
         }
+        let mut hr_px_total = 0.0f64;
+        let summaries: Vec<StreamSummary> = streams
+            .into_iter()
+            .map(|meta| {
+                let latencies: Vec<f64> = records
+                    .iter()
+                    .filter(|r| r.stream == meta.id)
+                    .map(|r| to_ms(&r.latency))
+                    .collect();
+                let delivered = latencies.len();
+                let hr_px = meta.hr_pixels() as f64 * delivered as f64;
+                hr_px_total += hr_px;
+                StreamSummary {
+                    delivered,
+                    incomplete: meta
+                        .offered
+                        .saturating_sub(meta.dropped + delivered),
+                    drop_rate: rate(meta.dropped, meta.offered),
+                    latency_ms: Summary::from_samples(latencies),
+                    mpix_per_s: hr_px / secs / 1e6,
+                    meta,
+                }
+            })
+            .collect();
+        let offered: usize = summaries.iter().map(|s| s.meta.offered).sum();
+        let dropped: usize = summaries.iter().map(|s| s.meta.dropped).sum();
+        let incomplete: usize =
+            summaries.iter().map(|s| s.incomplete).sum();
         Self {
             frames: records.len(),
             wall,
@@ -83,10 +199,16 @@ impl PipelineReport {
             compute_ms: Summary::from_samples(
                 records.iter().map(|r| to_ms(&r.compute)).collect(),
             ),
-            engine: engine.to_string(),
+            engine: render_engines(engines),
+            engines: engines.to_vec(),
             workers,
-            mpix_per_s: fps * hr_pixels_per_frame as f64 / 1e6,
+            mpix_per_s: hr_px_total / secs / 1e6,
             plan: plan.to_string(),
+            dropped,
+            incomplete,
+            drop_rate: rate(dropped, offered),
+            streams: summaries,
+            errors: Vec::new(),
             hw,
         }
     }
@@ -113,6 +235,41 @@ impl PipelineReport {
             self.compute_ms.median(),
             self.compute_ms.percentile(95.0),
         );
+        if self.dropped > 0 || self.incomplete > 0 {
+            out.push_str(&format!(
+                "\ndelivery: {} delivered  {} dropped ({:.1} %)  \
+                 {} incomplete",
+                self.frames,
+                self.dropped,
+                self.drop_rate * 100.0,
+                self.incomplete,
+            ));
+        }
+        if self.streams.len() > 1 {
+            for s in &self.streams {
+                out.push_str(&format!(
+                    "\n  stream {} [{}] {}x{}@x{}: {}/{} delivered  \
+                     drop {:.1} %  p95 {:.2} ms  {:.1} Mpix/s",
+                    s.meta.id,
+                    s.meta.label,
+                    s.meta.lr_w,
+                    s.meta.lr_h,
+                    s.meta.scale,
+                    s.delivered,
+                    s.meta.offered,
+                    s.drop_rate * 100.0,
+                    s.latency_ms.percentile(95.0),
+                    s.mpix_per_s,
+                ));
+            }
+        }
+        if !self.errors.is_empty() {
+            out.push_str(&format!(
+                "\nworker errors ({}): {}",
+                self.errors.len(),
+                self.errors.join("; ")
+            ));
+        }
         if let Some(hw) = &self.hw {
             let frames = self.frames.max(1) as f64;
             out.push_str(&format!(
@@ -128,12 +285,21 @@ impl PipelineReport {
     }
 }
 
+fn rate(part: usize, whole: usize) -> f64 {
+    if whole == 0 {
+        0.0
+    } else {
+        part as f64 / whole as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn rec(i: usize, ms: u64) -> FrameRecord {
         FrameRecord {
+            stream: 0,
             index: i,
             latency: Duration::from_millis(ms),
             queue_wait: Duration::from_millis(ms / 4),
@@ -143,25 +309,52 @@ mod tests {
         }
     }
 
+    fn meta(id: usize, lr_w: usize, lr_h: usize, scale: usize) -> StreamMeta {
+        StreamMeta {
+            id,
+            label: format!("{lr_w}x{lr_h}@x{scale}"),
+            lr_w,
+            lr_h,
+            scale,
+            offered: 0,
+            dropped: 0,
+        }
+    }
+
+    fn names(n: &[&str]) -> Vec<String> {
+        n.iter().map(|s| s.to_string()).collect()
+    }
+
     #[test]
     fn report_aggregates() {
         let records: Vec<_> = (0..10).map(|i| rec(i, 10 + i as u64)).collect();
         let rep = PipelineReport::from_records(
             &records,
             Duration::from_secs(1),
-            "int8",
+            &names(&["int8", "int8"]),
             2,
-            1920 * 1080,
             "whole-frame",
+            vec![StreamMeta {
+                offered: 10,
+                ..meta(0, 640, 360, 3)
+            }],
         );
         assert_eq!(rep.frames, 10);
         assert!((rep.fps - 10.0).abs() < 1e-9);
         assert!(rep.latency_ms.median() >= 10.0);
         assert!((rep.mpix_per_s - 20.736).abs() < 1e-3);
+        assert_eq!(rep.engine, "int8");
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.incomplete, 0);
+        assert_eq!(rep.streams.len(), 1);
+        assert_eq!(rep.streams[0].delivered, 10);
+        assert!((rep.streams[0].mpix_per_s - rep.mpix_per_s).abs() < 1e-9);
         assert!(rep.hw.is_none());
         assert!(rep.render().contains("throughput"));
         assert!(rep.render().contains("plan=whole-frame"));
         assert!(!rep.render().contains("hw:"));
+        assert!(!rep.render().contains("delivery:"));
+        assert!(!rep.render().contains("worker errors"));
     }
 
     #[test]
@@ -182,10 +375,13 @@ mod tests {
         let rep = PipelineReport::from_records(
             &records,
             Duration::from_secs(1),
-            "sim",
+            &names(&["sim", "sim"]),
             2,
-            100,
             "row-bands(rows=6, halo=none, affinity=any)",
+            vec![StreamMeta {
+                offered: 4,
+                ..meta(0, 10, 10, 1)
+            }],
         );
         let hw = rep.hw.as_ref().unwrap();
         assert_eq!(hw.compute_cycles, 4000);
@@ -193,5 +389,91 @@ mod tests {
         assert!((hw.utilization() - 0.8).abs() < 1e-12);
         assert!(rep.render().contains("hw:"));
         assert!(rep.render().contains("row-bands"));
+    }
+
+    #[test]
+    fn heterogeneous_engine_names_render_stably() {
+        assert_eq!(render_engines(&[]), "?");
+        assert_eq!(render_engines(&names(&["int8"])), "int8");
+        assert_eq!(render_engines(&names(&["int8", "int8"])), "int8");
+        assert_eq!(render_engines(&names(&["int8", "sim"])), "int8+sim");
+        assert_eq!(
+            render_engines(&names(&["int8", "", "sim"])),
+            "int8+?+sim"
+        );
+    }
+
+    #[test]
+    fn multi_stream_report_attributes_pixels_per_stream() {
+        // stream 0: 10x10 @ x2 (400 HR px/frame), 3 delivered
+        // stream 1: 20x10 @ x3 (1800 HR px/frame), 2 delivered
+        let mut records: Vec<_> =
+            (0..3).map(|i| FrameRecord { stream: 0, ..rec(i, 8) }).collect();
+        records.extend(
+            (0..2).map(|i| FrameRecord { stream: 1, ..rec(i, 20) }),
+        );
+        let rep = PipelineReport::from_records(
+            &records,
+            Duration::from_secs(1),
+            &names(&["int8"]),
+            1,
+            "multi-stream(2 streams, policy=best-effort)",
+            vec![
+                StreamMeta {
+                    offered: 3,
+                    ..meta(0, 10, 10, 2)
+                },
+                StreamMeta {
+                    offered: 4,
+                    dropped: 1,
+                    ..meta(1, 20, 10, 3)
+                },
+            ],
+        );
+        assert_eq!(rep.frames, 5);
+        assert_eq!(rep.streams.len(), 2);
+        let (s0, s1) = (&rep.streams[0], &rep.streams[1]);
+        assert_eq!((s0.delivered, s0.incomplete), (3, 0));
+        assert!((s0.mpix_per_s - 3.0 * 400.0 / 1e6).abs() < 1e-12);
+        // stream 1: 4 offered = 2 delivered + 1 dropped + 1 incomplete
+        assert_eq!((s1.delivered, s1.incomplete), (2, 1));
+        assert!((s1.drop_rate - 0.25).abs() < 1e-12);
+        assert!((s1.mpix_per_s - 2.0 * 1800.0 / 1e6).abs() < 1e-12);
+        // aggregate sums the per-stream pixel rates
+        assert!(
+            (rep.mpix_per_s - (s0.mpix_per_s + s1.mpix_per_s)).abs() < 1e-12
+        );
+        assert_eq!(rep.dropped, 1);
+        assert_eq!(rep.incomplete, 1);
+        assert!((rep.drop_rate - 1.0 / 7.0).abs() < 1e-12);
+        // per-stream latency summaries split correctly
+        assert!((s0.latency_ms.max() - 8.0).abs() < 1e-9);
+        assert!((s1.latency_ms.max() - 20.0).abs() < 1e-9);
+        let r = rep.render();
+        assert!(r.contains("delivery: 5 delivered  1 dropped"));
+        assert!(r.contains("stream 0 [10x10@x2]"));
+        assert!(r.contains("stream 1 [20x10@x3]"));
+    }
+
+    #[test]
+    fn worker_errors_render() {
+        let records = vec![rec(0, 5)];
+        let mut rep = PipelineReport::from_records(
+            &records,
+            Duration::from_secs(1),
+            &names(&["int8", ""]),
+            2,
+            "whole-frame",
+            vec![StreamMeta {
+                offered: 3,
+                ..meta(0, 8, 8, 3)
+            }],
+        );
+        rep.errors.push("engine exploded after 1 frame".into());
+        assert_eq!(rep.engine, "int8+?");
+        assert_eq!(rep.incomplete, 2);
+        let r = rep.render();
+        assert!(r.contains("worker errors (1): engine exploded"));
+        assert!(r.contains("2 incomplete"));
     }
 }

@@ -11,17 +11,26 @@
 //! No tokio in this offline environment — std threads + `sync_channel`
 //! provide the same bounded-queue semantics (documented substitution,
 //! DESIGN.md §3).
+//!
+//! On top of the single-stream pipeline sits the multi-stream serving
+//! front-end (`coordinator::server`): N paced streams with
+//! heterogeneous geometries/scales admitted into one shared worker
+//! pool under a configurable real-time policy (block vs shed-late).
 
 pub mod engine;
 pub mod metrics;
 pub mod pipeline;
+pub mod server;
 pub mod shard;
 
 pub use engine::{
     Engine, EngineFactory, EngineKind, Int8Engine, PjrtEngine, SimEngine,
 };
-pub use metrics::{FrameRecord, PipelineReport};
+pub use metrics::{FrameRecord, PipelineReport, StreamMeta, StreamSummary};
 pub use pipeline::{run_pipeline, PipelineConfig};
+pub use server::{
+    serve_multi, stream_seed, MultiServeConfig, ScaleEngineFactory,
+};
 pub use shard::{
     crop_hr_band, plan_bands, BandSpec, DoneBand, Reassembler, ShardPlan,
 };

@@ -28,7 +28,7 @@ use crate::config::{ShardPlan, ShardStrategy, WorkerAffinity};
 use crate::image::{ImageU8, SceneGenerator};
 
 use super::engine::EngineFactory;
-use super::metrics::PipelineReport;
+use super::metrics::{PipelineReport, StreamMeta};
 use super::shard::{crop_hr_band, plan_bands, BandSpec, DoneBand, Reassembler};
 
 /// Pipeline parameters.
@@ -97,6 +97,13 @@ impl WorkSource {
 /// not `Send`).  `on_frame` is invoked from the collector thread, in
 /// display order, while the pipeline is still running; the frame buffer
 /// it borrows is recycled immediately after it returns.
+///
+/// A worker that errors mid-run (engine failure) does not sink the
+/// whole pipeline: surviving workers keep serving, the error is
+/// recorded in [`PipelineReport::errors`], and the frames the dead
+/// worker had in flight — plus any parked behind them — surface as
+/// [`PipelineReport::incomplete`] instead of silently vanishing from
+/// the counts.  `Err` is returned only when *nothing* was delivered.
 pub fn run_pipeline(
     cfg: &PipelineConfig,
     factories: Vec<EngineFactory>,
@@ -135,26 +142,32 @@ pub fn run_pipeline(
     let done_cap = (cfg.queue_depth * n_bands.max(1) * 2).max(8);
     let (done_tx, done_rx) = sync_channel::<DoneBand>(done_cap);
 
-    let engine_name = Arc::new(Mutex::new(String::new()));
+    // Per-worker engine names, indexed by worker id — no shared slot
+    // to race on, so heterogeneous pools report deterministically.
+    let engine_names =
+        Arc::new(Mutex::new(vec![String::new(); cfg.workers]));
     let t0 = Instant::now();
     let scale = cfg.scale;
     let (lr_h, lr_w) = (cfg.lr_h, cfg.lr_w);
     let frames = cfg.frames;
 
-    let (records, worker_err) = thread::scope(|s| {
+    let (records, errors, offered) = thread::scope(|s| {
         // --- workers -------------------------------------------------
         let mut handles = Vec::new();
-        for (factory, source) in factories.into_iter().zip(sources) {
+        for (wi, (factory, source)) in
+            factories.into_iter().zip(sources).enumerate()
+        {
             let tx = done_tx.clone();
-            let name_slot = Arc::clone(&engine_name);
+            let names = Arc::clone(&engine_names);
             handles.push(s.spawn(move || -> Result<()> {
                 let mut engine = factory()?;
-                *name_slot.lock().unwrap() = engine.name().to_string();
+                names.lock().unwrap()[wi] = engine.name().to_string();
                 while let Some(item) = source.recv() {
                     let dequeued = Instant::now();
                     let hr_ext = engine.upscale(&item.lr)?;
                     let hr = crop_hr_band(&hr_ext, &item.spec, scale);
                     let done = DoneBand {
+                        stream: 0,
                         frame: item.frame,
                         spec: item.spec,
                         n_bands: item.n_bands,
@@ -195,7 +208,9 @@ pub fn run_pipeline(
             .source_fps
             .map(|f| Duration::from_secs_f64(1.0 / f));
         let mut next_emit = Instant::now();
+        let mut offered = 0usize;
         'source: for i in 0..cfg.frames {
+            offered = i + 1;
             if let Some(iv) = frame_interval {
                 let now = Instant::now();
                 if now < next_emit {
@@ -225,29 +240,42 @@ pub fn run_pipeline(
         }
         drop(senders);
 
-        let mut worker_err = None;
+        let mut errors = Vec::new();
         for h in handles {
             if let Err(e) = h.join().expect("worker panicked") {
-                worker_err.get_or_insert(e);
+                errors.push(format!("{e:#}"));
             }
         }
         let records = collector.join().expect("collector panicked");
-        (records, worker_err)
+        (records, errors, offered)
     });
-    if let Some(e) = worker_err {
-        return Err(e);
+    if records.is_empty() && !errors.is_empty() {
+        return Err(anyhow::anyhow!(
+            "pipeline delivered no frames: {}",
+            errors.join("; ")
+        ));
     }
     let wall = t0.elapsed();
-    let hr_px = cfg.lr_w * cfg.scale * cfg.lr_h * cfg.scale;
-    let name = engine_name.lock().unwrap().clone();
-    Ok(PipelineReport::from_records(
+    let names = engine_names.lock().unwrap().clone();
+    let meta = StreamMeta {
+        id: 0,
+        label: format!("{}x{}@x{}", cfg.lr_w, cfg.lr_h, cfg.scale),
+        lr_w: cfg.lr_w,
+        lr_h: cfg.lr_h,
+        scale: cfg.scale,
+        offered,
+        dropped: 0,
+    };
+    let mut report = PipelineReport::from_records(
         &records,
         wall,
-        &name,
+        &names,
         cfg.workers,
-        hr_px,
         &cfg.shard.describe(),
-    ))
+        vec![meta],
+    );
+    report.errors = errors;
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -355,5 +383,128 @@ mod tests {
         let mut b = Vec::new();
         run_pipeline(&cfg, engines(1), |_, hr| b.push(hr.clone())).unwrap();
         assert_eq!(a, b);
+    }
+
+    /// Upscales `ok_frames` frames, then errors — the worker-death
+    /// failure injection for the incomplete-frame accounting tests.
+    struct FailingEngine {
+        inner: Int8Engine,
+        ok_frames: usize,
+        done: usize,
+    }
+
+    impl FailingEngine {
+        fn new(ok_frames: usize) -> Self {
+            Self {
+                inner: Int8Engine::new(QuantModel::test_model(2, 3, 4, 3, 9)),
+                ok_frames,
+                done: 0,
+            }
+        }
+    }
+
+    impl crate::coordinator::Engine for FailingEngine {
+        fn upscale(
+            &mut self,
+            lr: &crate::image::ImageU8,
+        ) -> Result<crate::image::ImageU8> {
+            if self.done == self.ok_frames {
+                anyhow::bail!("injected failure after {} frames", self.done);
+            }
+            self.done += 1;
+            self.inner.upscale(lr)
+        }
+
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    #[test]
+    fn worker_death_surfaces_incomplete_frames_in_report() {
+        let cfg = tiny_cfg(8, 1);
+        let factories: Vec<EngineFactory> = vec![Box::new(|| {
+            Ok(Box::new(FailingEngine::new(3))
+                as Box<dyn crate::coordinator::Engine>)
+        })];
+        let mut seen = Vec::new();
+        let rep =
+            run_pipeline(&cfg, factories, |i, _| seen.push(i)).unwrap();
+        // frames 0..3 delivered; frame 3 died inside the worker
+        assert_eq!(seen, vec![0, 1, 2]);
+        assert_eq!(rep.frames, 3);
+        assert_eq!(rep.errors.len(), 1, "{:?}", rep.errors);
+        assert!(rep.errors[0].contains("injected failure"));
+        // the lost in-flight frame (and any still queued) are counted,
+        // not silently vanished: offered = delivered + incomplete
+        assert!(rep.incomplete >= 1, "incomplete = {}", rep.incomplete);
+        assert_eq!(
+            rep.streams[0].meta.offered,
+            rep.frames + rep.incomplete
+        );
+        assert_eq!(rep.dropped, 0);
+        let r = rep.render();
+        assert!(r.contains("incomplete"), "{r}");
+        assert!(r.contains("worker errors (1)"), "{r}");
+    }
+
+    #[test]
+    fn every_worker_death_is_collected_on_the_shared_queue() {
+        // shared queue, 2 workers, each erroring on its own 3rd frame:
+        // both deaths are reported and every offered frame is
+        // accounted as delivered or incomplete.
+        let cfg = tiny_cfg(12, 2);
+        let factories: Vec<EngineFactory> = (0..2)
+            .map(|_| {
+                Box::new(|| {
+                    Ok(Box::new(FailingEngine::new(2))
+                        as Box<dyn crate::coordinator::Engine>)
+                }) as EngineFactory
+            })
+            .collect();
+        let rep = run_pipeline(&cfg, factories, |_, _| {}).unwrap();
+        assert_eq!(rep.errors.len(), 2, "{:?}", rep.errors);
+        assert_eq!(
+            rep.streams[0].meta.offered,
+            rep.frames + rep.incomplete
+        );
+        // each worker completed 2 frames before dying; the earliest
+        // lost frame index is therefore >= 2, so at least frames 0-1
+        // reached the sink in display order
+        assert!(rep.frames >= 2, "frames = {}", rep.frames);
+        assert!(rep.incomplete >= 2, "incomplete = {}", rep.incomplete);
+    }
+
+    #[test]
+    fn all_workers_failing_is_an_error() {
+        let cfg = tiny_cfg(4, 1);
+        let factories: Vec<EngineFactory> =
+            vec![Box::new(|| anyhow::bail!("no engine for you"))];
+        let err = run_pipeline(&cfg, factories, |_, _| {}).unwrap_err();
+        assert!(err.to_string().contains("no frames"), "{err}");
+    }
+
+    #[test]
+    fn per_worker_engine_names_are_deterministic() {
+        use crate::config::AcceleratorConfig;
+        use crate::coordinator::engine::SimEngine;
+        let cfg = tiny_cfg(6, 2);
+        let sim_factory: EngineFactory = Box::new(|| {
+            Ok(Box::new(SimEngine::new(
+                QuantModel::test_model(2, 3, 4, 3, 9),
+                AcceleratorConfig {
+                    tile_rows: 8,
+                    tile_cols: 4,
+                    ..AcceleratorConfig::paper()
+                },
+            )) as Box<dyn crate::coordinator::Engine>)
+        });
+        let mut factories = engines(1);
+        factories.push(sim_factory);
+        let rep = run_pipeline(&cfg, factories, |_, _| {}).unwrap();
+        // worker order, not completion order
+        assert_eq!(rep.engines, vec!["int8".to_string(), "sim".to_string()]);
+        assert_eq!(rep.engine, "int8+sim");
+        assert!(rep.render().contains("engine=int8+sim"));
     }
 }

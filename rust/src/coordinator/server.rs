@@ -1,0 +1,570 @@
+//! Multi-stream serving front-end: N concurrent paced streams with
+//! heterogeneous geometries and upscale factors multiplexed over one
+//! shared worker pool, with admission control and a configurable
+//! real-time policy.
+//!
+//! Topology:
+//!
+//! ```text
+//! stream sources (one thread each: pacing + admission)
+//!        \___ shared bounded work queue ___/
+//!                      |
+//!         worker pool (engine-per-scale caches)
+//!                      |
+//!   collector (per-stream reassembly, drop accounting,
+//!              per-stream display order)
+//! ```
+//!
+//! Policy semantics ([`RtPolicy`]):
+//! * [`RtPolicy::BestEffort`] — sources block on a full queue
+//!   (backpressure); every offered frame is eventually delivered, and
+//!   each stream's delivered frames are **bit-identical and in-order**
+//!   vs running that stream alone through
+//!   [`run_pipeline`](super::run_pipeline) (proved by
+//!   `rust/tests/multi_stream_equivalence.rs`).
+//! * [`RtPolicy::DropLate`] — a frame is shed when the queue is full
+//!   at admission, or when a worker dequeues it past
+//!   `emitted + deadline_ms`; sheds are counted per stream and
+//!   reported as drop rates, and the per-stream [`Reassembler`] skips
+//!   the shed slot so later frames still deliver in order.
+//!
+//! Workers cache one engine per distinct upscale factor (built lazily
+//! inside the worker thread via [`ScaleEngineFactory`]), so a pool
+//! serving x2/x3/x4 streams pays each engine construction once per
+//! worker, not per frame.
+
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{sync_channel, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::{RtPolicy, StreamSpec};
+use crate::image::{ImageU8, SceneGenerator};
+
+use super::engine::Engine;
+use super::metrics::{PipelineReport, StreamMeta};
+use super::shard::{BandSpec, DoneBand, Reassembler};
+
+/// Parameters of one multi-stream serving run.
+#[derive(Clone, Debug)]
+pub struct MultiServeConfig {
+    /// The streams to multiplex (geometry, scale, pacing per stream).
+    pub streams: Vec<StreamSpec>,
+    /// Frames each stream's source generates.
+    pub frames: usize,
+    pub workers: usize,
+    /// Depth of the shared admission queue.
+    pub queue_depth: usize,
+    pub policy: RtPolicy,
+    /// Base seed; stream *i*'s synthetic source uses
+    /// [`stream_seed`]`(seed, i)`.
+    pub seed: u64,
+}
+
+impl Default for MultiServeConfig {
+    fn default() -> Self {
+        Self {
+            streams: Vec::new(),
+            frames: 30,
+            workers: 1,
+            queue_depth: 4,
+            policy: RtPolicy::BestEffort,
+            seed: 7,
+        }
+    }
+}
+
+/// Deterministic per-stream source seed (also what the equivalence
+/// tests use to reproduce a stream solo).
+pub fn stream_seed(base: u64, stream: usize) -> u64 {
+    base.wrapping_add((stream as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Per-worker engine supplier for the multi-stream pool: invoked
+/// *inside* the worker thread, once per distinct upscale factor (the
+/// worker caches the built engine per scale).
+pub type ScaleEngineFactory =
+    Box<dyn Fn(usize) -> Result<Box<dyn Engine>> + Send>;
+
+/// One whole frame of one stream on its way to the pool.
+struct StreamItem {
+    stream: usize,
+    frame: usize,
+    scale: usize,
+    lr: ImageU8,
+    emitted: Instant,
+    /// `emitted + deadline_ms` under [`RtPolicy::DropLate`].
+    deadline: Option<Instant>,
+}
+
+/// What flows back to the collector.
+enum StreamEvent {
+    Done(DoneBand),
+    Dropped { stream: usize, frame: usize },
+}
+
+/// Serve `cfg.streams` concurrently over one shared pool of
+/// `cfg.workers` engines.  `on_frame(stream, frame, hr)` is invoked
+/// from the collector thread, in display order *per stream*; the
+/// frame buffer it borrows is recycled after it returns.
+///
+/// Like [`run_pipeline`](super::run_pipeline), a worker error does not
+/// sink the run: it is recorded in [`PipelineReport::errors`] and the
+/// lost frames surface as `incomplete`; `Err` is returned only when
+/// nothing was delivered.
+pub fn serve_multi(
+    cfg: &MultiServeConfig,
+    factories: Vec<ScaleEngineFactory>,
+    mut on_frame: impl FnMut(usize, usize, &ImageU8) + Send,
+) -> Result<PipelineReport> {
+    assert_eq!(
+        factories.len(),
+        cfg.workers,
+        "one engine factory per worker"
+    );
+    assert!(cfg.workers > 0, "server needs at least one worker");
+    assert!(!cfg.streams.is_empty(), "server needs at least one stream");
+    let n_streams = cfg.streams.len();
+
+    let (work_tx, work_rx) =
+        sync_channel::<StreamItem>(cfg.queue_depth.max(1));
+    // One Arc per worker and *no* longer-lived ref: when every worker
+    // has exited, the receiver drops and blocked sources see the
+    // disconnect instead of waiting on a queue nobody drains.
+    let shared_rx = Arc::new(Mutex::new(work_rx));
+    let worker_rxs: Vec<_> =
+        (0..cfg.workers).map(|_| Arc::clone(&shared_rx)).collect();
+    drop(shared_rx);
+    // The collector never blocks on downstream work; this only absorbs
+    // bursts of completions/sheds arriving together.
+    let done_cap = (cfg.queue_depth.max(1) * 2 + 2 * n_streams).max(8);
+    let (done_tx, done_rx) = sync_channel::<StreamEvent>(done_cap);
+
+    let engine_names =
+        Arc::new(Mutex::new(vec![String::new(); cfg.workers]));
+    let t0 = Instant::now();
+    let frames = cfg.frames;
+    let policy = cfg.policy;
+
+    let (records, dropped, offered, errors) = thread::scope(|s| {
+        // --- worker pool ---------------------------------------------
+        let mut workers = Vec::new();
+        for (wi, (factory, rx)) in
+            factories.into_iter().zip(worker_rxs).enumerate()
+        {
+            let tx = done_tx.clone();
+            let names = Arc::clone(&engine_names);
+            workers.push(s.spawn(move || -> Result<()> {
+                let mut engines: BTreeMap<usize, Box<dyn Engine>> =
+                    BTreeMap::new();
+                loop {
+                    // bind before matching so the queue lock is
+                    // released while we compute
+                    let recv = { rx.lock().unwrap().recv() };
+                    let Ok(item) = recv else {
+                        return Ok(()); // sources done
+                    };
+                    let dequeued = Instant::now();
+                    if item.deadline.is_some_and(|d| dequeued > d) {
+                        // deadline already blown: shed instead of
+                        // burning pool time on an unusable frame
+                        let ev = StreamEvent::Dropped {
+                            stream: item.stream,
+                            frame: item.frame,
+                        };
+                        if tx.send(ev).is_err() {
+                            return Ok(());
+                        }
+                        continue;
+                    }
+                    let engine = match engines.entry(item.scale) {
+                        Entry::Occupied(e) => e.into_mut(),
+                        Entry::Vacant(v) => {
+                            let e = factory(item.scale)?;
+                            let mut names = names.lock().unwrap();
+                            if names[wi].is_empty() {
+                                names[wi] = e.name().to_string();
+                            }
+                            drop(names);
+                            v.insert(e)
+                        }
+                    };
+                    let hr = engine.upscale(&item.lr)?;
+                    let spec = BandSpec {
+                        band: 0,
+                        y0: 0,
+                        y1: item.lr.h,
+                        e0: 0,
+                        e1: item.lr.h,
+                    };
+                    let done = DoneBand {
+                        stream: item.stream,
+                        frame: item.frame,
+                        spec,
+                        n_bands: 1,
+                        hr,
+                        emitted: item.emitted,
+                        dequeued,
+                        completed: Instant::now(),
+                        stats: engine.last_stats(),
+                    };
+                    if tx.send(StreamEvent::Done(done)).is_err() {
+                        return Ok(()); // sink gone
+                    }
+                }
+            }));
+        }
+
+        // --- per-stream sources --------------------------------------
+        let mut sources = Vec::new();
+        for (si, spec) in cfg.streams.iter().enumerate() {
+            let wtx = work_tx.clone();
+            let dtx = done_tx.clone();
+            let seed = stream_seed(cfg.seed, si);
+            sources.push(s.spawn(move || -> usize {
+                let gen =
+                    SceneGenerator::new(spec.lr_w, spec.lr_h, seed);
+                let interval =
+                    spec.fps.map(|f| Duration::from_secs_f64(1.0 / f));
+                let mut next_emit = Instant::now();
+                let mut offered = 0usize;
+                for i in 0..frames {
+                    if let Some(iv) = interval {
+                        let now = Instant::now();
+                        if now < next_emit {
+                            thread::sleep(next_emit - now);
+                        }
+                        next_emit += iv;
+                    }
+                    let lr = gen.frame(i);
+                    offered = i + 1;
+                    let emitted = Instant::now();
+                    let deadline = match policy {
+                        RtPolicy::BestEffort => None,
+                        RtPolicy::DropLate { deadline_ms } => Some(
+                            emitted
+                                + Duration::from_secs_f64(
+                                    deadline_ms / 1e3,
+                                ),
+                        ),
+                    };
+                    let item = StreamItem {
+                        stream: si,
+                        frame: i,
+                        scale: spec.scale,
+                        lr,
+                        emitted,
+                        deadline,
+                    };
+                    match policy {
+                        RtPolicy::BestEffort => {
+                            if wtx.send(item).is_err() {
+                                break; // pool died
+                            }
+                        }
+                        RtPolicy::DropLate { .. } => {
+                            match wtx.try_send(item) {
+                                Ok(()) => {}
+                                Err(TrySendError::Full(_)) => {
+                                    // admission control: shed now
+                                    let ev = StreamEvent::Dropped {
+                                        stream: si,
+                                        frame: i,
+                                    };
+                                    if dtx.send(ev).is_err() {
+                                        break;
+                                    }
+                                }
+                                Err(TrySendError::Disconnected(_)) => {
+                                    break
+                                }
+                            }
+                        }
+                    }
+                }
+                offered
+            }));
+        }
+        drop(work_tx);
+        drop(done_tx);
+
+        // --- collector: per-stream reassembly + drop accounting ------
+        let on_frame = &mut on_frame;
+        let streams = &cfg.streams;
+        let collector = s.spawn(move || {
+            let mut asms: Vec<Reassembler> = streams
+                .iter()
+                .map(|sp| Reassembler::new(sp.lr_h, sp.lr_w, 3, sp.scale))
+                .collect();
+            let mut records = Vec::new();
+            let mut dropped = vec![0usize; streams.len()];
+            for ev in done_rx.iter() {
+                let (si, ready) = match ev {
+                    StreamEvent::Done(band) => {
+                        let si = band.stream;
+                        (si, asms[si].push(band))
+                    }
+                    StreamEvent::Dropped { stream, frame } => {
+                        dropped[stream] += 1;
+                        (stream, asms[stream].skip(frame))
+                    }
+                };
+                for (hr, record) in ready {
+                    on_frame(si, record.index, &hr);
+                    asms[si].recycle(hr);
+                    records.push(record);
+                }
+            }
+            (records, dropped)
+        });
+
+        let offered: Vec<usize> = sources
+            .into_iter()
+            .map(|h| h.join().expect("source panicked"))
+            .collect();
+        let mut errors = Vec::new();
+        for h in workers {
+            if let Err(e) = h.join().expect("worker panicked") {
+                errors.push(format!("{e:#}"));
+            }
+        }
+        let (records, dropped) =
+            collector.join().expect("collector panicked");
+        (records, dropped, offered, errors)
+    });
+
+    if records.is_empty() && !errors.is_empty() {
+        return Err(anyhow::anyhow!(
+            "multi-stream serve delivered no frames: {}",
+            errors.join("; ")
+        ));
+    }
+    let wall = t0.elapsed();
+    let names = engine_names.lock().unwrap().clone();
+    let metas: Vec<StreamMeta> = cfg
+        .streams
+        .iter()
+        .enumerate()
+        .map(|(si, sp)| StreamMeta {
+            id: si,
+            label: sp.label.clone(),
+            lr_w: sp.lr_w,
+            lr_h: sp.lr_h,
+            scale: sp.scale,
+            offered: offered[si],
+            dropped: dropped[si],
+        })
+        .collect();
+    let plan = format!(
+        "multi-stream({n_streams} streams, policy={})",
+        cfg.policy.name()
+    );
+    let mut report = PipelineReport::from_records(
+        &records,
+        wall,
+        &names,
+        cfg.workers,
+        &plan,
+        metas,
+    );
+    report.errors = errors;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+    use crate::coordinator::engine::Int8Engine;
+    use crate::model::QuantModel;
+
+    fn spec(label: &str, w: usize, h: usize, scale: usize) -> StreamSpec {
+        StreamSpec {
+            label: label.to_string(),
+            lr_w: w,
+            lr_h: h,
+            scale,
+            fps: None,
+        }
+    }
+
+    fn int8_factories(
+        workers: usize,
+        layers: usize,
+        c_mid: usize,
+        model_seed: u64,
+    ) -> Vec<ScaleEngineFactory> {
+        (0..workers)
+            .map(|_| {
+                Box::new(move |scale: usize| {
+                    Ok(Box::new(Int8Engine::new(QuantModel::test_model(
+                        layers, 3, c_mid, scale, model_seed,
+                    ))) as Box<dyn Engine>)
+                }) as ScaleEngineFactory
+            })
+            .collect()
+    }
+
+    #[test]
+    fn heterogeneous_streams_all_deliver_in_order() {
+        let cfg = MultiServeConfig {
+            streams: vec![
+                spec("a", 12, 9, 3),
+                spec("b", 10, 8, 2),
+                spec("c", 8, 10, 4),
+            ],
+            frames: 4,
+            workers: 2,
+            queue_depth: 2,
+            policy: RtPolicy::BestEffort,
+            seed: 3,
+        };
+        let mut got: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); 3];
+        let rep = serve_multi(
+            &cfg,
+            int8_factories(2, 2, 4, 1),
+            |si, fi, hr| got[si].push((fi, hr.h, hr.w)),
+        )
+        .unwrap();
+        assert_eq!(rep.frames, 12);
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.incomplete, 0);
+        assert_eq!(rep.streams.len(), 3);
+        assert!(rep.plan.contains("multi-stream(3 streams"));
+        assert!(rep.plan.contains("best-effort"));
+        for (si, sp) in cfg.streams.iter().enumerate() {
+            let idx: Vec<usize> =
+                got[si].iter().map(|(i, _, _)| *i).collect();
+            assert_eq!(idx, vec![0, 1, 2, 3], "stream {si} order");
+            for (_, h, w) in &got[si] {
+                assert_eq!(*h, sp.lr_h * sp.scale, "stream {si} height");
+                assert_eq!(*w, sp.lr_w * sp.scale, "stream {si} width");
+            }
+            assert_eq!(rep.streams[si].delivered, 4);
+            assert!(rep.streams[si].mpix_per_s > 0.0);
+        }
+        // aggregate Mpix/s is the sum over streams
+        let sum: f64 =
+            rep.streams.iter().map(|s| s.mpix_per_s).sum();
+        assert!((rep.mpix_per_s - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workers_cache_one_engine_per_scale() {
+        let builds = Arc::new(AtomicUsize::new(0));
+        let b = Arc::clone(&builds);
+        let factory: ScaleEngineFactory = Box::new(move |scale| {
+            b.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(Int8Engine::new(QuantModel::test_model(
+                1, 3, 2, scale, 0,
+            ))) as Box<dyn Engine>)
+        });
+        let cfg = MultiServeConfig {
+            streams: vec![spec("a", 8, 6, 2), spec("b", 8, 6, 3)],
+            frames: 5,
+            workers: 1,
+            queue_depth: 2,
+            policy: RtPolicy::BestEffort,
+            seed: 1,
+        };
+        let rep = serve_multi(&cfg, vec![factory], |_, _, _| {}).unwrap();
+        assert_eq!(rep.frames, 10);
+        // 2 distinct scales x 1 worker = exactly 2 constructions,
+        // not one per frame
+        assert_eq!(builds.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn drop_late_sheds_and_accounts_every_frame() {
+        // deadline 0 ms: every frame is already late at dequeue, and a
+        // depth-1 queue forces admission sheds too — the undersized-
+        // pool regime.  Every offered frame must still be accounted.
+        let cfg = MultiServeConfig {
+            streams: vec![spec("a", 10, 8, 2), spec("b", 8, 6, 3)],
+            frames: 20,
+            workers: 1,
+            queue_depth: 1,
+            policy: RtPolicy::DropLate { deadline_ms: 0.0 },
+            seed: 5,
+        };
+        let mut delivered: Vec<Vec<usize>> = vec![Vec::new(); 2];
+        let rep = serve_multi(
+            &cfg,
+            int8_factories(1, 1, 2, 2),
+            |si, fi, _| delivered[si].push(fi),
+        )
+        .unwrap();
+        assert!(rep.dropped > 0, "undersized pool must shed");
+        assert!(rep.drop_rate > 0.0);
+        for (si, s) in rep.streams.iter().enumerate() {
+            assert_eq!(s.meta.offered, 20, "sources always run to end");
+            assert_eq!(
+                s.meta.offered,
+                s.delivered + s.meta.dropped + s.incomplete,
+                "stream {si} accounting"
+            );
+            // delivered frames stay in order despite the gaps
+            let d = &delivered[si];
+            assert!(
+                d.windows(2).all(|w| w[0] < w[1]),
+                "stream {si} out of order: {d:?}"
+            );
+            assert_eq!(d.len(), s.delivered);
+        }
+        assert!(rep.render().contains("delivery:"));
+    }
+
+    #[test]
+    fn best_effort_never_drops() {
+        let cfg = MultiServeConfig {
+            streams: vec![spec("a", 9, 7, 3)],
+            frames: 12,
+            workers: 2,
+            queue_depth: 1,
+            policy: RtPolicy::BestEffort,
+            seed: 2,
+        };
+        let rep =
+            serve_multi(&cfg, int8_factories(2, 1, 2, 3), |_, _, _| {})
+                .unwrap();
+        assert_eq!(rep.frames, 12);
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.incomplete, 0);
+        assert_eq!(rep.drop_rate, 0.0);
+    }
+
+    #[test]
+    fn all_workers_failing_is_an_error_not_a_hang() {
+        // engine construction always fails: the worker dies, the
+        // receiver drops, and the blocked best-effort source must see
+        // the disconnect (this used to be a deadlock shape)
+        let cfg = MultiServeConfig {
+            streams: vec![spec("a", 8, 6, 2)],
+            frames: 6,
+            workers: 1,
+            queue_depth: 1,
+            policy: RtPolicy::BestEffort,
+            seed: 1,
+        };
+        let factory: ScaleEngineFactory =
+            Box::new(|_| -> Result<Box<dyn Engine>> {
+                anyhow::bail!("no engine for you")
+            });
+        let err = serve_multi(&cfg, vec![factory], |_, _, _| {})
+            .unwrap_err();
+        assert!(err.to_string().contains("no frames"), "{err}");
+    }
+
+    #[test]
+    fn stream_seeds_are_deterministic_and_distinct() {
+        assert_eq!(stream_seed(7, 0), stream_seed(7, 0));
+        assert_ne!(stream_seed(7, 0), stream_seed(7, 1));
+        assert_ne!(stream_seed(7, 1), stream_seed(8, 1));
+        assert_eq!(stream_seed(7, 0), 7);
+    }
+}

@@ -18,7 +18,7 @@
 //! * `None` feeds the raw band — zero-padded seams, exactly the chip's
 //!   tilted-fusion behaviour.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::time::{Duration, Instant};
 
 pub use crate::config::{HaloPolicy, ShardPlan, ShardStrategy, WorkerAffinity};
@@ -104,6 +104,8 @@ pub fn crop_hr_band(hr_ext: &ImageU8, spec: &BandSpec, scale: usize) -> ImageU8 
 /// A finished band on its way back from a worker.
 #[derive(Clone, Debug)]
 pub struct DoneBand {
+    /// Stream this frame belongs to (0 for single-stream pipelines).
+    pub stream: usize,
     pub frame: usize,
     pub spec: BandSpec,
     /// Total bands of this frame (so the sink knows completeness).
@@ -118,6 +120,7 @@ pub struct DoneBand {
 }
 
 struct PartialFrame {
+    stream: usize,
     hr: ImageU8,
     received: usize,
     n_bands: usize,
@@ -143,6 +146,9 @@ pub struct Reassembler {
     pending: HashMap<usize, PartialFrame>,
     next: usize,
     parked: BTreeMap<usize, (ImageU8, FrameRecord)>,
+    /// Frames shed by the drop policy ([`Reassembler::skip`]) that
+    /// display order has not yet advanced past.
+    skipped: BTreeSet<usize>,
     /// Recycled HR frame buffers ([`Reassembler::recycle`]): the
     /// steady-state serving loop reuses a bounded set of staging
     /// frames instead of allocating one per frame (§Perf).
@@ -160,6 +166,7 @@ impl Reassembler {
             pending: HashMap::new(),
             next: 0,
             parked: BTreeMap::new(),
+            skipped: BTreeSet::new(),
             pool: Vec::new(),
         }
     }
@@ -203,11 +210,18 @@ impl Reassembler {
             band.spec.y1 * self.scale <= self.hr_h,
             "band rows outside frame"
         );
+        if band.frame < self.next {
+            // the display cursor already moved past this frame (it was
+            // skipped, or a duplicate) — a late band must not park a
+            // frame below the cursor forever
+            return self.drain_ready();
+        }
         if !self.pending.contains_key(&band.frame) {
             let hr = self.take_frame_buf();
             self.pending.insert(
                 band.frame,
                 PartialFrame {
+                    stream: band.stream,
                     hr,
                     received: 0,
                     n_bands: band.n_bands,
@@ -239,6 +253,7 @@ impl Reassembler {
         if entry.received == entry.n_bands {
             let pf = self.pending.remove(&band.frame).unwrap();
             let record = FrameRecord {
+                stream: pf.stream,
                 index: band.frame,
                 latency: pf.completed - pf.emitted,
                 queue_wait: pf.queue_wait,
@@ -248,10 +263,40 @@ impl Reassembler {
             };
             self.parked.insert(band.frame, (pf.hr, record));
         }
+        self.drain_ready()
+    }
+
+    /// Record that `frame` was shed by the drop policy: display order
+    /// advances past it instead of waiting forever.  Returns frames
+    /// that became emittable (later frames may already be parked).
+    ///
+    /// Any partially-assembled state for the frame is reclaimed (its
+    /// staging buffer returns to the pool), so a shed frame can never
+    /// strand an `in_flight` entry below the cursor — relevant once a
+    /// drop policy meets band sharding.
+    pub fn skip(&mut self, frame: usize) -> Vec<(ImageU8, FrameRecord)> {
+        if let Some(pf) = self.pending.remove(&frame) {
+            self.pool.push(pf.hr);
+        }
+        if frame >= self.next {
+            self.skipped.insert(frame);
+        }
+        self.drain_ready()
+    }
+
+    /// Emit every frame at the display-order cursor, stepping over
+    /// skipped slots.
+    fn drain_ready(&mut self) -> Vec<(ImageU8, FrameRecord)> {
         let mut out = Vec::new();
-        while let Some(v) = self.parked.remove(&self.next) {
-            out.push(v);
-            self.next += 1;
+        loop {
+            if self.skipped.remove(&self.next) {
+                self.next += 1;
+            } else if let Some(v) = self.parked.remove(&self.next) {
+                out.push(v);
+                self.next += 1;
+            } else {
+                break;
+            }
         }
         out
     }
@@ -350,6 +395,7 @@ mod tests {
         let mut hr = ImageU8::new(rows_per_band * scale, w * scale, 1);
         hr.data.fill((10 * frame + band) as u8);
         DoneBand {
+            stream: 0,
             frame,
             spec,
             n_bands,
@@ -469,5 +515,65 @@ mod tests {
         let t0 = Instant::now();
         let mut asm = Reassembler::new(4, 5, 1, 1);
         asm.push(band(t0, 0, 0, 2, 2, 2, 1, (0, 1, 2), None));
+    }
+
+    #[test]
+    fn skip_advances_display_order_past_dropped_frames() {
+        let t0 = Instant::now();
+        // single-band frames, 4 LR rows, scale 1
+        let mut asm = Reassembler::new(4, 2, 1, 1);
+        let mk = |f, ms| band(t0, f, 0, 1, 4, 2, 1, ms, None);
+        // frame 1 completes first: parked behind the missing frame 0
+        assert!(asm.push(mk(1, (1, 2, 3))).is_empty());
+        assert_eq!(asm.in_flight(), 1);
+        // frame 0 was shed -> frame 1 becomes emittable immediately
+        let out = asm.skip(0);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.index, 1);
+        assert_eq!(asm.in_flight(), 0);
+        // skip arriving before any completion also advances the cursor
+        assert!(asm.skip(2).is_empty());
+        let out = asm.push(mk(3, (4, 5, 6)));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.index, 3);
+        // skipping an already-delivered frame is a no-op
+        assert!(asm.skip(1).is_empty());
+        let out = asm.push(mk(4, (7, 8, 9)));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.index, 4);
+    }
+
+    #[test]
+    fn skip_reclaims_partial_frames_and_ignores_late_bands() {
+        let t0 = Instant::now();
+        // 2-band frames, 4 LR rows, scale 1
+        let mut asm = Reassembler::new(4, 2, 1, 1);
+        let mk = |f, b, ms| band(t0, f, b, 2, 2, 2, 1, ms, None);
+        // half of frame 0 arrives, then the frame is shed
+        assert!(asm.push(mk(0, 0, (0, 1, 2))).is_empty());
+        assert_eq!(asm.in_flight(), 1);
+        assert!(asm.skip(0).is_empty());
+        assert_eq!(asm.in_flight(), 0, "partial frame reclaimed");
+        // the other band completes late: it must not park frame 0
+        // below the display cursor
+        assert!(asm.push(mk(0, 1, (0, 1, 3))).is_empty());
+        assert_eq!(asm.in_flight(), 0);
+        // the pipeline continues normally afterwards
+        assert!(asm.push(mk(1, 0, (4, 5, 6))).is_empty());
+        let out = asm.push(mk(1, 1, (4, 5, 7)));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.index, 1);
+    }
+
+    #[test]
+    fn records_carry_their_stream_id() {
+        let t0 = Instant::now();
+        let mut asm = Reassembler::new(4, 2, 1, 1);
+        let mut b = band(t0, 0, 0, 1, 4, 2, 1, (0, 1, 2), None);
+        b.stream = 7;
+        let out = asm.push(b);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.stream, 7);
+        assert_eq!(out[0].1.index, 0);
     }
 }

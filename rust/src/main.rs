@@ -16,12 +16,13 @@ use sr_accel::analysis::{
 use sr_accel::benchkit::Table;
 use sr_accel::cli::{Args, USAGE};
 use sr_accel::config::{
-    AcceleratorConfig, FusionKind, HaloPolicy, ModelConfig, ShardStrategy,
-    SystemConfig, WorkerAffinity,
+    AcceleratorConfig, FusionKind, HaloPolicy, ModelConfig, RtPolicy,
+    ShardStrategy, StreamSpec, SystemConfig, WorkerAffinity,
 };
 use sr_accel::coordinator::{
-    engine::{build_engine, engine_factory},
-    run_pipeline, EngineKind, PipelineConfig,
+    engine::{build_engine, engine_factory, model_for_scale},
+    run_pipeline, serve_multi, Engine, EngineKind, Int8Engine,
+    MultiServeConfig, PipelineConfig, ScaleEngineFactory, SimEngine,
 };
 use sr_accel::fusion::{make_scheduler, TiltedScheduler, FusionScheduler};
 use sr_accel::image::{read_ppm, write_ppm, SceneGenerator};
@@ -38,6 +39,7 @@ fn main() -> ExitCode {
     };
     let result = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
+        Some("serve-multi") => cmd_serve_multi(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("upscale") => cmd_upscale(&args),
         Some("analyze") => cmd_analyze(&args),
@@ -164,6 +166,68 @@ fn cmd_serve(args: &Args) -> Result<()> {
         write_ppm(Path::new(&path), &hr)?;
         println!("saved frame {i} to {path}");
     }
+    Ok(())
+}
+
+fn cmd_serve_multi(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "streams", "engine", "frames", "workers", "queue-depth", "policy",
+        "seed", "config",
+    ])?;
+    let sys = load_system_config(args)?;
+    let streams = match args.opt("streams") {
+        Some(s) => StreamSpec::parse_list(s).map_err(anyhow::Error::msg)?,
+        None if !sys.serve.streams.is_empty() => sys.serve.streams.clone(),
+        // the paper's 360p feed plus a lighter and a heavier neighbour
+        None => StreamSpec::parse_list("360p@x3,270p@x3,540p@x2")
+            .expect("default stream specs"),
+    };
+    let policy = match args.opt("policy") {
+        Some(s) => RtPolicy::parse(s)
+            .context("unknown --policy (best-effort|drop:MS)")?,
+        None => sys.serve.policy,
+    };
+    let kind = EngineKind::parse(args.opt_str("engine", &sys.serve.engine))
+        .context("unknown --engine (int8|sim)")?;
+    if kind == EngineKind::Pjrt {
+        bail!(
+            "serve-multi needs shape-agnostic engines (int8|sim): the \
+             pjrt artifacts are AOT-compiled for one geometry"
+        );
+    }
+    let cfg = MultiServeConfig {
+        streams,
+        frames: args.opt_usize("frames", sys.serve.frames)?,
+        workers: args.opt_usize("workers", sys.serve.workers)?,
+        queue_depth: args.opt_usize("queue-depth", sys.serve.queue_depth)?,
+        policy,
+        seed: args.opt_usize("seed", 7)? as u64,
+    };
+    // load the trained weights once; per-scale fallback happens inside
+    // the workers via the shared `model_for_scale` rule (streams whose
+    // scale the artifacts can't serve get the deterministic test model)
+    let trained = load_apbnw(&artifacts_dir().join("weights.apbnw")).ok();
+    let acc = sys.accelerator.clone();
+    let factories: Vec<ScaleEngineFactory> = (0..cfg.workers)
+        .map(|_| {
+            let acc = acc.clone();
+            let trained = trained.clone();
+            Box::new(move |scale: usize| -> Result<Box<dyn Engine>> {
+                let qm = model_for_scale(trained.as_ref(), scale);
+                Ok(match kind {
+                    EngineKind::Int8 => Box::new(Int8Engine::new(qm)),
+                    EngineKind::Sim => {
+                        Box::new(SimEngine::new(qm, acc.clone()))
+                    }
+                    EngineKind::Pjrt => {
+                        bail!("pjrt rejected before factory build")
+                    }
+                })
+            }) as ScaleEngineFactory
+        })
+        .collect();
+    let report = serve_multi(&cfg, factories, |_, _, _| {})?;
+    println!("{}", report.render());
     Ok(())
 }
 

@@ -49,8 +49,25 @@ impl DramChannel {
     }
 
     /// Cycles (at `freq_mhz`) the traffic occupies the channel.
+    ///
+    /// Computed as `ceil(bytes * Hz / bytes_per_s)` in `u128` integer
+    /// arithmetic: the former f64 round-trip (`seconds * MHz * 1e6`)
+    /// silently lost precision once the byte count approached 2^53.
+    /// Frequency and bandwidth are rounded to integer Hz / bytes-per-
+    /// second, which both are in every real configuration.
     pub fn transfer_cycles(&self, freq_mhz: f64) -> u64 {
-        (self.transfer_seconds() * freq_mhz * 1e6).ceil() as u64
+        if self.total_bytes() == 0 {
+            return 0; // idle channel, regardless of bandwidth
+        }
+        let hz = (freq_mhz * 1e6).round() as u128;
+        let bytes_per_s = (self.peak_gbps * 1e9).round() as u128;
+        if bytes_per_s == 0 {
+            // zero-bandwidth channel: "infinite" stall, not a div-by-0
+            return u64::MAX;
+        }
+        let cycles = (self.total_bytes() as u128 * hz)
+            .div_ceil(bytes_per_s);
+        u64::try_from(cycles).unwrap_or(u64::MAX)
     }
 
     /// Required sustained bandwidth (GB/s) to move this traffic within
@@ -87,5 +104,41 @@ mod tests {
         d.write(410_000_000);
         // 0.41 GB in 1 s -> 0.41 GB/s (the paper's tilted number)
         assert!((d.required_gbps(1.0) - 0.41).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transfer_cycles_exact_for_huge_traffic() {
+        // (2^53 + 1) bytes at 4 GB/s, 1000 MHz.  The old f64 path
+        // rounds 2^53 + 1 down to 2^53 and answers 2^51 cycles; the
+        // exact ceil((2^53 + 1) / 4) is 2^51 + 1.
+        let mut d = DramChannel::new(4.0);
+        d.read((1u64 << 53) + 1);
+        assert_eq!(d.transfer_cycles(1000.0), (1u64 << 51) + 1);
+    }
+
+    #[test]
+    fn transfer_cycles_near_u64_traffic_does_not_overflow() {
+        // a petabyte-scale aggregate (multi-stream, long-running
+        // serving accounting) still computes exactly in u128
+        let mut d = DramChannel::new(4.264);
+        d.read(1u64 << 60);
+        d.write(123_456_789);
+        let bytes = (1u128 << 60) + 123_456_789;
+        let want = (bytes * 600_000_000).div_ceil(4_264_000_000) as u64;
+        assert_eq!(d.transfer_cycles(600.0), want);
+    }
+
+    #[test]
+    fn transfer_cycles_zero_bandwidth_saturates() {
+        let mut d = DramChannel::new(0.0);
+        d.read(1);
+        assert_eq!(d.transfer_cycles(100.0), u64::MAX);
+    }
+
+    #[test]
+    fn transfer_cycles_idle_channel_is_zero() {
+        // no traffic -> no stall, even on a zero-bandwidth channel
+        assert_eq!(DramChannel::new(0.0).transfer_cycles(100.0), 0);
+        assert_eq!(DramChannel::new(4.0).transfer_cycles(100.0), 0);
     }
 }

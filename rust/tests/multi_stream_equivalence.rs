@@ -1,0 +1,275 @@
+//! Property tests of the multi-stream serving front-end
+//! (`coordinator::server`): multiplexing N streams over one shared
+//! worker pool must never change any stream's pixels.
+//!
+//! The tentpole property: under `RtPolicy::BestEffort`, each stream's
+//! delivered frames are **bit-identical and in display order** vs
+//! running that stream alone through `run_pipeline`, across randomized
+//! stream counts, geometries, upscale factors and worker counts.
+//! Under `RtPolicy::DropLate`, an undersized pool sheds frames — but
+//! every offered frame is accounted for (delivered + dropped +
+//! incomplete) and delivery order still holds per stream.
+
+use sr_accel::config::{RtPolicy, ShardPlan, StreamSpec};
+use sr_accel::coordinator::{
+    run_pipeline, serve_multi, stream_seed, Engine, EngineFactory,
+    Int8Engine, MultiServeConfig, PipelineConfig, ScaleEngineFactory,
+};
+use sr_accel::image::ImageU8;
+use sr_accel::model::QuantModel;
+use sr_accel::util::quickcheck::{check, shrink_dims, Config};
+
+fn test_model(
+    layers: usize,
+    c_mid: usize,
+    scale: usize,
+    model_seed: u64,
+) -> QuantModel {
+    QuantModel::test_model(layers, 3, c_mid, scale, model_seed)
+}
+
+/// Run one stream alone through the single-stream pipeline, with the
+/// same source seed and engine weights `serve_multi` would use.
+fn solo_frames(
+    spec: &StreamSpec,
+    frames: usize,
+    source_seed: u64,
+    layers: usize,
+    c_mid: usize,
+    model_seed: u64,
+) -> Vec<ImageU8> {
+    let cfg = PipelineConfig {
+        frames,
+        queue_depth: 2,
+        workers: 1,
+        lr_w: spec.lr_w,
+        lr_h: spec.lr_h,
+        seed: source_seed,
+        source_fps: None,
+        scale: spec.scale,
+        shard: ShardPlan::whole_frame(),
+        model_layers: layers,
+    };
+    let scale = spec.scale;
+    let factories: Vec<EngineFactory> = vec![Box::new(move || {
+        Ok(Box::new(Int8Engine::new(test_model(
+            layers, c_mid, scale, model_seed,
+        ))) as Box<dyn Engine>)
+    })];
+    let mut out = Vec::new();
+    run_pipeline(&cfg, factories, |_, hr| out.push(hr.clone()))
+        .expect("solo pipeline failed");
+    out
+}
+
+fn multi_factories(
+    workers: usize,
+    layers: usize,
+    c_mid: usize,
+    model_seed: u64,
+) -> Vec<ScaleEngineFactory> {
+    (0..workers)
+        .map(|_| {
+            Box::new(move |scale: usize| {
+                Ok(Box::new(Int8Engine::new(test_model(
+                    layers, c_mid, scale, model_seed,
+                ))) as Box<dyn Engine>)
+            }) as ScaleEngineFactory
+        })
+        .collect()
+}
+
+/// Mixed-geometry/scale table the randomized streams draw from.
+const GEOMS: [(usize, usize, usize); 3] =
+    [(14, 10, 3), (12, 8, 2), (10, 12, 4)];
+
+fn streams_for(n: usize) -> Vec<StreamSpec> {
+    (0..n)
+        .map(|i| {
+            let (w, h, s) = GEOMS[i % GEOMS.len()];
+            StreamSpec {
+                label: format!("s{i}:{w}x{h}@x{s}"),
+                lr_w: w,
+                lr_h: h,
+                scale: s,
+                fps: None,
+            }
+        })
+        .collect()
+}
+
+/// The tentpole property (ISSUE 3 acceptance): best-effort multi-
+/// stream serving is bit-identical, per stream and in order, to solo
+/// runs.
+#[test]
+fn prop_best_effort_multi_stream_matches_solo_runs() {
+    let cfg = Config {
+        cases: 8,
+        seed: 0x3575_0CA7,
+        max_shrink_iters: 24,
+    };
+    check(
+        &cfg,
+        |rng| {
+            vec![
+                rng.range_usize(1, 3),   // streams
+                rng.range_usize(1, 3),   // workers
+                rng.range_usize(1, 2),   // model layers
+                rng.range_usize(1, 4),   // mid channels
+                rng.range_usize(0, 99),  // model seed
+                rng.range_usize(0, 999), // base source seed
+            ]
+        },
+        |d| {
+            let (n, workers, layers, c_mid) =
+                (d[0].max(1), d[1].max(1), d[2].max(1), d[3].max(1));
+            let model_seed = d[4] as u64;
+            let base_seed = d[5] as u64;
+            let frames = 3;
+            let streams = streams_for(n);
+            let mcfg = MultiServeConfig {
+                streams: streams.clone(),
+                frames,
+                workers,
+                queue_depth: 2,
+                policy: RtPolicy::BestEffort,
+                seed: base_seed,
+            };
+            let mut got: Vec<Vec<(usize, ImageU8)>> = vec![Vec::new(); n];
+            let rep = serve_multi(
+                &mcfg,
+                multi_factories(workers, layers, c_mid, model_seed),
+                |si, fi, hr| got[si].push((fi, hr.clone())),
+            )
+            .map_err(|e| format!("serve_multi failed: {e:#}"))?;
+            if rep.dropped != 0 || rep.incomplete != 0 {
+                return Err(format!(
+                    "best-effort lost frames: dropped={} incomplete={}",
+                    rep.dropped, rep.incomplete
+                ));
+            }
+            for (si, spec) in streams.iter().enumerate() {
+                let idx: Vec<usize> =
+                    got[si].iter().map(|(i, _)| *i).collect();
+                if idx != (0..frames).collect::<Vec<_>>() {
+                    return Err(format!(
+                        "stream {si} delivered out of order: {idx:?}"
+                    ));
+                }
+                let want = solo_frames(
+                    spec,
+                    frames,
+                    stream_seed(base_seed, si),
+                    layers,
+                    c_mid,
+                    model_seed,
+                );
+                for (f, (_, hr)) in got[si].iter().enumerate() {
+                    if *hr != want[f] {
+                        return Err(format!(
+                            "stream {si} ({}) frame {f} differs from \
+                             solo run (n={n}, workers={workers})",
+                            spec.label
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+        |d| shrink_dims(d, &[1, 1, 1, 1, 0, 0]),
+    );
+}
+
+/// Acceptance pin: >= 3 concurrent streams with >= 2 distinct
+/// (geometry, scale) pairs over a shared pool, explicitly compared
+/// stream-by-stream against solo runs.
+#[test]
+fn three_heterogeneous_streams_bit_identical_to_solo() {
+    let (layers, c_mid, model_seed, base_seed) = (2, 4, 21, 11u64);
+    let frames = 4;
+    let streams = streams_for(3);
+    // the acceptance criterion: distinct (geometry, scale) pairs
+    assert!(
+        streams
+            .iter()
+            .map(|s| (s.lr_w, s.lr_h, s.scale))
+            .collect::<std::collections::BTreeSet<_>>()
+            .len()
+            >= 2
+    );
+    for workers in [1, 2, 3] {
+        let mcfg = MultiServeConfig {
+            streams: streams.clone(),
+            frames,
+            workers,
+            queue_depth: 3,
+            policy: RtPolicy::BestEffort,
+            seed: base_seed,
+        };
+        let mut got: Vec<Vec<ImageU8>> = vec![Vec::new(); 3];
+        let rep = serve_multi(
+            &mcfg,
+            multi_factories(workers, layers, c_mid, model_seed),
+            |si, _, hr| got[si].push(hr.clone()),
+        )
+        .unwrap();
+        assert_eq!(rep.frames, 3 * frames);
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.workers, workers);
+        for (si, spec) in streams.iter().enumerate() {
+            let want = solo_frames(
+                spec,
+                frames,
+                stream_seed(base_seed, si),
+                layers,
+                c_mid,
+                model_seed,
+            );
+            assert_eq!(
+                got[si], want,
+                "stream {si} differs (workers={workers})"
+            );
+        }
+    }
+}
+
+/// DropLate under an undersized pool records a nonzero drop rate while
+/// still accounting for every offered frame and preserving per-stream
+/// delivery order (the other half of the ISSUE 3 acceptance).
+#[test]
+fn drop_late_records_nonzero_drop_rate_under_undersized_pool() {
+    let streams = streams_for(3);
+    let mcfg = MultiServeConfig {
+        streams: streams.clone(),
+        frames: 25,
+        workers: 1,   // undersized:
+        queue_depth: 1, // 3 fast sources vs 1 worker, 1 queue slot
+        policy: RtPolicy::DropLate { deadline_ms: 0.0 },
+        seed: 19,
+    };
+    let mut got: Vec<Vec<usize>> = vec![Vec::new(); 3];
+    let rep = serve_multi(
+        &mcfg,
+        multi_factories(1, 1, 2, 5),
+        |si, fi, _| got[si].push(fi),
+    )
+    .unwrap();
+    assert!(rep.dropped > 0, "undersized pool must shed frames");
+    assert!(rep.drop_rate > 0.0);
+    for (si, s) in rep.streams.iter().enumerate() {
+        assert_eq!(s.meta.offered, 25);
+        assert_eq!(
+            s.meta.offered,
+            s.delivered + s.meta.dropped + s.incomplete,
+            "stream {si}: every offered frame accounted for"
+        );
+        assert!(
+            got[si].windows(2).all(|w| w[0] < w[1]),
+            "stream {si} delivered out of order: {:?}",
+            got[si]
+        );
+    }
+    // the report renders the delivery breakdown
+    assert!(rep.render().contains("delivery:"));
+    assert!(rep.render().contains("drop"));
+}
