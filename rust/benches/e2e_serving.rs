@@ -5,7 +5,9 @@
 //! fps comes from the simulator benches).
 //!
 //! Emits `BENCH_e2e.json` with HR MP/s per configuration, compared
-//! against the paper's 1080p60 target (124.4 HR MP/s), and
+//! against the paper's 1080p60 target (124.4 HR MP/s) — plus the
+//! §Microkernel whole-model `microkernel_speedup` (strip kernel vs the
+//! frozen PR-2 pixel kernel) and an `avx2` host flag — and
 //! `BENCH_serving_multi.json` for the multi-stream front-end
 //! (aggregate + per-stream HR MP/s per record; `extra` carries p95
 //! latency and drop rate keyed by stream count and policy).  `--smoke`
@@ -14,14 +16,20 @@
 //! Falls back to the deterministic test model when the trained
 //! artifacts are absent, so the bench runs on bare checkouts.
 
-use sr_accel::benchkit::{smoke_requested, BenchJson, BenchRecord};
+use sr_accel::benchkit::{
+    black_box, smoke_requested, BenchJson, BenchRecord, Bencher,
+};
 use sr_accel::config::{HaloPolicy, RtPolicy, ShardPlan, StreamSpec};
 use sr_accel::coordinator::{
     engine::model_for_scale, run_pipeline, serve_multi, Engine,
     EngineFactory, Int8Engine, MultiServeConfig, PipelineConfig,
     ScaleEngineFactory,
 };
-use sr_accel::model::{load_apbnw, QuantModel};
+use sr_accel::image::SceneGenerator;
+use sr_accel::model::{
+    load_apbnw, PreparedModel, QuantModel, Scratch, Tensor,
+};
+use sr_accel::reference::{self, avx2_available, baseline};
 use sr_accel::runtime::{artifacts_available, artifacts_dir};
 
 fn main() {
@@ -107,6 +115,50 @@ fn main() {
                 );
             }
         }
+    }
+    // -- §Microkernel: whole-model forward on the register-blocked
+    //    strip kernel vs the frozen PR-2 single-pixel kernel — the e2e
+    //    view of the per-tile speedup kernel_throughput gates on ------
+    {
+        let pm = PreparedModel::new(&qm);
+        let mut scratch = Scratch::new();
+        let (fw, fh) = if smoke { (96, 54) } else { (320, 180) };
+        let g = SceneGenerator::new(fw, fh, 5).frame(0);
+        let x = Tensor::from_vec(g.h, g.w, g.c, g.data);
+        // e2e records carry HR megapixels/s, like every other record
+        // in this file
+        let fpx = (x.h * pm.scale * x.w * pm.scale) as f64;
+        // fixed iteration floor: this ratio goes into the PR-over-PR
+        // perf trajectory, so even --smoke must not record a ratio of
+        // two single samples (same reasoning as kernel_throughput's
+        // gated pair)
+        let b = Bencher {
+            warmup: 2,
+            target_time: std::time::Duration::from_millis(300),
+            min_iters: 10,
+            max_iters: 100,
+        };
+        let m_strip = b.run("forward (microkernel)", || {
+            let hr =
+                reference::forward_int_prepared(black_box(&x), &pm, &mut scratch);
+            scratch.recycle_u8(black_box(hr));
+        });
+        let m_pixel = b.run("forward (PR-2 pixel kernel)", || {
+            let hr =
+                baseline::forward_int_pixel(black_box(&x), &pm, &mut scratch);
+            scratch.recycle_u8(black_box(hr));
+        });
+        json.push(BenchRecord::from_measurement(&m_strip, Some(fpx), None));
+        json.push(BenchRecord::from_measurement(&m_pixel, Some(fpx), None));
+        let speedup =
+            m_pixel.summary_ns.median() / m_strip.summary_ns.median();
+        json.push_extra("microkernel_speedup", speedup);
+        json.push_extra("avx2", if avx2_available() { 1.0 } else { 0.0 });
+        println!(
+            "whole-model microkernel speedup vs PR-2 pixel kernel \
+             ({fw}x{fh} LR, avx2={}): {speedup:.2}x",
+            avx2_available()
+        );
     }
     // the paper's real-time claim in HR megapixels per second
     json.push_extra("paper_hr_mp_per_s_1080p60", 124.4);

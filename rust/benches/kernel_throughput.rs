@@ -4,8 +4,10 @@
 //! and the PJRT path — in wall-clock time and LR-Mpix/s.
 //!
 //! Emits machine-readable `BENCH_kernel.json` (name, ns/iter, MP/s,
-//! MACs/s, plus the tilted-tile speedup factor and the paper's 1080p60
-//! target) so the perf trajectory is recorded PR over PR.
+//! MACs/s, plus the tilted-tile speedup factor, the §Microkernel
+//! `microkernel_speedup` — register-blocked strip kernel vs the frozen
+//! PR-2 single-pixel kernel — an `avx2` host flag, and the paper's
+//! 1080p60 target) so the perf trajectory is recorded PR over PR.
 //!
 //! Falls back to the APBN-shaped deterministic test model when the
 //! trained artifacts are absent, so the bench (and the CI `--smoke`
@@ -22,8 +24,8 @@ use sr_accel::model::{
     load_apbnw, PreparedLayer, PreparedModel, QuantModel, Scratch, Tensor,
 };
 use sr_accel::reference::{
-    conv3x3_relu, conv3x3_relu_prepared, conv_patch_relu,
-    conv_patch_relu_prepared,
+    avx2_available, baseline, conv3x3_relu, conv3x3_relu_prepared,
+    conv_patch_relu, conv_patch_relu_prepared,
 };
 use sr_accel::runtime::{artifacts_available, artifacts_dir};
 
@@ -108,7 +110,7 @@ fn main() {
         black_box(conv_patch_relu(black_box(&patch), layer));
     });
     push(&mut t, &mut json, &m_tile_legacy, tile_px, Some(tile_macs));
-    let m_tile = bench.run("tilted tile 60x8 28->28 (prepared)", || {
+    let m_tile = bench.run("tilted tile 60x8 28->28 (microkernel)", || {
         let out =
             conv_patch_relu_prepared(black_box(&patch), &pl, &mut scratch);
         scratch.recycle_u8(black_box(out));
@@ -117,6 +119,41 @@ fn main() {
     let tile_speedup =
         m_tile_legacy.summary_ns.median() / m_tile.summary_ns.median();
     json.push_extra("tilted_tile_speedup", tile_speedup);
+
+    // -- §Microkernel: register-blocked strip kernel vs the frozen PR-2
+    //    single-pixel prepared kernel on the same tile.  CI gates on
+    //    this speedup, so measure with enough iterations for a stable
+    //    median even under --smoke (both kernels are ~us-scale).
+    let spd = Bencher {
+        warmup: 3,
+        target_time: std::time::Duration::from_millis(80),
+        min_iters: 20,
+        max_iters: 400,
+    };
+    let m_tile_pixel =
+        spd.run("tilted tile 60x8 28->28 (PR-2 pixel kernel)", || {
+            let out = baseline::conv_patch_relu_pixel(
+                black_box(&patch),
+                &pl,
+                &mut scratch,
+            );
+            scratch.recycle_u8(black_box(out));
+        });
+    push(&mut t, &mut json, &m_tile_pixel, tile_px, Some(tile_macs));
+    let m_tile_strip =
+        spd.run("tilted tile 60x8 28->28 (microkernel, gated)", || {
+            let out = conv_patch_relu_prepared(
+                black_box(&patch),
+                &pl,
+                &mut scratch,
+            );
+            scratch.recycle_u8(black_box(out));
+        });
+    push(&mut t, &mut json, &m_tile_strip, tile_px, Some(tile_macs));
+    let microkernel_speedup = m_tile_pixel.summary_ns.median()
+        / m_tile_strip.summary_ns.median();
+    json.push_extra("microkernel_speedup", microkernel_speedup);
+    json.push_extra("avx2", if avx2_available() { 1.0 } else { 0.0 });
 
     // -- a whole tilted band through the scheduler (prepared path) ----
     let pm = PreparedModel::new(&qm);
@@ -169,6 +206,11 @@ fn main() {
     println!(
         "tilted tile path speedup (prepared vs pre-§Perf baseline): \
          {tile_speedup:.2}x"
+    );
+    println!(
+        "microkernel speedup (strip vs PR-2 pixel kernel, avx2={}): \
+         {microkernel_speedup:.2}x",
+        avx2_available()
     );
 
     // the paper's real-time target: 1920x1080@60fps HR = 124.4 MP/s

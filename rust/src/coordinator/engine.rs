@@ -66,7 +66,9 @@ impl EngineKind {
 ///
 /// Weights are packed into a [`PreparedModel`] once at construction and
 /// the per-worker [`Scratch`] arena is reused across frames — the
-/// serving hot loop performs no per-frame weight repacking (§Perf).
+/// serving hot loop performs no per-frame weight repacking (§Perf) and
+/// every conv runs the register-blocked strip microkernel with fused
+/// requantization (§Microkernel).
 pub struct Int8Engine {
     qm: QuantModel,
     pm: PreparedModel,

@@ -5,6 +5,9 @@
 //! Cheap (no overlap storage, no recompute) but lossy: the HR output
 //! differs from the reference, increasingly so as tiles shrink — the
 //! effect `benches/fig1_boundary.rs` quantifies.
+//!
+//! §Microkernel: each tile's SAME conv chain runs the prepared row
+//! kernels, which drive the register-blocked strip microkernel.
 
 use crate::config::{AcceleratorConfig, FusionKind};
 use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};

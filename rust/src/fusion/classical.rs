@@ -8,6 +8,10 @@
 //! the ping-pong buffers must hold the full halo'd tile, and the halo
 //! MACs/bytes are pure overhead that grows as tiles shrink — the reason
 //! classical fusion cannot use an 8-wide tile.
+//!
+//! §Microkernel: the fused conv chain runs the prepared patch kernels,
+//! i.e. the register-blocked strip microkernel with its fused requant
+//! epilogue — the halo'd tiles here are just wider patches.
 
 use crate::config::{AcceleratorConfig, FusionKind};
 use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};

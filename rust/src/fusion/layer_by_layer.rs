@@ -4,6 +4,10 @@
 //! Output is exact (whole-frame SAME conv, no tiling loss); the cost is
 //! the paper's motivating number — ~5 GB/s of DRAM traffic at FHD 60 fps
 //! versus 0.41 GB/s for tilted fusion.
+//!
+//! §Microkernel: the whole-frame convs run the prepared row kernels on
+//! the register-blocked strip microkernel, so even this baseline's
+//! *compute* is the fast path — only its DRAM traffic model differs.
 
 use crate::config::{AcceleratorConfig, FusionKind};
 use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};

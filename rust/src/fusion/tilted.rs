@@ -28,6 +28,15 @@
 //! a per-worker [`Scratch`], so the band loop performs **no heap
 //! allocation per tile**.  The unprepared [`TiltedScheduler::run_band`]
 //! wrapper packs on the fly for tests and one-shot callers.
+//!
+//! §Microkernel: each tile conv the engine runs
+//! ([`crate::reference::conv_patch_relu_prepared`] /
+//! `conv_patch_final_prepared`) executes on the register-blocked strip
+//! microkernel — strips of `MK_P` output pixels with the requant
+//! epilogue fused into the register tile — so the steady-state band
+//! loop is both allocation-free *and* amortizes every weight fetch
+//! over a pixel strip, the software analogue of the paper's MAC-array
+//! weight reuse.
 
 use crate::config::{AcceleratorConfig, FidelityKind, FusionKind};
 use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};

@@ -8,15 +8,20 @@
 //! `O(frames x bands x tiles x layers)`.  Now:
 //!
 //! * [`PreparedLayer`] / [`PreparedModel`] hold the packed layouts
-//!   (pair-interleaved `u32` lanes for `vpmaddwd`, zero-padded `i32`
-//!   rows for the scalar kernel, and the raw HWIO `i8` view the
-//!   cycle-exact engine reads) — built once, shared by every frame.
+//!   (cout-tile-major pair-interleaved panels `wt` + widened bias
+//!   `bias_p` for the register-blocked strip microkernel, the PR-2
+//!   pair-interleaved `wp` the frozen baseline kernel reads,
+//!   zero-padded `i32` rows for the scalar oracle, and the raw HWIO
+//!   `i8` view the cycle-exact engine reads) — built once, shared by
+//!   every frame.
 //! * [`Scratch`] is a per-worker arena: accumulator strips, padded
 //!   pixel staging, the cycle-exact engine's partial-sum registers and
 //!   accumulator pipeline, column/payload staging for the tilted
-//!   scheduler, and a recycling pool of tensor buffers.  In steady
-//!   state the tilted band loop performs **no heap allocation**: every
-//!   `vec!` the old per-tile path created now lives here.
+//!   scheduler, and a **byte-bounded** recycling pool of tensor
+//!   buffers.  In steady state the tilted band loop performs **no heap
+//!   allocation**: every `vec!` the old per-tile path created now
+//!   lives here — and long multi-stream runs cannot grow the pool past
+//!   [`DEFAULT_POOL_LIMIT_BYTES`].
 //!
 //! Lifetime contract: a `PreparedModel` is immutable and cheap to share
 //! (`&PreparedModel` across frames); a `Scratch` is mutable state owned
@@ -41,10 +46,20 @@ pub struct PreparedLayer {
     pub m: FixedMul,
     /// int32 bias, length `cout`.
     pub bias: Vec<i32>,
+    /// Bias widened to `cout_p` lanes (zero tail) — the strip
+    /// microkernel's register tile loads it directly per cout tile.
+    pub bias_p: Vec<i32>,
     /// Pair-interleaved weights `[tap][ci/2][co_p]`: each u32 lane holds
     /// `(w[2*ci2][co] as u16) | (w[2*ci2+1][co] as u16) << 16`,
-    /// zero-padded in both ci and co.
+    /// zero-padded in both ci and co.  Layout of the frozen PR-2
+    /// single-pixel kernel ([`crate::reference::baseline`]).
     pub wp: Vec<u32>,
+    /// Cout-tile-major weight panels `[co/8][tap][ci/2][8]` for the
+    /// register-blocked strip microkernel (§Microkernel): the whole
+    /// `3x3 x cin` reduction of one 8-lane cout tile streams a single
+    /// contiguous panel, one 256-bit load per `(tap, pair)`.  Lanes are
+    /// pair-interleaved exactly like `wp`.
+    pub wt: Vec<u32>,
     /// Widened weights `[tap][ci][co_p]` for the scalar kernel
     /// (co zero-padded so accumulator rows stay `cout_p` long).
     pub w32: Vec<i32>,
@@ -59,18 +74,27 @@ impl PreparedLayer {
         let cout_p = cout.next_multiple_of(8);
         let cin_p = cin.next_multiple_of(2);
         let taps = 9;
-        let mut wp = vec![0u32; taps * (cin_p / 2) * cout_p];
+        let pairs = cin_p / 2;
+        let mut wp = vec![0u32; taps * pairs * cout_p];
+        let mut wt = vec![0u32; (cout_p / 8) * taps * pairs * 8];
         let mut w32 = vec![0i32; taps * cin * cout_p];
         for tap in 0..taps {
             for ci in 0..cin {
                 for co in 0..cout {
                     let v = layer.w[(tap * cin + ci) * cout + co];
+                    let half = (v as i16 as u16 as u32) << (16 * (ci % 2));
                     w32[(tap * cin + ci) * cout_p + co] = v as i32;
-                    let slot = (tap * (cin_p / 2) + ci / 2) * cout_p + co;
-                    wp[slot] |= (v as i16 as u16 as u32) << (16 * (ci % 2));
+                    let slot = (tap * pairs + ci / 2) * cout_p + co;
+                    wp[slot] |= half;
+                    let tslot = (((co / 8) * taps + tap) * pairs + ci / 2)
+                        * 8
+                        + co % 8;
+                    wt[tslot] |= half;
                 }
             }
         }
+        let mut bias_p = vec![0i32; cout_p];
+        bias_p[..cout].copy_from_slice(&layer.bias);
         Self {
             cin,
             cout,
@@ -79,7 +103,9 @@ impl PreparedLayer {
             relu: layer.relu,
             m: layer.m,
             bias: layer.bias.clone(),
+            bias_p,
             wp,
+            wt,
             w32,
             w: layer.w.clone(),
         }
@@ -130,18 +156,38 @@ impl PreparedModel {
     }
 }
 
+/// Default cap on bytes parked in a [`Scratch`] tensor-recycling pool.
+///
+/// Sized to keep the *largest supported single-stream working set*
+/// resident so steady-state serving stays allocation-free: a 1080p-LR
+/// x4 frame cycles a ~398 MB pre-residual i32 map (1920*1080*48*4),
+/// two ~58 MB u8 feature maps and a ~100 MB HR frame through the pool
+/// (~614 MB total; 1080p@x3 is ~396 MB, 720p@x3 ~190 MB).  768 MiB
+/// covers every preset through 1080p@x4 while still guaranteeing that
+/// long multi-stream runs with heterogeneous geometries cannot grow
+/// the pool without bound.  Exotic configurations above the cap
+/// (1080p@x8 cycles a ~1.6 GB pre-residual map) trade per-frame
+/// reallocation of the over-cap buffer for boundedness — raise it per
+/// worker with [`Scratch::with_pool_limit`] if that trade is wrong for
+/// your deployment.
+pub const DEFAULT_POOL_LIMIT_BYTES: usize = 768 << 20;
+
 /// Per-worker scratch arena: all reusable buffers of the conv engines
 /// and the tilted scheduler, plus a recycling pool of tensor storage.
 ///
-/// Buffers only ever grow; in steady state `take_*`/`recycle_*` and the
-/// named buffers reuse capacity and never touch the allocator.
-#[derive(Debug, Default)]
+/// Named buffers only ever grow to the high-water mark of their one
+/// role; the tensor pool is **byte-bounded** (`pool_limit_bytes`):
+/// `recycle_*` parks storage only while the pooled total stays under
+/// the limit and silently drops it back to the allocator otherwise, so
+/// steady state is allocation-free and worst case is capped.
+#[derive(Debug)]
 pub struct Scratch {
-    /// Row accumulator strip (`w * cout_p`) of the whole-map conv.
+    /// Row accumulator strip (`w * cout_p`) of the PR-2 baseline conv.
     pub(crate) acc_row: Vec<i32>,
-    /// Per-pixel accumulator (`cout_p`) of the patch conv.
+    /// Per-pixel accumulator (`cout_p`) of the PR-2 baseline patch conv.
     pub(crate) acc: Vec<i32>,
-    /// Zero-padded pixel staging (`cin_p`) for odd-`cin` AVX2 rows.
+    /// Zero-padded pixel staging (`cin_p`) for odd-`cin` AVX2 rows of
+    /// the PR-2 baseline kernels (the strip microkernel needs none).
     pub(crate) px: Vec<u8>,
     /// Column staging of the tilted scheduler's SRAM transfers.
     pub(crate) colbuf: Vec<u8>,
@@ -155,6 +201,14 @@ pub struct Scratch {
     pub(crate) accum: Accumulator,
     pool_u8: Vec<Vec<u8>>,
     pool_i32: Vec<Vec<i32>>,
+    pool_limit_bytes: usize,
+    pool_bytes: usize,
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Self::with_pool_limit(DEFAULT_POOL_LIMIT_BYTES)
+    }
 }
 
 impl Scratch {
@@ -162,28 +216,72 @@ impl Scratch {
         Self::default()
     }
 
+    /// A scratch whose tensor-recycling pool parks at most `limit`
+    /// bytes of storage (capacity-accounted, u8 + i32 pools combined).
+    pub fn with_pool_limit(limit: usize) -> Self {
+        Self {
+            acc_row: Vec::new(),
+            acc: Vec::new(),
+            px: Vec::new(),
+            colbuf: Vec::new(),
+            payload: Vec::new(),
+            overlap: Vec::new(),
+            partials: Vec::new(),
+            accum: Accumulator::default(),
+            pool_u8: Vec::new(),
+            pool_i32: Vec::new(),
+            pool_limit_bytes: limit,
+            pool_bytes: 0,
+        }
+    }
+
+    /// Bytes currently parked in the tensor-recycling pool.
+    pub fn pooled_bytes(&self) -> usize {
+        self.pool_bytes
+    }
+
+    /// The pool's byte cap ([`DEFAULT_POOL_LIMIT_BYTES`] unless built
+    /// via [`Scratch::with_pool_limit`]).
+    pub fn pool_limit_bytes(&self) -> usize {
+        self.pool_limit_bytes
+    }
+
     /// Take a zero-filled `(h, w, c)` tensor, reusing pooled storage.
     pub fn take_u8(&mut self, h: usize, w: usize, c: usize) -> Tensor<u8> {
         let mut data = self.pool_u8.pop().unwrap_or_default();
+        self.pool_bytes = self.pool_bytes.saturating_sub(data.capacity());
         data.clear();
         data.resize(h * w * c, 0);
         Tensor { h, w, c, data }
     }
 
-    /// Return a tensor's storage to the pool for reuse.
+    /// Return a tensor's storage to the pool for reuse.  Dropped
+    /// instead when parking it would exceed the pool's byte cap.
     pub fn recycle_u8(&mut self, t: Tensor<u8>) {
+        let bytes = t.data.capacity();
+        if self.pool_bytes + bytes > self.pool_limit_bytes {
+            return; // over budget: let the allocator reclaim it
+        }
+        self.pool_bytes += bytes;
         self.pool_u8.push(t.data);
     }
 
     /// Take a zero-filled `(h, w, c)` i32 tensor from the pool.
     pub fn take_i32(&mut self, h: usize, w: usize, c: usize) -> Tensor<i32> {
         let mut data = self.pool_i32.pop().unwrap_or_default();
+        self.pool_bytes =
+            self.pool_bytes.saturating_sub(data.capacity() * 4);
         data.clear();
         data.resize(h * w * c, 0);
         Tensor { h, w, c, data }
     }
 
     pub fn recycle_i32(&mut self, t: Tensor<i32>) {
+        let bytes = t.data.capacity() * 4;
+        if self.pool_bytes + bytes > self.pool_limit_bytes {
+            return;
+        }
+        self.pool_bytes += bytes;
         self.pool_i32.push(t.data);
     }
 }
@@ -217,10 +315,24 @@ mod tests {
                                 >> (16 * (ci % 2)))
                                 as u16;
                             assert_eq!(half as i16, v as i16);
+                            // the microkernel's cout-tile panel holds
+                            // the same pair lane
+                            let tslot = (((co / 8) * 9 + tap)
+                                * (pl.cin_p / 2)
+                                + ci / 2)
+                                * 8
+                                + co % 8;
+                            let thalf = (pl.wt[tslot]
+                                >> (16 * (ci % 2)))
+                                as u16;
+                            assert_eq!(thalf as i16, v as i16);
                         }
                     }
                 }
             }
+            assert_eq!(&pl.bias_p[..layer.cout], &layer.bias[..]);
+            assert!(pl.bias_p[layer.cout..].iter().all(|&b| b == 0));
+            assert_eq!(pl.wt.len(), (pl.cout_p / 8) * 9 * (pl.cin_p / 2) * 8);
         }
     }
 
@@ -248,8 +360,71 @@ mod tests {
                     let lane =
                         pl.wp[(tap * (pl.cin_p / 2) + ci2) * pl.cout_p + co];
                     assert_eq!(lane >> 16, 0, "odd-cin pad half");
+                    let tlane = pl.wt[(((co / 8) * 9 + tap)
+                        * (pl.cin_p / 2)
+                        + ci2)
+                        * 8
+                        + co % 8];
+                    assert_eq!(tlane >> 16, 0, "odd-cin panel pad half");
                 }
             }
+            // padded co lanes of the microkernel panels must be zero
+            for co in pl.cout..pl.cout_p {
+                for ci2 in 0..pl.cin_p / 2 {
+                    let tlane = pl.wt[(((co / 8) * 9 + tap)
+                        * (pl.cin_p / 2)
+                        + ci2)
+                        * 8
+                        + co % 8];
+                    assert_eq!(tlane, 0, "padded co panel lane");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_respects_byte_limit() {
+        // regression: a long run recycling many buffers must not grow
+        // the pool past its cap — over-budget recycles are dropped
+        let mut s = Scratch::with_pool_limit(1000);
+        for _ in 0..8 {
+            s.recycle_u8(Tensor::new(10, 10, 3)); // 300 B each
+        }
+        assert!(s.pooled_bytes() <= 1000, "{}", s.pooled_bytes());
+        assert_eq!(s.pooled_bytes(), 900); // 3 parked, 5 dropped
+        // the pool still serves takes, and taking releases budget
+        let t = s.take_u8(10, 10, 3);
+        assert_eq!(s.pooled_bytes(), 600);
+        s.recycle_u8(t);
+        assert_eq!(s.pooled_bytes(), 900);
+        // i32 buffers share the same byte budget (4 B per element)
+        s.recycle_i32(Tensor::new(10, 10, 3)); // 1200 B > headroom
+        assert_eq!(s.pooled_bytes(), 900, "over-budget i32 must drop");
+        let t32 = s.take_i32(2, 2, 2);
+        s.recycle_i32(t32); // a few dozen bytes: fits under the cap
+        assert!(
+            (900..=1000).contains(&s.pooled_bytes()),
+            "{}",
+            s.pooled_bytes()
+        );
+    }
+
+    #[test]
+    fn pool_bounded_under_mixed_geometry_churn() {
+        // multi-stream-style churn: heterogeneous tensor shapes cycling
+        // through one worker's scratch stay under the cap forever
+        let mut s = Scratch::with_pool_limit(16 << 10);
+        for round in 0..200usize {
+            let (h, w) = (8 + round % 13, 8 + round % 29);
+            let a = s.take_u8(h, w, 3);
+            let b = s.take_i32(h, w, 9);
+            s.recycle_u8(a);
+            s.recycle_i32(b);
+            assert!(
+                s.pooled_bytes() <= s.pool_limit_bytes(),
+                "round {round}: {} bytes pooled",
+                s.pooled_bytes()
+            );
         }
     }
 

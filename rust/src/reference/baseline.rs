@@ -1,0 +1,350 @@
+//! Frozen PR-2 prepared kernels — the **measured baseline** for the
+//! `microkernel_speedup` BENCH records, kept verbatim so the perf
+//! trajectory compares the register-blocked strip microkernel
+//! (§Microkernel, [`super::microkernel`]) against exactly the code it
+//! replaced.
+//!
+//! Shape of the old hot path, preserved here: one output pixel at a
+//! time, every 256-bit weight vector re-loaded per pixel
+//! ([`madd_avx2`]), i32 accumulators bounced through the [`Scratch`]
+//! strip (`acc_row` / `acc`), and requantization as a separate pass
+//! over that strip.  **No production path calls this module** — the
+//! schedulers, engines and serving pipeline all run the microkernel;
+//! the equivalence suite additionally pins these kernels to the same
+//! naive oracle so the speedup comparison stays apples-to-apples.
+
+use crate::model::{PreparedLayer, PreparedModel, Scratch, Tensor};
+use crate::util::fixed::clamp_u8;
+
+use super::add_anchor_and_shuffle;
+use super::microkernel::avx2_available;
+
+/// PR-2 SAME row path + ReLU (pixel-at-a-time, separate requant pass).
+pub fn conv3x3_relu_pixel(
+    x: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+) -> Tensor<u8> {
+    assert_eq!(x.c, pl.cin, "conv3x3_relu: cin mismatch");
+    assert!(pl.relu, "conv3x3_relu called on a non-ReLU layer");
+    let mut out = scratch.take_u8(x.h, x.w, pl.cout);
+    let (w, cout, m) = (x.w, pl.cout, pl.m);
+    conv_rows(x, pl, scratch, |y, acc_row, cout_p| {
+        for xx in 0..w {
+            let a = &acc_row[xx * cout_p..xx * cout_p + cout];
+            let o = &mut out.data[(y * w + xx) * cout..][..cout];
+            for (oo, &av) in o.iter_mut().zip(a) {
+                *oo = clamp_u8(m.apply(av as i64));
+            }
+        }
+    });
+    out
+}
+
+/// PR-2 SAME row path, final layer (i32 out).
+pub fn conv3x3_final_pixel(
+    x: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+) -> Tensor<i32> {
+    assert_eq!(x.c, pl.cin, "conv3x3_final: cin mismatch");
+    assert!(!pl.relu, "conv3x3_final called on a ReLU layer");
+    let mut out = scratch.take_i32(x.h, x.w, pl.cout);
+    let (w, cout, m) = (x.w, pl.cout, pl.m);
+    conv_rows(x, pl, scratch, |y, acc_row, cout_p| {
+        for xx in 0..w {
+            let a = &acc_row[xx * cout_p..xx * cout_p + cout];
+            let o = &mut out.data[(y * w + xx) * cout..][..cout];
+            for (oo, &av) in o.iter_mut().zip(a) {
+                *oo = m.apply(av as i64) as i32;
+            }
+        }
+    });
+    out
+}
+
+/// PR-2 VALID patch path + ReLU (the old tilted tile kernel).
+pub fn conv_patch_relu_pixel(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+) -> Tensor<u8> {
+    assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
+    assert_eq!(patch.c, pl.cin);
+    assert!(pl.relu);
+    let (oh, ow) = (patch.h - 2, patch.w - 2);
+    let mut out = scratch.take_u8(oh, ow, pl.cout);
+    let (cout, m) = (pl.cout, pl.m);
+    patch_pixels(patch, pl, scratch, |y, x, acc| {
+        let o = &mut out.data[(y * ow + x) * cout..][..cout];
+        for (oo, &av) in o.iter_mut().zip(acc) {
+            *oo = clamp_u8(m.apply(av as i64));
+        }
+    });
+    out
+}
+
+/// PR-2 VALID patch path, final layer.
+pub fn conv_patch_final_pixel(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+) -> Tensor<i32> {
+    assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
+    assert_eq!(patch.c, pl.cin);
+    assert!(!pl.relu);
+    let (oh, ow) = (patch.h - 2, patch.w - 2);
+    let mut out = scratch.take_i32(oh, ow, pl.cout);
+    let (cout, m) = (pl.cout, pl.m);
+    patch_pixels(patch, pl, scratch, |y, x, acc| {
+        let o = &mut out.data[(y * ow + x) * cout..][..cout];
+        for (oo, &av) in o.iter_mut().zip(acc) {
+            *oo = m.apply(av as i64) as i32;
+        }
+    });
+    out
+}
+
+/// Whole-model forward on the PR-2 kernels — the e2e bench's baseline
+/// for `microkernel_speedup` (mirrors
+/// [`super::forward_int_prepared`] with pixel kernels).
+pub fn forward_int_pixel(
+    x: &Tensor<u8>,
+    pm: &PreparedModel,
+    scratch: &mut Scratch,
+) -> Tensor<u8> {
+    let n = pm.n_layers();
+    let mut h: Option<Tensor<u8>> = None;
+    for pl in &pm.layers[..n - 1] {
+        let next = {
+            let input = h.as_ref().unwrap_or(x);
+            conv3x3_relu_pixel(input, pl, scratch)
+        };
+        if let Some(old) = h.replace(next) {
+            scratch.recycle_u8(old);
+        }
+    }
+    let pre = {
+        let input = h.as_ref().unwrap_or(x);
+        conv3x3_final_pixel(input, pm.layers.last().unwrap(), scratch)
+    };
+    if let Some(old) = h {
+        scratch.recycle_u8(old);
+    }
+    let out = add_anchor_and_shuffle(&pre, x, pm.scale);
+    scratch.recycle_i32(pre);
+    out
+}
+
+/// PR-2 row-wise 3x3 SAME core: bias-init a `w*cout_p` i32 accumulator
+/// strip per row, sweep each tap over the whole row one pixel at a
+/// time, then `emit(y, acc_row, cout_p)` requantizes the finished strip
+/// in a second pass.
+fn conv_rows<F: FnMut(usize, &[i32], usize)>(
+    x: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    mut emit: F,
+) {
+    let (h, w) = (x.h, x.w);
+    let (cin, cout) = (pl.cin, pl.cout);
+    let (cin_p, cout_p) = (pl.cin_p, pl.cout_p);
+
+    let use_avx2 = avx2_available();
+
+    let acc_row = &mut scratch.acc_row;
+    acc_row.clear();
+    acc_row.resize(w * cout_p, 0);
+    // input pixel staging padded to cin_p (zero tail)
+    let px = &mut scratch.px;
+    px.clear();
+    px.resize(cin_p, 0);
+    for y in 0..h {
+        for xx in 0..w {
+            acc_row[xx * cout_p..xx * cout_p + cout]
+                .copy_from_slice(&pl.bias);
+            acc_row[xx * cout_p + cout..(xx + 1) * cout_p].fill(0);
+        }
+        for dr in 0..3usize {
+            let sy = y as isize + dr as isize - 1;
+            if sy < 0 || sy >= h as isize {
+                continue;
+            }
+            let in_row = &x.data[(sy as usize) * w * cin..][..w * cin];
+            for dc in 0..3usize {
+                let x_lo = 1usize.saturating_sub(dc);
+                let x_hi = (w + 1 - dc).min(w);
+                let tap = dr * 3 + dc;
+                for xx in x_lo..x_hi {
+                    let src = (xx + dc - 1) * cin;
+                    let acc =
+                        &mut acc_row[xx * cout_p..(xx + 1) * cout_p];
+                    #[cfg(target_arch = "x86_64")]
+                    if use_avx2 {
+                        // even cin reads the input row in place; odd
+                        // cin stages through the zero-padded buffer
+                        let src_px: &[u8] = if cin == cin_p {
+                            &in_row[src..src + cin]
+                        } else {
+                            px[..cin]
+                                .copy_from_slice(&in_row[src..src + cin]);
+                            &px[..]
+                        };
+                        let wtap = &pl.wp[tap * (cin_p / 2) * cout_p..]
+                            [..(cin_p / 2) * cout_p];
+                        // SAFETY: avx2 confirmed by runtime detection;
+                        // all slices are exactly sized above.
+                        unsafe {
+                            madd_avx2(acc, src_px, wtap, cin_p, cout_p)
+                        };
+                        continue;
+                    }
+                    let wtap =
+                        &pl.w32[tap * cin * cout_p..][..cin * cout_p];
+                    for ci in 0..cin {
+                        let xv = in_row[src + ci] as i32;
+                        if xv == 0 {
+                            continue; // post-ReLU sparsity
+                        }
+                        let wrow = &wtap[ci * cout_p..(ci + 1) * cout_p];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+        emit(y, &acc_row[..], cout_p);
+    }
+}
+
+/// PR-2 patch core: per output pixel, accumulate all 9 taps into the
+/// `cout_p` scratch accumulator and hand `acc[..cout]` to `emit`.
+fn patch_pixels<F: FnMut(usize, usize, &[i32])>(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    mut emit: F,
+) {
+    let (oh, ow) = (patch.h - 2, patch.w - 2);
+    let (cin, cout) = (pl.cin, pl.cout);
+    let (cin_p, cout_p) = (pl.cin_p, pl.cout_p);
+    let use_avx2 = avx2_available();
+
+    let acc = &mut scratch.acc;
+    acc.clear();
+    acc.resize(cout_p, 0);
+    let px = &mut scratch.px;
+    px.clear();
+    px.resize(cin_p, 0);
+
+    for y in 0..oh {
+        for x in 0..ow {
+            acc[..cout].copy_from_slice(&pl.bias);
+            acc[cout..].fill(0);
+            for dr in 0..3usize {
+                let base = patch.idx(y + dr, x, 0);
+                let row = &patch.data[base..base + 3 * cin];
+                for dc in 0..3usize {
+                    let tap = dr * 3 + dc;
+                    let src = &row[dc * cin..(dc + 1) * cin];
+                    #[cfg(target_arch = "x86_64")]
+                    if use_avx2 {
+                        let src_px: &[u8] = if cin == cin_p {
+                            src
+                        } else {
+                            px[..cin].copy_from_slice(src);
+                            &px[..]
+                        };
+                        let wtap = &pl.wp[tap * (cin_p / 2) * cout_p..]
+                            [..(cin_p / 2) * cout_p];
+                        // SAFETY: avx2 confirmed by runtime detection;
+                        // slices sized by the PreparedLayer invariants.
+                        unsafe {
+                            madd_avx2(acc, src_px, wtap, cin_p, cout_p)
+                        };
+                        continue;
+                    }
+                    let wtap =
+                        &pl.w32[tap * cin * cout_p..][..cin * cout_p];
+                    for ci in 0..cin {
+                        let xv = src[ci] as i32;
+                        if xv == 0 {
+                            continue;
+                        }
+                        let wrow = &wtap[ci * cout_p..(ci + 1) * cout_p];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+            emit(y, x, &acc[..cout]);
+        }
+    }
+}
+
+/// One pixel's multiply-accumulate over all (ci, co): `vpmaddwd` does
+/// the 2-channel dot product in 32-bit lanes, 8 output channels per
+/// 256-bit op — but the weight vectors are re-loaded for every pixel,
+/// which is exactly what the strip microkernel amortizes away.
+///
+/// # Safety
+/// Caller guarantees AVX2 is available, `px.len() == cin_p` (even),
+/// `acc.len() == cout_p` (multiple of 8), `wtap.len() == cin_p/2 * cout_p`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn madd_avx2(
+    acc: &mut [i32],
+    px: &[u8],
+    wtap: &[u32],
+    cin_p: usize,
+    cout_p: usize,
+) {
+    use std::arch::x86_64::*;
+    for ci2 in 0..cin_p / 2 {
+        let x0 = px[2 * ci2] as u32;
+        let x1 = px[2 * ci2 + 1] as u32;
+        if x0 == 0 && x1 == 0 {
+            continue; // pair-granular sparsity skip
+        }
+        let xpair = _mm256_set1_epi32((x0 | (x1 << 16)) as i32);
+        let wrow = wtap.as_ptr().add(ci2 * cout_p);
+        let mut co = 0;
+        while co < cout_p {
+            let a_ptr = acc.as_mut_ptr().add(co);
+            let wv =
+                _mm256_loadu_si256(wrow.add(co) as *const __m256i);
+            let a = _mm256_loadu_si256(a_ptr as *const __m256i);
+            let prod = _mm256_madd_epi16(xpair, wv);
+            _mm256_storeu_si256(
+                a_ptr as *mut __m256i,
+                _mm256_add_epi32(a, prod),
+            );
+            co += 8;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::QuantModel;
+    use crate::reference;
+    use crate::util::Xoshiro256pp;
+
+    #[test]
+    fn baseline_matches_microkernel_forward() {
+        // the frozen PR-2 path must keep producing the same bits as the
+        // microkernel it is benchmarked against
+        let qm = QuantModel::test_model(3, 3, 5, 3, 42);
+        let pm = PreparedModel::new(&qm);
+        let mut s = Scratch::new();
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let mut x = Tensor::new(6, 9, 3);
+        rng.fill_u8(&mut x.data);
+        let want = reference::forward_int_prepared(&x, &pm, &mut s);
+        let got = forward_int_pixel(&x, &pm, &mut s);
+        assert_eq!(got.data, want.data);
+    }
+}

@@ -7,15 +7,27 @@
 //! widens to i64 exactly like `quant.py`.
 //!
 //! §Perf architecture: weights are packed **once per model** into a
-//! [`PreparedLayer`] (AVX2 pair-interleaved `wp` + padded scalar `w32`)
-//! and every kernel borrows its working memory from a per-worker
-//! [`Scratch`] arena — the `*_prepared` entry points are the hot path
-//! and perform no steady-state allocation.  The unprepared wrappers
-//! (`conv3x3_relu` & co.) pack on the fly and exist for tests, one-shot
-//! callers, and as the pre-§Perf baseline the benches compare against.
+//! [`PreparedLayer`] and every kernel borrows its output storage from a
+//! per-worker [`Scratch`] arena — the `*_prepared` entry points are the
+//! hot path and perform no steady-state allocation.
+//!
+//! §Microkernel: both the SAME row path and the VALID patch path are
+//! thin drivers over **one** register-blocked strip microkernel
+//! ([`super::microkernel::conv_strip`]) — [`MK_P`] output pixels per
+//! call with the requant/ReLU/saturate (or final-layer i32) epilogue
+//! fused into the register tile, so the two paths cannot drift.  The
+//! unprepared wrappers (`conv3x3_relu` & co.) pack on the fly and exist
+//! for tests and one-shot callers; the frozen PR-2 single-pixel kernels
+//! live in [`super::baseline`] as the benches' speedup baseline.
+//!
+//! [`MK_P`]: super::microkernel::MK_P
 
 use crate::model::{PreparedLayer, QuantLayer, Scratch, Tensor};
 use crate::util::fixed::clamp_u8;
+
+use super::microkernel::{
+    avx2_available, conv_strip, StripOut, StripRows, MK_P,
+};
 
 /// SAME 3x3 conv + requant + ReLU over a whole map (zero padding).
 /// One-shot wrapper: packs the layer and allocates scratch per call.
@@ -67,16 +79,7 @@ pub fn conv3x3_relu_impl(
     assert_eq!(x.c, pl.cin, "conv3x3_relu: cin mismatch");
     assert!(pl.relu, "conv3x3_relu called on a non-ReLU layer");
     let mut out = scratch.take_u8(x.h, x.w, pl.cout);
-    let (w, cout, m) = (x.w, pl.cout, pl.m);
-    conv_rows(x, pl, scratch, force_scalar, |y, acc_row, cout_p| {
-        for xx in 0..w {
-            let a = &acc_row[xx * cout_p..xx * cout_p + cout];
-            let o = &mut out.data[(y * w + xx) * cout..][..cout];
-            for (oo, &av) in o.iter_mut().zip(a) {
-                *oo = clamp_u8(m.apply(av as i64));
-            }
-        }
-    });
+    conv_same(x, pl, force_scalar, &mut ConvOut::Relu(&mut out.data[..]));
     out
 }
 
@@ -90,164 +93,93 @@ pub fn conv3x3_final_impl(
     assert_eq!(x.c, pl.cin, "conv3x3_final: cin mismatch");
     assert!(!pl.relu, "conv3x3_final called on a ReLU layer");
     let mut out = scratch.take_i32(x.h, x.w, pl.cout);
-    let (w, cout, m) = (x.w, pl.cout, pl.m);
-    conv_rows(x, pl, scratch, force_scalar, |y, acc_row, cout_p| {
-        for xx in 0..w {
-            let a = &acc_row[xx * cout_p..xx * cout_p + cout];
-            let o = &mut out.data[(y * w + xx) * cout..][..cout];
-            for (oo, &av) in o.iter_mut().zip(a) {
-                *oo = m.apply(av as i64) as i32;
-            }
-        }
-    });
+    conv_same(x, pl, force_scalar, &mut ConvOut::Final(&mut out.data[..]));
     out
 }
 
-/// Row-wise 3x3 SAME convolution core (§Perf hot path).
-///
-/// Per output row: bias-init a `w*cout_p` i32 accumulator strip
-/// (`cout_p` = cout padded to 8), then for each of the <=9 taps sweep
-/// the whole row — the tap loops hoist all bounds logic out of the
-/// pixel loop.  Two inner kernels:
-///
-/// * **AVX2 `vpmaddwd`**: `u8 x i8` products fit i16 (255*127 < 2^15),
-///   so input-channel *pairs* are packed `(x_ci, x_ci+1)` into 32-bit
-///   lanes and multiplied against the pair-interleaved i16 weights of
-///   the [`PreparedLayer`] — 16 MACs per instruction.
-/// * scalar fallback over `w32` (also the reference for the dispatch
-///   test).
-///
-/// The accumulator strip and the odd-`cin` staging buffer live in
-/// `scratch`; weights were packed when the [`PreparedLayer`] was built.
-/// `emit(y, acc_row, cout_p)` requantizes each finished row.
-fn conv_rows<F: FnMut(usize, &[i32], usize)>(
+/// Whole-map output destination of one conv driver sweep.
+enum ConvOut<'a> {
+    Relu(&'a mut [u8]),
+    Final(&'a mut [i32]),
+}
+
+impl ConvOut<'_> {
+    /// Borrow the `np * cout`-value strip starting at flat pixel
+    /// `pix0` as a microkernel destination.
+    fn strip(&mut self, pix0: usize, np: usize, cout: usize) -> StripOut<'_> {
+        let base = pix0 * cout;
+        match self {
+            ConvOut::Relu(o) => {
+                StripOut::Relu(&mut o[base..][..np * cout])
+            }
+            ConvOut::Final(o) => {
+                StripOut::Final(&mut o[base..][..np * cout])
+            }
+        }
+    }
+}
+
+/// SAME row driver (§Microkernel): feeds whole-map rows to the strip
+/// microkernel.  Rows above/below the image are `None` (zero rows),
+/// horizontal zero padding is the strip's column mask `[0, w)`.
+fn conv_same(
     x: &Tensor<u8>,
     pl: &PreparedLayer,
-    scratch: &mut Scratch,
     force_scalar: bool,
-    mut emit: F,
+    out: &mut ConvOut<'_>,
 ) {
     let (h, w) = (x.h, x.w);
     let (cin, cout) = (pl.cin, pl.cout);
-    let (cin_p, cout_p) = (pl.cin_p, pl.cout_p);
-
     let use_avx2 = avx2_available() && !force_scalar;
-
-    let acc_row = &mut scratch.acc_row;
-    acc_row.clear();
-    acc_row.resize(w * cout_p, 0);
-    // input pixel staging padded to cin_p (zero tail)
-    let px = &mut scratch.px;
-    px.clear();
-    px.resize(cin_p, 0);
     for y in 0..h {
-        for xx in 0..w {
-            acc_row[xx * cout_p..xx * cout_p + cout]
-                .copy_from_slice(&pl.bias);
-            acc_row[xx * cout_p + cout..(xx + 1) * cout_p].fill(0);
-        }
-        for dr in 0..3usize {
+        let mut rows = StripRows {
+            rows: [None, None, None],
+            col_lo: 0,
+            col_hi: w as isize,
+        };
+        for (dr, r) in rows.rows.iter_mut().enumerate() {
             let sy = y as isize + dr as isize - 1;
-            if sy < 0 || sy >= h as isize {
-                continue;
-            }
-            let in_row = &x.data[(sy as usize) * w * cin..][..w * cin];
-            for dc in 0..3usize {
-                let x_lo = 1usize.saturating_sub(dc);
-                let x_hi = (w + 1 - dc).min(w);
-                let tap = dr * 3 + dc;
-                for xx in x_lo..x_hi {
-                    let src = (xx + dc - 1) * cin;
-                    let acc =
-                        &mut acc_row[xx * cout_p..(xx + 1) * cout_p];
-                    #[cfg(target_arch = "x86_64")]
-                    if use_avx2 {
-                        // even cin reads the input row in place; odd
-                        // cin stages through the zero-padded buffer
-                        let src_px: &[u8] = if cin == cin_p {
-                            &in_row[src..src + cin]
-                        } else {
-                            px[..cin]
-                                .copy_from_slice(&in_row[src..src + cin]);
-                            &px[..]
-                        };
-                        let wtap = &pl.wp[tap * (cin_p / 2) * cout_p..]
-                            [..(cin_p / 2) * cout_p];
-                        // SAFETY: avx2 confirmed by runtime detection;
-                        // all slices are exactly sized above.
-                        unsafe {
-                            madd_avx2(acc, src_px, wtap, cin_p, cout_p)
-                        };
-                        continue;
-                    }
-                    let wtap =
-                        &pl.w32[tap * cin * cout_p..][..cin * cout_p];
-                    for ci in 0..cin {
-                        let xv = in_row[src + ci] as i32;
-                        if xv == 0 {
-                            continue; // post-ReLU sparsity
-                        }
-                        let wrow = &wtap[ci * cout_p..(ci + 1) * cout_p];
-                        for (a, &wv) in acc.iter_mut().zip(wrow) {
-                            *a += xv * wv;
-                        }
-                    }
-                }
+            if (0..h as isize).contains(&sy) {
+                *r = Some(&x.data[(sy as usize) * w * cin..][..w * cin]);
             }
         }
-        emit(y, &acc_row[..], cout_p);
+        let mut x0 = 0;
+        while x0 < w {
+            let np = MK_P.min(w - x0);
+            let mut strip = out.strip(y * w + x0, np, cout);
+            conv_strip(&rows, pl, x0, np, use_avx2, &mut strip);
+            x0 += np;
+        }
     }
 }
 
-#[inline]
-fn avx2_available() -> bool {
-    #[cfg(target_arch = "x86_64")]
-    {
-        std::arch::is_x86_feature_detected!("avx2")
-    }
-    #[cfg(not(target_arch = "x86_64"))]
-    {
-        false
-    }
-}
-
-/// One pixel's multiply-accumulate over all (ci, co): `vpmaddwd` does
-/// the 2-channel dot product in 32-bit lanes, 8 output channels per
-/// 256-bit op.
-///
-/// # Safety
-/// Caller guarantees AVX2 is available, `px.len() == cin_p` (even),
-/// `acc.len() == cout_p` (multiple of 8), `wtap.len() == cin_p/2 * cout_p`.
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "avx2")]
-unsafe fn madd_avx2(
-    acc: &mut [i32],
-    px: &[u8],
-    wtap: &[u32],
-    cin_p: usize,
-    cout_p: usize,
+/// VALID patch driver (§Microkernel): the halo'd patch materializes
+/// every column an output pixel can touch, so the column mask is
+/// `[-1, ow+1)` and all three rows are always present.
+fn conv_patch_drive(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    force_scalar: bool,
+    out: &mut ConvOut<'_>,
 ) {
-    use std::arch::x86_64::*;
-    for ci2 in 0..cin_p / 2 {
-        let x0 = px[2 * ci2] as u32;
-        let x1 = px[2 * ci2 + 1] as u32;
-        if x0 == 0 && x1 == 0 {
-            continue; // pair-granular sparsity skip
+    let (oh, ow) = (patch.h - 2, patch.w - 2);
+    let (cin, cout, pw) = (pl.cin, pl.cout, patch.w);
+    let use_avx2 = avx2_available() && !force_scalar;
+    for y in 0..oh {
+        let mut rows = StripRows {
+            rows: [None, None, None],
+            col_lo: -1,
+            col_hi: (ow + 1) as isize,
+        };
+        for (dr, r) in rows.rows.iter_mut().enumerate() {
+            *r = Some(&patch.data[(y + dr) * pw * cin..][..pw * cin]);
         }
-        let xpair = _mm256_set1_epi32((x0 | (x1 << 16)) as i32);
-        let wrow = wtap.as_ptr().add(ci2 * cout_p);
-        let mut co = 0;
-        while co < cout_p {
-            let a_ptr = acc.as_mut_ptr().add(co);
-            let wv =
-                _mm256_loadu_si256(wrow.add(co) as *const __m256i);
-            let a = _mm256_loadu_si256(a_ptr as *const __m256i);
-            let prod = _mm256_madd_epi16(xpair, wv);
-            _mm256_storeu_si256(
-                a_ptr as *mut __m256i,
-                _mm256_add_epi32(a, prod),
-            );
-            co += 8;
+        let mut x0 = 0;
+        while x0 < ow {
+            let np = MK_P.min(ow - x0);
+            let mut strip = out.strip(y * ow + x0, np, cout);
+            conv_strip(&rows, pl, x0, np, use_avx2, &mut strip);
+            x0 += np;
         }
     }
 }
@@ -255,8 +187,9 @@ unsafe fn madd_avx2(
 /// VALID conv over an explicitly assembled `(rows+2, cols+2, cin)` patch
 /// (the scheduler fills halos from its ping-pong/overlap memories; zero
 /// rows/columns stand for image borders).  ReLU layers.  One-shot
-/// wrapper around the prepared tile kernel — and, because it runs the
-/// scalar per-pixel path, the pre-§Perf baseline for the tile benches.
+/// unprepared wrapper — a scalar per-pixel loop over the raw
+/// [`QuantLayer`], kept as the pre-§Perf baseline the benches compare
+/// against.
 pub fn conv_patch_relu(patch: &Tensor<u8>, layer: &QuantLayer) -> Tensor<u8> {
     assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
     assert_eq!(patch.c, layer.cin);
@@ -294,8 +227,8 @@ pub fn conv_patch_final(patch: &Tensor<u8>, layer: &QuantLayer) -> Tensor<i32> {
     out
 }
 
-/// VALID patch conv + ReLU on the prepared tile path: AVX2 `vpmaddwd`
-/// per tap with prepared weights, zero per-call allocation.  This is
+/// VALID patch conv + ReLU on the prepared microkernel path: the strip
+/// kernel with fused requantization, zero per-call allocation.  This is
 /// the kernel the tilted scheduler's steady-state band loop runs.
 pub fn conv_patch_relu_prepared(
     patch: &Tensor<u8>,
@@ -305,7 +238,7 @@ pub fn conv_patch_relu_prepared(
     conv_patch_relu_impl(patch, pl, scratch, false)
 }
 
-/// VALID patch conv of the final layer on the prepared tile path.
+/// VALID patch conv of the final layer on the prepared microkernel path.
 pub fn conv_patch_final_prepared(
     patch: &Tensor<u8>,
     pl: &PreparedLayer,
@@ -324,15 +257,8 @@ pub fn conv_patch_relu_impl(
     assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
     assert_eq!(patch.c, pl.cin);
     assert!(pl.relu);
-    let (oh, ow) = (patch.h - 2, patch.w - 2);
-    let mut out = scratch.take_u8(oh, ow, pl.cout);
-    let (cout, m) = (pl.cout, pl.m);
-    patch_pixels(patch, pl, scratch, force_scalar, |y, x, acc| {
-        let o = &mut out.data[(y * ow + x) * cout..][..cout];
-        for (oo, &av) in o.iter_mut().zip(acc) {
-            *oo = clamp_u8(m.apply(av as i64));
-        }
-    });
+    let mut out = scratch.take_u8(patch.h - 2, patch.w - 2, pl.cout);
+    conv_patch_drive(patch, pl, force_scalar, &mut ConvOut::Relu(&mut out.data[..]));
     out
 }
 
@@ -346,87 +272,9 @@ pub fn conv_patch_final_impl(
     assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
     assert_eq!(patch.c, pl.cin);
     assert!(!pl.relu);
-    let (oh, ow) = (patch.h - 2, patch.w - 2);
-    let mut out = scratch.take_i32(oh, ow, pl.cout);
-    let (cout, m) = (pl.cout, pl.m);
-    patch_pixels(patch, pl, scratch, force_scalar, |y, x, acc| {
-        let o = &mut out.data[(y * ow + x) * cout..][..cout];
-        for (oo, &av) in o.iter_mut().zip(acc) {
-            *oo = m.apply(av as i64) as i32;
-        }
-    });
+    let mut out = scratch.take_i32(patch.h - 2, patch.w - 2, pl.cout);
+    conv_patch_drive(patch, pl, force_scalar, &mut ConvOut::Final(&mut out.data[..]));
     out
-}
-
-/// Patch conv core: per output pixel, accumulate all 9 taps over the
-/// prepared layouts and hand `acc[..cout]` to `emit(y, x, acc)`.
-///
-/// The three taps of one kernel row are contiguous in the patch
-/// (`(y+dr, x..x+3, :)`), so each row slice feeds all three `dc`
-/// kernels without re-indexing.
-fn patch_pixels<F: FnMut(usize, usize, &[i32])>(
-    patch: &Tensor<u8>,
-    pl: &PreparedLayer,
-    scratch: &mut Scratch,
-    force_scalar: bool,
-    mut emit: F,
-) {
-    let (oh, ow) = (patch.h - 2, patch.w - 2);
-    let (cin, cout) = (pl.cin, pl.cout);
-    let (cin_p, cout_p) = (pl.cin_p, pl.cout_p);
-    let use_avx2 = avx2_available() && !force_scalar;
-
-    let acc = &mut scratch.acc;
-    acc.clear();
-    acc.resize(cout_p, 0);
-    let px = &mut scratch.px;
-    px.clear();
-    px.resize(cin_p, 0);
-
-    for y in 0..oh {
-        for x in 0..ow {
-            acc[..cout].copy_from_slice(&pl.bias);
-            acc[cout..].fill(0);
-            for dr in 0..3usize {
-                let base = patch.idx(y + dr, x, 0);
-                let row = &patch.data[base..base + 3 * cin];
-                for dc in 0..3usize {
-                    let tap = dr * 3 + dc;
-                    let src = &row[dc * cin..(dc + 1) * cin];
-                    #[cfg(target_arch = "x86_64")]
-                    if use_avx2 {
-                        let src_px: &[u8] = if cin == cin_p {
-                            src
-                        } else {
-                            px[..cin].copy_from_slice(src);
-                            &px[..]
-                        };
-                        let wtap = &pl.wp[tap * (cin_p / 2) * cout_p..]
-                            [..(cin_p / 2) * cout_p];
-                        // SAFETY: avx2 confirmed by runtime detection;
-                        // slices sized by the PreparedLayer invariants.
-                        unsafe {
-                            madd_avx2(acc, src_px, wtap, cin_p, cout_p)
-                        };
-                        continue;
-                    }
-                    let wtap =
-                        &pl.w32[tap * cin * cout_p..][..cin * cout_p];
-                    for ci in 0..cin {
-                        let xv = src[ci] as i32;
-                        if xv == 0 {
-                            continue;
-                        }
-                        let wrow = &wtap[ci * cout_p..(ci + 1) * cout_p];
-                        for (a, &wv) in acc.iter_mut().zip(wrow) {
-                            *a += xv * wv;
-                        }
-                    }
-                }
-            }
-            emit(y, x, &acc[..cout]);
-        }
-    }
 }
 
 #[inline]
@@ -494,7 +342,7 @@ mod tests {
         }
         let via_patch = conv_patch_relu(&patch, l);
         assert_eq!(whole.data, via_patch.data);
-        // and the prepared tile kernel agrees bit for bit
+        // and the prepared microkernel agrees bit for bit
         let pl = PreparedLayer::new(l);
         let mut s = Scratch::new();
         let via_prepared = conv_patch_relu_prepared(&patch, &pl, &mut s);
@@ -545,6 +393,10 @@ mod tests {
         let scalar = conv3x3_relu_impl(&x, &pl, &mut s, true);
         assert_eq!(auto.data, scalar.data);
     }
+
+    // NOTE: tail masking (width % MK_P, cout % 8, odd cin) is swept
+    // canonically in rust/tests/microkernel_equivalence.rs against the
+    // naive oracle and the PR-2 baseline — not duplicated here.
 
     #[test]
     fn scratch_reuse_is_deterministic() {

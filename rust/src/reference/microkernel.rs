@@ -1,0 +1,329 @@
+//! Register-blocked int8 strip microkernel with a fused requantization
+//! epilogue (§Microkernel) — the one inner loop every conv path in the
+//! crate now runs.
+//!
+//! The paper keeps its 32x8 MAC array saturated by reusing each weight
+//! fetch across a whole tile column; the software analogue is keeping
+//! the AVX2 lanes saturated by reusing each weight *register* across a
+//! strip of output pixels.  One [`conv_strip`] call computes
+//! [`MK_P`] = 4 horizontally adjacent output pixels x all `cout`
+//! channels:
+//!
+//! * the i32 accumulators for the strip live in `__m256i` registers for
+//!   the **whole 3x3 x cin reduction** — `MK_P x NT` registers for `NT`
+//!   8-lane cout tiles (16 output channels per pass while they last,
+//!   8 for the tail);
+//! * each 256-bit weight load (from the cout-tile-major
+//!   [`PreparedLayer::wt`] panels, contiguous per tile) is amortized
+//!   over the `MK_P` pixels of the strip — the PR-2 kernel reloaded it
+//!   per pixel;
+//! * each of the three input rows is fetched once per strip and reused
+//!   across the three vertical taps that read it;
+//! * the requant / ReLU / saturate epilogue (or the final layer's i32
+//!   store) runs straight off the register tile: the `w x cout_p`
+//!   accumulator strip the PR-2 path bounced through [`Scratch`] no
+//!   longer exists.
+//!
+//! Ragged edges are masked, never special-cased by callers: strips at
+//! `width % MK_P` shrink `np`, `cout % 8` rides the zero-padded lanes
+//! of the panels, and odd `cin` resolves to a zero-weight pair half so
+//! no staging buffer (and no out-of-bounds read) is needed.
+//!
+//! The scalar twin ([`strip_scalar`], over the padded [`PreparedLayer::w32`]
+//! rows) has identical accumulation semantics and is the `force_scalar`
+//! oracle of the equivalence tests (`tests/microkernel_equivalence.rs`),
+//! which pin AVX2 == scalar == naive reference bit for bit.  The frozen
+//! PR-2 single-pixel kernel lives on in [`crate::reference::baseline`]
+//! purely as the measured `microkernel_speedup` baseline.
+//!
+//! [`Scratch`]: crate::model::Scratch
+
+use crate::model::PreparedLayer;
+use crate::util::fixed::{clamp_u8, FixedMul};
+
+/// Output pixels per strip — the register-blocking factor `P`.
+///
+/// 4 pixels x 2 cout tiles is 8 accumulator + 2 weight registers, which
+/// (with the broadcast register) fits the 16 `ymm` names with room for
+/// renaming; wider strips would spill.
+pub const MK_P: usize = 4;
+
+/// Runtime AVX2 dispatch (`force_scalar` in the kernel entry points
+/// bypasses it so both kernels can be pinned against each other on one
+/// host).
+#[inline]
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The three input rows of one output row, in *virtual column* space.
+///
+/// Output pixel `x` reads virtual input columns `x-1 ..= x+1` of each
+/// kernel row.  `rows[dr]` covers virtual columns `[col_lo, col_hi)` at
+/// `cin` bytes per column (`byte offset = (v - col_lo) * cin`); columns
+/// outside the range read as zero (SAME padding / band seams), and a
+/// `None` row is a whole zero row (top/bottom image border).
+///
+/// Both conv drivers reduce to this one description: the whole-map SAME
+/// path passes image rows with `[0, w)`, the VALID patch path passes
+/// patch rows with `[-1, ow+1)` (every column materialized in the
+/// halo'd patch).
+pub(crate) struct StripRows<'a> {
+    pub rows: [Option<&'a [u8]>; 3],
+    pub col_lo: isize,
+    pub col_hi: isize,
+}
+
+/// Where a strip's requantized output lands: `np * cout` contiguous
+/// values starting at the strip's first pixel.
+pub(crate) enum StripOut<'a> {
+    /// ReLU layer: `clamp_u8(m.apply(acc))` bytes.
+    Relu(&'a mut [u8]),
+    /// Final layer: `m.apply(acc)` pre-residual i32 values.
+    Final(&'a mut [i32]),
+}
+
+impl StripOut<'_> {
+    /// The fused epilogue, shared by the AVX2 and scalar kernels so the
+    /// two cannot drift: requantize `vals` (one pixel's accumulator
+    /// lanes) and store them at flat offset `off`, applying the ReLU
+    /// saturate-to-u8 or the final-layer i32 cast.
+    #[inline(always)]
+    fn store(&mut self, off: usize, vals: &[i32], m: FixedMul) {
+        match self {
+            StripOut::Relu(o) => {
+                let dst = &mut o[off..][..vals.len()];
+                for (d, &v) in dst.iter_mut().zip(vals) {
+                    *d = clamp_u8(m.apply(v as i64));
+                }
+            }
+            StripOut::Final(o) => {
+                let dst = &mut o[off..][..vals.len()];
+                for (d, &v) in dst.iter_mut().zip(vals) {
+                    *d = m.apply(v as i64) as i32;
+                }
+            }
+        }
+    }
+}
+
+/// The single conv inner-loop entry point: compute `np <= MK_P` output
+/// pixels starting at output column `x0`, all `cout` channels, with the
+/// requant epilogue fused into the register tile.
+pub(crate) fn conv_strip(
+    rows: &StripRows<'_>,
+    pl: &PreparedLayer,
+    x0: usize,
+    np: usize,
+    use_avx2: bool,
+    out: &mut StripOut<'_>,
+) {
+    debug_assert!(np >= 1 && np <= MK_P);
+    #[cfg(target_arch = "x86_64")]
+    if use_avx2 {
+        let n_tiles = pl.cout_p / 8;
+        let mut cot = 0;
+        // SAFETY: AVX2 confirmed by the caller's dispatch; panel/bias
+        // bounds hold by the PreparedLayer packing invariants and
+        // `cot + NT <= n_tiles`; row reads stay inside the slices by
+        // the StripRows column contract (clamped per tap below).
+        unsafe {
+            while cot + 2 <= n_tiles {
+                strip_avx2::<2>(rows, pl, x0, np, cot, out);
+                cot += 2;
+            }
+            if cot < n_tiles {
+                strip_avx2::<1>(rows, pl, x0, np, cot, out);
+            }
+        }
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = use_avx2;
+    strip_scalar(rows, pl, x0, np, out);
+}
+
+/// The valid pixel sub-range `[p_lo, p_hi)` of a strip for one
+/// horizontal tap: pixel `p` reads virtual column `vbase + p`, which
+/// must fall inside `[col_lo, col_hi)`.
+#[inline(always)]
+fn tap_pixel_range(
+    rows: &StripRows<'_>,
+    vbase: isize,
+    np: usize,
+) -> (usize, usize) {
+    let p_lo = (rows.col_lo - vbase).max(0) as usize;
+    let p_hi = (rows.col_hi - vbase).min(np as isize).max(0) as usize;
+    (p_lo, p_hi)
+}
+
+/// One strip x `NT` 8-lane cout tiles (`NT` = 2 main loop, 1 tail) with
+/// accumulators register-resident for the whole reduction.
+///
+/// # Safety
+/// Caller guarantees AVX2 is available, `cot0 + NT <= pl.cout_p / 8`,
+/// `pl` was packed by [`PreparedLayer::new`] (panel/bias lengths and
+/// zero padding), each `Some` row covers
+/// `(col_hi - col_lo) * cin` bytes, and `out` holds `np * cout` values.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn strip_avx2<const NT: usize>(
+    rows: &StripRows<'_>,
+    pl: &PreparedLayer,
+    x0: usize,
+    np: usize,
+    cot0: usize,
+    out: &mut StripOut<'_>,
+) {
+    use std::arch::x86_64::*;
+    let cin = pl.cin;
+    let pairs = pl.cin_p / 2;
+    let tap_stride = pairs * 8; // u32 lanes per tap inside a panel
+    let panel_stride = 9 * tap_stride; // u32 lanes per cout-tile panel
+    let wt = pl.wt.as_ptr();
+
+    // bias-initialized register tile (np pixels x NT 8-lane groups)
+    let mut acc = [[_mm256_setzero_si256(); NT]; MK_P];
+    for accp in acc.iter_mut().take(np) {
+        for (t, a) in accp.iter_mut().enumerate() {
+            *a = _mm256_loadu_si256(
+                pl.bias_p.as_ptr().add((cot0 + t) * 8) as *const __m256i,
+            );
+        }
+    }
+
+    for (dr, rowo) in rows.rows.iter().enumerate() {
+        let Some(row) = rowo else { continue };
+        let rp = row.as_ptr();
+        for dc in 0..3usize {
+            let tap = dr * 3 + dc;
+            let vbase = x0 as isize + dc as isize - 1;
+            let (p_lo, p_hi) = tap_pixel_range(rows, vbase, np);
+            if p_lo >= p_hi {
+                continue;
+            }
+            let wtap = wt.add(cot0 * panel_stride + tap * tap_stride);
+            for ci2 in 0..pairs {
+                let mut wv = [_mm256_setzero_si256(); NT];
+                for (t, w) in wv.iter_mut().enumerate() {
+                    *w = _mm256_loadu_si256(
+                        wtap.add(t * panel_stride + ci2 * 8)
+                            as *const __m256i,
+                    );
+                }
+                let c0 = 2 * ci2;
+                let c1_valid = c0 + 1 < cin;
+                for p in p_lo..p_hi {
+                    let off = ((vbase + p as isize - rows.col_lo)
+                        as usize)
+                        * cin
+                        + c0;
+                    let xa = *rp.add(off) as u32;
+                    // odd-cin tail: the pair's high weight half is
+                    // zero-packed, so a zero stand-in keeps
+                    // bit-exactness without reading past the row
+                    let xb = if c1_valid {
+                        *rp.add(off + 1) as u32
+                    } else {
+                        0
+                    };
+                    if xa | xb == 0 {
+                        continue; // pair-granular post-ReLU sparsity
+                    }
+                    let xp =
+                        _mm256_set1_epi32((xa | (xb << 16)) as i32);
+                    for (t, a) in acc[p].iter_mut().enumerate() {
+                        *a = _mm256_add_epi32(
+                            *a,
+                            _mm256_madd_epi16(xp, wv[t]),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // fused epilogue: registers -> requant -> destination; the i32
+    // strip never lands in a Scratch buffer
+    let m = pl.m;
+    let cout = pl.cout;
+    let mut lanes = [0i32; 8];
+    for p in 0..np {
+        for (t, a) in acc[p].iter().enumerate() {
+            let co0 = (cot0 + t) * 8;
+            if co0 >= cout {
+                break; // fully padded tile: nothing to store
+            }
+            let nco = (cout - co0).min(8);
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, *a);
+            out.store(p * cout + co0, &lanes[..nco], m);
+        }
+    }
+}
+
+/// Scalar strip twin over the zero-padded `w32` rows: same strip
+/// blocking, same tap masking, stack-tile accumulators — the
+/// `force_scalar` oracle and the non-x86 path.  Bit-identical to the
+/// AVX2 kernel (integer adds commute; the products are the same set).
+fn strip_scalar(
+    rows: &StripRows<'_>,
+    pl: &PreparedLayer,
+    x0: usize,
+    np: usize,
+    out: &mut StripOut<'_>,
+) {
+    let cin = pl.cin;
+    let cout = pl.cout;
+    let cout_p = pl.cout_p;
+    let mut cot = 0usize;
+    while cot * 8 < cout {
+        let co0 = cot * 8;
+        let nco = (cout - co0).min(8);
+        let mut acc = [[0i32; 8]; MK_P];
+        for accp in acc.iter_mut().take(np) {
+            accp[..nco].copy_from_slice(&pl.bias_p[co0..co0 + nco]);
+        }
+        for (dr, rowo) in rows.rows.iter().enumerate() {
+            let Some(row) = rowo else { continue };
+            for dc in 0..3usize {
+                let tap = dr * 3 + dc;
+                let vbase = x0 as isize + dc as isize - 1;
+                let (p_lo, p_hi) = tap_pixel_range(rows, vbase, np);
+                if p_lo >= p_hi {
+                    continue;
+                }
+                for ci in 0..cin {
+                    let wrow = &pl.w32
+                        [(tap * cin + ci) * cout_p + co0..][..nco];
+                    for p in p_lo..p_hi {
+                        let off = ((vbase + p as isize - rows.col_lo)
+                            as usize)
+                            * cin
+                            + ci;
+                        let xv = row[off] as i32;
+                        if xv == 0 {
+                            continue; // post-ReLU sparsity
+                        }
+                        for (a, &wv) in
+                            acc[p][..nco].iter_mut().zip(wrow)
+                        {
+                            *a += xv * wv;
+                        }
+                    }
+                }
+            }
+        }
+        let m = pl.m;
+        for (p, accp) in acc.iter().enumerate().take(np) {
+            out.store(p * cout + co0, &accp[..nco], m);
+        }
+        cot += 1;
+    }
+}

@@ -9,14 +9,24 @@
 //! The `*_prepared` entry points take a [`PreparedModel`] (weights
 //! packed once) and a per-worker [`Scratch`] arena, and are what the
 //! serving engines call per frame; the plain wrappers pack on the fly.
+//!
+//! §Microkernel: every conv entry point (row and patch, ReLU and
+//! final) now drives the register-blocked strip microkernel of
+//! [`microkernel`] — [`MK_P`] output pixels per inner-loop invocation
+//! with the requantization epilogue fused into the register tile.  The
+//! frozen PR-2 single-pixel kernels live in [`baseline`] purely as the
+//! benches' `microkernel_speedup` reference point.
 
+pub mod baseline;
 pub mod conv;
+pub mod microkernel;
 
 pub use conv::{
     conv3x3_final, conv3x3_final_prepared, conv3x3_relu,
     conv3x3_relu_prepared, conv_patch_final, conv_patch_final_prepared,
     conv_patch_relu, conv_patch_relu_prepared,
 };
+pub use microkernel::{avx2_available, MK_P};
 
 use crate::image::ImageU8;
 use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};

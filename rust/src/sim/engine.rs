@@ -13,6 +13,12 @@
 //! execution allocates nothing in steady state.  Callers should
 //! [`Scratch::recycle_u8`]/[`Scratch::recycle_i32`] the output when
 //! they are done with it.
+//!
+//! §Microkernel: the analytic engine's functional path (values via the
+//! prepared patch convs) runs the register-blocked strip microkernel
+//! with its fused requant epilogue; the cycle-exact engine keeps its
+//! deliberately literal PE/accumulator walk — the two are pinned
+//! bit-identical by `rust/tests/sim_cross_check.rs`.
 
 use crate::model::{PreparedLayer, Scratch, Tensor};
 use crate::reference::{conv_patch_final_prepared, conv_patch_relu_prepared};

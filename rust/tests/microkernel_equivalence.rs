@@ -1,0 +1,302 @@
+//! §Microkernel equivalence properties: the register-blocked strip
+//! microkernel (AVX2 where the host has it) must be **bit-identical**
+//! to its `force_scalar` oracle and to a naive direct convolution
+//! written independently here — across randomized geometries and a
+//! deterministic sweep of every masked-tail case: `width % MK_P` in
+//! `{0..MK_P-1}`, `cout % 8 != 0` (padded lanes), odd `cin` (the
+//! zero-weight pair half), and both epilogues (fused ReLU/saturate u8
+//! and final-layer i32).  The frozen PR-2 pixel kernels
+//! (`reference::baseline`) are pinned to the same oracle so the
+//! benches' `microkernel_speedup` compares two correct kernels.
+
+use sr_accel::model::{
+    PreparedLayer, PreparedModel, QuantLayer, QuantModel, Scratch, Tensor,
+};
+use sr_accel::reference::conv::{
+    conv3x3_final_impl, conv3x3_relu_impl, conv_patch_final_impl,
+    conv_patch_relu_impl,
+};
+use sr_accel::reference::{self, baseline, MK_P};
+use sr_accel::util::fixed::{clamp_u8, FixedMul};
+use sr_accel::util::quickcheck::{check_no_shrink, Config};
+use sr_accel::util::Xoshiro256pp;
+
+fn rand_layer(cin: usize, cout: usize, relu: bool, seed: u64) -> QuantLayer {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    QuantLayer {
+        cin,
+        cout,
+        relu,
+        s_in: 1.0 / 255.0,
+        s_w: 0.01,
+        s_out: 1.0 / 255.0,
+        m: FixedMul::from_real(0.05),
+        bias: (0..cout)
+            .map(|_| rng.range_u64(0, 200) as i32 - 100)
+            .collect(),
+        w: (0..9 * cin * cout)
+            .map(|_| (rng.range_u64(0, 255) as i64 - 128) as i8)
+            .collect(),
+    }
+}
+
+fn rand_map(h: usize, w: usize, c: usize, seed: u64) -> Tensor<u8> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut t = Tensor::new(h, w, c);
+    rng.fill_u8(&mut t.data);
+    // sprinkle zeros so the sparsity-skip branches are exercised
+    for i in (0..t.data.len()).step_by(7) {
+        t.data[i] = 0;
+    }
+    t
+}
+
+/// Independent oracle: direct SAME 3x3 conv, no packing, no scratch.
+fn naive_conv3x3(x: &Tensor<u8>, l: &QuantLayer) -> (Vec<u8>, Vec<i32>) {
+    let mut out_u8 = vec![0u8; x.h * x.w * l.cout];
+    let mut out_i32 = vec![0i32; x.h * x.w * l.cout];
+    for y in 0..x.h {
+        for xx in 0..x.w {
+            for co in 0..l.cout {
+                let mut acc: i32 = l.bias[co];
+                for dr in 0..3usize {
+                    for dc in 0..3usize {
+                        let sy = y as isize + dr as isize - 1;
+                        let sx = xx as isize + dc as isize - 1;
+                        if sy < 0
+                            || sy >= x.h as isize
+                            || sx < 0
+                            || sx >= x.w as isize
+                        {
+                            continue;
+                        }
+                        for ci in 0..l.cin {
+                            let xv = x.get(sy as usize, sx as usize, ci)
+                                as i32;
+                            acc += xv
+                                * l.weight(dr, dc, ci, co) as i32;
+                        }
+                    }
+                }
+                let q = l.m.apply(acc as i64);
+                out_u8[(y * x.w + xx) * l.cout + co] = clamp_u8(q);
+                out_i32[(y * x.w + xx) * l.cout + co] = q as i32;
+            }
+        }
+    }
+    (out_u8, out_i32)
+}
+
+/// Zero-halo patch so the VALID patch kernels compute the SAME conv.
+fn zero_halo_patch(x: &Tensor<u8>) -> Tensor<u8> {
+    let mut p: Tensor<u8> = Tensor::new(x.h + 2, x.w + 2, x.c);
+    for y in 0..x.h {
+        for xx in 0..x.w {
+            for c in 0..x.c {
+                p.set(y + 1, xx + 1, c, x.get(y, xx, c));
+            }
+        }
+    }
+    p
+}
+
+/// Both conv paths (row SAME, patch VALID), both dispatches (auto and
+/// `force_scalar`), one epilogue — all against the naive oracle.
+fn assert_all_paths(
+    x: &Tensor<u8>,
+    l: &QuantLayer,
+    scratch: &mut Scratch,
+    label: &str,
+) -> Result<(), String> {
+    let pl = PreparedLayer::new(l);
+    let (want_u8, want_i32) = naive_conv3x3(x, l);
+    let patch = zero_halo_patch(x);
+    if l.relu {
+        for force_scalar in [false, true] {
+            let row = conv3x3_relu_impl(x, &pl, scratch, force_scalar);
+            if row.data != want_u8 {
+                return Err(format!(
+                    "{label}: row relu diverged (scalar={force_scalar})"
+                ));
+            }
+            scratch.recycle_u8(row);
+            let pat =
+                conv_patch_relu_impl(&patch, &pl, scratch, force_scalar);
+            if pat.data != want_u8 {
+                return Err(format!(
+                    "{label}: patch relu diverged (scalar={force_scalar})"
+                ));
+            }
+            scratch.recycle_u8(pat);
+        }
+        // the frozen PR-2 pixel kernels are the measured speedup
+        // baseline: pin them to the same oracle
+        let bl_row = baseline::conv3x3_relu_pixel(x, &pl, scratch);
+        if bl_row.data != want_u8 {
+            return Err(format!("{label}: baseline row relu diverged"));
+        }
+        scratch.recycle_u8(bl_row);
+        let bl_pat = baseline::conv_patch_relu_pixel(&patch, &pl, scratch);
+        if bl_pat.data != want_u8 {
+            return Err(format!("{label}: baseline patch relu diverged"));
+        }
+        scratch.recycle_u8(bl_pat);
+    } else {
+        for force_scalar in [false, true] {
+            let row = conv3x3_final_impl(x, &pl, scratch, force_scalar);
+            if row.data != want_i32 {
+                return Err(format!(
+                    "{label}: row final diverged (scalar={force_scalar})"
+                ));
+            }
+            scratch.recycle_i32(row);
+            let pat =
+                conv_patch_final_impl(&patch, &pl, scratch, force_scalar);
+            if pat.data != want_i32 {
+                return Err(format!(
+                    "{label}: patch final diverged (scalar={force_scalar})"
+                ));
+            }
+            scratch.recycle_i32(pat);
+        }
+        let bl_row = baseline::conv3x3_final_pixel(x, &pl, scratch);
+        if bl_row.data != want_i32 {
+            return Err(format!("{label}: baseline row final diverged"));
+        }
+        scratch.recycle_i32(bl_row);
+        let bl_pat =
+            baseline::conv_patch_final_pixel(&patch, &pl, scratch);
+        if bl_pat.data != want_i32 {
+            return Err(format!("{label}: baseline patch final diverged"));
+        }
+        scratch.recycle_i32(bl_pat);
+    }
+    Ok(())
+}
+
+#[test]
+fn strip_tail_sweep_covers_every_mask() {
+    // deterministic coverage: every width remainder mod MK_P, odd cin,
+    // cout % 8 != 0, both epilogues, on one shared scratch
+    let mut scratch = Scratch::new();
+    for w in 1..=2 * MK_P + 1 {
+        for &(cin, cout) in
+            &[(1usize, 4usize), (3, 8), (4, 11), (5, 16), (7, 20)]
+        {
+            for relu in [true, false] {
+                let seed = (w * 1009 + cin * 31 + cout * 7) as u64
+                    + relu as u64;
+                let l = rand_layer(cin, cout, relu, seed);
+                let x = rand_map(5, w, cin, seed ^ 0xA5A5);
+                let label = format!(
+                    "w={w} (w%P={}) {cin}->{cout} relu={relu}",
+                    w % MK_P
+                );
+                if let Err(e) =
+                    assert_all_paths(&x, &l, &mut scratch, &label)
+                {
+                    panic!("{e}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_microkernel_matches_scalar_and_naive() {
+    let cfg = Config {
+        cases: 50,
+        seed: 0x5712,
+        max_shrink_iters: 0,
+    };
+    let mut scratch = Scratch::new();
+    check_no_shrink(
+        &cfg,
+        |rng| {
+            (
+                rng.range_usize(1, 10),  // h
+                rng.range_usize(1, 14),  // w (crosses MK_P boundaries)
+                rng.range_usize(1, 10),  // cin (odd values included)
+                rng.range_usize(1, 20),  // cout (rarely divisible by 8)
+                rng.next_u64() & 1 == 0, // relu
+                rng.next_u64(),
+            )
+        },
+        |&(h, w, cin, cout, relu, seed)| {
+            let l = rand_layer(cin, cout, relu, seed);
+            let x = rand_map(h, w, cin, seed ^ 0x77);
+            assert_all_paths(
+                &x,
+                &l,
+                &mut scratch,
+                &format!("{h}x{w} {cin}->{cout} relu={relu}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn fused_epilogue_saturates_like_the_silicon() {
+    // huge positive bias must clamp to 255 in the fused ReLU epilogue,
+    // huge negative to 0, and the final layer must pass i32 through
+    // unclamped — on both dispatches
+    let mut scratch = Scratch::new();
+    for bias in [1 << 20, -(1 << 20)] {
+        let mut l = rand_layer(3, 9, true, 3);
+        l.bias.iter_mut().for_each(|b| *b = bias);
+        l.m = FixedMul {
+            m0: 1 << sr_accel::util::fixed::SHIFT,
+        };
+        let pl = PreparedLayer::new(&l);
+        let x = Tensor::new(4, 5, 3); // zero input: output = requant(bias)
+        for force_scalar in [false, true] {
+            let y = conv3x3_relu_impl(&x, &pl, &mut scratch, force_scalar);
+            let want = if bias > 0 { 255 } else { 0 };
+            assert!(
+                y.data.iter().all(|&v| v == want),
+                "bias {bias} scalar={force_scalar}"
+            );
+            scratch.recycle_u8(y);
+        }
+        let mut lf = l.clone();
+        lf.relu = false;
+        let plf = PreparedLayer::new(&lf);
+        for force_scalar in [false, true] {
+            let y = conv3x3_final_impl(&x, &plf, &mut scratch, force_scalar);
+            assert!(
+                y.data.iter().all(|&v| v == bias),
+                "final bias {bias} scalar={force_scalar}"
+            );
+            scratch.recycle_i32(y);
+        }
+    }
+}
+
+#[test]
+fn whole_model_forward_pinned_to_pr2_baseline() {
+    // microkernel forward == frozen PR-2 pixel forward, whole model,
+    // awkward channel counts, shared scratch across frames
+    for (n_layers, c_in, c_mid, scale, seed) in [
+        (3usize, 3usize, 5usize, 3usize, 1u64),
+        (2, 1, 7, 2, 2),
+        (4, 3, 9, 3, 3),
+    ] {
+        let qm = QuantModel::test_model(n_layers, c_in, c_mid, scale, seed);
+        let pm = PreparedModel::new(&qm);
+        let mut scratch = Scratch::new();
+        for frame_seed in 0..3u64 {
+            let x = rand_map(9, 11, c_in, 100 + frame_seed);
+            let want = reference::forward_int(&x, &qm);
+            let got = reference::forward_int_prepared(&x, &pm, &mut scratch);
+            assert_eq!(
+                got.data, want.data,
+                "microkernel forward, model {n_layers}l frame {frame_seed}"
+            );
+            let pixel = baseline::forward_int_pixel(&x, &pm, &mut scratch);
+            assert_eq!(
+                pixel.data, got.data,
+                "PR-2 baseline forward, model {n_layers}l frame {frame_seed}"
+            );
+        }
+    }
+}
