@@ -18,7 +18,7 @@ use sr_accel::benchkit::{
 };
 use sr_accel::config::AcceleratorConfig;
 use sr_accel::coordinator::{Engine, Int8Engine, PjrtEngine};
-use sr_accel::fusion::TiltedScheduler;
+use sr_accel::fusion::{StreamingScheduler, TiltedScheduler};
 use sr_accel::image::SceneGenerator;
 use sr_accel::model::{
     load_apbnw, PreparedLayer, PreparedModel, QuantModel, Scratch, Tensor,
@@ -155,7 +155,37 @@ fn main() {
     json.push_extra("microkernel_speedup", microkernel_speedup);
     json.push_extra("avx2", if avx2_available() { 1.0 } else { 0.0 });
 
-    // -- a whole tilted band through the scheduler (prepared path) ----
+    // -- §Streaming at kernel level: the same 60-row layer shaped as
+    //    the streaming executor drives it — one full-band-width patch
+    //    (60x64 output rows) instead of 8-column tiles — so the two
+    //    executor shapes are directly comparable above ---------------
+    let (band_rows, band_cols) = (60usize, 64usize);
+    let wide_patch = {
+        let mut p =
+            Tensor::new(band_rows + 2, band_cols + 2, layer.cin);
+        for (i, v) in p.data.iter_mut().enumerate() {
+            *v = (i * 41 % 251) as u8;
+        }
+        p
+    };
+    let wide_px = (band_rows * band_cols) as f64;
+    let wide_macs = 9.0 * wide_px * layer.cin as f64 * layer.cout as f64;
+    let m_wide = bench.run("band-row strip 60x64 28->28 (full width)", || {
+        let out = conv_patch_relu_prepared(
+            black_box(&wide_patch),
+            &pl,
+            &mut scratch,
+        );
+        scratch.recycle_u8(black_box(out));
+    });
+    push(&mut t, &mut json, &m_wide, wide_px, Some(wide_macs));
+
+    // -- a whole band through both fused executors: the tilted tile
+    //    scheduler vs the §Streaming row-ring executor.  The ratio is
+    //    recorded into the perf trajectory, so — like the gated
+    //    microkernel pair above — measure with a fixed iteration
+    //    floor; `--smoke`'s single-iteration bencher must never turn
+    //    this extra into a ratio of two single samples ---------------
     let pm = PreparedModel::new(&qm);
     let band = {
         let g = SceneGenerator::new(64, 60, 3).frame(0);
@@ -164,7 +194,13 @@ fn main() {
     let cfg = AcceleratorConfig::paper();
     let sched = TiltedScheduler::default();
     let band_px = (band.h * band.w) as f64;
-    let m_band = quick.run("tilted band 60x64 (prepared sched)", || {
+    let bandb = Bencher {
+        warmup: 2,
+        target_time: std::time::Duration::from_millis(200),
+        min_iters: 10,
+        max_iters: 100,
+    };
+    let m_band = bandb.run("tilted band 60x64 (prepared sched)", || {
         let (hr, stats) = sched.run_band_prepared(
             black_box(&band),
             &pm,
@@ -174,6 +210,20 @@ fn main() {
         black_box((hr, stats));
     });
     push(&mut t, &mut json, &m_band, band_px, None);
+    let streaming = StreamingScheduler::default();
+    let m_stream_band = bandb.run("streaming band 60x64 (row-ring)", || {
+        let (hr, stats) = streaming.run_band_prepared(
+            black_box(&band),
+            &pm,
+            &mut scratch,
+        );
+        scratch.recycle_u8(black_box(hr));
+        black_box(stats);
+    });
+    push(&mut t, &mut json, &m_stream_band, band_px, None);
+    let streaming_band_speedup =
+        m_band.summary_ns.median() / m_stream_band.summary_ns.median();
+    json.push_extra("streaming_band_speedup", streaming_band_speedup);
 
     // -- whole-frame int8 engine (320x180) ----------------------------
     let img = SceneGenerator::new(320, 180, 2).frame(0);
@@ -211,6 +261,10 @@ fn main() {
         "microkernel speedup (strip vs PR-2 pixel kernel, avx2={}): \
          {microkernel_speedup:.2}x",
         avx2_available()
+    );
+    println!(
+        "streaming band speedup (row-ring vs tilted tile scheduler): \
+         {streaming_band_speedup:.2}x"
     );
 
     // the paper's real-time target: 1920x1080@60fps HR = 124.4 MP/s

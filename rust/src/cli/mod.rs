@@ -98,12 +98,17 @@ COMMANDS:
              --queue-depth N  --width N --height N  --source-fps F
              --shard frame|band  --halo none|exact|N  --band-rows N
              --affinity any|modulo
+             --executor tilted|streaming (per-engine default:
+              streaming for int8 — the row-ring fused fast path —
+              tilted for sim, which keeps its hardware stats;
+              config [run] executor overrides globally)
   serve-multi  run N concurrent streams over one shared worker pool
              --streams SPEC[,SPEC...] with SPEC = GEOM@xS[@FPS]
              (GEOM = WxH or 270p|360p|540p|720p|1080p; e.g.
               360p@x3,270p@x4@30,960x540@x2)
              --engine int8|sim  --frames N (per stream)  --workers N
              --queue-depth N  --policy best-effort|drop:MS  --seed N
+             --executor tilted|streaming
   simulate   run one frame through a fusion schedule, print HW stats
              --fusion tilted|classical|block|layer  --width N --height N
              --tile-cols N --tile-rows N  --cycle-exact

@@ -10,9 +10,9 @@ mod types;
 
 pub use parser::{parse_toml, ParseError, Value};
 pub use types::{
-    AcceleratorConfig, FidelityKind, FusionKind, HaloPolicy, ModelConfig,
-    RtPolicy, ServeConfig, ShardPlan, ShardStrategy, SimConfig, StreamSpec,
-    SystemConfig, WorkerAffinity,
+    AcceleratorConfig, ExecutorKind, FidelityKind, FusionKind, HaloPolicy,
+    ModelConfig, RtPolicy, RunConfig, ServeConfig, ShardPlan, ShardStrategy,
+    SimConfig, StreamSpec, SystemConfig, WorkerAffinity,
 };
 
 #[cfg(test)]

@@ -163,6 +163,48 @@ impl Default for SimConfig {
     }
 }
 
+/// Which fused band executor backs the serving engines (§Streaming).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutorKind {
+    /// The hardware-faithful tilted tile scheduler: per-tile patch
+    /// staging through the SRAM models, full cycle/traffic stats.
+    Tilted,
+    /// The cache-resident row-ring executor: bit-identical output,
+    /// 3-row line buffers per layer, no memory model — the serving
+    /// fast path and the int8 engine's default.
+    Streaming,
+}
+
+impl ExecutorKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "tilted" => Self::Tilted,
+            "streaming" => Self::Streaming,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Tilted => "tilted",
+            Self::Streaming => "streaming",
+        }
+    }
+
+    pub const ALL: [ExecutorKind; 2] = [Self::Tilted, Self::Streaming];
+}
+
+/// Execution-strategy parameters shared by every run mode (`[run]`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RunConfig {
+    /// Explicit fused-executor override for the serving engines.
+    /// `None` (the default) keeps each engine's own default —
+    /// `streaming` for the int8 serving fast path, `tilted` for the
+    /// sim engine, whose whole point is the hardware SRAM/cycle stats
+    /// only the tilted scheduler models.
+    pub executor: Option<ExecutorKind>,
+}
+
 /// How the serving pipeline splits a frame into worker work units.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ShardStrategy {
@@ -496,6 +538,7 @@ pub struct SystemConfig {
     pub model: ModelConfig,
     pub sim: SimConfig,
     pub serve: ServeConfig,
+    pub run: RunConfig,
 }
 
 impl Default for SystemConfig {
@@ -505,6 +548,7 @@ impl Default for SystemConfig {
             model: ModelConfig::apbn(),
             sim: SimConfig::default(),
             serve: ServeConfig::default(),
+            run: RunConfig::default(),
         }
     }
 }
@@ -636,6 +680,23 @@ fn apply(cfg: &mut SystemConfig, v: &Value) -> Result<(), ParseError> {
                 "unknown serve.policy {s:?} (best-effort|drop:MS)"
             ))
         })?;
+    }
+    match v.get("run.executor") {
+        None => {}
+        Some(Value::Str(s)) => {
+            cfg.run.executor =
+                Some(ExecutorKind::parse(s).ok_or_else(|| {
+                    perr(format!(
+                        "unknown run.executor {s:?} (tilted|streaming)"
+                    ))
+                })?);
+        }
+        Some(other) => {
+            return Err(perr(format!(
+                "run.executor must be \"tilted\" or \"streaming\", \
+                 got {other:?}"
+            )));
+        }
     }
     match v.get("serve.streams") {
         None => {}
@@ -773,6 +834,42 @@ mod tests {
         let c = SystemConfig::default();
         assert_eq!(c.serve.shard, ShardPlan::whole_frame());
         assert_eq!(c.serve.shard.describe(), "whole-frame");
+    }
+
+    #[test]
+    fn executor_kind_roundtrip_and_default() {
+        for k in ExecutorKind::ALL {
+            assert_eq!(ExecutorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(ExecutorKind::parse("nope"), None);
+        // no blanket default: each engine keeps its own (streaming for
+        // int8 serving, tilted for the stats-bearing sim engine)
+        assert_eq!(SystemConfig::default().run.executor, None);
+    }
+
+    #[test]
+    fn run_executor_roundtrips_through_toml() {
+        let c = SystemConfig::from_toml("[run]\nexecutor = \"tilted\"")
+            .unwrap();
+        assert_eq!(c.run.executor, Some(ExecutorKind::Tilted));
+        let c = SystemConfig::from_toml("[run]\nexecutor = \"streaming\"")
+            .unwrap();
+        assert_eq!(c.run.executor, Some(ExecutorKind::Streaming));
+        // absent key stays an engine-resolved default
+        let c = SystemConfig::from_toml("[serve]\nworkers = 2").unwrap();
+        assert_eq!(c.run.executor, None);
+    }
+
+    #[test]
+    fn run_executor_rejections() {
+        for bad in [
+            "[run]\nexecutor = \"bogus\"",
+            "[run]\nexecutor = \"Tilted\"",
+            "[run]\nexecutor = 3",
+            "[run]\nexecutor = true",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

@@ -19,8 +19,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::config::AcceleratorConfig;
-use crate::fusion::TiltedScheduler;
+use crate::config::{AcceleratorConfig, ExecutorKind};
+use crate::fusion::{StreamingScheduler, TiltedScheduler};
 use crate::image::ImageU8;
 use crate::model::{PreparedModel, QuantModel, Scratch};
 use crate::reference;
@@ -69,25 +69,50 @@ impl EngineKind {
 /// serving hot loop performs no per-frame weight repacking (§Perf) and
 /// every conv runs the register-blocked strip microkernel with fused
 /// requantization (§Microkernel).
+///
+/// §Streaming: under [`ExecutorKind::Streaming`] (the default) each
+/// frame runs the row-ring streaming executor as one full-height band
+/// — **bit-identical** to monolithic [`reference::forward_int`]
+/// (pinned by `rust/tests/streaming_equivalence.rs`) but with an
+/// `O(layers x width)` cache-resident working set instead of whole
+/// feature maps.  [`ExecutorKind::Tilted`] falls back to the
+/// pre-streaming layer-at-a-time monolithic path (int8 has no tile
+/// scheduler; the knob exists to A/B the fast path and to fall back) —
+/// the two are bit-identical for this engine.
 pub struct Int8Engine {
     qm: QuantModel,
     pm: PreparedModel,
     scratch: Scratch,
+    executor: ExecutorKind,
+    streaming: StreamingScheduler,
 }
 
 impl Int8Engine {
     pub fn new(qm: QuantModel) -> Self {
+        Self::with_executor(qm, ExecutorKind::Streaming)
+    }
+
+    pub fn with_executor(qm: QuantModel, executor: ExecutorKind) -> Self {
         let pm = PreparedModel::new(&qm);
         Self {
             qm,
             pm,
             scratch: Scratch::new(),
+            executor,
+            streaming: StreamingScheduler::default(),
         }
     }
 
     pub fn from_artifacts() -> Result<Self> {
+        Self::from_artifacts_with(ExecutorKind::Streaming)
+    }
+
+    pub fn from_artifacts_with(executor: ExecutorKind) -> Result<Self> {
         let path = artifacts_dir().join("weights.apbnw");
-        Ok(Self::new(crate::model::load_apbnw(&path)?))
+        Ok(Self::with_executor(
+            crate::model::load_apbnw(&path)?,
+            executor,
+        ))
     }
 
     pub fn model(&self) -> &QuantModel {
@@ -97,7 +122,22 @@ impl Int8Engine {
 
 impl Engine for Int8Engine {
     fn upscale(&mut self, lr: &ImageU8) -> Result<ImageU8> {
-        Ok(reference::upscale_prepared(lr, &self.pm, &mut self.scratch))
+        match self.executor {
+            ExecutorKind::Streaming => {
+                let streaming = self.streaming;
+                Ok(reference::upscale_with(
+                    lr,
+                    &self.pm,
+                    &mut self.scratch,
+                    |t, pm, s| streaming.run_whole_prepared(t, pm, s),
+                ))
+            }
+            ExecutorKind::Tilted => Ok(reference::upscale_prepared(
+                lr,
+                &self.pm,
+                &mut self.scratch,
+            )),
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -138,33 +178,65 @@ impl Engine for PjrtEngine {
     }
 }
 
-/// Simulator engine: tilted fusion with full hardware accounting.
+/// Simulator engine: band-fused frames with hardware accounting.
 ///
 /// Like [`Int8Engine`], the model is prepared once and the scratch
-/// arena is owned per worker, so the tilted band loop stays
-/// allocation-free across frames.
+/// arena is owned per worker, so the band loop stays allocation-free
+/// across frames.
+///
+/// §Streaming: the executor knob picks the band implementation.
+/// [`ExecutorKind::Tilted`] (this engine's default — the
+/// hardware-faithful simulator) runs the tilted tile scheduler with
+/// full SRAM/cycle stats; [`ExecutorKind::Streaming`] runs the
+/// row-ring executor — **bit-identical HR output** (same zero-padded
+/// band seams, pinned by `rust/tests/streaming_equivalence.rs`) but
+/// stats cover the functional path only (MACs + the frame DRAM
+/// base), since the streaming path has no memory model.
 pub struct SimEngine {
     pm: PreparedModel,
     scratch: Scratch,
     cfg: AcceleratorConfig,
     sched: TiltedScheduler,
+    streaming: StreamingScheduler,
+    executor: ExecutorKind,
     last: Option<RunStats>,
 }
 
 impl SimEngine {
     pub fn new(qm: QuantModel, cfg: AcceleratorConfig) -> Self {
+        Self::with_executor(qm, cfg, ExecutorKind::Tilted)
+    }
+
+    pub fn with_executor(
+        qm: QuantModel,
+        cfg: AcceleratorConfig,
+        executor: ExecutorKind,
+    ) -> Self {
         Self {
             pm: PreparedModel::new(&qm),
             scratch: Scratch::new(),
             cfg,
             sched: TiltedScheduler::default(),
+            streaming: StreamingScheduler::default(),
+            executor,
             last: None,
         }
     }
 
     pub fn from_artifacts(cfg: AcceleratorConfig) -> Result<Self> {
+        Self::from_artifacts_with(cfg, ExecutorKind::Tilted)
+    }
+
+    pub fn from_artifacts_with(
+        cfg: AcceleratorConfig,
+        executor: ExecutorKind,
+    ) -> Result<Self> {
         let path = artifacts_dir().join("weights.apbnw");
-        Ok(Self::new(crate::model::load_apbnw(&path)?, cfg))
+        Ok(Self::with_executor(
+            crate::model::load_apbnw(&path)?,
+            cfg,
+            executor,
+        ))
     }
 }
 
@@ -172,12 +244,20 @@ impl Engine for SimEngine {
     fn upscale(&mut self, lr: &ImageU8) -> Result<ImageU8> {
         let mut t = self.scratch.take_u8(lr.h, lr.w, lr.c);
         t.data.copy_from_slice(&lr.data);
-        let res = self.sched.run_frame_prepared(
-            &t,
-            &self.pm,
-            &self.cfg,
-            &mut self.scratch,
-        );
+        let res = match self.executor {
+            ExecutorKind::Tilted => self.sched.run_frame_prepared(
+                &t,
+                &self.pm,
+                &self.cfg,
+                &mut self.scratch,
+            ),
+            ExecutorKind::Streaming => self.streaming.run_frame_prepared(
+                &t,
+                &self.pm,
+                &self.cfg,
+                &mut self.scratch,
+            ),
+        };
         self.scratch.recycle_u8(t);
         self.last = Some(res.stats);
         Ok(ImageU8::from_vec(
@@ -189,7 +269,10 @@ impl Engine for SimEngine {
     }
 
     fn name(&self) -> &'static str {
-        "sim"
+        match self.executor {
+            ExecutorKind::Tilted => "sim",
+            ExecutorKind::Streaming => "sim-streaming",
+        }
     }
 
     fn last_stats(&self) -> Option<RunStats> {
@@ -211,14 +294,19 @@ pub fn model_for_scale(
     }
 }
 
-/// Build an engine by kind; `artifact` lets callers pick AOT modules.
+/// Build an engine by kind; `artifact` lets callers pick AOT modules
+/// and `executor` selects the fused band executor (§Streaming —
+/// ignored by the PJRT float path).
 pub fn build_engine(
     kind: EngineKind,
     cfg: &AcceleratorConfig,
     artifact: Option<&Path>,
+    executor: ExecutorKind,
 ) -> Result<Box<dyn Engine>> {
     Ok(match kind {
-        EngineKind::Int8 => Box::new(Int8Engine::from_artifacts()?),
+        EngineKind::Int8 => {
+            Box::new(Int8Engine::from_artifacts_with(executor)?)
+        }
         EngineKind::Pjrt => {
             let name = artifact
                 .and_then(|p| p.file_name())
@@ -226,9 +314,10 @@ pub fn build_engine(
                 .unwrap_or("apbn_full.hlo.txt");
             Box::new(PjrtEngine::from_artifact(name)?)
         }
-        EngineKind::Sim => {
-            Box::new(SimEngine::from_artifacts(cfg.clone())?)
-        }
+        EngineKind::Sim => Box::new(SimEngine::from_artifacts_with(
+            cfg.clone(),
+            executor,
+        )?),
     })
 }
 
@@ -237,10 +326,11 @@ pub fn engine_factory(
     kind: EngineKind,
     cfg: &AcceleratorConfig,
     artifact: Option<&Path>,
+    executor: ExecutorKind,
 ) -> EngineFactory {
     let cfg = cfg.clone();
     let artifact = artifact.map(|p| p.to_path_buf());
-    Box::new(move || build_engine(kind, &cfg, artifact.as_deref()))
+    Box::new(move || build_engine(kind, &cfg, artifact.as_deref(), executor))
 }
 
 #[cfg(test)]
@@ -284,6 +374,59 @@ mod tests {
             int8.upscale(&lr).unwrap()
         );
         assert!(sim.last_stats().is_some());
+    }
+
+    #[test]
+    fn int8_executors_are_bit_identical() {
+        // streaming (default) vs the legacy monolithic path: same bits
+        let qm = QuantModel::test_model(3, 3, 6, 3, 4);
+        let mut fast =
+            Int8Engine::with_executor(qm.clone(), ExecutorKind::Streaming);
+        let mut legacy =
+            Int8Engine::with_executor(qm.clone(), ExecutorKind::Tilted);
+        for seed in 0..3u64 {
+            let lr = rand_img(7, 11, 10 + seed);
+            assert_eq!(
+                fast.upscale(&lr).unwrap(),
+                legacy.upscale(&lr).unwrap(),
+                "frame {seed}"
+            );
+        }
+        assert_eq!(fast.name(), "int8");
+    }
+
+    #[test]
+    fn sim_executors_agree_on_frames() {
+        // tilted vs streaming band executors: identical HR frames
+        // (same zero-padded band seams); only the stats differ
+        let qm = QuantModel::test_model(2, 3, 4, 3, 5);
+        let cfg = AcceleratorConfig {
+            tile_rows: 5,
+            tile_cols: 4,
+            ..AcceleratorConfig::paper()
+        };
+        let mut tilted = SimEngine::with_executor(
+            qm.clone(),
+            cfg.clone(),
+            ExecutorKind::Tilted,
+        );
+        let mut streaming = SimEngine::with_executor(
+            qm.clone(),
+            cfg,
+            ExecutorKind::Streaming,
+        );
+        let lr = rand_img(12, 9, 6);
+        assert_eq!(
+            tilted.upscale(&lr).unwrap(),
+            streaming.upscale(&lr).unwrap()
+        );
+        assert_eq!(tilted.name(), "sim");
+        assert_eq!(streaming.name(), "sim-streaming");
+        // the simulator models memory; the streaming fast path does not
+        assert!(tilted.last_stats().unwrap().sram_reads > 0);
+        let s = streaming.last_stats().unwrap();
+        assert_eq!(s.sram_reads, 0);
+        assert!(s.mac_ops > 0);
     }
 
     #[test]

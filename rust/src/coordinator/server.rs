@@ -520,6 +520,53 @@ mod tests {
     }
 
     #[test]
+    fn streaming_and_tilted_executors_serve_identical_frames() {
+        // §Streaming: a pool of row-ring streaming engines must
+        // deliver the same bits as a pool of tilted tile engines for
+        // every stream (same zero-padded band seams per frame)
+        use crate::config::{AcceleratorConfig, ExecutorKind};
+        use crate::coordinator::engine::SimEngine;
+        let streams = vec![spec("a", 11, 9, 3), spec("b", 9, 12, 2)];
+        let run = |executor: ExecutorKind| {
+            let cfg = MultiServeConfig {
+                streams: streams.clone(),
+                frames: 3,
+                workers: 2,
+                queue_depth: 2,
+                policy: RtPolicy::BestEffort,
+                seed: 9,
+            };
+            let factories: Vec<ScaleEngineFactory> = (0..2)
+                .map(|_| {
+                    Box::new(move |scale: usize| {
+                        let acc = AcceleratorConfig {
+                            tile_rows: 5,
+                            tile_cols: 4,
+                            ..AcceleratorConfig::paper()
+                        };
+                        Ok(Box::new(SimEngine::with_executor(
+                            QuantModel::test_model(2, 3, 4, scale, 1),
+                            acc,
+                            executor,
+                        )) as Box<dyn Engine>)
+                    }) as ScaleEngineFactory
+                })
+                .collect();
+            let mut got: Vec<Vec<(usize, ImageU8)>> =
+                vec![Vec::new(); streams.len()];
+            serve_multi(&cfg, factories, |si, fi, hr| {
+                got[si].push((fi, hr.clone()))
+            })
+            .unwrap();
+            got
+        };
+        let tilted = run(ExecutorKind::Tilted);
+        let streaming = run(ExecutorKind::Streaming);
+        assert_eq!(tilted, streaming);
+        assert_eq!(tilted[0].len(), 3);
+    }
+
+    #[test]
     fn best_effort_never_drops() {
         let cfg = MultiServeConfig {
             streams: vec![spec("a", 9, 7, 3)],

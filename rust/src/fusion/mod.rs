@@ -13,20 +13,28 @@
 //! buffer footprints) — the raw material for Tables I/II, Fig. 1 and the
 //! DRAM-bandwidth experiment.
 
+//! On top of the simulated schedules sits the serving-side
+//! [`StreamingScheduler`] (§Streaming, `streaming.rs`): a row-ring
+//! fused executor that is bit-identical to [`TiltedScheduler`] per
+//! band but keeps only 3-row line buffers per layer — no SRAM model,
+//! no per-tile staging — and is the coordinator's default executor.
+
 pub mod block_conv;
 pub mod classical;
 pub mod layer_by_layer;
 pub mod overlap;
+pub mod streaming;
 pub mod tilted;
 
 pub use block_conv::BlockConvScheduler;
 pub use classical::ClassicalScheduler;
 pub use layer_by_layer::LayerByLayerScheduler;
 pub use overlap::OverlapQueue;
+pub use streaming::StreamingScheduler;
 pub use tilted::TiltedScheduler;
 
 use crate::config::{AcceleratorConfig, FusionKind};
-use crate::model::{QuantModel, Tensor};
+use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};
 use crate::sim::RunStats;
 
 /// Result of running one LR frame through a scheduler.
@@ -89,6 +97,44 @@ pub(crate) fn base_frame_traffic_parts(
     stats.dram_read_bytes += model_bytes as u64;
     stats.dram_write_bytes +=
         (frame.h * scale * frame.w * scale * frame.c) as u64;
+}
+
+/// The one frame→bands driver shared by the fused band executors
+/// (tilted and streaming): base DRAM accounting, `band_rows` split,
+/// per-band execution via `run_band`, HR blit, stats merge, HR-band
+/// recycling.  Keeping it in one place means the two executors'
+/// frame paths cannot drift (band split or accounting changes apply
+/// to both by construction).
+pub(crate) fn run_frame_bands(
+    frame: &Tensor<u8>,
+    pm: &PreparedModel,
+    band_rows: usize,
+    scratch: &mut Scratch,
+    mut run_band: impl FnMut(
+        &Tensor<u8>,
+        &mut Scratch,
+    ) -> (Tensor<u8>, RunStats),
+) -> FrameResult {
+    let mut stats = RunStats::default();
+    base_frame_traffic_parts(
+        frame,
+        pm.weight_bytes + pm.bias_bytes,
+        pm.scale,
+        &mut stats,
+    );
+    let scale = pm.scale;
+    let mut hr: Tensor<u8> =
+        Tensor::new(frame.h * scale, frame.w * scale, frame.c);
+    for (y0, y1) in band_ranges(frame.h, band_rows) {
+        let band = band_of(frame, y0, y1);
+        let (hr_band, band_stats) = run_band(&band, scratch);
+        stats.merge(&band_stats);
+        let dst0 = y0 * scale * hr.w * hr.c;
+        hr.data[dst0..dst0 + hr_band.data.len()]
+            .copy_from_slice(&hr_band.data);
+        scratch.recycle_u8(hr_band);
+    }
+    FrameResult { hr, stats }
 }
 
 /// Split a frame height into bands of `rows` (last band may be short).

@@ -1,0 +1,386 @@
+//! Cache-resident streaming executor (§Streaming): full-width row-ring
+//! layer fusion for the serving fast path.
+//!
+//! The paper's tilted schedule exists to keep fused intermediates in a
+//! ~102 KB on-chip buffer; mapped onto a CPU, the same move is keeping
+//! the fused working set in L2.  [`TiltedScheduler`] is deliberately
+//! hardware-faithful — it re-stages every C-column tile of every layer
+//! column-by-column through SRAM models and an [`OverlapQueue`] — so
+//! the serving path paid a software analogue of the DRAM traffic the
+//! chip eliminates.  [`StreamingScheduler`] restructures band execution
+//! so activations stream through the minimal line buffers instead:
+//!
+//! * each layer keeps only a **3-row ring** of its input feature map
+//!   (`Scratch::rings`, sized like the paper's eq. (1) line buffers:
+//!   `3 x band_w x cout` bytes per layer) — map 0 and the residual
+//!   anchor read the resident LR band directly, collapsing the
+//!   eq. (2)/(3) buffers onto memory the caller already owns;
+//! * as layer *k* retires band row *y*, layer *k+1* consumes it on the
+//!   next step while it is hot in cache — the row-granular analogue of
+//!   the tilt's "ready without waiting" diagonal (each layer lags its
+//!   producer by exactly one row);
+//! * the final conv produces one pre-residual row at a time
+//!   (`Scratch::pre_row`) and the anchor-add + pixel-shuffle consumes
+//!   it immediately ([`add_anchor_row_and_shuffle_into`]), so the
+//!   whole-band i32 map never materializes;
+//! * every conv runs [`conv_strip`] over **whole band-width rows** —
+//!   the per-tile patch gather/scatter, the [`OverlapQueue`] payload
+//!   copies and the per-tile-per-layer engine dispatch of the tilted
+//!   path all disappear.
+//!
+//! Output is **bit-identical** to [`TiltedScheduler`] and to
+//! [`reference::forward_int`] on the band (same zero-padded band
+//! seams): the row schedule feeds [`conv_strip`] the exact
+//! [`StripRows`] the SAME row driver would (rows outside the band are
+//! `None`, horizontal padding is the strip's column mask), and integer
+//! accumulation is order-identical.  `rust/tests/streaming_equivalence.rs`
+//! pins all three against each other across randomized geometries,
+//! scales, band heights, tile widths and kernel dispatches.
+//!
+//! A band run as a single full-height band has no seams at all, so
+//! [`StreamingScheduler::run_whole_prepared`] is a drop-in,
+//! bit-identical replacement for monolithic
+//! [`reference::forward_int_prepared`] whose intermediate working set
+//! is `O(layers x band_w)` rows instead of `O(layers x frame)` maps —
+//! the default serving fast path of [`crate::coordinator::Int8Engine`].
+//!
+//! [`TiltedScheduler`]: super::TiltedScheduler
+//! [`OverlapQueue`]: super::OverlapQueue
+//! [`reference::forward_int`]: crate::reference::forward_int
+//! [`reference::forward_int_prepared`]: crate::reference::forward_int_prepared
+//! [`conv_strip`]: crate::reference::microkernel::conv_strip
+//! [`StripRows`]: crate::reference::microkernel::StripRows
+//! [`add_anchor_row_and_shuffle_into`]: crate::reference::add_anchor_row_and_shuffle_into
+
+use crate::config::AcceleratorConfig;
+use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};
+use crate::reference::add_anchor_row_and_shuffle_into;
+use crate::reference::conv::{conv_row_strips, ConvOut};
+use crate::reference::microkernel::{avx2_available, StripRows};
+use crate::sim::RunStats;
+
+use super::{run_frame_bands, FrameResult};
+
+/// The row-ring fused band executor.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamingScheduler {
+    /// Route every strip through the scalar kernel (the equivalence
+    /// tests' dispatch override; mirrors the `force_scalar` knob of the
+    /// `reference` conv entry points).
+    pub force_scalar: bool,
+}
+
+impl StreamingScheduler {
+    /// Run one band with zero-padded seams — bit-identical to
+    /// [`super::TiltedScheduler::run_band_prepared`] and to
+    /// [`crate::reference::forward_int`] on the band.
+    ///
+    /// The HR band's storage comes from the scratch pool; recycle it
+    /// with [`Scratch::recycle_u8`] to stay allocation-free.  Stats
+    /// cover the functional path only (MAC ops): the streaming
+    /// executor has no SRAM/cycle model — that is the tilted
+    /// scheduler's job — and every memory-model field stays zero.
+    pub fn run_band_prepared(
+        &self,
+        band: &Tensor<u8>,
+        pm: &PreparedModel,
+        scratch: &mut Scratch,
+    ) -> (Tensor<u8>, RunStats) {
+        let rows = band.h;
+        let w = band.w;
+        let c0 = pm.in_channels();
+        assert_eq!(band.c, c0, "streaming executor: cin mismatch");
+        assert!(rows > 0 && w > 0, "streaming executor: empty band");
+        let n_layers = pm.n_layers();
+        let scale = pm.scale;
+        let use_avx2 = avx2_available() && !self.force_scalar;
+
+        // -- line buffers: a 3-row ring per intermediate map ----------
+        // rings[m] caches map m+1 (the output of layer m+1) for maps
+        // 1 ..= L-1; ring slot = row % 3.  A row is written whole
+        // before any consumer reads it, so no zeroing between bands.
+        scratch.rings.resize(n_layers.saturating_sub(1), Vec::new());
+        for (m, ring) in scratch.rings.iter_mut().enumerate() {
+            ring.resize(3 * w * pm.layers[m].cout, 0);
+        }
+        let last = &pm.layers[n_layers - 1];
+        scratch.pre_row.resize(w * last.cout, 0);
+
+        let mut stats = RunStats::default();
+        let mut hr_band = scratch.take_u8(rows * scale, w * scale, c0);
+
+        // -- the row pipeline: step r ingests band row r (implicitly —
+        // the band is resident) and layer k retires its row r - k -----
+        for r in 0..rows + n_layers {
+            for k in 1..=n_layers {
+                let y = r as isize - k as isize;
+                if y < 0 || y >= rows as isize {
+                    continue;
+                }
+                let y = y as usize;
+                let layer = &pm.layers[k - 1];
+                let in_bytes = w * layer.cin;
+                // map k-1's rows y-1 ..= y+1; rows outside the band are
+                // None (the zero-padded band seam), exactly like the
+                // SAME row driver on the band
+                let (src_rings, dst_rings) =
+                    scratch.rings.split_at_mut(k - 1);
+                let src_ring: Option<&[u8]> = if k >= 2 {
+                    Some(src_rings[k - 2].as_slice())
+                } else {
+                    None // layer 1 reads the resident band directly
+                };
+                let strip_rows = StripRows {
+                    rows: [
+                        input_row(band, src_ring, in_bytes, rows, y as isize - 1),
+                        input_row(band, src_ring, in_bytes, rows, y as isize),
+                        input_row(band, src_ring, in_bytes, rows, y as isize + 1),
+                    ],
+                    col_lo: 0,
+                    col_hi: w as isize,
+                };
+                if k < n_layers {
+                    // ReLU layer: retire row y straight into layer
+                    // k+1's ring, hot for the next step
+                    let out_bytes = w * layer.cout;
+                    let dst = &mut dst_rings[0]
+                        [(y % 3) * out_bytes..][..out_bytes];
+                    let mut out = ConvOut::Relu(dst);
+                    conv_row_strips(
+                        &strip_rows, layer, w, 0, use_avx2, &mut out,
+                    );
+                } else {
+                    // final conv: one pre-residual row, fused with the
+                    // anchor add + pixel shuffle (the anchor is the
+                    // resident band row itself — the L-row lag of the
+                    // paper's eq. (3) ring costs nothing in software)
+                    let pre = &mut scratch.pre_row[..w * layer.cout];
+                    {
+                        let mut out = ConvOut::Final(&mut *pre);
+                        conv_row_strips(
+                            &strip_rows, layer, w, 0, use_avx2, &mut out,
+                        );
+                    }
+                    let anchor = &band.data[y * w * c0..][..w * c0];
+                    add_anchor_row_and_shuffle_into(
+                        pre, anchor, scale, c0, y, &mut hr_band,
+                    );
+                }
+            }
+        }
+
+        // functional-path accounting: useful MACs only.  Every
+        // memory-model field — including `tiles`, whose unit is the
+        // tilted scheduler's C-column tiles — stays zero, so merged
+        // reports never mix units across executors.
+        for layer in &pm.layers {
+            stats.mac_ops +=
+                9 * rows as u64 * w as u64 * layer.cin as u64
+                    * layer.cout as u64;
+        }
+        (hr_band, stats)
+    }
+
+    /// Frame-level prepared path: bands of `cfg.tile_rows` rows with
+    /// zero-padded seams — bit-identical to
+    /// [`super::TiltedScheduler::run_frame_prepared`].
+    pub fn run_frame_prepared(
+        &self,
+        frame: &Tensor<u8>,
+        pm: &PreparedModel,
+        cfg: &AcceleratorConfig,
+        scratch: &mut Scratch,
+    ) -> FrameResult {
+        run_frame_bands(
+            frame,
+            pm,
+            cfg.tile_rows,
+            scratch,
+            |band, scratch| self.run_band_prepared(band, pm, scratch),
+        )
+    }
+
+    /// Whole-input single-band execution: no seams, bit-identical to
+    /// monolithic [`crate::reference::forward_int_prepared`] — the
+    /// serving fast path of [`crate::coordinator::Int8Engine`] under
+    /// the `streaming` executor.
+    pub fn run_whole_prepared(
+        &self,
+        frame: &Tensor<u8>,
+        pm: &PreparedModel,
+        scratch: &mut Scratch,
+    ) -> Tensor<u8> {
+        self.run_band_prepared(frame, pm, scratch).0
+    }
+
+    /// One-shot wrapper: packs the model and allocates scratch per
+    /// call (tests / single images).
+    pub fn run_band(
+        &self,
+        band: &Tensor<u8>,
+        qm: &QuantModel,
+    ) -> (Tensor<u8>, RunStats) {
+        let pm = PreparedModel::new(qm);
+        let mut scratch = Scratch::new();
+        self.run_band_prepared(band, &pm, &mut scratch)
+    }
+}
+
+/// Row `yy` of the current layer's input map: `None` outside the band
+/// (the zero-padded seam), the ring slot `yy % 3` when the input is an
+/// intermediate map, or the resident band row itself for map 0.
+#[inline(always)]
+fn input_row<'a>(
+    band: &'a Tensor<u8>,
+    src_ring: Option<&'a [u8]>,
+    in_bytes: usize,
+    rows: usize,
+    yy: isize,
+) -> Option<&'a [u8]> {
+    if yy < 0 || yy >= rows as isize {
+        return None;
+    }
+    let yy = yy as usize;
+    Some(match src_ring {
+        None => &band.data[yy * in_bytes..][..in_bytes],
+        Some(ring) => &ring[(yy % 3) * in_bytes..][..in_bytes],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::TiltedScheduler;
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::reference;
+    use crate::util::Xoshiro256pp;
+
+    fn rand_frame(h: usize, w: usize, c: usize, seed: u64) -> Tensor<u8> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut t = Tensor::new(h, w, c);
+        rng.fill_u8(&mut t.data);
+        t
+    }
+
+    #[test]
+    fn band_matches_reference_exactly() {
+        let qm = QuantModel::test_model(3, 3, 5, 3, 21);
+        let band = rand_frame(6, 24, 3, 1);
+        let (hr, _) = StreamingScheduler::default().run_band(&band, &qm);
+        let want = reference::forward_int(&band, &qm);
+        assert_eq!(hr.data, want.data, "streaming band differs from reference");
+    }
+
+    #[test]
+    fn band_matches_tilted_exactly() {
+        let qm = QuantModel::test_model(4, 3, 6, 3, 5);
+        let band = rand_frame(7, 19, 3, 9);
+        let cfg = AcceleratorConfig {
+            tile_rows: 7,
+            tile_cols: 4,
+            ..AcceleratorConfig::paper()
+        };
+        let (s, _) = StreamingScheduler::default().run_band(&band, &qm);
+        let (t, _) = TiltedScheduler::default().run_band(&band, &qm, &cfg);
+        assert_eq!(s.data, t.data);
+    }
+
+    #[test]
+    fn degenerate_geometries_match_reference() {
+        // 1-row band, 1-col band, single-layer model
+        for (layers, h, w, seed) in
+            [(2, 1, 9, 3), (2, 6, 1, 4), (1, 4, 5, 5), (3, 2, 2, 6)]
+        {
+            let qm = QuantModel::test_model(layers, 3, 4, 2, seed);
+            let band = rand_frame(h, w, 3, seed);
+            let (hr, _) = StreamingScheduler::default().run_band(&band, &qm);
+            let want = reference::forward_int(&band, &qm);
+            assert_eq!(hr.data, want.data, "{layers} layers, {h}x{w}");
+        }
+    }
+
+    #[test]
+    fn force_scalar_is_bit_identical() {
+        let qm = QuantModel::test_model(3, 3, 5, 3, 11);
+        let band = rand_frame(5, 13, 3, 2);
+        let (a, _) = StreamingScheduler::default().run_band(&band, &qm);
+        let (b, _) = StreamingScheduler { force_scalar: true }
+            .run_band(&band, &qm);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn scratch_reuse_across_heterogeneous_bands() {
+        // one Scratch serving bands of different geometry must match
+        // the one-shot wrapper bit for bit (stale ring content must
+        // never leak into a later band)
+        let qm = QuantModel::test_model(3, 3, 5, 3, 33);
+        let pm = PreparedModel::new(&qm);
+        let mut scratch = Scratch::new();
+        let sched = StreamingScheduler::default();
+        for (h, w, seed) in [(6, 17, 40), (3, 23, 41), (8, 9, 42)] {
+            let band = rand_frame(h, w, 3, seed);
+            let (a, _) = sched.run_band_prepared(&band, &pm, &mut scratch);
+            let (b, _) = sched.run_band(&band, &qm);
+            assert_eq!(a.data, b.data, "band {h}x{w}");
+            scratch.recycle_u8(a);
+        }
+    }
+
+    #[test]
+    fn frame_matches_tilted_frame() {
+        let qm = QuantModel::test_model(2, 3, 4, 3, 13);
+        let frame = rand_frame(13, 16, 3, 3);
+        let cfg = AcceleratorConfig {
+            tile_rows: 6,
+            tile_cols: 4,
+            ..AcceleratorConfig::paper()
+        };
+        let pm = PreparedModel::new(&qm);
+        let mut scratch = Scratch::new();
+        let s = StreamingScheduler::default().run_frame_prepared(
+            &frame,
+            &pm,
+            &cfg,
+            &mut scratch,
+        );
+        let t = TiltedScheduler::default().run_frame(&frame, &qm, &cfg);
+        assert_eq!(s.hr.data, t.hr.data);
+        // frame-level DRAM base accounting matches the schedulers'
+        assert_eq!(s.stats.dram_read_bytes, t.stats.dram_read_bytes);
+        assert_eq!(s.stats.dram_write_bytes, t.stats.dram_write_bytes);
+    }
+
+    #[test]
+    fn whole_frame_single_band_matches_monolithic() {
+        let qm = QuantModel::test_model(3, 3, 6, 3, 7);
+        let frame = rand_frame(11, 14, 3, 8);
+        let pm = PreparedModel::new(&qm);
+        let mut scratch = Scratch::new();
+        let got = StreamingScheduler::default().run_whole_prepared(
+            &frame,
+            &pm,
+            &mut scratch,
+        );
+        let want = reference::forward_int(&frame, &qm);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn stats_count_macs_only() {
+        let qm = QuantModel::test_model(2, 3, 4, 2, 1);
+        let band = rand_frame(5, 8, 3, 1);
+        let (_, stats) = StreamingScheduler::default().run_band(&band, &qm);
+        let want: u64 = qm
+            .layers
+            .iter()
+            .map(|l| 9 * 5 * 8 * l.cin as u64 * l.cout as u64)
+            .sum();
+        assert_eq!(stats.mac_ops, want);
+        // no memory model on the streaming path — and `tiles` stays 0
+        // too (its unit is the tilted scheduler's C-column tiles)
+        assert_eq!(stats.tiles, 0);
+        assert_eq!(stats.sram_reads, 0);
+        assert_eq!(stats.compute_cycles, 0);
+    }
+}

@@ -42,13 +42,13 @@ use crate::config::{AcceleratorConfig, FidelityKind, FusionKind};
 use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};
 use crate::reference::add_anchor_and_shuffle_into;
 use crate::sim::engine::{
-    AnalyticEngine, CycleExactEngine, LayerOut, TileEngine,
+    AnalyticEngine, AnyTileEngine, CycleExactEngine, LayerOut, TileEngine,
 };
 use crate::sim::{RunStats, Sram};
 
 use super::overlap::{EntryLabel, OverlapQueue};
 use super::{
-    band_of, band_ranges, base_frame_traffic_parts, FrameResult,
+    band_of, band_ranges, run_frame_bands, FrameResult,
     FusionScheduler,
 };
 
@@ -73,10 +73,18 @@ impl TiltedScheduler {
         }
     }
 
-    fn engine(&self) -> Box<dyn TileEngine> {
+    /// The fidelity's engine as a `Copy` enum (§Perf): constructing it
+    /// is free — no per-band heap allocation — and `run_layer` calls
+    /// dispatch statically through a match instead of a vtable, for
+    /// every tile-layer of every band.
+    fn engine(&self) -> AnyTileEngine {
         match self.fidelity {
-            FidelityKind::Analytic => Box::new(AnalyticEngine::paper()),
-            FidelityKind::CycleExact => Box::new(CycleExactEngine::paper()),
+            FidelityKind::Analytic => {
+                AnyTileEngine::Analytic(AnalyticEngine::paper())
+            }
+            FidelityKind::CycleExact => {
+                AnyTileEngine::CycleExact(CycleExactEngine::paper())
+            }
         }
     }
 
@@ -353,7 +361,8 @@ impl TiltedScheduler {
     }
 
     /// Frame-level prepared path: bands share the packed weights and
-    /// the scratch arena.
+    /// the scratch arena (the shared [`super::run_frame_bands`]
+    /// driver, so the tilted and streaming frame paths cannot drift).
     pub fn run_frame_prepared(
         &self,
         frame: &Tensor<u8>,
@@ -361,26 +370,13 @@ impl TiltedScheduler {
         cfg: &AcceleratorConfig,
         scratch: &mut Scratch,
     ) -> FrameResult {
-        let mut stats = RunStats::default();
-        base_frame_traffic_parts(
+        run_frame_bands(
             frame,
-            pm.weight_bytes + pm.bias_bytes,
-            pm.scale,
-            &mut stats,
-        );
-        let scale = pm.scale;
-        let mut hr: Tensor<u8> =
-            Tensor::new(frame.h * scale, frame.w * scale, frame.c);
-        for (y0, y1) in band_ranges(frame.h, cfg.tile_rows) {
-            let band = band_of(frame, y0, y1);
-            let (hr_band, band_stats) =
-                self.run_band_prepared(&band, pm, cfg, scratch);
-            stats.merge(&band_stats);
-            let dst0 = y0 * scale * hr.w * hr.c;
-            hr.data[dst0..dst0 + hr_band.data.len()]
-                .copy_from_slice(&hr_band.data);
-        }
-        FrameResult { hr, stats }
+            pm,
+            cfg.tile_rows,
+            scratch,
+            |band, scratch| self.run_band_prepared(band, pm, cfg, scratch),
+        )
     }
 }
 

@@ -16,8 +16,8 @@ use sr_accel::analysis::{
 use sr_accel::benchkit::Table;
 use sr_accel::cli::{Args, USAGE};
 use sr_accel::config::{
-    AcceleratorConfig, FusionKind, HaloPolicy, ModelConfig, RtPolicy,
-    ShardStrategy, StreamSpec, SystemConfig, WorkerAffinity,
+    AcceleratorConfig, ExecutorKind, FusionKind, HaloPolicy, ModelConfig,
+    RtPolicy, ShardStrategy, StreamSpec, SystemConfig, WorkerAffinity,
 };
 use sr_accel::coordinator::{
     engine::{build_engine, engine_factory, model_for_scale},
@@ -66,15 +66,36 @@ fn load_system_config(args: &Args) -> Result<SystemConfig> {
     }
 }
 
+/// Fused-executor resolution (§Streaming): `--executor` flag, then the
+/// `[run] executor` config, then the engine's own default — streaming
+/// for the int8/pjrt serving path, tilted for the sim engine (whose
+/// purpose is the hardware SRAM/cycle stats that only the tilted
+/// scheduler models; it must not lose them to a silent default).
+fn resolve_executor(
+    args: &Args,
+    sys: &SystemConfig,
+    kind: EngineKind,
+) -> Result<ExecutorKind> {
+    if let Some(s) = args.opt("executor") {
+        return ExecutorKind::parse(s)
+            .context("unknown --executor (tilted|streaming)");
+    }
+    Ok(sys.run.executor.unwrap_or(match kind {
+        EngineKind::Sim => ExecutorKind::Tilted,
+        EngineKind::Int8 | EngineKind::Pjrt => ExecutorKind::Streaming,
+    }))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "engine", "frames", "workers", "queue-depth", "width", "height",
         "source-fps", "seed", "config", "save-last", "shard", "band-rows",
-        "halo", "affinity",
+        "halo", "affinity", "executor",
     ])?;
     let sys = load_system_config(args)?;
     let kind = EngineKind::parse(args.opt_str("engine", &sys.serve.engine))
         .context("unknown --engine (int8|pjrt|sim)")?;
+    let executor = resolve_executor(args, &sys, kind)?;
     let mut plan = sys.serve.shard.clone();
     if let Some(s) = args.opt("shard") {
         plan.strategy =
@@ -151,6 +172,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 kind,
                 &sys.accelerator,
                 Some(Path::new(artifact)),
+                executor,
             )
         })
         .collect::<Vec<_>>();
@@ -172,7 +194,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_serve_multi(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "streams", "engine", "frames", "workers", "queue-depth", "policy",
-        "seed", "config",
+        "seed", "config", "executor",
     ])?;
     let sys = load_system_config(args)?;
     let streams = match args.opt("streams") {
@@ -206,6 +228,7 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
     // load the trained weights once; per-scale fallback happens inside
     // the workers via the shared `model_for_scale` rule (streams whose
     // scale the artifacts can't serve get the deterministic test model)
+    let executor = resolve_executor(args, &sys, kind)?;
     let trained = load_apbnw(&artifacts_dir().join("weights.apbnw")).ok();
     let acc = sys.accelerator.clone();
     let factories: Vec<ScaleEngineFactory> = (0..cfg.workers)
@@ -215,10 +238,14 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
             Box::new(move |scale: usize| -> Result<Box<dyn Engine>> {
                 let qm = model_for_scale(trained.as_ref(), scale);
                 Ok(match kind {
-                    EngineKind::Int8 => Box::new(Int8Engine::new(qm)),
-                    EngineKind::Sim => {
-                        Box::new(SimEngine::new(qm, acc.clone()))
+                    EngineKind::Int8 => {
+                        Box::new(Int8Engine::with_executor(qm, executor))
                     }
+                    EngineKind::Sim => Box::new(SimEngine::with_executor(
+                        qm,
+                        acc.clone(),
+                        executor,
+                    )),
                     EngineKind::Pjrt => {
                         bail!("pjrt rejected before factory build")
                     }
@@ -304,15 +331,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_upscale(args: &Args) -> Result<()> {
-    args.ensure_known(&["engine", "config"])?;
+    args.ensure_known(&["engine", "config", "executor"])?;
     let [input, output] = args.positional.as_slice() else {
         bail!("usage: sr-accel upscale <in.ppm> <out.ppm> [--engine int8]");
     };
     let sys = load_system_config(args)?;
     let kind = EngineKind::parse(args.opt_str("engine", "int8"))
         .context("unknown --engine")?;
+    let executor = resolve_executor(args, &sys, kind)?;
     let img = read_ppm(Path::new(input))?;
-    let mut engine = build_engine(kind, &sys.accelerator, None)?;
+    let mut engine = build_engine(kind, &sys.accelerator, None, executor)?;
     let t0 = std::time::Instant::now();
     let hr = engine.upscale(&img)?;
     let dt = t0.elapsed();

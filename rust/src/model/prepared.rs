@@ -199,6 +199,18 @@ pub struct Scratch {
     pub(crate) partials: Vec<[i32; SEG]>,
     /// Cycle-exact engine: the pipelined accumulator (reset per layer).
     pub(crate) accum: Accumulator,
+    /// Streaming executor (§Streaming): per-layer 3-row input rings —
+    /// `rings[m]` holds three band-width rows of feature map `m + 1`
+    /// (the output of layer `m + 1`), the software analogue of the
+    /// paper's eq. (1) line buffers.  Sized `3 * band_w * cout` per
+    /// layer; map 0 and the residual anchor read the resident LR band
+    /// directly, so no ring is kept for them.
+    pub(crate) rings: Vec<Vec<u8>>,
+    /// Streaming executor: one band-width pre-residual row of the
+    /// final conv (`band_w * cout_last` i32 values) — consumed by the
+    /// fused anchor-add + pixel-shuffle immediately after it is
+    /// produced, so the whole-band i32 map never materializes.
+    pub(crate) pre_row: Vec<i32>,
     pool_u8: Vec<Vec<u8>>,
     pool_i32: Vec<Vec<i32>>,
     pool_limit_bytes: usize,
@@ -228,6 +240,8 @@ impl Scratch {
             overlap: Vec::new(),
             partials: Vec::new(),
             accum: Accumulator::default(),
+            rings: Vec::new(),
+            pre_row: Vec::new(),
             pool_u8: Vec::new(),
             pool_i32: Vec::new(),
             pool_limit_bytes: limit,

@@ -97,8 +97,9 @@ pub fn conv3x3_final_impl(
     out
 }
 
-/// Whole-map output destination of one conv driver sweep.
-enum ConvOut<'a> {
+/// Output destination of a conv driver sweep: a whole map, or (for the
+/// streaming executor's row-granular path) a single output row.
+pub(crate) enum ConvOut<'a> {
     Relu(&'a mut [u8]),
     Final(&'a mut [i32]),
 }
@@ -119,6 +120,30 @@ impl ConvOut<'_> {
     }
 }
 
+/// The one strip-walk over an output row (§Microkernel): `np`-pixel
+/// strips through [`conv_strip`], writing at flat pixels
+/// `pix0 .. pix0 + w` of `out`.  Every row consumer — the SAME map
+/// driver, the VALID patch driver, and the streaming executor's
+/// row-ring loop — goes through this walk, so the strip-advance
+/// contract cannot drift between them.
+pub(crate) fn conv_row_strips(
+    rows: &StripRows<'_>,
+    pl: &PreparedLayer,
+    w: usize,
+    pix0: usize,
+    use_avx2: bool,
+    out: &mut ConvOut<'_>,
+) {
+    let cout = pl.cout;
+    let mut x0 = 0;
+    while x0 < w {
+        let np = MK_P.min(w - x0);
+        let mut strip = out.strip(pix0 + x0, np, cout);
+        conv_strip(rows, pl, x0, np, use_avx2, &mut strip);
+        x0 += np;
+    }
+}
+
 /// SAME row driver (§Microkernel): feeds whole-map rows to the strip
 /// microkernel.  Rows above/below the image are `None` (zero rows),
 /// horizontal zero padding is the strip's column mask `[0, w)`.
@@ -129,7 +154,7 @@ fn conv_same(
     out: &mut ConvOut<'_>,
 ) {
     let (h, w) = (x.h, x.w);
-    let (cin, cout) = (pl.cin, pl.cout);
+    let cin = pl.cin;
     let use_avx2 = avx2_available() && !force_scalar;
     for y in 0..h {
         let mut rows = StripRows {
@@ -143,13 +168,7 @@ fn conv_same(
                 *r = Some(&x.data[(sy as usize) * w * cin..][..w * cin]);
             }
         }
-        let mut x0 = 0;
-        while x0 < w {
-            let np = MK_P.min(w - x0);
-            let mut strip = out.strip(y * w + x0, np, cout);
-            conv_strip(&rows, pl, x0, np, use_avx2, &mut strip);
-            x0 += np;
-        }
+        conv_row_strips(&rows, pl, w, y * w, use_avx2, out);
     }
 }
 
@@ -163,7 +182,7 @@ fn conv_patch_drive(
     out: &mut ConvOut<'_>,
 ) {
     let (oh, ow) = (patch.h - 2, patch.w - 2);
-    let (cin, cout, pw) = (pl.cin, pl.cout, patch.w);
+    let (cin, pw) = (pl.cin, patch.w);
     let use_avx2 = avx2_available() && !force_scalar;
     for y in 0..oh {
         let mut rows = StripRows {
@@ -174,13 +193,7 @@ fn conv_patch_drive(
         for (dr, r) in rows.rows.iter_mut().enumerate() {
             *r = Some(&patch.data[(y + dr) * pw * cin..][..pw * cin]);
         }
-        let mut x0 = 0;
-        while x0 < ow {
-            let np = MK_P.min(ow - x0);
-            let mut strip = out.strip(y * ow + x0, np, cout);
-            conv_strip(&rows, pl, x0, np, use_avx2, &mut strip);
-            x0 += np;
-        }
+        conv_row_strips(&rows, pl, ow, y * ow, use_avx2, out);
     }
 }
 

@@ -105,23 +105,51 @@ pub fn add_anchor_and_shuffle_into(
         (lr.h * scale, lr.w * scale, lr.c),
         "shuffle output shape mismatch"
     );
+    let cpre = lr.c * scale * scale;
     for y in 0..lr.h {
-        for x in 0..lr.w {
-            for i in 0..scale {
-                for j in 0..scale {
-                    for ch in 0..lr.c {
-                        // channel layout (i*scale + j)*C + ch, matching
-                        // kernels.ref.depth_to_space
-                        let pc = (i * scale + j) * lr.c + ch;
-                        let v = pre.get(y, x, pc)
-                            + lr.get(y, x, ch) as i32;
-                        out.set(
-                            y * scale + i,
-                            x * scale + j,
-                            ch,
-                            v.clamp(0, 255) as u8,
-                        );
-                    }
+        let pre_row = &pre.data[y * lr.w * cpre..][..lr.w * cpre];
+        let lr_row = &lr.data[y * lr.w * lr.c..][..lr.w * lr.c];
+        add_anchor_row_and_shuffle_into(pre_row, lr_row, scale, lr.c, y, out);
+    }
+}
+
+/// Row-granular residual add + clamp + depth-to-space: one LR row's
+/// pre-residual values (`w * c * scale^2`) plus its anchor row
+/// (`w * c`) land on HR rows `y*scale .. (y+1)*scale` of `out`.
+///
+/// The streaming executor (§Streaming) calls this as each final-conv
+/// row retires, so the whole-band i32 map never materializes; the 2D
+/// [`add_anchor_and_shuffle_into`] is a loop over this function, which
+/// keeps the two bit-identical by construction.
+pub fn add_anchor_row_and_shuffle_into(
+    pre_row: &[i32],
+    lr_row: &[u8],
+    scale: usize,
+    c: usize,
+    y: usize,
+    out: &mut Tensor<u8>,
+) {
+    let r2 = scale * scale;
+    let w = lr_row.len() / c;
+    assert_eq!(lr_row.len(), w * c, "anchor row length mismatch");
+    assert_eq!(pre_row.len(), w * c * r2, "pre-residual row length mismatch");
+    assert_eq!((out.w, out.c), (w * scale, c), "shuffle row shape mismatch");
+    assert!((y + 1) * scale <= out.h, "shuffle row out of range");
+    for x in 0..w {
+        for i in 0..scale {
+            for j in 0..scale {
+                for ch in 0..c {
+                    // channel layout (i*scale + j)*C + ch, matching
+                    // kernels.ref.depth_to_space
+                    let pc = (i * scale + j) * c + ch;
+                    let v = pre_row[x * c * r2 + pc]
+                        + lr_row[x * c + ch] as i32;
+                    out.set(
+                        y * scale + i,
+                        x * scale + j,
+                        ch,
+                        v.clamp(0, 255) as u8,
+                    );
                 }
             }
         }
@@ -142,9 +170,28 @@ pub fn upscale_prepared(
     pm: &PreparedModel,
     scratch: &mut Scratch,
 ) -> ImageU8 {
+    upscale_with(img, pm, scratch, forward_int_prepared)
+}
+
+/// The one [`ImageU8`] ⇄ [`Tensor`] staging wrapper of the serving
+/// engines: stage the LR image through the scratch pool, run
+/// `forward` on it, and move the HR tensor out as an image.  The
+/// engine layer passes alternative forwards through here (e.g. the
+/// §Streaming row-ring executor) so the plumbing convention lives in
+/// exactly one place.
+pub fn upscale_with(
+    img: &ImageU8,
+    pm: &PreparedModel,
+    scratch: &mut Scratch,
+    forward: impl FnOnce(
+        &Tensor<u8>,
+        &PreparedModel,
+        &mut Scratch,
+    ) -> Tensor<u8>,
+) -> ImageU8 {
     let mut t = scratch.take_u8(img.h, img.w, img.c);
     t.data.copy_from_slice(&img.data);
-    let out = forward_int_prepared(&t, pm, scratch);
+    let out = forward(&t, pm, scratch);
     scratch.recycle_u8(t);
     ImageU8::from_vec(out.h, out.w, out.c, out.data)
 }

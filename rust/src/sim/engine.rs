@@ -294,6 +294,41 @@ impl TileEngine for CycleExactEngine {
     }
 }
 
+/// Enum-dispatched fidelity selection (§Perf): the tilted scheduler
+/// calls `run_layer` once per tile-layer, so routing it through a
+/// `Box<dyn TileEngine>` cost a heap allocation per band plus a
+/// virtual call per tile-layer.  `AnyTileEngine` is `Copy` (both
+/// engines are plain geometry structs) and dispatches through a match
+/// the compiler can inline — zero allocation, static calls.
+#[derive(Clone, Copy, Debug)]
+pub enum AnyTileEngine {
+    Analytic(AnalyticEngine),
+    CycleExact(CycleExactEngine),
+}
+
+impl TileEngine for AnyTileEngine {
+    fn run_layer(
+        &self,
+        patch: &Tensor<u8>,
+        layer: &PreparedLayer,
+        scratch: &mut Scratch,
+    ) -> (LayerOut, LayerCost) {
+        match self {
+            AnyTileEngine::Analytic(e) => e.run_layer(patch, layer, scratch),
+            AnyTileEngine::CycleExact(e) => {
+                e.run_layer(patch, layer, scratch)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            AnyTileEngine::Analytic(e) => e.name(),
+            AnyTileEngine::CycleExact(e) => e.name(),
+        }
+    }
+}
+
 fn untag(tag: u64, cout: usize, segs: usize) -> (usize, usize, usize) {
     let s = (tag as usize) % segs;
     let rest = (tag as usize) / segs;
@@ -365,6 +400,27 @@ mod tests {
         // utilization of the steady-state layer ~ 100 %
         let util = c.mac_ops as f64 / c.mac_slots as f64;
         assert!(util > 0.99, "util {util}");
+    }
+
+    #[test]
+    fn enum_dispatch_matches_direct_engines() {
+        let qm = QuantModel::test_model(2, 3, 4, 3, 3);
+        let l = PreparedLayer::new(&qm.layers[0]);
+        let patch = rand_patch(6, 5, 3, 9);
+        let mut scratch = Scratch::new();
+        let (d, dc) =
+            AnalyticEngine::paper().run_layer(&patch, &l, &mut scratch);
+        let any = AnyTileEngine::Analytic(AnalyticEngine::paper());
+        let (a, ac) = any.run_layer(&patch, &l, &mut scratch);
+        let a = a.unwrap_u8().data;
+        assert_eq!(a, d.unwrap_u8().data);
+        assert_eq!(ac, dc);
+        assert_eq!(any.name(), "analytic");
+        let anyc = AnyTileEngine::CycleExact(CycleExactEngine::paper());
+        let (c, cc) = anyc.run_layer(&patch, &l, &mut scratch);
+        assert_eq!(c.unwrap_u8().data, a);
+        assert_eq!(cc, ac);
+        assert_eq!(anyc.name(), "cycle-exact");
     }
 
     #[test]

@@ -19,7 +19,9 @@ pub mod pe;
 pub mod sram;
 
 pub use dram::DramChannel;
-pub use engine::{AnalyticEngine, CycleExactEngine, TileEngine};
+pub use engine::{
+    AnalyticEngine, AnyTileEngine, CycleExactEngine, TileEngine,
+};
 pub use sram::Sram;
 
 /// Aggregated execution statistics of a simulated run.

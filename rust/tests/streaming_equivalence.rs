@@ -1,0 +1,229 @@
+//! §Streaming equivalence properties: the row-ring streaming executor
+//! must be **bit-identical** to the tilted tile scheduler and to
+//! monolithic band inference (`reference::forward_int`) — across
+//! randomized geometries, model depths, upscale factors, band heights,
+//! tile widths and kernel dispatches (`force_scalar` on/off).  A
+//! whole input run as one band has no seams, so the streaming path is
+//! additionally pinned bit-identical to monolithic whole-frame
+//! inference — the contract `Int8Engine`'s default executor relies on.
+
+use sr_accel::config::{AcceleratorConfig, ExecutorKind};
+use sr_accel::coordinator::{Engine, Int8Engine, SimEngine};
+use sr_accel::fusion::{
+    band_of, band_ranges, StreamingScheduler, TiltedScheduler,
+};
+use sr_accel::image::ImageU8;
+use sr_accel::model::{PreparedModel, QuantModel, Scratch, Tensor};
+use sr_accel::reference;
+use sr_accel::util::quickcheck::{check_no_shrink, Config};
+use sr_accel::util::Xoshiro256pp;
+
+fn rand_frame(h: usize, w: usize, c: usize, seed: u64) -> Tensor<u8> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut t = Tensor::new(h, w, c);
+    rng.fill_u8(&mut t.data);
+    // sprinkle zeros so the kernels' sparsity-skip branches run
+    for i in (0..t.data.len()).step_by(11) {
+        t.data[i] = 0;
+    }
+    t
+}
+
+fn cfg_with(tile_rows: usize, tile_cols: usize) -> AcceleratorConfig {
+    AcceleratorConfig {
+        tile_rows,
+        tile_cols,
+        ..AcceleratorConfig::paper()
+    }
+}
+
+type Case = (usize, usize, usize, usize, usize, usize, usize, u64);
+
+/// (frame_h, frame_w, layers, c_mid, scale, band_rows, tile_cols, seed)
+fn case_gen(rng: &mut Xoshiro256pp) -> Case {
+    (
+        rng.range_usize(1, 14),  // frame_h (bands may be ragged)
+        rng.range_usize(1, 18),  // frame_w (tiles may be ragged)
+        rng.range_usize(1, 4),   // conv layers
+        rng.range_usize(1, 9),   // trunk channels (odd, %8 != 0)
+        rng.range_usize(1, 4),   // upscale factor
+        rng.range_usize(1, 8),   // band height
+        rng.range_usize(2, 6),   // tile columns (tilted needs >= 2)
+        rng.next_u64(),
+    )
+}
+
+#[test]
+fn prop_streaming_matches_tilted_and_reference() {
+    let cfg = Config {
+        cases: 48,
+        seed: 0x57AE,
+        max_shrink_iters: 0,
+    };
+    // one scratch per executor across all cases: ring/pool reuse must
+    // never leak state between geometries
+    let mut s_scratch = Scratch::new();
+    let mut t_scratch = Scratch::new();
+    check_no_shrink(
+        &cfg,
+        case_gen,
+        |&(fh, fw, layers, c_mid, scale, band_rows, tile_cols, seed)| {
+            let qm = QuantModel::test_model(layers, 3, c_mid, scale, seed);
+            let pm = PreparedModel::new(&qm);
+            let acc = cfg_with(band_rows, tile_cols);
+            let frame = rand_frame(fh, fw, 3, seed ^ 0xA5);
+            let force_scalar = seed & 1 == 0;
+            let streaming = StreamingScheduler { force_scalar };
+            let tilted = TiltedScheduler::default();
+
+            // band-level: streaming == monolithic band == tilted band
+            for (y0, y1) in band_ranges(fh, band_rows) {
+                let band = band_of(&frame, y0, y1);
+                let want = reference::forward_int(&band, &qm);
+                let (got, _) =
+                    streaming.run_band_prepared(&band, &pm, &mut s_scratch);
+                if got.data != want.data {
+                    return Err(format!(
+                        "streaming band [{y0},{y1}) != reference \
+                         ({fh}x{fw}, {layers}l c{c_mid} x{scale}, \
+                         force_scalar={force_scalar})"
+                    ));
+                }
+                let (tband, _) = tilted.run_band_prepared(
+                    &band,
+                    &pm,
+                    &acc,
+                    &mut t_scratch,
+                );
+                if got.data != tband.data {
+                    return Err(format!(
+                        "streaming band [{y0},{y1}) != tilted \
+                         ({fh}x{fw}, {layers}l c{c_mid} x{scale}, \
+                         tile_cols={tile_cols})"
+                    ));
+                }
+                s_scratch.recycle_u8(got);
+                s_scratch.recycle_u8(tband);
+            }
+
+            // frame-level: identical band split, identical HR frame
+            let sf = streaming.run_frame_prepared(
+                &frame,
+                &pm,
+                &acc,
+                &mut s_scratch,
+            );
+            let tf = tilted.run_frame_prepared(
+                &frame,
+                &pm,
+                &acc,
+                &mut t_scratch,
+            );
+            if sf.hr.data != tf.hr.data {
+                return Err(format!(
+                    "streaming frame != tilted frame ({fh}x{fw}, \
+                     band_rows={band_rows}, tile_cols={tile_cols})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_whole_input_single_band_is_monolithic() {
+    // no seams: the streaming executor over the whole input must be
+    // bit-identical to reference::forward_int — the Int8Engine fast
+    // path's contract
+    let cfg = Config {
+        cases: 32,
+        seed: 0x60D5,
+        max_shrink_iters: 0,
+    };
+    let mut scratch = Scratch::new();
+    check_no_shrink(
+        &cfg,
+        case_gen,
+        |&(fh, fw, layers, c_mid, scale, _band_rows, _tile_cols, seed)| {
+            let qm = QuantModel::test_model(layers, 3, c_mid, scale, seed);
+            let pm = PreparedModel::new(&qm);
+            let frame = rand_frame(fh, fw, 3, seed ^ 0x3C);
+            let force_scalar = seed & 1 == 0;
+            let got = StreamingScheduler { force_scalar }
+                .run_whole_prepared(&frame, &pm, &mut scratch);
+            let want = reference::forward_int(&frame, &qm);
+            if got.data != want.data {
+                return Err(format!(
+                    "whole-input streaming != monolithic ({fh}x{fw}, \
+                     {layers}l c{c_mid} x{scale}, \
+                     force_scalar={force_scalar})"
+                ));
+            }
+            scratch.recycle_u8(got);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn engines_agree_across_executors() {
+    // the coordinator wiring: Int8Engine streaming == Int8Engine
+    // legacy == reference::upscale; SimEngine streaming == SimEngine
+    // tilted (band-seamed) — across several frames through one engine
+    // so scratch reuse is covered
+    let qm = QuantModel::test_model(3, 3, 6, 3, 17);
+    let acc = cfg_with(5, 4);
+    let mut int8_fast =
+        Int8Engine::with_executor(qm.clone(), ExecutorKind::Streaming);
+    let mut int8_legacy =
+        Int8Engine::with_executor(qm.clone(), ExecutorKind::Tilted);
+    let mut sim_fast = SimEngine::with_executor(
+        qm.clone(),
+        acc.clone(),
+        ExecutorKind::Streaming,
+    );
+    let mut sim_tilted =
+        SimEngine::with_executor(qm.clone(), acc, ExecutorKind::Tilted);
+    for seed in 0..4u64 {
+        let mut rng = Xoshiro256pp::seed_from_u64(40 + seed);
+        let mut lr = ImageU8::new(11, 13, 3);
+        rng.fill_u8(&mut lr.data);
+        let fast = int8_fast.upscale(&lr).unwrap();
+        let legacy = int8_legacy.upscale(&lr).unwrap();
+        assert_eq!(fast, legacy, "int8 executors diverged, frame {seed}");
+        let want = reference::upscale(&lr, &qm);
+        assert_eq!(fast, want, "int8 streaming != reference, frame {seed}");
+        assert_eq!(
+            sim_fast.upscale(&lr).unwrap(),
+            sim_tilted.upscale(&lr).unwrap(),
+            "sim executors diverged, frame {seed}"
+        );
+    }
+}
+
+#[test]
+fn streaming_handles_bands_shorter_than_the_ring() {
+    // 1- and 2-row bands: the 3-row ring is never filled, every conv
+    // row sees at least one zero seam row
+    let qm = QuantModel::test_model(3, 3, 5, 2, 9);
+    let pm = PreparedModel::new(&qm);
+    let mut scratch = Scratch::new();
+    let frame = rand_frame(5, 7, 3, 2);
+    for band_rows in [1usize, 2] {
+        let acc = cfg_with(band_rows, 3);
+        let sf = StreamingScheduler::default().run_frame_prepared(
+            &frame,
+            &pm,
+            &acc,
+            &mut scratch,
+        );
+        for (i, (y0, y1)) in
+            band_ranges(frame.h, band_rows).into_iter().enumerate()
+        {
+            let band = band_of(&frame, y0, y1);
+            let want = reference::forward_int(&band, &qm);
+            let got = &sf.hr.data[y0 * 2 * sf.hr.w * 3..y1 * 2 * sf.hr.w * 3];
+            assert_eq!(got, &want.data[..], "band {i} rows={band_rows}");
+        }
+    }
+}
