@@ -9,7 +9,9 @@
 //! §Microkernel whole-model `microkernel_speedup` (strip kernel vs the
 //! frozen PR-2 pixel kernel), the §Streaming `streaming_speedup`
 //! (row-ring executor vs tilted tile scheduler, whole-frame serving —
-//! CI gates on >= 1.0 under AVX2) and an `avx2` host flag — and
+//! CI gates on >= 1.0 whenever the dispatched `isa` is not `"scalar"`)
+//! and the `isa` string itself (§Multi-ISA; the legacy x86-only `avx2`
+//! flag stays for old tooling) — and
 //! `BENCH_serving_multi.json` for the multi-stream front-end
 //! (aggregate + per-stream HR MP/s per record; `extra` carries p95
 //! latency and drop rate keyed by stream count and policy).  `--smoke`
@@ -34,7 +36,7 @@ use sr_accel::image::SceneGenerator;
 use sr_accel::model::{
     load_apbnw, PreparedModel, QuantModel, Scratch, Tensor,
 };
-use sr_accel::reference::{self, avx2_available, baseline};
+use sr_accel::reference::{self, avx2_available, baseline, Isa};
 use sr_accel::runtime::{artifacts_available, artifacts_dir};
 
 fn main() {
@@ -158,11 +160,12 @@ fn main() {
         let speedup =
             m_pixel.summary_ns.median() / m_strip.summary_ns.median();
         json.push_extra("microkernel_speedup", speedup);
+        json.push_extra_str("isa", Isa::detected().name());
         json.push_extra("avx2", if avx2_available() { 1.0 } else { 0.0 });
         println!(
             "whole-model microkernel speedup vs PR-2 pixel kernel \
-             ({fw}x{fh} LR, avx2={}): {speedup:.2}x",
-            avx2_available()
+             ({fw}x{fh} LR, isa={}): {speedup:.2}x",
+            Isa::detected().name()
         );
     }
     // -- §Streaming: two whole-frame serving A/Bs through the

@@ -6,8 +6,10 @@
 //! Emits machine-readable `BENCH_kernel.json` (name, ns/iter, MP/s,
 //! MACs/s, plus the tilted-tile speedup factor, the §Microkernel
 //! `microkernel_speedup` — register-blocked strip kernel vs the frozen
-//! PR-2 single-pixel kernel — an `avx2` host flag, and the paper's
-//! 1080p60 target) so the perf trajectory is recorded PR over PR.
+//! PR-2 single-pixel kernel — the dispatched `isa` string the CI gate
+//! keys on (§Multi-ISA; the legacy x86-only `avx2` flag stays for old
+//! tooling), and the paper's 1080p60 target) so the perf trajectory is
+//! recorded PR over PR.
 //!
 //! Falls back to the APBN-shaped deterministic test model when the
 //! trained artifacts are absent, so the bench (and the CI `--smoke`
@@ -25,7 +27,7 @@ use sr_accel::model::{
 };
 use sr_accel::reference::{
     avx2_available, baseline, conv3x3_relu, conv3x3_relu_prepared,
-    conv_patch_relu, conv_patch_relu_prepared,
+    conv_patch_relu, conv_patch_relu_prepared, Isa,
 };
 use sr_accel::runtime::{artifacts_available, artifacts_dir};
 
@@ -153,6 +155,9 @@ fn main() {
     let microkernel_speedup = m_tile_pixel.summary_ns.median()
         / m_tile_strip.summary_ns.median();
     json.push_extra("microkernel_speedup", microkernel_speedup);
+    // `isa` is the dispatch truth CI gates on; `avx2` is the legacy
+    // x86-only flag kept for older tooling reading these files
+    json.push_extra_str("isa", Isa::detected().name());
     json.push_extra("avx2", if avx2_available() { 1.0 } else { 0.0 });
 
     // -- §Streaming at kernel level: the same 60-row layer shaped as
@@ -258,9 +263,9 @@ fn main() {
          {tile_speedup:.2}x"
     );
     println!(
-        "microkernel speedup (strip vs PR-2 pixel kernel, avx2={}): \
+        "microkernel speedup (strip vs PR-2 pixel kernel, isa={}): \
          {microkernel_speedup:.2}x",
-        avx2_available()
+        Isa::detected().name()
     );
     println!(
         "streaming band speedup (row-ring vs tilted tile scheduler): \

@@ -1,0 +1,37 @@
+//! Toolchain probe for the multi-ISA microkernel layer.
+//!
+//! The AVX-512 strip kernel uses `std::arch` AVX-512 intrinsics and the
+//! `avx512f`/`avx512bw` `target_feature` names, which stabilized in
+//! Rust 1.89 — newer than the workspace MSRV.  Rather than raise the
+//! MSRV for one optional fast path, probe the compiler version here and
+//! compile the AVX-512 kernel only when the toolchain supports it
+//! (`cfg(sr_has_avx512)`); older toolchains simply never select
+//! `Isa::Avx512` and fall through to AVX2/scalar dispatch.
+
+use std::process::Command;
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // Declare the custom cfg so `-D warnings` builds on check-cfg-aware
+    // toolchains stay clean (older cargos ignore unknown instructions).
+    println!("cargo:rustc-check-cfg=cfg(sr_has_avx512)");
+    if rustc_version().is_some_and(|(major, minor)| (major, minor) >= (1, 89))
+    {
+        println!("cargo:rustc-cfg=sr_has_avx512");
+    }
+}
+
+/// `(major, minor)` of the rustc that will compile the crate, or `None`
+/// when the version string is unrecognizable (treated as "too old").
+fn rustc_version() -> Option<(u32, u32)> {
+    let rustc =
+        std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    let text = String::from_utf8_lossy(&out.stdout);
+    // "rustc 1.93.0 (abc 2026-01-01)" -> 1.93
+    let ver = text.split_whitespace().nth(1)?;
+    let mut parts = ver.split(|c: char| !c.is_ascii_digit());
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}

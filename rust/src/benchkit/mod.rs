@@ -185,6 +185,7 @@ pub struct BenchJson {
     target: String,
     records: Vec<BenchRecord>,
     extra: Vec<(String, f64)>,
+    extra_str: Vec<(String, String)>,
 }
 
 impl BenchJson {
@@ -193,6 +194,7 @@ impl BenchJson {
             target: target.to_string(),
             records: Vec::new(),
             extra: Vec::new(),
+            extra_str: Vec::new(),
         }
     }
 
@@ -203,6 +205,13 @@ impl BenchJson {
     /// Attach a named scalar (speedup factor, paper target, ...).
     pub fn push_extra(&mut self, key: &str, value: f64) {
         self.extra.push((key.to_string(), value));
+    }
+
+    /// Attach a named string (e.g. the dispatched kernel `isa` — the
+    /// field CI's bench-smoke gates key on).  Rendered into the same
+    /// `"extra"` object as the scalars.
+    pub fn push_extra_str(&mut self, key: &str, value: &str) {
+        self.extra_str.push((key.to_string(), value.to_string()));
     }
 
     pub fn records_len(&self) -> usize {
@@ -231,11 +240,20 @@ impl BenchJson {
         }
         out.push_str("  ],\n");
         out.push_str("  \"extra\": {");
-        for (i, (k, v)) in self.extra.iter().enumerate() {
-            if i > 0 {
+        let mut first = true;
+        for (k, v) in &self.extra {
+            if !first {
                 out.push_str(", ");
             }
+            first = false;
             out.push_str(&format!("{}: {}", json_str(k), json_f64(*v)));
+        }
+        for (k, v) in &self.extra_str {
+            if !first {
+                out.push_str(", ");
+            }
+            first = false;
+            out.push_str(&format!("{}: {}", json_str(k), json_str(v)));
         }
         out.push_str("}\n}\n");
         out
@@ -403,15 +421,25 @@ mod tests {
             macs_per_s: Some(1e9),
         });
         j.push_extra("tilted_tile_speedup", 1.75);
+        j.push_extra_str("isa", "avx2");
         let r = j.render();
         assert!(r.contains("\"target\": \"kernel\""));
         assert!(r.contains("\\\"tile\\\""), "quotes escaped: {r}");
         assert!(r.contains("\"ns_per_iter\": 1234.5"));
         assert!(r.contains("\"mp_per_s\": null"));
-        assert!(r.contains("\"tilted_tile_speedup\": 1.75"));
+        assert!(r.contains("\"tilted_tile_speedup\": 1.75, \"isa\": \"avx2\""));
         assert_eq!(j.records_len(), 2);
         // exactly one comma between the two records
         assert_eq!(r.matches("},\n").count(), 1);
+    }
+
+    #[test]
+    fn bench_json_string_only_extra_renders() {
+        // no scalar extras: the string extra must not get a stray comma
+        let mut j = BenchJson::new("e2e");
+        j.push_extra_str("isa", "scalar");
+        let r = j.render();
+        assert!(r.contains("\"extra\": {\"isa\": \"scalar\"}"), "{r}");
     }
 
     #[test]

@@ -374,13 +374,20 @@ pub enum RtPolicy {
 impl RtPolicy {
     /// `best-effort` (alias `block`) or `drop:<deadline ms>`
     /// (e.g. `drop:16.7` for a 60 fps display budget).
+    ///
+    /// The deadline must be finite and strictly positive: f64 parsing
+    /// accepts `"inf"`/`"NaN"`, and a non-finite or zero deadline
+    /// would either panic in the server's `Duration` conversion or
+    /// declare every frame late at emission — reject all of them here,
+    /// which covers both the `[serve]` config path and the `--policy`
+    /// CLI path (both funnel through this parse).
     pub fn parse(s: &str) -> Option<Self> {
         if s == "best-effort" || s == "block" {
             return Some(Self::BestEffort);
         }
         let ms = s.strip_prefix("drop:")?;
         let v: f64 = ms.parse().ok()?;
-        if v.is_finite() && v >= 0.0 {
+        if v.is_finite() && v > 0.0 {
             Some(Self::DropLate { deadline_ms: v })
         } else {
             None
@@ -880,13 +887,24 @@ mod tests {
             RtPolicy::parse("drop:16.7"),
             Some(RtPolicy::DropLate { deadline_ms: 16.7 })
         );
-        assert_eq!(
-            RtPolicy::parse("drop:0"),
-            Some(RtPolicy::DropLate { deadline_ms: 0.0 })
-        );
+        // non-positive and non-finite deadlines are config errors: 0
+        // drops every frame at emission, and inf/NaN would panic the
+        // server's Duration conversion ("inf" and "NaN" DO parse as
+        // f64, so the finiteness check is load-bearing)
+        assert_eq!(RtPolicy::parse("drop:0"), None);
+        assert_eq!(RtPolicy::parse("drop:0.0"), None);
+        assert_eq!(RtPolicy::parse("drop:-0.0"), None);
         assert_eq!(RtPolicy::parse("drop:-1"), None);
+        assert_eq!(RtPolicy::parse("drop:inf"), None);
+        assert_eq!(RtPolicy::parse("drop:+infinity"), None);
+        assert_eq!(RtPolicy::parse("drop:NaN"), None);
         assert_eq!(RtPolicy::parse("drop:nope"), None);
         assert_eq!(RtPolicy::parse("shed"), None);
+        // the smallest representable positive deadline is still legal
+        assert!(matches!(
+            RtPolicy::parse("drop:5e-324"),
+            Some(RtPolicy::DropLate { deadline_ms }) if deadline_ms > 0.0
+        ));
         assert_eq!(RtPolicy::BestEffort.name(), "best-effort");
         assert_eq!(
             RtPolicy::DropLate { deadline_ms: 16.7 }.name(),
@@ -971,6 +989,12 @@ mod tests {
         for bad in [
             "[serve]\npolicy = \"sometimes\"",
             "[serve]\npolicy = \"drop:\"",
+            // pathological deadlines must die at config-parse time,
+            // not as a panic inside the serving deadline arithmetic
+            "[serve]\npolicy = \"drop:0\"",
+            "[serve]\npolicy = \"drop:-5\"",
+            "[serve]\npolicy = \"drop:inf\"",
+            "[serve]\npolicy = \"drop:NaN\"",
             "[serve]\nstreams = [\"360p\"]",
             "[serve]\nstreams = [3]",
             "[serve]\nstreams = \"360p@x3\"",

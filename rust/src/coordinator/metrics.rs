@@ -101,6 +101,12 @@ pub struct PipelineReport {
     /// the two apart).
     pub engines: Vec<String>,
     pub workers: usize,
+    /// Kernel ISA the dispatch layer selected on this host
+    /// (`"avx512" | "avx2" | "neon" | "scalar"` — §Multi-ISA).  The
+    /// same truth the benches emit as `extra.isa`; `"scalar"` on a
+    /// vector-capable host means detection found nothing usable, not
+    /// that `force_scalar` was requested.
+    pub isa: String,
     /// Aggregate delivered HR megapixels per second of wall time.
     pub mpix_per_s: f64,
     /// Shard/serving-plan description.
@@ -202,6 +208,7 @@ impl PipelineReport {
             engine: render_engines(engines),
             engines: engines.to_vec(),
             workers,
+            isa: crate::reference::Isa::detected().name().to_string(),
             mpix_per_s: hr_px_total / secs / 1e6,
             plan: plan.to_string(),
             dropped,
@@ -215,12 +222,13 @@ impl PipelineReport {
 
     pub fn render(&self) -> String {
         let mut out = format!(
-            "engine={} workers={} plan={} frames={} wall={:.2}s\n\
+            "engine={} isa={} workers={} plan={} frames={} wall={:.2}s\n\
              throughput: {:.2} fps  ({:.1} HR Mpix/s)\n\
              latency  ms: p50 {:.2}  p95 {:.2}  max {:.2}\n\
              queue-wait ms: p50 {:.2}  p95 {:.2}\n\
              compute  ms: p50 {:.2}  p95 {:.2}",
             self.engine,
+            self.isa,
             self.workers,
             self.plan,
             self.frames,
@@ -352,6 +360,10 @@ mod tests {
         assert!(rep.hw.is_none());
         assert!(rep.render().contains("throughput"));
         assert!(rep.render().contains("plan=whole-frame"));
+        // the report names the dispatched kernel ISA
+        assert!(["scalar", "avx2", "avx512", "neon"]
+            .contains(&rep.isa.as_str()));
+        assert!(rep.render().contains(&format!("isa={}", rep.isa)));
         assert!(!rep.render().contains("hw:"));
         assert!(!rep.render().contains("delivery:"));
         assert!(!rep.render().contains("worker errors"));

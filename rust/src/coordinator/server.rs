@@ -84,6 +84,25 @@ pub fn stream_seed(base: u64, stream: usize) -> u64 {
     base.wrapping_add((stream as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
+/// `deadline_ms` as a [`Duration`], total for any f64.
+///
+/// [`RtPolicy::parse`] rejects non-finite and non-positive deadlines,
+/// but `DropLate` can also be constructed directly (tests, library
+/// callers), and `Duration::from_secs_f64` **panics** on negative, NaN
+/// or infinite input — and `Instant + Duration::MAX` overflows.  Clamp
+/// to `[0, 1e9]` seconds (NaN -> 0: an unintelligible deadline sheds
+/// frames loudly rather than serving without a deadline silently) so
+/// the serving threads can never panic on a pathological policy value.
+fn deadline_duration(deadline_ms: f64) -> Duration {
+    let secs = deadline_ms / 1e3;
+    let secs = if secs.is_nan() {
+        0.0
+    } else {
+        secs.clamp(0.0, 1e9) // ~31 years: far past any Instant math
+    };
+    Duration::from_secs_f64(secs)
+}
+
 /// Per-worker engine supplier for the multi-stream pool: invoked
 /// *inside* the worker thread, once per distinct upscale factor (the
 /// worker caches the built engine per scale).
@@ -245,12 +264,9 @@ pub fn serve_multi(
                     let emitted = Instant::now();
                     let deadline = match policy {
                         RtPolicy::BestEffort => None,
-                        RtPolicy::DropLate { deadline_ms } => Some(
-                            emitted
-                                + Duration::from_secs_f64(
-                                    deadline_ms / 1e3,
-                                ),
-                        ),
+                        RtPolicy::DropLate { deadline_ms } => {
+                            Some(emitted + deadline_duration(deadline_ms))
+                        }
                     };
                     let item = StreamItem {
                         stream: si,
@@ -517,6 +533,46 @@ mod tests {
             assert_eq!(d.len(), s.delivered);
         }
         assert!(rep.render().contains("delivery:"));
+    }
+
+    #[test]
+    fn pathological_deadlines_never_panic_the_server() {
+        // `RtPolicy::DropLate` can be constructed directly, skipping
+        // `RtPolicy::parse`'s validation — the deadline arithmetic must
+        // stay total anyway (the old `Duration::from_secs_f64` call
+        // panicked on negative/NaN/inf).
+        assert_eq!(deadline_duration(f64::NAN), Duration::ZERO);
+        assert_eq!(deadline_duration(-5.0), Duration::ZERO);
+        assert_eq!(deadline_duration(f64::NEG_INFINITY), Duration::ZERO);
+        assert_eq!(
+            deadline_duration(f64::INFINITY),
+            Duration::from_secs(1_000_000_000)
+        );
+        assert_eq!(deadline_duration(250.0), Duration::from_millis(250));
+        // `Instant + clamped duration` must not overflow either
+        let now = Instant::now();
+        let _ = now + deadline_duration(f64::INFINITY);
+        // end-to-end: a NaN deadline serves without panicking (NaN
+        // clamps to 0 → shed loudly, same regime as deadline 0)
+        let cfg = MultiServeConfig {
+            streams: vec![spec("a", 10, 8, 2)],
+            frames: 6,
+            workers: 1,
+            queue_depth: 1,
+            policy: RtPolicy::DropLate {
+                deadline_ms: f64::NAN,
+            },
+            seed: 7,
+        };
+        let rep =
+            serve_multi(&cfg, int8_factories(1, 1, 2, 2), |_, _, _| {})
+                .unwrap();
+        let s = &rep.streams[0];
+        assert_eq!(s.meta.offered, 6);
+        assert_eq!(
+            s.meta.offered,
+            s.delivered + s.meta.dropped + s.incomplete
+        );
     }
 
     #[test]

@@ -56,7 +56,7 @@ use crate::config::AcceleratorConfig;
 use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};
 use crate::reference::add_anchor_row_and_shuffle_into;
 use crate::reference::conv::{conv_row_strips, ConvOut};
-use crate::reference::microkernel::{avx2_available, StripRows};
+use crate::reference::microkernel::{Isa, StripRows};
 use crate::sim::RunStats;
 
 use super::{run_frame_bands, FrameResult};
@@ -93,7 +93,7 @@ impl StreamingScheduler {
         assert!(rows > 0 && w > 0, "streaming executor: empty band");
         let n_layers = pm.n_layers();
         let scale = pm.scale;
-        let use_avx2 = avx2_available() && !self.force_scalar;
+        let isa = Isa::select(self.force_scalar);
 
         // -- line buffers: a 3-row ring per intermediate map ----------
         // rings[m] caches map m+1 (the output of layer m+1) for maps
@@ -147,7 +147,7 @@ impl StreamingScheduler {
                         [(y % 3) * out_bytes..][..out_bytes];
                     let mut out = ConvOut::Relu(dst);
                     conv_row_strips(
-                        &strip_rows, layer, w, 0, use_avx2, &mut out,
+                        &strip_rows, layer, w, 0, isa, &mut out,
                     );
                 } else {
                     // final conv: one pre-residual row, fused with the
@@ -158,7 +158,7 @@ impl StreamingScheduler {
                     {
                         let mut out = ConvOut::Final(&mut *pre);
                         conv_row_strips(
-                            &strip_rows, layer, w, 0, use_avx2, &mut out,
+                            &strip_rows, layer, w, 0, isa, &mut out,
                         );
                     }
                     let anchor = &band.data[y * w * c0..][..w * c0];

@@ -8,12 +8,15 @@
 //! `O(frames x bands x tiles x layers)`.  Now:
 //!
 //! * [`PreparedLayer`] / [`PreparedModel`] hold the packed layouts
-//!   (cout-tile-major pair-interleaved panels `wt` + widened bias
-//!   `bias_p` for the register-blocked strip microkernel, the PR-2
-//!   pair-interleaved `wp` the frozen baseline kernel reads,
+//!   (cout-tile-major pair-interleaved panels `wt` / `wt512` and the
+//!   widened-i16 NEON panels `wn` + widened bias `bias_p` for the
+//!   register-blocked strip microkernels of every dispatchable ISA,
+//!   the PR-2 pair-interleaved `wp` the frozen baseline kernel reads,
 //!   zero-padded `i32` rows for the scalar oracle, and the raw HWIO
 //!   `i8` view the cycle-exact engine reads) — built once, shared by
-//!   every frame.
+//!   every frame.  Every per-ISA layout is packed on every target so
+//!   the type stays ISA-agnostic and the equivalence tests can always
+//!   exercise the panels.
 //! * [`Scratch`] is a per-worker arena: accumulator strips, padded
 //!   pixel staging, the cycle-exact engine's partial-sum registers and
 //!   accumulator pipeline, column/payload staging for the tilted
@@ -55,11 +58,22 @@ pub struct PreparedLayer {
     /// single-pixel kernel ([`crate::reference::baseline`]).
     pub wp: Vec<u32>,
     /// Cout-tile-major weight panels `[co/8][tap][ci/2][8]` for the
-    /// register-blocked strip microkernel (§Microkernel): the whole
-    /// `3x3 x cin` reduction of one 8-lane cout tile streams a single
-    /// contiguous panel, one 256-bit load per `(tap, pair)`.  Lanes are
+    /// AVX2 strip microkernel (§Microkernel): the whole `3x3 x cin`
+    /// reduction of one 8-lane cout tile streams a single contiguous
+    /// panel, one 256-bit load per `(tap, pair)`.  Lanes are
     /// pair-interleaved exactly like `wp`.
     pub wt: Vec<u32>,
+    /// `wt`'s 16-lane sibling `[co/16][tap][ci/2][16]` for the AVX-512
+    /// strip kernel, co zero-padded to a multiple of 16 (one 512-bit
+    /// load per `(tap, pair)`).  Built on every target — packing cost
+    /// is once per model and keeping the layouts unconditional keeps
+    /// `PreparedLayer` ISA-agnostic (§Multi-ISA).
+    pub wt512: Vec<u32>,
+    /// NEON panels `[co/8][tap][ci][8]`: weights widened to i16, one
+    /// lane per *real* input channel (no pair interleave — the
+    /// `smlal`-based kernel takes the i16 vector directly, so odd
+    /// `cin` needs no zero half), co zero-padded to `cout_p`.
+    pub wn: Vec<i16>,
     /// Widened weights `[tap][ci][co_p]` for the scalar kernel
     /// (co zero-padded so accumulator rows stay `cout_p` long).
     pub w32: Vec<i32>,
@@ -75,8 +89,11 @@ impl PreparedLayer {
         let cin_p = cin.next_multiple_of(2);
         let taps = 9;
         let pairs = cin_p / 2;
+        let cout_p16 = cout.next_multiple_of(16);
         let mut wp = vec![0u32; taps * pairs * cout_p];
         let mut wt = vec![0u32; (cout_p / 8) * taps * pairs * 8];
+        let mut wt512 = vec![0u32; (cout_p16 / 16) * taps * pairs * 16];
+        let mut wn = vec![0i16; (cout_p / 8) * taps * cin * 8];
         let mut w32 = vec![0i32; taps * cin * cout_p];
         for tap in 0..taps {
             for ci in 0..cin {
@@ -90,6 +107,14 @@ impl PreparedLayer {
                         * 8
                         + co % 8;
                     wt[tslot] |= half;
+                    let slot512 = (((co / 16) * taps + tap) * pairs
+                        + ci / 2)
+                        * 16
+                        + co % 16;
+                    wt512[slot512] |= half;
+                    let nslot =
+                        (((co / 8) * taps + tap) * cin + ci) * 8 + co % 8;
+                    wn[nslot] = v as i16;
                 }
             }
         }
@@ -106,6 +131,8 @@ impl PreparedLayer {
             bias_p,
             wp,
             wt,
+            wt512,
+            wn,
             w32,
             w: layer.w.clone(),
         }
@@ -340,6 +367,22 @@ mod tests {
                                 >> (16 * (ci % 2)))
                                 as u16;
                             assert_eq!(thalf as i16, v as i16);
+                            // the AVX-512 16-lane panel and the NEON
+                            // widened-i16 panel hold the same weight
+                            let slot512 = (((co / 16) * 9 + tap)
+                                * (pl.cin_p / 2)
+                                + ci / 2)
+                                * 16
+                                + co % 16;
+                            let whalf = (pl.wt512[slot512]
+                                >> (16 * (ci % 2)))
+                                as u16;
+                            assert_eq!(whalf as i16, v as i16);
+                            let nslot = (((co / 8) * 9 + tap) * pl.cin
+                                + ci)
+                                * 8
+                                + co % 8;
+                            assert_eq!(pl.wn[nslot], v as i16);
                         }
                     }
                 }
@@ -347,6 +390,9 @@ mod tests {
             assert_eq!(&pl.bias_p[..layer.cout], &layer.bias[..]);
             assert!(pl.bias_p[layer.cout..].iter().all(|&b| b == 0));
             assert_eq!(pl.wt.len(), (pl.cout_p / 8) * 9 * (pl.cin_p / 2) * 8);
+            let n16 = pl.cout.next_multiple_of(16) / 16;
+            assert_eq!(pl.wt512.len(), n16 * 9 * (pl.cin_p / 2) * 16);
+            assert_eq!(pl.wn.len(), (pl.cout_p / 8) * 9 * pl.cin * 8);
         }
     }
 
@@ -381,6 +427,15 @@ mod tests {
                         + co % 8];
                     assert_eq!(tlane >> 16, 0, "odd-cin panel pad half");
                 }
+                let cout_p16 = pl.cout.next_multiple_of(16);
+                for co in 0..cout_p16 {
+                    let wlane = pl.wt512[(((co / 16) * 9 + tap)
+                        * (pl.cin_p / 2)
+                        + ci2)
+                        * 16
+                        + co % 16];
+                    assert_eq!(wlane >> 16, 0, "odd-cin 512 pad half");
+                }
             }
             // padded co lanes of the microkernel panels must be zero
             for co in pl.cout..pl.cout_p {
@@ -391,6 +446,21 @@ mod tests {
                         * 8
                         + co % 8];
                     assert_eq!(tlane, 0, "padded co panel lane");
+                }
+                for ci in 0..pl.cin {
+                    let nlane = pl.wn
+                        [(((co / 8) * 9 + tap) * pl.cin + ci) * 8 + co % 8];
+                    assert_eq!(nlane, 0, "padded co NEON lane");
+                }
+            }
+            for co in pl.cout..pl.cout.next_multiple_of(16) {
+                for ci2 in 0..pl.cin_p / 2 {
+                    let wlane = pl.wt512[(((co / 16) * 9 + tap)
+                        * (pl.cin_p / 2)
+                        + ci2)
+                        * 16
+                        + co % 16];
+                    assert_eq!(wlane, 0, "padded co 512 panel lane");
                 }
             }
         }

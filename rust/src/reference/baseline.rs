@@ -12,6 +12,12 @@
 //! schedulers, engines and serving pipeline all run the microkernel;
 //! the equivalence suite additionally pins these kernels to the same
 //! naive oracle so the speedup comparison stays apples-to-apples.
+//!
+//! Deliberately outside the §Multi-ISA dispatch layer: this baseline
+//! is AVX2-or-scalar exactly as PR 2 shipped it (on non-x86 hosts it
+//! measures the scalar pixel path), because growing it an AVX-512 or
+//! NEON variant would change the thing the speedup is measured
+//! *against*.
 
 use crate::model::{PreparedLayer, PreparedModel, Scratch, Tensor};
 use crate::util::fixed::clamp_u8;

@@ -13,21 +13,20 @@
 //!
 //! §Microkernel: both the SAME row path and the VALID patch path are
 //! thin drivers over **one** register-blocked strip microkernel
-//! ([`super::microkernel::conv_strip`]) — [`MK_P`] output pixels per
-//! call with the requant/ReLU/saturate (or final-layer i32) epilogue
-//! fused into the register tile, so the two paths cannot drift.  The
-//! unprepared wrappers (`conv3x3_relu` & co.) pack on the fly and exist
-//! for tests and one-shot callers; the frozen PR-2 single-pixel kernels
-//! live in [`super::baseline`] as the benches' speedup baseline.
-//!
-//! [`MK_P`]: super::microkernel::MK_P
+//! ([`super::microkernel::conv_strip`]) — [`Isa::strip_width`] output
+//! pixels per call with the requant/ReLU/saturate (or final-layer i32)
+//! epilogue fused into the register tile, so the two paths cannot
+//! drift.  Which ISA's kernel runs is an [`Isa`] value resolved once
+//! per map ([`Isa::select`] — runtime detection, `force_scalar` routes
+//! to the oracle) and threaded through the strip walk.  The unprepared
+//! wrappers (`conv3x3_relu` & co.) pack on the fly and exist for tests
+//! and one-shot callers; the frozen PR-2 single-pixel kernels live in
+//! [`super::baseline`] as the benches' speedup baseline.
 
 use crate::model::{PreparedLayer, QuantLayer, Scratch, Tensor};
 use crate::util::fixed::clamp_u8;
 
-use super::microkernel::{
-    avx2_available, conv_strip, StripOut, StripRows, MK_P,
-};
+use super::microkernel::{conv_strip, Isa, StripOut, StripRows};
 
 /// SAME 3x3 conv + requant + ReLU over a whole map (zero padding).
 /// One-shot wrapper: packs the layer and allocates scratch per call.
@@ -68,7 +67,8 @@ pub fn conv3x3_final_prepared(
 }
 
 /// Kernel-dispatch override for the equivalence tests: `force_scalar`
-/// bypasses the AVX2 path so both kernels can be compared on one host.
+/// bypasses the vector paths so both kernels can be compared on one
+/// host.
 #[doc(hidden)]
 pub fn conv3x3_relu_impl(
     x: &Tensor<u8>,
@@ -76,11 +76,7 @@ pub fn conv3x3_relu_impl(
     scratch: &mut Scratch,
     force_scalar: bool,
 ) -> Tensor<u8> {
-    assert_eq!(x.c, pl.cin, "conv3x3_relu: cin mismatch");
-    assert!(pl.relu, "conv3x3_relu called on a non-ReLU layer");
-    let mut out = scratch.take_u8(x.h, x.w, pl.cout);
-    conv_same(x, pl, force_scalar, &mut ConvOut::Relu(&mut out.data[..]));
-    out
+    conv3x3_relu_isa(x, pl, scratch, Isa::select(force_scalar))
 }
 
 #[doc(hidden)]
@@ -90,10 +86,39 @@ pub fn conv3x3_final_impl(
     scratch: &mut Scratch,
     force_scalar: bool,
 ) -> Tensor<i32> {
+    conv3x3_final_isa(x, pl, scratch, Isa::select(force_scalar))
+}
+
+/// Explicit-ISA entry for the equivalence tests: run the SAME ReLU
+/// conv on one *specific* kernel (any compiled-in [`Isa`], available
+/// or not — unavailable/uncompiled ones fall through to the scalar
+/// oracle at dispatch).
+#[doc(hidden)]
+pub fn conv3x3_relu_isa(
+    x: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    isa: Isa,
+) -> Tensor<u8> {
+    assert_eq!(x.c, pl.cin, "conv3x3_relu: cin mismatch");
+    assert!(pl.relu, "conv3x3_relu called on a non-ReLU layer");
+    let mut out = scratch.take_u8(x.h, x.w, pl.cout);
+    conv_same(x, pl, isa, &mut ConvOut::Relu(&mut out.data[..]));
+    out
+}
+
+/// Explicit-ISA entry for the equivalence tests (final layer).
+#[doc(hidden)]
+pub fn conv3x3_final_isa(
+    x: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    isa: Isa,
+) -> Tensor<i32> {
     assert_eq!(x.c, pl.cin, "conv3x3_final: cin mismatch");
     assert!(!pl.relu, "conv3x3_final called on a ReLU layer");
     let mut out = scratch.take_i32(x.h, x.w, pl.cout);
-    conv_same(x, pl, force_scalar, &mut ConvOut::Final(&mut out.data[..]));
+    conv_same(x, pl, isa, &mut ConvOut::Final(&mut out.data[..]));
     out
 }
 
@@ -125,21 +150,23 @@ impl ConvOut<'_> {
 /// `pix0 .. pix0 + w` of `out`.  Every row consumer — the SAME map
 /// driver, the VALID patch driver, and the streaming executor's
 /// row-ring loop — goes through this walk, so the strip-advance
-/// contract cannot drift between them.
+/// contract cannot drift between them; adding an ISA means a new
+/// kernel behind [`conv_strip`], never a new walk.
 pub(crate) fn conv_row_strips(
     rows: &StripRows<'_>,
     pl: &PreparedLayer,
     w: usize,
     pix0: usize,
-    use_avx2: bool,
+    isa: Isa,
     out: &mut ConvOut<'_>,
 ) {
     let cout = pl.cout;
+    let p = isa.strip_width();
     let mut x0 = 0;
     while x0 < w {
-        let np = MK_P.min(w - x0);
+        let np = p.min(w - x0);
         let mut strip = out.strip(pix0 + x0, np, cout);
-        conv_strip(rows, pl, x0, np, use_avx2, &mut strip);
+        conv_strip(rows, pl, x0, np, isa, &mut strip);
         x0 += np;
     }
 }
@@ -150,12 +177,11 @@ pub(crate) fn conv_row_strips(
 fn conv_same(
     x: &Tensor<u8>,
     pl: &PreparedLayer,
-    force_scalar: bool,
+    isa: Isa,
     out: &mut ConvOut<'_>,
 ) {
     let (h, w) = (x.h, x.w);
     let cin = pl.cin;
-    let use_avx2 = avx2_available() && !force_scalar;
     for y in 0..h {
         let mut rows = StripRows {
             rows: [None, None, None],
@@ -168,7 +194,7 @@ fn conv_same(
                 *r = Some(&x.data[(sy as usize) * w * cin..][..w * cin]);
             }
         }
-        conv_row_strips(&rows, pl, w, y * w, use_avx2, out);
+        conv_row_strips(&rows, pl, w, y * w, isa, out);
     }
 }
 
@@ -178,12 +204,11 @@ fn conv_same(
 fn conv_patch_drive(
     patch: &Tensor<u8>,
     pl: &PreparedLayer,
-    force_scalar: bool,
+    isa: Isa,
     out: &mut ConvOut<'_>,
 ) {
     let (oh, ow) = (patch.h - 2, patch.w - 2);
     let (cin, pw) = (pl.cin, patch.w);
-    let use_avx2 = avx2_available() && !force_scalar;
     for y in 0..oh {
         let mut rows = StripRows {
             rows: [None, None, None],
@@ -193,7 +218,7 @@ fn conv_patch_drive(
         for (dr, r) in rows.rows.iter_mut().enumerate() {
             *r = Some(&patch.data[(y + dr) * pw * cin..][..pw * cin]);
         }
-        conv_row_strips(&rows, pl, ow, y * ow, use_avx2, out);
+        conv_row_strips(&rows, pl, ow, y * ow, isa, out);
     }
 }
 
@@ -267,12 +292,7 @@ pub fn conv_patch_relu_impl(
     scratch: &mut Scratch,
     force_scalar: bool,
 ) -> Tensor<u8> {
-    assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
-    assert_eq!(patch.c, pl.cin);
-    assert!(pl.relu);
-    let mut out = scratch.take_u8(patch.h - 2, patch.w - 2, pl.cout);
-    conv_patch_drive(patch, pl, force_scalar, &mut ConvOut::Relu(&mut out.data[..]));
-    out
+    conv_patch_relu_isa(patch, pl, scratch, Isa::select(force_scalar))
 }
 
 #[doc(hidden)]
@@ -282,11 +302,38 @@ pub fn conv_patch_final_impl(
     scratch: &mut Scratch,
     force_scalar: bool,
 ) -> Tensor<i32> {
+    conv_patch_final_isa(patch, pl, scratch, Isa::select(force_scalar))
+}
+
+/// Explicit-ISA entry for the equivalence tests (patch ReLU conv).
+#[doc(hidden)]
+pub fn conv_patch_relu_isa(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    isa: Isa,
+) -> Tensor<u8> {
+    assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
+    assert_eq!(patch.c, pl.cin);
+    assert!(pl.relu);
+    let mut out = scratch.take_u8(patch.h - 2, patch.w - 2, pl.cout);
+    conv_patch_drive(patch, pl, isa, &mut ConvOut::Relu(&mut out.data[..]));
+    out
+}
+
+/// Explicit-ISA entry for the equivalence tests (patch final conv).
+#[doc(hidden)]
+pub fn conv_patch_final_isa(
+    patch: &Tensor<u8>,
+    pl: &PreparedLayer,
+    scratch: &mut Scratch,
+    isa: Isa,
+) -> Tensor<i32> {
     assert!(patch.h >= 3 && patch.w >= 3, "patch too small");
     assert_eq!(patch.c, pl.cin);
     assert!(!pl.relu);
     let mut out = scratch.take_i32(patch.h - 2, patch.w - 2, pl.cout);
-    conv_patch_drive(patch, pl, force_scalar, &mut ConvOut::Final(&mut out.data[..]));
+    conv_patch_drive(patch, pl, isa, &mut ConvOut::Final(&mut out.data[..]));
     out
 }
 

@@ -1,22 +1,30 @@
 //! Register-blocked int8 strip microkernel with a fused requantization
-//! epilogue (§Microkernel) — the one inner loop every conv path in the
-//! crate now runs.
+//! epilogue (§Microkernel), behind an ISA-parametric kernel layer
+//! (§Multi-ISA) — the one inner loop every conv path in the crate runs.
 //!
 //! The paper keeps its 32x8 MAC array saturated by reusing each weight
 //! fetch across a whole tile column; the software analogue is keeping
-//! the AVX2 lanes saturated by reusing each weight *register* across a
+//! the SIMD lanes saturated by reusing each weight *register* across a
 //! strip of output pixels.  One [`conv_strip`] call computes
-//! [`MK_P`] = 4 horizontally adjacent output pixels x all `cout`
-//! channels:
+//! `P` horizontally adjacent output pixels x all `cout` channels, where
+//! `P` and the cout tile width are per-ISA constants of the
+//! [`KernelIsa`] trait:
 //!
-//! * the i32 accumulators for the strip live in `__m256i` registers for
-//!   the **whole 3x3 x cin reduction** — `MK_P x NT` registers for `NT`
-//!   8-lane cout tiles (16 output channels per pass while they last,
-//!   8 for the tail);
-//! * each 256-bit weight load (from the cout-tile-major
-//!   [`PreparedLayer::wt`] panels, contiguous per tile) is amortized
-//!   over the `MK_P` pixels of the strip — the PR-2 kernel reloaded it
-//!   per pixel;
+//! | kernel | `P` | cout tile | weight panel | MAC instruction |
+//! |---|---|---|---|---|
+//! | [`Avx512Kernel`] | 6 | 16 x i32 | [`PreparedLayer::wt512`] | `vpmaddwd` (zmm: 32 i8 MACs/op) |
+//! | [`Avx2Kernel`]   | 4 |  8 x i32 | [`PreparedLayer::wt`]    | `vpmaddwd` (ymm: 16 i8 MACs/op) |
+//! | [`NeonKernel`]   | 4 |  8 x i32 | [`PreparedLayer::wn`]    | `smlal`/`smlal2` |
+//! | [`ScalarKernel`] | 4 |  8 x i32 | [`PreparedLayer::w32`]   | — (the oracle) |
+//!
+//! Shared structure, whatever the ISA:
+//!
+//! * the i32 accumulators for the strip live in registers for the
+//!   **whole 3x3 x cin reduction** — `P x NT` registers for `NT` cout
+//!   tiles per pass (2 in the main loop, 1 for the tail);
+//! * each weight load (from the cout-tile-major panels, contiguous per
+//!   tile) is amortized over the `P` pixels of the strip — the PR-2
+//!   kernel reloaded it per pixel;
 //! * each of the three input rows is fetched once per strip and reused
 //!   across the three vertical taps that read it;
 //! * the requant / ReLU / saturate epilogue (or the final layer's i32
@@ -25,34 +33,64 @@
 //!   longer exists.
 //!
 //! Ragged edges are masked, never special-cased by callers: strips at
-//! `width % MK_P` shrink `np`, `cout % 8` rides the zero-padded lanes
-//! of the panels, and odd `cin` resolves to a zero-weight pair half so
-//! no staging buffer (and no out-of-bounds read) is needed.
+//! `width % P` shrink `np`, cout tails ride the zero-padded lanes of
+//! the panels (the AVX-512 kernel additionally `k`-masks its bias tail
+//! loads, since `bias_p` is only padded to a multiple of 8, not 16),
+//! and odd `cin` resolves to a zero-weight pair half so no staging
+//! buffer (and no out-of-bounds read) is needed.
 //!
-//! The scalar twin ([`strip_scalar`], over the padded [`PreparedLayer::w32`]
-//! rows) has identical accumulation semantics and is the `force_scalar`
-//! oracle of the equivalence tests (`tests/microkernel_equivalence.rs`),
-//! which pin AVX2 == scalar == naive reference bit for bit.  The frozen
+//! **Dispatch** is a runtime decision made once per process:
+//! [`Isa::detected`] probes `is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!` and caches the best supported ISA;
+//! `force_scalar` (via [`Isa::select`]) remains the oracle route.  The
+//! selected ISA is reported in `PipelineReport` and as the BENCH
+//! `extra.isa` field.  Bit-exactness across ISAs is by construction —
+//! every kernel accumulates the same i32 products per output pixel and
+//! i32 wrapping adds commute, so the strip width `P` and lane count
+//! cannot change the result — and is pinned by
+//! `tests/microkernel_equivalence.rs`, which sweeps every compiled-in
+//! ISA against [`strip_scalar`] and a naive reference.  The frozen
 //! PR-2 single-pixel kernel lives on in [`crate::reference::baseline`]
-//! purely as the measured `microkernel_speedup` baseline.
+//! (AVX2-or-scalar by design — frozen) purely as the measured
+//! `microkernel_speedup` baseline.
+//!
+//! The AVX-512 kernel needs the intrinsics stabilized in Rust 1.89;
+//! `build.rs` probes the toolchain and compiles it only under
+//! `cfg(sr_has_avx512)`, so the crate still builds at the workspace
+//! MSRV (where `Isa::Avx512` simply reports unavailable).
 //!
 //! [`Scratch`]: crate::model::Scratch
+//! [`PreparedLayer::wt512`]: crate::model::PreparedLayer::wt512
+//! [`PreparedLayer::wt`]: crate::model::PreparedLayer::wt
+//! [`PreparedLayer::wn`]: crate::model::PreparedLayer::wn
+//! [`PreparedLayer::w32`]: crate::model::PreparedLayer::w32
+
+use std::sync::OnceLock;
 
 use crate::model::PreparedLayer;
 use crate::util::fixed::{clamp_u8, FixedMul};
 
-/// Output pixels per strip — the register-blocking factor `P`.
+/// Output pixels per strip of the 8-lane kernels (AVX2 / NEON /
+/// scalar) — the register-blocking factor `P`.
 ///
 /// 4 pixels x 2 cout tiles is 8 accumulator + 2 weight registers, which
 /// (with the broadcast register) fits the 16 `ymm` names with room for
 /// renaming; wider strips would spill.
 pub const MK_P: usize = 4;
 
-/// Runtime AVX2 dispatch (`force_scalar` in the kernel entry points
-/// bypasses it so both kernels can be pinned against each other on one
-/// host).
+/// Strip width of the AVX-512 kernel: 6 pixels x 2 sixteen-lane cout
+/// tiles is 12 accumulator + 2 weight + 1 broadcast registers — well
+/// inside the 32 `zmm` names, with double the per-load amortization of
+/// the ymm kernel.
+pub const MK_P_AVX512: usize = 6;
+
+/// The widest strip any compiled-in kernel can request — the scalar
+/// oracle sizes its stack tile to this so it can stand in for *any*
+/// ISA (including one compiled out on this target).
+pub const MK_P_MAX: usize = MK_P_AVX512;
+
 #[inline]
-pub fn avx2_available() -> bool {
+fn has_avx2() -> bool {
     #[cfg(target_arch = "x86_64")]
     {
         std::arch::is_x86_feature_detected!("avx2")
@@ -60,6 +98,138 @@ pub fn avx2_available() -> bool {
     #[cfg(not(target_arch = "x86_64"))]
     {
         false
+    }
+}
+
+#[inline]
+fn has_avx512() -> bool {
+    #[cfg(all(target_arch = "x86_64", sr_has_avx512))]
+    {
+        std::arch::is_x86_feature_detected!("avx512f")
+            && std::arch::is_x86_feature_detected!("avx512bw")
+    }
+    #[cfg(not(all(target_arch = "x86_64", sr_has_avx512)))]
+    {
+        false
+    }
+}
+
+#[inline]
+fn has_neon() -> bool {
+    #[cfg(target_arch = "aarch64")]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        false
+    }
+}
+
+/// Runtime AVX2 host probe — kept for the frozen PR-2 baseline kernels
+/// ([`crate::reference::baseline`]) and back-compat BENCH fields; new
+/// code should consult [`Isa`] instead.
+#[inline]
+pub fn avx2_available() -> bool {
+    has_avx2()
+}
+
+/// The instruction-set architectures the strip microkernel is
+/// implemented for.  All variants exist on every target (so reports
+/// and BENCH JSON name them uniformly); whether a variant is *compiled
+/// in* ([`Isa::compiled`]) and *usable on this host*
+/// ([`Isa::available`]) are separate questions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// The portable oracle — always compiled, always available.
+    Scalar,
+    /// x86-64 AVX2 (`vpmaddwd` over ymm), the PR-4 kernel.
+    Avx2,
+    /// x86-64 AVX-512 F+BW (`vpmaddwd` over zmm, masked bias tails).
+    Avx512,
+    /// aarch64 NEON (`smlal`/`smlal2` over widened i16 weights).
+    Neon,
+}
+
+static DETECTED: OnceLock<Isa> = OnceLock::new();
+
+impl Isa {
+    /// Stable lower-case name — the `extra.isa` BENCH field and the
+    /// `PipelineReport` value.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => ScalarKernel::NAME,
+            Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Output pixels per strip (the trait's `P`) — how far the strip
+    /// walk advances per [`conv_strip`] call.
+    pub fn strip_width(self) -> usize {
+        match self {
+            Isa::Avx512 => MK_P_AVX512,
+            _ => MK_P,
+        }
+    }
+
+    /// i32 lanes per accumulator tile (the trait's `COUT_TILE`).
+    pub fn cout_tile(self) -> usize {
+        match self {
+            Isa::Avx512 => 16,
+            _ => 8,
+        }
+    }
+
+    /// Can this host execute the variant right now?  `false` whenever
+    /// the kernel is not compiled in for this target.
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            Isa::Avx2 => has_avx2(),
+            Isa::Avx512 => has_avx512(),
+            Isa::Neon => has_neon(),
+        }
+    }
+
+    /// The variants compiled into this build, scalar first.  The
+    /// equivalence tests sweep `compiled()` filtered by
+    /// [`Isa::available`] so every kernel that *can* run on the host
+    /// gets pinned against the oracle.
+    pub fn compiled() -> Vec<Isa> {
+        #[allow(unused_mut)] // exotic targets compile only the oracle
+        let mut v = vec![Isa::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        v.push(Isa::Avx2);
+        #[cfg(all(target_arch = "x86_64", sr_has_avx512))]
+        v.push(Isa::Avx512);
+        #[cfg(target_arch = "aarch64")]
+        v.push(Isa::Neon);
+        v
+    }
+
+    /// The best ISA this host supports — probed once per process and
+    /// cached (feature detection is a CPUID/ELF-hwcap read; the conv
+    /// drivers call this per map).
+    pub fn detected() -> Isa {
+        *DETECTED.get_or_init(|| {
+            [Isa::Avx512, Isa::Avx2, Isa::Neon]
+                .into_iter()
+                .find(|isa| isa.available())
+                .unwrap_or(Isa::Scalar)
+        })
+    }
+
+    /// The dispatch every kernel entry point performs: the detected
+    /// ISA, unless `force_scalar` routes to the oracle.
+    #[inline]
+    pub fn select(force_scalar: bool) -> Isa {
+        if force_scalar {
+            Isa::Scalar
+        } else {
+            Isa::detected()
+        }
     }
 }
 
@@ -91,9 +261,9 @@ pub(crate) enum StripOut<'a> {
 }
 
 impl StripOut<'_> {
-    /// The fused epilogue, shared by the AVX2 and scalar kernels so the
-    /// two cannot drift: requantize `vals` (one pixel's accumulator
-    /// lanes) and store them at flat offset `off`, applying the ReLU
+    /// The fused epilogue, shared by every ISA kernel so they cannot
+    /// drift: requantize `vals` (one pixel's accumulator lanes) and
+    /// store them at flat offset `off`, applying the ReLU
     /// saturate-to-u8 or the final-layer i32 cast.
     #[inline(always)]
     fn store(&mut self, off: usize, vals: &[i32], m: FixedMul) {
@@ -114,40 +284,202 @@ impl StripOut<'_> {
     }
 }
 
-/// The single conv inner-loop entry point: compute `np <= MK_P` output
-/// pixels starting at output column `x0`, all `cout` channels, with the
-/// requant epilogue fused into the register tile.
+/// One ISA's strip kernel: the associated consts are the blocking
+/// geometry ([`Isa::strip_width`] / [`Isa::cout_tile`] mirror them for
+/// enum-side callers), `conv_strip` is the whole-cout strip entry
+/// point the dispatcher invokes.
+///
+/// Implementations are zero-sized types so the trait is pure
+/// compile-time shape — dispatch itself is the [`conv_strip`] free
+/// function's `match` on [`Isa`], decided once per process.
+pub(crate) trait KernelIsa {
+    /// Output pixels per strip (the register-blocking factor).
+    const P: usize;
+    /// i32 lanes per accumulator tile.
+    const COUT_TILE: usize;
+    /// Stable lower-case dispatch name.
+    const NAME: &'static str;
+
+    /// Can this host execute the kernel right now?
+    fn available() -> bool;
+
+    /// Compute `np <= Self::P` output pixels starting at output column
+    /// `x0`, **all** `cout` channels, epilogue fused.
+    ///
+    /// # Safety
+    /// [`Self::available`] must be true; `pl` must come from
+    /// [`PreparedLayer::new`] (panel/bias lengths and zero padding);
+    /// each `Some` row must cover `(col_hi - col_lo) * cin` bytes; and
+    /// `out` must hold `np * cout` values.
+    unsafe fn conv_strip(
+        rows: &StripRows<'_>,
+        pl: &PreparedLayer,
+        x0: usize,
+        np: usize,
+        out: &mut StripOut<'_>,
+    );
+}
+
+/// The portable oracle kernel (see [`strip_scalar`]).
+pub(crate) struct ScalarKernel;
+
+impl KernelIsa for ScalarKernel {
+    const P: usize = MK_P;
+    const COUT_TILE: usize = 8;
+    const NAME: &'static str = "scalar";
+
+    fn available() -> bool {
+        true
+    }
+
+    unsafe fn conv_strip(
+        rows: &StripRows<'_>,
+        pl: &PreparedLayer,
+        x0: usize,
+        np: usize,
+        out: &mut StripOut<'_>,
+    ) {
+        strip_scalar(rows, pl, x0, np, out);
+    }
+}
+
+/// The PR-4 AVX2 kernel (see [`strip_avx2`]).
+#[cfg(target_arch = "x86_64")]
+pub(crate) struct Avx2Kernel;
+
+#[cfg(target_arch = "x86_64")]
+impl KernelIsa for Avx2Kernel {
+    const P: usize = MK_P;
+    const COUT_TILE: usize = 8;
+    const NAME: &'static str = "avx2";
+
+    fn available() -> bool {
+        has_avx2()
+    }
+
+    unsafe fn conv_strip(
+        rows: &StripRows<'_>,
+        pl: &PreparedLayer,
+        x0: usize,
+        np: usize,
+        out: &mut StripOut<'_>,
+    ) {
+        let n_tiles = pl.cout_p / 8;
+        let mut cot = 0;
+        while cot + 2 <= n_tiles {
+            strip_avx2::<2>(rows, pl, x0, np, cot, out);
+            cot += 2;
+        }
+        if cot < n_tiles {
+            strip_avx2::<1>(rows, pl, x0, np, cot, out);
+        }
+    }
+}
+
+/// The AVX-512 kernel (see [`strip_avx512`]).
+#[cfg(all(target_arch = "x86_64", sr_has_avx512))]
+pub(crate) struct Avx512Kernel;
+
+#[cfg(all(target_arch = "x86_64", sr_has_avx512))]
+impl KernelIsa for Avx512Kernel {
+    const P: usize = MK_P_AVX512;
+    const COUT_TILE: usize = 16;
+    const NAME: &'static str = "avx512";
+
+    fn available() -> bool {
+        has_avx512()
+    }
+
+    unsafe fn conv_strip(
+        rows: &StripRows<'_>,
+        pl: &PreparedLayer,
+        x0: usize,
+        np: usize,
+        out: &mut StripOut<'_>,
+    ) {
+        let n_tiles = pl.cout.next_multiple_of(16) / 16;
+        let mut cot = 0;
+        while cot + 2 <= n_tiles {
+            strip_avx512::<2>(rows, pl, x0, np, cot, out);
+            cot += 2;
+        }
+        if cot < n_tiles {
+            strip_avx512::<1>(rows, pl, x0, np, cot, out);
+        }
+    }
+}
+
+/// The aarch64 NEON kernel (see [`strip_neon`]).
+#[cfg(target_arch = "aarch64")]
+pub(crate) struct NeonKernel;
+
+#[cfg(target_arch = "aarch64")]
+impl KernelIsa for NeonKernel {
+    const P: usize = MK_P;
+    const COUT_TILE: usize = 8;
+    const NAME: &'static str = "neon";
+
+    fn available() -> bool {
+        has_neon()
+    }
+
+    unsafe fn conv_strip(
+        rows: &StripRows<'_>,
+        pl: &PreparedLayer,
+        x0: usize,
+        np: usize,
+        out: &mut StripOut<'_>,
+    ) {
+        let n_tiles = pl.cout_p / 8;
+        let mut cot = 0;
+        while cot + 2 <= n_tiles {
+            strip_neon::<2>(rows, pl, x0, np, cot, out);
+            cot += 2;
+        }
+        if cot < n_tiles {
+            strip_neon::<1>(rows, pl, x0, np, cot, out);
+        }
+    }
+}
+
+/// The single conv inner-loop entry point: compute
+/// `np <= isa.strip_width()` output pixels starting at output column
+/// `x0`, all `cout` channels, with the requant epilogue fused into the
+/// register tile.
+///
+/// An `isa` whose kernel is not compiled for this target (it can never
+/// be [`Isa::detected`] here) falls through to the scalar oracle,
+/// whose stack tile is sized for the widest strip any ISA requests —
+/// so dispatch is total and safe-by-construction on every target.
 pub(crate) fn conv_strip(
     rows: &StripRows<'_>,
     pl: &PreparedLayer,
     x0: usize,
     np: usize,
-    use_avx2: bool,
+    isa: Isa,
     out: &mut StripOut<'_>,
 ) {
-    debug_assert!(np >= 1 && np <= MK_P);
-    #[cfg(target_arch = "x86_64")]
-    if use_avx2 {
-        let n_tiles = pl.cout_p / 8;
-        let mut cot = 0;
-        // SAFETY: AVX2 confirmed by the caller's dispatch; panel/bias
-        // bounds hold by the PreparedLayer packing invariants and
-        // `cot + NT <= n_tiles`; row reads stay inside the slices by
-        // the StripRows column contract (clamped per tap below).
-        unsafe {
-            while cot + 2 <= n_tiles {
-                strip_avx2::<2>(rows, pl, x0, np, cot, out);
-                cot += 2;
-            }
-            if cot < n_tiles {
-                strip_avx2::<1>(rows, pl, x0, np, cot, out);
-            }
-        }
-        return;
+    debug_assert!(np >= 1 && np <= isa.strip_width());
+    match isa {
+        // SAFETY (all vector arms): the caller's dispatch selected an
+        // available ISA; panel/bias bounds hold by the PreparedLayer
+        // packing invariants and `cot + NT <= n_tiles`; row reads stay
+        // inside the slices by the StripRows column contract (clamped
+        // per tap).
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            Avx2Kernel::conv_strip(rows, pl, x0, np, out);
+        },
+        #[cfg(all(target_arch = "x86_64", sr_has_avx512))]
+        Isa::Avx512 => unsafe {
+            Avx512Kernel::conv_strip(rows, pl, x0, np, out);
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            NeonKernel::conv_strip(rows, pl, x0, np, out);
+        },
+        _ => strip_scalar(rows, pl, x0, np, out),
     }
-    #[cfg(not(target_arch = "x86_64"))]
-    let _ = use_avx2;
-    strip_scalar(rows, pl, x0, np, out);
 }
 
 /// The valid pixel sub-range `[p_lo, p_hi)` of a strip for one
@@ -268,10 +600,238 @@ unsafe fn strip_avx2<const NT: usize>(
     }
 }
 
+/// One strip x `NT` 16-lane cout tiles over zmm registers: the same
+/// pair-interleaved `vpmaddwd` scheme as [`strip_avx2`] at twice the
+/// lane count and 1.5x the strip width (32 i8 MACs per instruction).
+///
+/// Tail handling differs from the ymm kernel in one place: the weight
+/// panels ([`PreparedLayer::wt512`]) are zero-padded to a multiple of
+/// 16 couts, but `bias_p` is only padded to a multiple of 8 — a
+/// half-filled trailing tile therefore loads its bias under a
+/// `__mmask16`, which suppresses the masked-off lanes entirely instead
+/// of reading past the buffer.
+///
+/// # Safety
+/// Caller guarantees AVX-512 F+BW are available,
+/// `cot0 + NT <= cout.next_multiple_of(16) / 16`, `pl` was packed by
+/// [`PreparedLayer::new`], each `Some` row covers
+/// `(col_hi - col_lo) * cin` bytes, and `out` holds `np * cout` values.
+#[cfg(all(target_arch = "x86_64", sr_has_avx512))]
+#[target_feature(enable = "avx512f,avx512bw")]
+unsafe fn strip_avx512<const NT: usize>(
+    rows: &StripRows<'_>,
+    pl: &PreparedLayer,
+    x0: usize,
+    np: usize,
+    cot0: usize,
+    out: &mut StripOut<'_>,
+) {
+    use std::arch::x86_64::*;
+    let cin = pl.cin;
+    let pairs = pl.cin_p / 2;
+    let tap_stride = pairs * 16; // u32 lanes per tap inside a panel
+    let panel_stride = 9 * tap_stride; // u32 lanes per cout-tile panel
+    let wt = pl.wt512.as_ptr();
+    let cout_p = pl.cout_p;
+
+    // bias-initialized register tile; a trailing half tile (cout_p is
+    // a multiple of 8, not 16) masks its load so no lane touches
+    // memory past bias_p
+    let mut acc = [[_mm512_setzero_si512(); NT]; MK_P_AVX512];
+    for accp in acc.iter_mut().take(np) {
+        for (t, a) in accp.iter_mut().enumerate() {
+            let co0 = (cot0 + t) * 16;
+            let nbl = cout_p.saturating_sub(co0).min(16);
+            let k: __mmask16 =
+                if nbl >= 16 { !0 } else { (1u16 << nbl) - 1 };
+            *a = _mm512_maskz_loadu_epi32(
+                k,
+                pl.bias_p.as_ptr().add(co0),
+            );
+        }
+    }
+
+    for (dr, rowo) in rows.rows.iter().enumerate() {
+        let Some(row) = rowo else { continue };
+        let rp = row.as_ptr();
+        for dc in 0..3usize {
+            let tap = dr * 3 + dc;
+            let vbase = x0 as isize + dc as isize - 1;
+            let (p_lo, p_hi) = tap_pixel_range(rows, vbase, np);
+            if p_lo >= p_hi {
+                continue;
+            }
+            let wtap = wt.add(cot0 * panel_stride + tap * tap_stride);
+            for ci2 in 0..pairs {
+                let mut wv = [_mm512_setzero_si512(); NT];
+                for (t, w) in wv.iter_mut().enumerate() {
+                    *w = core::ptr::read_unaligned(
+                        wtap.add(t * panel_stride + ci2 * 16)
+                            as *const __m512i,
+                    );
+                }
+                let c0 = 2 * ci2;
+                let c1_valid = c0 + 1 < cin;
+                for p in p_lo..p_hi {
+                    let off = ((vbase + p as isize - rows.col_lo)
+                        as usize)
+                        * cin
+                        + c0;
+                    let xa = *rp.add(off) as u32;
+                    let xb = if c1_valid {
+                        *rp.add(off + 1) as u32
+                    } else {
+                        0 // odd-cin: zero-packed weight half
+                    };
+                    if xa | xb == 0 {
+                        continue; // pair-granular post-ReLU sparsity
+                    }
+                    let xp =
+                        _mm512_set1_epi32((xa | (xb << 16)) as i32);
+                    for (t, a) in acc[p].iter_mut().enumerate() {
+                        *a = _mm512_add_epi32(
+                            *a,
+                            _mm512_madd_epi16(xp, wv[t]),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    let m = pl.m;
+    let cout = pl.cout;
+    let mut lanes = [0i32; 16];
+    for (p, accp) in acc.iter().enumerate().take(np) {
+        for (t, a) in accp.iter().enumerate() {
+            let co0 = (cot0 + t) * 16;
+            if co0 >= cout {
+                break; // fully padded tile: nothing to store
+            }
+            let nco = (cout - co0).min(16);
+            core::ptr::write_unaligned(
+                lanes.as_mut_ptr() as *mut __m512i,
+                *a,
+            );
+            out.store(p * cout + co0, &lanes[..nco], m);
+        }
+    }
+}
+
+/// One strip x `NT` 8-lane cout tiles over NEON `int32x4_t` pairs:
+/// per `(tap, ci)` one `int16x8_t` weight vector (the widened
+/// [`PreparedLayer::wn`] panels) is multiplied by a `vdupq`-broadcast
+/// input sample via `vmlal_s16`/`vmlal_high_s16` (`smlal`/`smlal2` —
+/// widening i16 x i16 -> i32 multiply-accumulate).
+///
+/// No pair interleave here: NEON's widening MACs take the weight
+/// vector directly, so `wn` keeps one lane per (real) input channel
+/// and odd `cin` needs no zero half.  `sdot`/`usdot` (i8 dot product)
+/// would double throughput but requires the `dotprod`/`i8mm`
+/// extensions *and* an i8-safe input range — the feature maps are u8
+/// up to 255, so the widened-i16 form is what baseline NEON can do
+/// bit-exactly.
+///
+/// Accumulation order per pixel is tap-major then channel — the same
+/// i32 products as every other kernel, so wrapping-add commutativity
+/// gives bit-exactness.
+///
+/// # Safety
+/// Caller guarantees NEON is available, `cot0 + NT <= pl.cout_p / 8`,
+/// `pl` was packed by [`PreparedLayer::new`], each `Some` row covers
+/// `(col_hi - col_lo) * cin` bytes, and `out` holds `np * cout` values.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn strip_neon<const NT: usize>(
+    rows: &StripRows<'_>,
+    pl: &PreparedLayer,
+    x0: usize,
+    np: usize,
+    cot0: usize,
+    out: &mut StripOut<'_>,
+) {
+    use std::arch::aarch64::*;
+    let cin = pl.cin;
+    let tap_stride = cin * 8; // i16 lanes per tap inside a panel
+    let panel_stride = 9 * tap_stride; // i16 lanes per cout-tile panel
+    let wn = pl.wn.as_ptr();
+
+    // bias-initialized register tile: np pixels x NT tiles x two
+    // int32x4_t halves per 8-lane tile
+    let mut acc = [[[vdupq_n_s32(0); 2]; NT]; MK_P];
+    for accp in acc.iter_mut().take(np) {
+        for (t, a) in accp.iter_mut().enumerate() {
+            let b = pl.bias_p.as_ptr().add((cot0 + t) * 8);
+            a[0] = vld1q_s32(b);
+            a[1] = vld1q_s32(b.add(4));
+        }
+    }
+
+    for (dr, rowo) in rows.rows.iter().enumerate() {
+        let Some(row) = rowo else { continue };
+        let rp = row.as_ptr();
+        for dc in 0..3usize {
+            let tap = dr * 3 + dc;
+            let vbase = x0 as isize + dc as isize - 1;
+            let (p_lo, p_hi) = tap_pixel_range(rows, vbase, np);
+            if p_lo >= p_hi {
+                continue;
+            }
+            let wtap = wn.add(cot0 * panel_stride + tap * tap_stride);
+            for ci in 0..cin {
+                let mut wv = [vdupq_n_s16(0); NT];
+                for (t, w) in wv.iter_mut().enumerate() {
+                    *w = vld1q_s16(wtap.add(t * panel_stride + ci * 8));
+                }
+                for p in p_lo..p_hi {
+                    let off = ((vbase + p as isize - rows.col_lo)
+                        as usize)
+                        * cin
+                        + ci;
+                    let xv = *rp.add(off);
+                    if xv == 0 {
+                        continue; // post-ReLU sparsity
+                    }
+                    // u8 fits i16 exactly; the widening MAC's i32
+                    // product equals the scalar kernel's
+                    let xd = vdupq_n_s16(xv as i16);
+                    for (t, a) in acc[p].iter_mut().enumerate() {
+                        a[0] = vmlal_s16(
+                            a[0],
+                            vget_low_s16(wv[t]),
+                            vget_low_s16(xd),
+                        );
+                        a[1] = vmlal_high_s16(a[1], wv[t], xd);
+                    }
+                }
+            }
+        }
+    }
+
+    let m = pl.m;
+    let cout = pl.cout;
+    let mut lanes = [0i32; 8];
+    for (p, accp) in acc.iter().enumerate().take(np) {
+        for (t, a) in accp.iter().enumerate() {
+            let co0 = (cot0 + t) * 8;
+            if co0 >= cout {
+                break; // fully padded tile: nothing to store
+            }
+            let nco = (cout - co0).min(8);
+            vst1q_s32(lanes.as_mut_ptr(), a[0]);
+            vst1q_s32(lanes.as_mut_ptr().add(4), a[1]);
+            out.store(p * cout + co0, &lanes[..nco], m);
+        }
+    }
+}
+
 /// Scalar strip twin over the zero-padded `w32` rows: same strip
 /// blocking, same tap masking, stack-tile accumulators — the
-/// `force_scalar` oracle and the non-x86 path.  Bit-identical to the
-/// AVX2 kernel (integer adds commute; the products are the same set).
+/// `force_scalar` oracle and the portable fallback.  Bit-identical to
+/// every vector kernel (integer adds commute; the products are the
+/// same set).  The stack tile is [`MK_P_MAX`] pixels wide so the
+/// oracle can stand in for any ISA's strip walk, including one whose
+/// kernel is compiled out on this target.
 fn strip_scalar(
     rows: &StripRows<'_>,
     pl: &PreparedLayer,
@@ -279,6 +839,7 @@ fn strip_scalar(
     np: usize,
     out: &mut StripOut<'_>,
 ) {
+    debug_assert!(np <= MK_P_MAX);
     let cin = pl.cin;
     let cout = pl.cout;
     let cout_p = pl.cout_p;
@@ -286,7 +847,7 @@ fn strip_scalar(
     while cot * 8 < cout {
         let co0 = cot * 8;
         let nco = (cout - co0).min(8);
-        let mut acc = [[0i32; 8]; MK_P];
+        let mut acc = [[0i32; 8]; MK_P_MAX];
         for accp in acc.iter_mut().take(np) {
             accp[..nco].copy_from_slice(&pl.bias_p[co0..co0 + nco]);
         }
@@ -325,5 +886,71 @@ fn strip_scalar(
             out.store(p * cout + co0, &accp[..nco], m);
         }
         cot += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enum_geometry_matches_trait_consts() {
+        // Isa::strip_width / cout_tile exist for variants whose kernel
+        // may be compiled out, so they are literals — pin them to the
+        // trait consts of every kernel that IS compiled in
+        assert_eq!(Isa::Scalar.strip_width(), ScalarKernel::P);
+        assert_eq!(Isa::Scalar.cout_tile(), ScalarKernel::COUT_TILE);
+        assert_eq!(Isa::Scalar.name(), ScalarKernel::NAME);
+        #[cfg(target_arch = "x86_64")]
+        {
+            assert_eq!(Isa::Avx2.strip_width(), Avx2Kernel::P);
+            assert_eq!(Isa::Avx2.cout_tile(), Avx2Kernel::COUT_TILE);
+            assert_eq!(Isa::Avx2.name(), Avx2Kernel::NAME);
+        }
+        #[cfg(all(target_arch = "x86_64", sr_has_avx512))]
+        {
+            assert_eq!(Isa::Avx512.strip_width(), Avx512Kernel::P);
+            assert_eq!(Isa::Avx512.cout_tile(), Avx512Kernel::COUT_TILE);
+            assert_eq!(Isa::Avx512.name(), Avx512Kernel::NAME);
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            assert_eq!(Isa::Neon.strip_width(), NeonKernel::P);
+            assert_eq!(Isa::Neon.cout_tile(), NeonKernel::COUT_TILE);
+            assert_eq!(Isa::Neon.name(), NeonKernel::NAME);
+        }
+        let widest = Isa::compiled()
+            .into_iter()
+            .map(|i| i.strip_width())
+            .max()
+            .unwrap();
+        assert!(widest <= MK_P_MAX, "scalar oracle tile too narrow");
+    }
+
+    #[test]
+    fn detection_is_cached_compiled_and_available() {
+        let d = Isa::detected();
+        assert!(d.available(), "detected ISA must be runnable");
+        assert!(Isa::compiled().contains(&d));
+        assert_eq!(d, Isa::detected(), "detection must be stable");
+        assert_eq!(Isa::select(true), Isa::Scalar);
+        assert_eq!(Isa::select(false), d);
+        // the scalar oracle is unconditionally present and first
+        assert_eq!(Isa::compiled()[0], Isa::Scalar);
+        assert!(Isa::Scalar.available());
+        // legacy probe agrees with the enum
+        assert_eq!(avx2_available(), Isa::Avx2.available());
+    }
+
+    #[test]
+    fn names_are_stable_and_unique() {
+        let all = [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Neon];
+        let names: Vec<_> = all.iter().map(|i| i.name()).collect();
+        assert_eq!(names, ["scalar", "avx2", "avx512", "neon"]);
+        for (i, a) in names.iter().enumerate() {
+            for b in &names[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
     }
 }

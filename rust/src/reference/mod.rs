@@ -12,10 +12,14 @@
 //!
 //! §Microkernel: every conv entry point (row and patch, ReLU and
 //! final) now drives the register-blocked strip microkernel of
-//! [`microkernel`] — [`MK_P`] output pixels per inner-loop invocation
-//! with the requantization epilogue fused into the register tile.  The
-//! frozen PR-2 single-pixel kernels live in [`baseline`] purely as the
-//! benches' `microkernel_speedup` reference point.
+//! [`microkernel`] — [`Isa::strip_width`] output pixels per inner-loop
+//! invocation with the requantization epilogue fused into the register
+//! tile.  Which ISA's kernel runs (§Multi-ISA: AVX-512, AVX2, NEON, or
+//! the scalar oracle) is detected once at startup ([`Isa::detected`])
+//! and threaded through the shared strip walk; `force_scalar` remains
+//! the oracle route.  The frozen PR-2 single-pixel kernels live in
+//! [`baseline`] purely as the benches' `microkernel_speedup` reference
+//! point.
 
 pub mod baseline;
 pub mod conv;
@@ -26,7 +30,7 @@ pub use conv::{
     conv3x3_relu_prepared, conv_patch_final, conv_patch_final_prepared,
     conv_patch_relu, conv_patch_relu_prepared,
 };
-pub use microkernel::{avx2_available, MK_P};
+pub use microkernel::{avx2_available, Isa, MK_P, MK_P_AVX512, MK_P_MAX};
 
 use crate::image::ImageU8;
 use crate::model::{PreparedModel, QuantModel, Scratch, Tensor};

@@ -82,6 +82,7 @@ pub struct LogHistogram {
     total: u64,
     sum: f64,
     max: f64,
+    nonfinite: u64,
 }
 
 impl LogHistogram {
@@ -92,10 +93,21 @@ impl LogHistogram {
             total: 0,
             sum: 0.0,
             max: 0.0,
+            nonfinite: 0,
         }
     }
 
+    /// Record one sample.  Non-finite values are counted separately
+    /// and excluded from every statistic — mirroring
+    /// [`Summary::from_samples`]'s filter; a streaming histogram has
+    /// no retain pass, so the filter lives here.  (A single NaN would
+    /// otherwise poison `sum`/`mean()` forever and land in bucket 0,
+    /// skewing quantiles low.)
     pub fn record(&mut self, v: f64) {
+        if !v.is_finite() {
+            self.nonfinite += 1;
+            return;
+        }
         self.total += 1;
         self.sum += v;
         if v > self.max {
@@ -110,8 +122,15 @@ impl LogHistogram {
         self.counts[idx] += 1;
     }
 
+    /// Finite samples recorded (non-finite ones are tallied in
+    /// [`LogHistogram::nonfinite_count`] instead).
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// Non-finite samples rejected by [`LogHistogram::record`].
+    pub fn nonfinite_count(&self) -> u64 {
+        self.nonfinite
     }
 
     pub fn mean(&self) -> f64 {
@@ -177,6 +196,34 @@ mod tests {
     fn nonfinite_filtered() {
         let s = Summary::from_samples(vec![1.0, f64::NAN, 2.0, f64::INFINITY]);
         assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn histogram_skips_nonfinite() {
+        // regression (mirrors summary_basics): NaN/inf must not poison
+        // the running sum, the max, bucket 0, or the count
+        let mut h = LogHistogram::new(1.0, 40);
+        h.record(3.0);
+        h.record(f64::NAN);
+        h.record(1.0);
+        h.record(f64::INFINITY);
+        h.record(2.0);
+        h.record(f64::NEG_INFINITY);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.nonfinite_count(), 3);
+        assert!((h.mean() - 2.0).abs() < 1e-12, "mean={}", h.mean());
+        assert_eq!(h.max(), 3.0);
+        // quantiles come from finite samples only: p0..p100 all live
+        // within the buckets bracketing [1, 3]
+        let p50 = h.quantile(0.5);
+        assert!(p50.is_finite() && p50 >= 1.0 && p50 <= 4.0, "p50={p50}");
+        // an all-nonfinite histogram behaves like an empty one
+        let mut bad = LogHistogram::new(1.0, 4);
+        bad.record(f64::NAN);
+        assert_eq!(bad.count(), 0);
+        assert_eq!(bad.nonfinite_count(), 1);
+        assert!(bad.mean().is_nan());
+        assert!(bad.quantile(0.5).is_nan());
     }
 
     #[test]

@@ -1,22 +1,26 @@
-//! §Microkernel equivalence properties: the register-blocked strip
-//! microkernel (AVX2 where the host has it) must be **bit-identical**
-//! to its `force_scalar` oracle and to a naive direct convolution
-//! written independently here — across randomized geometries and a
-//! deterministic sweep of every masked-tail case: `width % MK_P` in
-//! `{0..MK_P-1}`, `cout % 8 != 0` (padded lanes), odd `cin` (the
-//! zero-weight pair half), and both epilogues (fused ReLU/saturate u8
-//! and final-layer i32).  The frozen PR-2 pixel kernels
-//! (`reference::baseline`) are pinned to the same oracle so the
-//! benches' `microkernel_speedup` compares two correct kernels.
+//! §Microkernel equivalence properties: every compiled-in ISA kernel
+//! (AVX-512 / AVX2 / NEON, whichever this host can run) must be
+//! **bit-identical** to the scalar oracle and to a naive direct
+//! convolution written independently here — across randomized
+//! geometries and a deterministic sweep of every masked-tail case:
+//! `width % P` in `{0..P-1}` for every strip width up to `MK_P_MAX`,
+//! `cout` crossing both the 8-lane and 16-lane tile boundaries
+//! (padded lanes), odd `cin` (the zero-weight pair half), and both
+//! epilogues (fused ReLU/saturate u8 and final-layer i32).  The
+//! auto-dispatch entry points (`Isa::select`) and the frozen PR-2
+//! pixel kernels (`reference::baseline`) are pinned to the same
+//! oracle so the benches' `microkernel_speedup` compares two correct
+//! kernels.
 
 use sr_accel::model::{
     PreparedLayer, PreparedModel, QuantLayer, QuantModel, Scratch, Tensor,
 };
 use sr_accel::reference::conv::{
-    conv3x3_final_impl, conv3x3_relu_impl, conv_patch_final_impl,
-    conv_patch_relu_impl,
+    conv3x3_final_impl, conv3x3_final_isa, conv3x3_relu_impl,
+    conv3x3_relu_isa, conv_patch_final_impl, conv_patch_final_isa,
+    conv_patch_relu_impl, conv_patch_relu_isa,
 };
-use sr_accel::reference::{self, baseline, MK_P};
+use sr_accel::reference::{self, baseline, Isa, MK_P_MAX};
 use sr_accel::util::fixed::{clamp_u8, FixedMul};
 use sr_accel::util::quickcheck::{check_no_shrink, Config};
 use sr_accel::util::Xoshiro256pp;
@@ -100,8 +104,17 @@ fn zero_halo_patch(x: &Tensor<u8>) -> Tensor<u8> {
     p
 }
 
-/// Both conv paths (row SAME, patch VALID), both dispatches (auto and
-/// `force_scalar`), one epilogue — all against the naive oracle.
+/// Every compiled-in ISA this host can run, scalar oracle first.
+fn runnable_isas() -> Vec<Isa> {
+    Isa::compiled()
+        .into_iter()
+        .filter(|i| i.available())
+        .collect()
+}
+
+/// Both conv paths (row SAME, patch VALID), every runnable ISA plus
+/// both auto dispatches (`Isa::select(force_scalar)`), one epilogue —
+/// all against the naive oracle.
 fn assert_all_paths(
     x: &Tensor<u8>,
     l: &QuantLayer,
@@ -112,6 +125,26 @@ fn assert_all_paths(
     let (want_u8, want_i32) = naive_conv3x3(x, l);
     let patch = zero_halo_patch(x);
     if l.relu {
+        for isa in runnable_isas() {
+            let row = conv3x3_relu_isa(x, &pl, scratch, isa);
+            if row.data != want_u8 {
+                return Err(format!(
+                    "{label}: row relu diverged (isa={})",
+                    isa.name()
+                ));
+            }
+            scratch.recycle_u8(row);
+            let pat = conv_patch_relu_isa(&patch, &pl, scratch, isa);
+            if pat.data != want_u8 {
+                return Err(format!(
+                    "{label}: patch relu diverged (isa={})",
+                    isa.name()
+                ));
+            }
+            scratch.recycle_u8(pat);
+        }
+        // the public auto-dispatch entries must agree with the
+        // per-ISA sweep on both routes
         for force_scalar in [false, true] {
             let row = conv3x3_relu_impl(x, &pl, scratch, force_scalar);
             if row.data != want_u8 {
@@ -142,6 +175,24 @@ fn assert_all_paths(
         }
         scratch.recycle_u8(bl_pat);
     } else {
+        for isa in runnable_isas() {
+            let row = conv3x3_final_isa(x, &pl, scratch, isa);
+            if row.data != want_i32 {
+                return Err(format!(
+                    "{label}: row final diverged (isa={})",
+                    isa.name()
+                ));
+            }
+            scratch.recycle_i32(row);
+            let pat = conv_patch_final_isa(&patch, &pl, scratch, isa);
+            if pat.data != want_i32 {
+                return Err(format!(
+                    "{label}: patch final diverged (isa={})",
+                    isa.name()
+                ));
+            }
+            scratch.recycle_i32(pat);
+        }
         for force_scalar in [false, true] {
             let row = conv3x3_final_impl(x, &pl, scratch, force_scalar);
             if row.data != want_i32 {
@@ -176,21 +227,30 @@ fn assert_all_paths(
 
 #[test]
 fn strip_tail_sweep_covers_every_mask() {
-    // deterministic coverage: every width remainder mod MK_P, odd cin,
-    // cout % 8 != 0, both epilogues, on one shared scratch
+    // deterministic coverage: every width remainder mod P for every
+    // compiled strip width (4-wide AVX2/NEON, 6-wide AVX-512), odd
+    // cin, cout crossing the 8- and 16-lane tile boundaries, both
+    // epilogues, on one shared scratch
     let mut scratch = Scratch::new();
-    for w in 1..=2 * MK_P + 1 {
-        for &(cin, cout) in
-            &[(1usize, 4usize), (3, 8), (4, 11), (5, 16), (7, 20)]
-        {
+    for w in 1..=2 * MK_P_MAX + 1 {
+        for &(cin, cout) in &[
+            (1usize, 4usize),
+            (3, 8),
+            (4, 11),
+            (5, 16),
+            (6, 17),
+            (3, 24),
+            (7, 20),
+            (2, 32),
+        ] {
             for relu in [true, false] {
                 let seed = (w * 1009 + cin * 31 + cout * 7) as u64
                     + relu as u64;
                 let l = rand_layer(cin, cout, relu, seed);
                 let x = rand_map(5, w, cin, seed ^ 0xA5A5);
                 let label = format!(
-                    "w={w} (w%P={}) {cin}->{cout} relu={relu}",
-                    w % MK_P
+                    "w={w} (w%Pmax={}) {cin}->{cout} relu={relu}",
+                    w % MK_P_MAX
                 );
                 if let Err(e) =
                     assert_all_paths(&x, &l, &mut scratch, &label)
@@ -239,7 +299,7 @@ fn prop_microkernel_matches_scalar_and_naive() {
 fn fused_epilogue_saturates_like_the_silicon() {
     // huge positive bias must clamp to 255 in the fused ReLU epilogue,
     // huge negative to 0, and the final layer must pass i32 through
-    // unclamped — on both dispatches
+    // unclamped — on every runnable ISA and on both auto dispatches
     let mut scratch = Scratch::new();
     for bias in [1 << 20, -(1 << 20)] {
         let mut l = rand_layer(3, 9, true, 3);
@@ -249,9 +309,18 @@ fn fused_epilogue_saturates_like_the_silicon() {
         };
         let pl = PreparedLayer::new(&l);
         let x = Tensor::new(4, 5, 3); // zero input: output = requant(bias)
+        let want = if bias > 0 { 255 } else { 0 };
+        for isa in runnable_isas() {
+            let y = conv3x3_relu_isa(&x, &pl, &mut scratch, isa);
+            assert!(
+                y.data.iter().all(|&v| v == want),
+                "bias {bias} isa={}",
+                isa.name()
+            );
+            scratch.recycle_u8(y);
+        }
         for force_scalar in [false, true] {
             let y = conv3x3_relu_impl(&x, &pl, &mut scratch, force_scalar);
-            let want = if bias > 0 { 255 } else { 0 };
             assert!(
                 y.data.iter().all(|&v| v == want),
                 "bias {bias} scalar={force_scalar}"
@@ -261,6 +330,15 @@ fn fused_epilogue_saturates_like_the_silicon() {
         let mut lf = l.clone();
         lf.relu = false;
         let plf = PreparedLayer::new(&lf);
+        for isa in runnable_isas() {
+            let y = conv3x3_final_isa(&x, &plf, &mut scratch, isa);
+            assert!(
+                y.data.iter().all(|&v| v == bias),
+                "final bias {bias} isa={}",
+                isa.name()
+            );
+            scratch.recycle_i32(y);
+        }
         for force_scalar in [false, true] {
             let y = conv3x3_final_impl(&x, &plf, &mut scratch, force_scalar);
             assert!(

@@ -202,6 +202,73 @@ fn engines_agree_across_executors() {
 }
 
 #[test]
+fn prop_scratch_survives_geometry_churn() {
+    // one Scratch reused across shrink-then-grow geometry churn (band
+    // width and trunk channel count both jump big -> small -> big ->
+    // small through the streaming executor) must be bit-identical to
+    // a fresh Scratch built for every band: recycled ring rows and
+    // pooled tensors carry stale sizes and stale bytes between
+    // geometries, and none of that may leak into the output
+    let cfg = Config {
+        cases: 24,
+        seed: 0x5C2A,
+        max_shrink_iters: 0,
+    };
+    let mut churned = Scratch::new();
+    check_no_shrink(
+        &cfg,
+        |rng| {
+            (
+                rng.range_usize(10, 18), // big frame_w
+                rng.range_usize(1, 5),   // small frame_w
+                rng.range_usize(8, 12),  // big c_mid
+                rng.range_usize(1, 4),   // small c_mid
+                rng.range_usize(1, 4),   // layers
+                rng.range_usize(1, 4),   // scale
+                rng.next_u64(),
+            )
+        },
+        |&(w_big, w_small, c_big, c_small, layers, scale, seed)| {
+            // big -> small -> big -> small, on both axes at once, then
+            // crossed so each axis also shrinks while the other grows
+            let churn = [
+                (w_big, c_big),
+                (w_small, c_small),
+                (w_big, c_big),
+                (w_small, c_small),
+                (w_big, c_small),
+                (w_small, c_big),
+            ];
+            let streaming = StreamingScheduler { force_scalar: false };
+            for (step, &(fw, c_mid)) in churn.iter().enumerate() {
+                let qm = QuantModel::test_model(
+                    layers,
+                    3,
+                    c_mid,
+                    scale,
+                    seed ^ step as u64,
+                );
+                let pm = PreparedModel::new(&qm);
+                let band = rand_frame(4, fw, 3, seed ^ ((step as u64) << 8));
+                let (got, _) =
+                    streaming.run_band_prepared(&band, &pm, &mut churned);
+                let mut fresh = Scratch::new();
+                let (want, _) =
+                    streaming.run_band_prepared(&band, &pm, &mut fresh);
+                if got.data != want.data {
+                    return Err(format!(
+                        "churned scratch diverged at step {step} \
+                         (4x{fw} c{c_mid}, {layers}l x{scale})"
+                    ));
+                }
+                churned.recycle_u8(got);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn streaming_handles_bands_shorter_than_the_ring() {
     // 1- and 2-row bands: the 3-row ring is never filled, every conv
     // row sees at least one zero seam row
