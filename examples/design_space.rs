@@ -1,56 +1,77 @@
-//! Design-space exploration: sweep tile geometry and PE-block count,
-//! mapping the SRAM / throughput / utilization frontier the paper's
+//! Design-space exploration: enumerate the planner's schedule space
+//! and map the SRAM / throughput / utilization frontier the paper's
 //! Section IV.A argues about.  Shows why (C=8, R=60, 28 blocks) is the
 //! published design point.
 //!
+//! The schedule tables here and the `tune` subcommand share one
+//! enumeration + cost model (`sr_accel::planner`) — this example is a
+//! thin ablation printer over it, with no wall-clock confirmation.
+//!
 //! ```sh
-//! make artifacts && cargo run --release --example design_space
+//! cargo run --release --example design_space
 //! ```
 
 use anyhow::Result;
 
 use sr_accel::analysis::{AreaModel, BufferBudget, BufferParams};
 use sr_accel::benchkit::Table;
-use sr_accel::config::AcceleratorConfig;
-use sr_accel::fusion::{FusionScheduler, TiltedScheduler};
-use sr_accel::model::{load_apbnw, Tensor};
-use sr_accel::runtime::artifacts_dir;
+use sr_accel::config::ModelConfig;
+use sr_accel::planner::{enumerate_candidates, SearchSpace};
 use sr_accel::sim::engine::{layer_cycles, EngineGeometry};
-use sr_accel::util::Xoshiro256pp;
 
 fn main() -> Result<()> {
-    let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))?;
-    let frame = {
-        let mut rng = Xoshiro256pp::seed_from_u64(3);
-        let mut t = Tensor::new(120, 320, 3);
-        rng.fill_u8(&mut t.data);
-        t
-    };
+    let model = ModelConfig::apbn();
+    let (lr_w, lr_h, workers) = (640usize, 360usize, 4usize);
+
+    // ---- serving schedule frontier ----------------------------------
+    // The exact candidate set `tune` searches for this geometry, ranked
+    // by the analytic cycle + SRAM-staging cost model (best first).
+    let space = SearchSpace::serving(lr_h, workers);
+    let mut t = Table::new(
+        &format!(
+            "schedule frontier {lr_w}x{lr_h} x{} ({} workers, cost model)",
+            model.scale, workers
+        ),
+        &["plan", "bands", "compute Mcyc", "staging MB", "score"],
+    );
+    for c in enumerate_candidates(lr_w, lr_h, &model, &space, workers) {
+        t.row(&[
+            c.plan.describe(),
+            format!("{}", c.predicted.bands),
+            format!("{:.2}", c.predicted.compute_cycles as f64 / 1e6),
+            format!("{:.2}", c.predicted.staging_bytes as f64 / 1e6),
+            format!("{:.0}", c.predicted.score),
+        ]);
+    }
+    t.print();
 
     // ---- tile width sweep -------------------------------------------
-    let mut t = Table::new(
-        "tile width sweep (R=60, measured on 120x320, scaled x4)",
-        &["C", "SRAM KB", "fps@600MHz", "util %", "area mm^2"],
-    );
+    // Same enumeration API, restricted to the tilted executor: wider
+    // tiles amortize the 2-column halo re-fetch (less staging traffic)
+    // but cost quadratically more ping-pong SRAM and die area.
+    let widths = [1usize, 2, 4, 8, 16, 32, 60];
+    let space = SearchSpace::tile_ablation(lr_h, &widths);
+    let mut sweep =
+        enumerate_candidates(lr_w, lr_h, &model, &space, 1);
+    sweep.sort_by_key(|c| c.plan.tile_cols);
     let area = AreaModel::default();
-    for c in [1usize, 2, 4, 8, 16, 32, 60] {
-        let acc = AcceleratorConfig {
-            tile_cols: c,
-            ..AcceleratorConfig::paper()
-        };
+    let bias_bytes: usize = model.channels[1..].iter().sum::<usize>() * 4;
+    let mut t = Table::new(
+        "tile width sweep (R=60, tilted executor, analytic)",
+        &["C", "SRAM KB", "staging MB/frame", "score", "area mm^2"],
+    );
+    for c in &sweep {
         let mut p = BufferParams::paper_tilted();
-        p.tile_cols = c.max(2);
-        p.weight_bytes = qm.weight_bytes() + qm.bias_bytes();
+        p.tile_cols = c.plan.tile_cols.max(2);
+        p.weight_bytes = model.weight_bytes() as usize + bias_bytes;
         let budget = BufferBudget::tilted(&p);
-        let res = TiltedScheduler::default().run_frame(&frame, &qm, &acc);
-        let fps = 600e6 / (res.stats.compute_cycles as f64 * 4.0);
         let gates = area.gate_count(1260, 140);
         let mm2 = area.area_mm2_40nm(gates, budget.total_kb());
         t.row(&[
-            format!("{c}"),
+            format!("{}", c.plan.tile_cols),
             format!("{:.1}", budget.total_kb()),
-            format!("{fps:.1}"),
-            format!("{:.1}", res.stats.utilization() * 100.0),
+            format!("{:.2}", c.predicted.staging_bytes as f64 / 1e6),
+            format!("{:.0}", c.predicted.score),
             format!("{mm2:.2}"),
         ]);
     }
@@ -61,7 +82,6 @@ fn main() -> Result<()> {
         "PE-block sweep (analytic, APBN layers, 60x8 tiles)",
         &["blocks", "MACs", "peak GMAC/s", "cycles/tile-stack", "util %"],
     );
-    let channels = [3usize, 28, 28, 28, 28, 28, 28, 27];
     for blocks in [7usize, 14, 28, 56] {
         let geo = EngineGeometry {
             pe_blocks: blocks,
@@ -70,7 +90,7 @@ fn main() -> Result<()> {
         let mut cyc = 0u64;
         let mut ops = 0u64;
         let mut slots = 0u64;
-        for w in channels.windows(2) {
+        for w in model.channels.windows(2) {
             let c = layer_cycles(60, 8, w[0], w[1], &geo);
             cyc += c.cycles;
             ops += c.mac_ops;

@@ -1,0 +1,116 @@
+//! §Planner — autotuner benchmark: run the cost-model-guided schedule
+//! search for one serving geometry on the real int8 engine and record
+//! every wall-clock-confirmed candidate.
+//!
+//! Emits `BENCH_plan.json`:
+//! * one record per confirmed plan (HR MP/s from the best-of
+//!   confirmation run, ns/iter = one HR frame at that rate),
+//! * `extra.plan_speedup` — tuned winner over the serving default,
+//!   `>= 1.0` by construction (the default is always confirmed and the
+//!   winner is the measured argmax); CI gates on it,
+//! * `extra.rank_correlation` — Spearman correlation between the cost
+//!   model's predicted cost ranking and the measured slowness ranking
+//!   over the confirmed set (how well pruning can be trusted),
+//! * `extra.isa` — the dispatched microkernel ISA (part of the plan
+//!   cache key).
+//!
+//! `--smoke` shrinks the geometry and search to the CI fast path.
+//! Falls back to the deterministic test model when the trained
+//! artifacts are absent, so the bench runs on bare checkouts.
+
+use sr_accel::benchkit::{smoke_requested, BenchJson, BenchRecord};
+use sr_accel::coordinator::engine::model_for_scale;
+use sr_accel::model::load_apbnw;
+use sr_accel::planner::{tune_serving, PlanKey, SearchSpace, TuneParams};
+use sr_accel::reference::Isa;
+use sr_accel::runtime::{artifacts_available, artifacts_dir};
+
+fn main() {
+    let smoke = smoke_requested();
+    let trained = if artifacts_available() {
+        load_apbnw(&artifacts_dir().join("weights.apbnw")).ok()
+    } else {
+        None
+    };
+    if trained.is_none() {
+        eprintln!(
+            "artifacts missing — tuning the APBN-shaped deterministic \
+             test model"
+        );
+    }
+    let scale = 3usize;
+    let qm = model_for_scale(trained.as_ref(), scale);
+
+    let (lr_w, lr_h, workers) =
+        if smoke { (64usize, 36usize, 2usize) } else { (160, 90, 2) };
+    let params = if smoke {
+        TuneParams { top_k: 2, confirm_frames: 2, confirm_reps: 1, seed: 7 }
+    } else {
+        TuneParams { top_k: 4, confirm_frames: 8, confirm_reps: 3, seed: 7 }
+    };
+    let space = if smoke {
+        SearchSpace::smoke(lr_h, workers)
+    } else {
+        SearchSpace::serving(lr_h, workers)
+    };
+    let key = PlanKey::detected(lr_w, lr_h, scale, workers);
+    println!(
+        "--- plan search {} ({} candidates, confirming top {} + default, \
+         {} frames x best-of-{}) ---",
+        key.slug(),
+        space.enumerate().len(),
+        params.top_k,
+        params.confirm_frames,
+        params.confirm_reps
+    );
+    let res = tune_serving(&qm, key, &space, &params).expect("tuning failed");
+
+    let mut json = BenchJson::new("plan");
+    let hr_px = (lr_w * scale * lr_h * scale) as f64;
+    for c in &res.candidates {
+        let Some(m) = c.measured_mpix_s else { continue };
+        json.push(BenchRecord {
+            name: format!("plan {} {}", res.key.slug(), c.plan.describe()),
+            // one HR frame at the measured rate
+            ns_per_iter: hr_px / (m.max(1e-12) * 1e6) * 1e9,
+            mp_per_s: Some(m),
+            macs_per_s: None,
+        });
+        println!(
+            "{:<42} {m:>8.2} HR MP/s   (predicted score {:.0})",
+            c.plan.describe(),
+            c.predicted.score
+        );
+    }
+    let speedup = res.plan_speedup();
+    assert!(
+        speedup >= 1.0,
+        "winner must be the measured argmax (got {speedup})"
+    );
+    json.push_extra("plan_speedup", speedup);
+    json.push_extra(
+        "rank_correlation",
+        res.rank_correlation.unwrap_or(0.0),
+    );
+    json.push_extra_str("isa", Isa::detected().name());
+    json.push_extra_str("winner", &res.winner_plan().describe());
+    println!(
+        "winner: {} — plan_speedup {speedup:.3}x, rank correlation {}",
+        res.winner_plan().describe(),
+        res.rank_correlation
+            .map(|r| format!("{r:.2}"))
+            .unwrap_or_else(|| "n/a (tied measurements)".into())
+    );
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_plan.json: {e}");
+            std::process::exit(1);
+        }
+    }
+    println!(
+        "SHAPE OK: confirmed candidates reported with measured HR MP/s; \
+         tuned-vs-default speedup and predicted-vs-measured rank \
+         correlation in extras"
+    );
+}

@@ -102,13 +102,22 @@ COMMANDS:
               streaming for int8 — the row-ring fused fast path —
               tilted for sim, which keeps its hardware stats;
               config [run] executor overrides globally)
+             --plan-cache PATH (autotuned plans; omitted shard/executor
+              knobs resolve from the cache for the int8 engine)
   serve-multi  run N concurrent streams over one shared worker pool
              --streams SPEC[,SPEC...] with SPEC = GEOM@xS[@FPS]
              (GEOM = WxH or 270p|360p|540p|720p|1080p; e.g.
               360p@x3,270p@x4@30,960x540@x2)
              --engine int8|sim  --frames N (per stream)  --workers N
              --queue-depth N  --policy best-effort|drop:MS  --seed N
-             --executor tilted|streaming
+             --executor tilted|streaming  --plan-cache PATH
+  tune       search execution plans for one serving geometry and cache
+             the measured winner (keyed by geometry, scale, ISA and
+             worker count; serve applies it on later runs)
+             --width N --height N --scale N --workers N
+             --top-k N (plans confirmed by wall-clock best-of runs)
+             --frames N --reps N (confirmation run length / repeats)
+             --plan-cache PATH  --smoke (tiny CI search)
   simulate   run one frame through a fusion schedule, print HW stats
              --fusion tilted|classical|block|layer  --width N --height N
              --tile-cols N --tile-rows N  --cycle-exact

@@ -12,7 +12,7 @@ pub use parser::{parse_toml, ParseError, Value};
 pub use types::{
     AcceleratorConfig, ExecutorKind, FidelityKind, FusionKind, HaloPolicy,
     ModelConfig, RtPolicy, RunConfig, ServeConfig, ShardPlan, ShardStrategy,
-    SimConfig, StreamSpec, SystemConfig, WorkerAffinity,
+    SimConfig, StreamSpec, SystemConfig, TuneConfig, WorkerAffinity,
 };
 
 #[cfg(test)]

@@ -37,6 +37,16 @@ impl Value {
         }
     }
 
+    /// The key/value entries of the table at a dotted path (`""` for
+    /// the root).  `None` when the path is missing or not a table —
+    /// the plan cache iterates its `[plan.*]` sections through this.
+    pub fn entries(&self, path: &str) -> Option<&BTreeMap<String, Value>> {
+        if path.is_empty() {
+            return self.table();
+        }
+        self.get(path)?.table()
+    }
+
     /// Look up a dotted path like `"accelerator.pe_blocks"`.
     pub fn get(&self, path: &str) -> Option<&Value> {
         let mut cur = self;
@@ -286,6 +296,21 @@ mod tests {
         let v = parse_toml("a = -5").unwrap();
         assert_eq!(v.get_i64("a"), Some(-5));
         assert_eq!(v.get_f64("a"), Some(-5.0));
+    }
+
+    #[test]
+    fn entries_enumerates_section_tables() {
+        let v = parse_toml("[plan.a]\nx = 1\n[plan.b]\ny = 2\n").unwrap();
+        let plans = v.entries("plan").unwrap();
+        assert_eq!(
+            plans.keys().collect::<Vec<_>>(),
+            vec!["a", "b"],
+            "section slugs enumerate in order"
+        );
+        assert_eq!(v.entries("plan.a").unwrap().len(), 1);
+        assert!(v.entries("plan.a.x").is_none(), "scalar is not a table");
+        assert!(v.entries("nope").is_none());
+        assert!(v.entries("").unwrap().contains_key("plan"));
     }
 
     #[test]

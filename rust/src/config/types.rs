@@ -508,6 +508,32 @@ impl StreamSpec {
 
 }
 
+/// Autotuner parameters (`[tune]` / the `tune` subcommand).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TuneConfig {
+    /// Plan-cache file override.  `None` resolves to the XDG default
+    /// (`~/.cache/sr-accel/plans.toml`); `--plan-cache` wins over both.
+    pub cache: Option<String>,
+    /// Candidates confirmed with wall-clock runs after cost-model
+    /// pruning (the measured default plan rides along for free).
+    pub top_k: usize,
+    /// Frames per confirmation run.
+    pub confirm_frames: usize,
+    /// Best-of-N repetitions per confirmed candidate.
+    pub confirm_reps: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        Self {
+            cache: None,
+            top_k: 4,
+            confirm_frames: 8,
+            confirm_reps: 3,
+        }
+    }
+}
+
 /// Serving pipeline parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServeConfig {
@@ -546,6 +572,7 @@ pub struct SystemConfig {
     pub sim: SimConfig,
     pub serve: ServeConfig,
     pub run: RunConfig,
+    pub tune: TuneConfig,
 }
 
 impl Default for SystemConfig {
@@ -556,6 +583,7 @@ impl Default for SystemConfig {
             sim: SimConfig::default(),
             serve: ServeConfig::default(),
             run: RunConfig::default(),
+            tune: TuneConfig::default(),
         }
     }
 }
@@ -593,9 +621,22 @@ fn apply(cfg: &mut SystemConfig, v: &Value) -> Result<(), ParseError> {
         a.frequency_mhz = x;
     }
     if let Some(x) = v.get_i64("accelerator.tile_rows") {
+        if x < 1 {
+            // a zero tile height would make the band walk step by 0
+            // rows (`fusion::band_ranges` never terminates) — die at
+            // parse time, not inside a scheduler
+            return Err(perr(format!(
+                "accelerator.tile_rows must be >= 1, got {x}"
+            )));
+        }
         a.tile_rows = x as usize;
     }
     if let Some(x) = v.get_i64("accelerator.tile_cols") {
+        if x < 1 {
+            return Err(perr(format!(
+                "accelerator.tile_cols must be >= 1, got {x}"
+            )));
+        }
         a.tile_cols = x as usize;
     }
     if let Some(x) = v.get_f64("accelerator.dram_gbps") {
@@ -651,9 +692,14 @@ fn apply(cfg: &mut SystemConfig, v: &Value) -> Result<(), ParseError> {
         })?;
     }
     if let Some(x) = v.get_i64("serve.band_rows") {
-        if x < 0 {
+        if x < 1 {
+            // an *explicit* 0 used to mean "one full-height band" but
+            // reads like a typo and 0 is a step-by-zero hazard in the
+            // band walk — omit the key (or shard = "frame") instead
             return Err(perr(format!(
-                "serve.band_rows must be >= 0, got {x}"
+                "serve.band_rows must be >= 1, got {x} \
+                 (omit the key or use shard = \"frame\" for one \
+                 full-height work unit)"
             )));
         }
         cfg.serve.shard.band_rows = x as usize;
@@ -704,6 +750,37 @@ fn apply(cfg: &mut SystemConfig, v: &Value) -> Result<(), ParseError> {
                  got {other:?}"
             )));
         }
+    }
+    match v.get("tune.cache") {
+        None => {}
+        Some(Value::Str(s)) => cfg.tune.cache = Some(s.to_string()),
+        Some(other) => {
+            return Err(perr(format!(
+                "tune.cache must be a path string, got {other:?}"
+            )));
+        }
+    }
+    if let Some(x) = v.get_i64("tune.top_k") {
+        if x < 1 {
+            return Err(perr(format!("tune.top_k must be >= 1, got {x}")));
+        }
+        cfg.tune.top_k = x as usize;
+    }
+    if let Some(x) = v.get_i64("tune.confirm_frames") {
+        if x < 1 {
+            return Err(perr(format!(
+                "tune.confirm_frames must be >= 1, got {x}"
+            )));
+        }
+        cfg.tune.confirm_frames = x as usize;
+    }
+    if let Some(x) = v.get_i64("tune.confirm_reps") {
+        if x < 1 {
+            return Err(perr(format!(
+                "tune.confirm_reps must be >= 1, got {x}"
+            )));
+        }
+        cfg.tune.confirm_reps = x as usize;
     }
     match v.get("serve.streams") {
         None => {}
@@ -806,8 +883,71 @@ mod tests {
             "[serve]\nworkers = 0",
             "[serve]\nworkers = -2",
             "[serve]\nband_rows = -5",
+            // explicit 0 is a step-by-zero hazard in the band walk,
+            // not a request for one full-height band
+            "[serve]\nband_rows = 0",
             "[serve]\nqueue_depth = 0",
             "[serve]\nframes = -1",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn accelerator_tile_geometry_rejections() {
+        // tile_rows = 0 flowed into `band_ranges(h, 0)` (an infinite
+        // loop) before parse-time validation; tile_cols = 0 stalled
+        // the tile walk the same way
+        for bad in [
+            "[accelerator]\ntile_rows = 0",
+            "[accelerator]\ntile_rows = -60",
+            "[accelerator]\ntile_cols = 0",
+            "[accelerator]\ntile_cols = -8",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
+        // the paper point still parses
+        let c = SystemConfig::from_toml(
+            "[accelerator]\ntile_rows = 60\ntile_cols = 8",
+        )
+        .unwrap();
+        assert_eq!((c.accelerator.tile_rows, c.accelerator.tile_cols), (60, 8));
+    }
+
+    #[test]
+    fn tune_section_roundtrips_through_toml() {
+        let c = SystemConfig::from_toml(
+            "[tune]\ncache = \"/tmp/plans.toml\"\ntop_k = 6\n\
+             confirm_frames = 12\nconfirm_reps = 5\n",
+        )
+        .unwrap();
+        assert_eq!(c.tune.cache.as_deref(), Some("/tmp/plans.toml"));
+        assert_eq!(c.tune.top_k, 6);
+        assert_eq!(c.tune.confirm_frames, 12);
+        assert_eq!(c.tune.confirm_reps, 5);
+        // defaults: XDG cache path, small confirmation budget
+        let d = SystemConfig::default();
+        assert_eq!(d.tune.cache, None);
+        assert_eq!(
+            (d.tune.top_k, d.tune.confirm_frames, d.tune.confirm_reps),
+            (4, 8, 3)
+        );
+        // partial section keeps the other defaults
+        let c = SystemConfig::from_toml("[tune]\ntop_k = 2").unwrap();
+        assert_eq!(c.tune.top_k, 2);
+        assert_eq!(c.tune.confirm_reps, 3);
+    }
+
+    #[test]
+    fn tune_section_rejections() {
+        for bad in [
+            "[tune]\ncache = 3",
+            "[tune]\ncache = true",
+            "[tune]\ntop_k = 0",
+            "[tune]\ntop_k = -1",
+            "[tune]\nconfirm_frames = 0",
+            "[tune]\nconfirm_reps = 0",
+            "[tune]\nconfirm_reps = -3",
         ] {
             assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
         }

@@ -111,6 +111,11 @@ pub struct PipelineReport {
     pub mpix_per_s: f64,
     /// Shard/serving-plan description.
     pub plan: String,
+    /// Where the plan came from: `"default"` for today's built-in
+    /// defaults / explicit CLI-config knobs, or `"cache:<key>"` when
+    /// the autotuned plan cache supplied it (§Autotuned planner) — so
+    /// reports are self-describing about what was applied.
+    pub plan_source: String,
     /// Frames shed by the drop policy, across all streams.
     pub dropped: usize,
     /// Frames offered but neither delivered nor dropped.
@@ -211,6 +216,7 @@ impl PipelineReport {
             isa: crate::reference::Isa::detected().name().to_string(),
             mpix_per_s: hr_px_total / secs / 1e6,
             plan: plan.to_string(),
+            plan_source: "default".to_string(),
             dropped,
             incomplete,
             drop_rate: rate(dropped, offered),
@@ -222,7 +228,8 @@ impl PipelineReport {
 
     pub fn render(&self) -> String {
         let mut out = format!(
-            "engine={} isa={} workers={} plan={} frames={} wall={:.2}s\n\
+            "engine={} isa={} workers={} plan={} plan-src={} frames={} \
+             wall={:.2}s\n\
              throughput: {:.2} fps  ({:.1} HR Mpix/s)\n\
              latency  ms: p50 {:.2}  p95 {:.2}  max {:.2}\n\
              queue-wait ms: p50 {:.2}  p95 {:.2}\n\
@@ -231,6 +238,7 @@ impl PipelineReport {
             self.isa,
             self.workers,
             self.plan,
+            self.plan_source,
             self.frames,
             self.wall.as_secs_f64(),
             self.fps,
@@ -360,6 +368,15 @@ mod tests {
         assert!(rep.hw.is_none());
         assert!(rep.render().contains("throughput"));
         assert!(rep.render().contains("plan=whole-frame"));
+        // plan provenance defaults to "default" and renders; callers
+        // (serve) overwrite it when the autotuned cache supplied the plan
+        assert_eq!(rep.plan_source, "default");
+        assert!(rep.render().contains("plan-src=default"));
+        let mut cached = rep.clone();
+        cached.plan_source = "cache:640x360x3_avx2_w2".into();
+        assert!(cached
+            .render()
+            .contains("plan-src=cache:640x360x3_avx2_w2"));
         // the report names the dispatched kernel ISA
         assert!(["scalar", "avx2", "avx512", "neon"]
             .contains(&rep.isa.as_str()));

@@ -22,5 +22,6 @@ pub mod runtime;
 pub mod sim;
 pub mod image;
 pub mod model;
+pub mod planner;
 pub mod reference;
 pub mod util;

@@ -4,7 +4,8 @@
 //! single-image upscaling, and the paper's analysis tables.  See
 //! `sr_accel::cli::USAGE`.
 
-use std::path::Path;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
@@ -17,16 +18,22 @@ use sr_accel::benchkit::Table;
 use sr_accel::cli::{Args, USAGE};
 use sr_accel::config::{
     AcceleratorConfig, ExecutorKind, FusionKind, HaloPolicy, ModelConfig,
-    RtPolicy, ShardStrategy, StreamSpec, SystemConfig, WorkerAffinity,
+    RtPolicy, ShardPlan, ShardStrategy, StreamSpec, SystemConfig,
+    WorkerAffinity,
 };
 use sr_accel::coordinator::{
     engine::{build_engine, engine_factory, model_for_scale},
-    run_pipeline, serve_multi, Engine, EngineKind, Int8Engine,
-    MultiServeConfig, PipelineConfig, ScaleEngineFactory, SimEngine,
+    run_pipeline, serve_multi, Engine, EngineFactory, EngineKind,
+    Int8Engine, MultiServeConfig, PipelineConfig, ScaleEngineFactory,
+    SimEngine,
 };
 use sr_accel::fusion::{make_scheduler, TiltedScheduler, FusionScheduler};
 use sr_accel::image::{read_ppm, write_ppm, SceneGenerator};
 use sr_accel::model::{load_apbnw, Tensor};
+use sr_accel::planner::{
+    default_cache_path, tune_serving, CachedPlan, PlanCache, PlanKey,
+    SearchSpace, TuneParams,
+};
 use sr_accel::runtime::{artifacts_dir, Manifest};
 
 fn main() -> ExitCode {
@@ -40,6 +47,7 @@ fn main() -> ExitCode {
     let result = match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("serve-multi") => cmd_serve_multi(&args),
+        Some("tune") => cmd_tune(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("upscale") => cmd_upscale(&args),
         Some("analyze") => cmd_analyze(&args),
@@ -86,16 +94,28 @@ fn resolve_executor(
     }))
 }
 
+/// Plan-cache location: `--plan-cache` flag, then `[tune] cache`,
+/// then the per-user default under `$XDG_CACHE_HOME`.
+fn plan_cache_path(args: &Args, sys: &SystemConfig) -> PathBuf {
+    if let Some(p) = args.opt("plan-cache") {
+        return PathBuf::from(p);
+    }
+    if let Some(p) = &sys.tune.cache {
+        return PathBuf::from(p);
+    }
+    default_cache_path()
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "engine", "frames", "workers", "queue-depth", "width", "height",
         "source-fps", "seed", "config", "save-last", "shard", "band-rows",
-        "halo", "affinity", "executor",
+        "halo", "affinity", "executor", "plan-cache",
     ])?;
     let sys = load_system_config(args)?;
     let kind = EngineKind::parse(args.opt_str("engine", &sys.serve.engine))
         .context("unknown --engine (int8|pjrt|sim)")?;
-    let executor = resolve_executor(args, &sys, kind)?;
+    let mut executor = resolve_executor(args, &sys, kind)?;
     let mut plan = sys.serve.shard.clone();
     if let Some(s) = args.opt("shard") {
         plan.strategy =
@@ -122,12 +142,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
         plan.affinity = WorkerAffinity::parse(s)
             .context("unknown --affinity (any|modulo)")?;
     }
+    if args.opt("band-rows").is_some() && plan.band_rows == 0 {
+        bail!(
+            "--band-rows must be >= 1 (use --shard frame for one \
+             full-height work unit)"
+        );
+    }
+    let workers = args.opt_usize("workers", sys.serve.workers)?;
+    let lr_w = args.opt_usize("width", sys.sim.frame_width)?;
+    let lr_h = args.opt_usize("height", sys.sim.frame_height)?;
+    // Autotuned plans (§Planner): a tuned winner cached for this exact
+    // (geometry, scale, ISA, workers) key fills in whatever the user
+    // left unspecified; explicit CLI/config choices always win.  Only
+    // the int8 engine participates — that is what `tune` measures.
+    let explicit_shard = args.opt("shard").is_some()
+        || args.opt("band-rows").is_some()
+        || args.opt("halo").is_some()
+        || args.opt("affinity").is_some()
+        || sys.serve.shard != ShardPlan::whole_frame();
+    let explicit_exec =
+        args.opt("executor").is_some() || sys.run.executor.is_some();
+    let mut plan_source = "default".to_string();
+    if kind == EngineKind::Int8 && !(explicit_shard && explicit_exec) {
+        let cache = PlanCache::load(&plan_cache_path(args, &sys));
+        let key = PlanKey::detected(lr_w, lr_h, sys.model.scale, workers);
+        if let Some(hit) = cache.lookup(&key) {
+            if !explicit_shard {
+                plan = hit.plan.shard.clone();
+            }
+            if !explicit_exec {
+                executor = hit.plan.executor;
+            }
+            plan_source = format!("cache:{}", key.slug());
+        }
+    }
     let cfg = PipelineConfig {
         frames: args.opt_usize("frames", sys.serve.frames)?,
         queue_depth: args.opt_usize("queue-depth", sys.serve.queue_depth)?,
-        workers: args.opt_usize("workers", sys.serve.workers)?,
-        lr_w: args.opt_usize("width", sys.sim.frame_width)?,
-        lr_h: args.opt_usize("height", sys.sim.frame_height)?,
+        workers,
+        lr_w,
+        lr_h,
         seed: args.opt_usize("seed", 7)? as u64,
         source_fps: match args.opt("source-fps") {
             Some(_) => Some(args.opt_f64("source-fps", 60.0)?),
@@ -166,23 +220,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
             _ => "apbn_full.hlo.txt",
         }
     };
-    let engines = (0..cfg.workers)
-        .map(|_| {
-            engine_factory(
-                kind,
-                &sys.accelerator,
-                Some(Path::new(artifact)),
-                executor,
-            )
-        })
-        .collect::<Vec<_>>();
+    let engines: Vec<EngineFactory> = if kind == EngineKind::Int8 {
+        // same artifact-fallback rule as serve-multi and the serving
+        // benches: a bare checkout serves the deterministic test model
+        // (also what `tune` measures there, so cached plans match)
+        let trained =
+            load_apbnw(&artifacts_dir().join("weights.apbnw")).ok();
+        if trained.is_none() {
+            eprintln!(
+                "artifacts missing — serving the deterministic test model"
+            );
+        }
+        (0..cfg.workers)
+            .map(|_| {
+                let qm = model_for_scale(trained.as_ref(), sys.model.scale);
+                Box::new(move || {
+                    Ok(Box::new(Int8Engine::with_executor(qm, executor))
+                        as Box<dyn Engine>)
+                }) as EngineFactory
+            })
+            .collect()
+    } else {
+        (0..cfg.workers)
+            .map(|_| {
+                engine_factory(
+                    kind,
+                    &sys.accelerator,
+                    Some(Path::new(artifact)),
+                    executor,
+                )
+            })
+            .collect()
+    };
     let save_last = args.opt("save-last").map(|s| s.to_string());
     let mut last = None;
-    let report = run_pipeline(&cfg, engines, |i, hr| {
+    let mut report = run_pipeline(&cfg, engines, |i, hr| {
         if save_last.is_some() {
             last = Some((i, hr.clone()));
         }
     })?;
+    report.plan_source = plan_source;
     println!("{}", report.render());
     if let (Some(path), Some((i, hr))) = (save_last, last) {
         write_ppm(Path::new(&path), &hr)?;
@@ -194,7 +271,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_serve_multi(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "streams", "engine", "frames", "workers", "queue-depth", "policy",
-        "seed", "config", "executor",
+        "seed", "config", "executor", "plan-cache",
     ])?;
     let sys = load_system_config(args)?;
     let streams = match args.opt("streams") {
@@ -229,22 +306,49 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
     // the workers via the shared `model_for_scale` rule (streams whose
     // scale the artifacts can't serve get the deterministic test model)
     let executor = resolve_executor(args, &sys, kind)?;
+    // Autotuned plans (§Planner): multi-stream workers pick their
+    // work-unit split by deadline policy, so only the executor choice
+    // is tunable here — resolved per stream scale from the plan cache
+    // when the user did not pin one explicitly.
+    let explicit_exec =
+        args.opt("executor").is_some() || sys.run.executor.is_some();
+    let mut exec_by_scale: BTreeMap<usize, ExecutorKind> = BTreeMap::new();
+    let mut plan_source = "default".to_string();
+    if kind == EngineKind::Int8 && !explicit_exec {
+        let cache = PlanCache::load(&plan_cache_path(args, &sys));
+        let mut hits = Vec::new();
+        for s in &cfg.streams {
+            if exec_by_scale.contains_key(&s.scale) {
+                continue;
+            }
+            let key = PlanKey::detected(s.lr_w, s.lr_h, s.scale, cfg.workers);
+            if let Some(hit) = cache.lookup(&key) {
+                exec_by_scale.insert(s.scale, hit.plan.executor);
+                hits.push(key.slug());
+            }
+        }
+        if !hits.is_empty() {
+            plan_source = format!("cache:{}", hits.join("+"));
+        }
+    }
     let trained = load_apbnw(&artifacts_dir().join("weights.apbnw")).ok();
     let acc = sys.accelerator.clone();
     let factories: Vec<ScaleEngineFactory> = (0..cfg.workers)
         .map(|_| {
             let acc = acc.clone();
             let trained = trained.clone();
+            let execs = exec_by_scale.clone();
             Box::new(move |scale: usize| -> Result<Box<dyn Engine>> {
                 let qm = model_for_scale(trained.as_ref(), scale);
+                let ex = execs.get(&scale).copied().unwrap_or(executor);
                 Ok(match kind {
                     EngineKind::Int8 => {
-                        Box::new(Int8Engine::with_executor(qm, executor))
+                        Box::new(Int8Engine::with_executor(qm, ex))
                     }
                     EngineKind::Sim => Box::new(SimEngine::with_executor(
                         qm,
                         acc.clone(),
-                        executor,
+                        ex,
                     )),
                     EngineKind::Pjrt => {
                         bail!("pjrt rejected before factory build")
@@ -253,8 +357,116 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
             }) as ScaleEngineFactory
         })
         .collect();
-    let report = serve_multi(&cfg, factories, |_, _, _| {})?;
+    let mut report = serve_multi(&cfg, factories, |_, _, _| {})?;
+    report.plan_source = plan_source;
     println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "width", "height", "scale", "workers", "frames", "reps", "top-k",
+        "seed", "plan-cache", "config", "smoke",
+    ])?;
+    let sys = load_system_config(args)?;
+    let smoke = args.flag("smoke");
+    // --smoke is the CI fast path: a tiny geometry, the pruned smoke
+    // space and a single confirmation reading per surviving plan.
+    let (dw, dh) = if smoke {
+        (64, 36)
+    } else {
+        (sys.sim.frame_width, sys.sim.frame_height)
+    };
+    let lr_w = args.opt_usize("width", dw)?;
+    let lr_h = args.opt_usize("height", dh)?;
+    let scale = args.opt_usize("scale", sys.model.scale)?;
+    let workers =
+        args.opt_usize("workers", if smoke { 2 } else { sys.serve.workers })?;
+    if lr_w == 0 || lr_h == 0 || scale == 0 || workers == 0 {
+        bail!("--width/--height/--scale/--workers must be >= 1");
+    }
+    let params = TuneParams {
+        top_k: args
+            .opt_usize("top-k", if smoke { 2 } else { sys.tune.top_k })?,
+        confirm_frames: args.opt_usize(
+            "frames",
+            if smoke { 2 } else { sys.tune.confirm_frames },
+        )?,
+        confirm_reps: args
+            .opt_usize("reps", if smoke { 1 } else { sys.tune.confirm_reps })?,
+        seed: args.opt_usize("seed", 7)? as u64,
+    };
+    if params.top_k == 0
+        || params.confirm_frames == 0
+        || params.confirm_reps == 0
+    {
+        bail!("--top-k/--frames/--reps must be >= 1");
+    }
+    let space = if smoke {
+        SearchSpace::smoke(lr_h, workers)
+    } else {
+        SearchSpace::serving(lr_h, workers)
+    };
+    let trained = load_apbnw(&artifacts_dir().join("weights.apbnw")).ok();
+    if trained.is_none() {
+        println!(
+            "note: trained weights unavailable — tuning on the \
+             deterministic test model"
+        );
+    }
+    let qm = model_for_scale(trained.as_ref(), scale);
+    let key = PlanKey::detected(lr_w, lr_h, scale, workers);
+    println!(
+        "tuning {} ({} frames x best-of-{} per confirmed plan)",
+        key.slug(),
+        params.confirm_frames,
+        params.confirm_reps
+    );
+    let res = tune_serving(&qm, key, &space, &params)?;
+
+    let mut t = Table::new(
+        &format!("plan search {}", res.key.slug()),
+        &["plan", "bands", "pred Mcycles", "pred score", "measured Mpix/s"],
+    );
+    for c in &res.candidates {
+        t.row(&[
+            c.plan.describe(),
+            format!("{}", c.predicted.bands),
+            format!("{:.2}", c.predicted.compute_cycles as f64 / 1e6),
+            format!("{:.0}", c.predicted.score),
+            match c.measured_mpix_s {
+                Some(m) => format!("{m:.2}"),
+                None => "(pruned)".into(),
+            },
+        ]);
+    }
+    t.print();
+
+    let winner = res.winner_plan().clone();
+    let wc = &res.candidates[res.winner];
+    let corr = match res.rank_correlation {
+        Some(r) => format!(", rank corr {r:.2}"),
+        None => String::new(),
+    };
+    println!(
+        "winner: {} — {:.2} Mpix/s, {:.2}x vs default{corr}",
+        winner.describe(),
+        wc.measured_mpix_s.unwrap_or(0.0),
+        res.plan_speedup(),
+    );
+
+    let path = plan_cache_path(args, &sys);
+    let mut cache = PlanCache::load(&path);
+    cache.insert(CachedPlan {
+        key: res.key.clone(),
+        plan: winner,
+        predicted_score: wc.predicted.score,
+        measured_mpix_s: wc.measured_mpix_s.unwrap_or(0.0),
+    });
+    cache
+        .save(&path)
+        .with_context(|| format!("writing plan cache {}", path.display()))?;
+    println!("plan cached: {} -> {}", res.key.slug(), path.display());
     Ok(())
 }
 
@@ -269,6 +481,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let mut acc = sys.accelerator.clone();
     acc.tile_cols = args.opt_usize("tile-cols", acc.tile_cols)?;
     acc.tile_rows = args.opt_usize("tile-rows", acc.tile_rows)?;
+    if acc.tile_cols == 0 || acc.tile_rows == 0 {
+        // tile geometry drives `band_ranges`, which never terminates
+        // on a zero step — refuse before the scheduler sees it
+        bail!("--tile-cols/--tile-rows must be >= 1");
+    }
     let w = args.opt_usize("width", sys.sim.frame_width)?;
     let h = args.opt_usize("height", sys.sim.frame_height)?;
     let qm = load_apbnw(&artifacts_dir().join("weights.apbnw"))?;

@@ -1,0 +1,421 @@
+//! Persistent plan cache (§Autotuned planner).
+//!
+//! `sr-accel tune` writes the winning [`Plan`] per [`PlanKey`] into a
+//! small TOML-subset file; `serve` / `serve-multi` read it at startup
+//! and apply the best-known plan when the user did not pin one
+//! explicitly.  Location: `$XDG_CACHE_HOME/sr-accel/plans.toml`
+//! (falling back to `~/.cache`), overridable via `[tune] cache` and
+//! `--plan-cache`.
+//!
+//! Robustness contract (pinned by the tests below and by
+//! `rust/tests/plan_equivalence.rs`):
+//! * loading is **total** — a missing, truncated, corrupt or
+//!   wrong-typed cache file degrades to an empty cache with a stderr
+//!   warning, never a panic and never a wrong plan;
+//! * a plan is only ever applied under the exact key it was tuned for
+//!   ([`PlanCache::lookup`] matches geometry, scale, ISA *and* worker
+//!   count — an avx2 plan never leaks onto a scalar host).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::{
+    parse_toml, ExecutorKind, HaloPolicy, ShardPlan, ShardStrategy, Value,
+    WorkerAffinity,
+};
+
+use super::{Plan, PlanKey};
+
+/// One cached tuning outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CachedPlan {
+    pub key: PlanKey,
+    pub plan: Plan,
+    /// The cost model's score at tuning time (cycle units).
+    pub predicted_score: f64,
+    /// Measured delivered HR Mpix/s of the confirmation run.
+    pub measured_mpix_s: f64,
+}
+
+/// The cache: slug-keyed tuning outcomes, stable iteration order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PlanCache {
+    entries: BTreeMap<String, CachedPlan>,
+}
+
+/// The default on-disk location: `$XDG_CACHE_HOME/sr-accel/plans.toml`,
+/// then `~/.cache/sr-accel/plans.toml`, then a cwd-local fallback for
+/// homeless environments.
+pub fn default_cache_path() -> PathBuf {
+    if let Some(x) = std::env::var_os("XDG_CACHE_HOME") {
+        if !x.is_empty() {
+            return PathBuf::from(x).join("sr-accel").join("plans.toml");
+        }
+    }
+    if let Some(h) = std::env::var_os("HOME") {
+        if !h.is_empty() {
+            return PathBuf::from(h)
+                .join(".cache")
+                .join("sr-accel")
+                .join("plans.toml");
+        }
+    }
+    PathBuf::from("sr-accel-plans.toml")
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert (or replace) the entry under its key's slug.
+    pub fn insert(&mut self, entry: CachedPlan) {
+        self.entries.insert(entry.key.slug(), entry);
+    }
+
+    /// The cached plan for exactly this key — geometry, scale, ISA and
+    /// worker count all have to match; anything else is a miss.
+    pub fn lookup(&self, key: &PlanKey) -> Option<&CachedPlan> {
+        self.entries.get(&key.slug()).filter(|e| e.key == *key)
+    }
+
+    /// Render as a TOML-subset document (`[plan.<slug>]` sections).
+    pub fn render(&self) -> String {
+        let mut out = String::from(
+            "# sr-accel plan cache — written by `sr-accel tune`\n\
+             # key: <lr_w>x<lr_h>x<scale>_<isa>_w<workers>\n",
+        );
+        for (slug, e) in &self.entries {
+            out.push_str(&format!(
+                "\n[plan.{slug}]\n\
+                 lr_w = {}\nlr_h = {}\nscale = {}\n\
+                 isa = \"{}\"\nworkers = {}\n\
+                 executor = \"{}\"\nshard = \"{}\"\nband_rows = {}\n\
+                 halo = \"{}\"\naffinity = \"{}\"\ntile_cols = {}\n\
+                 predicted_score = {}\nmeasured_mpix_s = {}\n",
+                e.key.lr_w,
+                e.key.lr_h,
+                e.key.scale,
+                e.key.isa,
+                e.key.workers,
+                e.plan.executor.name(),
+                e.plan.shard.strategy.name(),
+                e.plan.shard.band_rows,
+                e.plan.shard.halo.name(),
+                e.plan.shard.affinity.name(),
+                e.plan.tile_cols,
+                e.predicted_score,
+                e.measured_mpix_s,
+            ));
+        }
+        out
+    }
+
+    /// Parse a cache document.  Top-level syntax errors fail the whole
+    /// parse; a malformed *entry* is skipped with a warning so one bad
+    /// record cannot take down the rest of the cache.
+    pub fn parse(text: &str) -> Result<(Self, Vec<String>), String> {
+        let v = parse_toml(text).map_err(|e| e.to_string())?;
+        let mut cache = Self::new();
+        let mut warnings = Vec::new();
+        let Some(plans) = v.entries("plan") else {
+            if v.get("plan").is_some() {
+                return Err("`plan` is not a table of sections".into());
+            }
+            return Ok((cache, warnings)); // empty cache file
+        };
+        for slug in plans.keys() {
+            match parse_entry(&v, slug) {
+                Ok(entry) => {
+                    if entry.key.slug() != *slug {
+                        warnings.push(format!(
+                            "plan cache entry [plan.{slug}] does not match \
+                             its own key {} — skipped",
+                            entry.key.slug()
+                        ));
+                        continue;
+                    }
+                    cache.insert(entry);
+                }
+                Err(e) => warnings.push(format!(
+                    "plan cache entry [plan.{slug}] is malformed \
+                     ({e}) — skipped"
+                )),
+            }
+        }
+        Ok((cache, warnings))
+    }
+
+    /// Total load: any failure (missing file, unreadable, corrupt)
+    /// degrades to an empty cache; non-fatal problems go to stderr.
+    pub fn load(path: &Path) -> Self {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Self::new();
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: plan cache {} unreadable ({e}) — \
+                     serving with defaults",
+                    path.display()
+                );
+                return Self::new();
+            }
+        };
+        match Self::parse(&text) {
+            Ok((cache, warnings)) => {
+                for w in warnings {
+                    eprintln!("warning: {w}");
+                }
+                cache
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: plan cache {} is corrupt ({e}) — \
+                     serving with defaults",
+                    path.display()
+                );
+                Self::new()
+            }
+        }
+    }
+
+    /// Write the cache, creating parent directories as needed.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+fn parse_entry(v: &Value, slug: &str) -> Result<CachedPlan, String> {
+    let geti = |field: &str| {
+        v.get_i64(&format!("plan.{slug}.{field}"))
+            .filter(|x| *x >= 0)
+            .map(|x| x as usize)
+            .ok_or_else(|| format!("missing/invalid {field}"))
+    };
+    let getf = |field: &str| {
+        v.get_f64(&format!("plan.{slug}.{field}"))
+            .filter(|x| x.is_finite())
+            .ok_or_else(|| format!("missing/invalid {field}"))
+    };
+    let gets = |field: &str| {
+        v.get_str(&format!("plan.{slug}.{field}"))
+            .ok_or_else(|| format!("missing/invalid {field}"))
+    };
+    let key = PlanKey::new(
+        geti("lr_w")?,
+        geti("lr_h")?,
+        geti("scale")?,
+        gets("isa")?,
+        geti("workers")?,
+    );
+    let executor = ExecutorKind::parse(gets("executor")?)
+        .ok_or_else(|| "unknown executor".to_string())?;
+    let strategy = ShardStrategy::parse(gets("shard")?)
+        .ok_or_else(|| "unknown shard strategy".to_string())?;
+    let halo = HaloPolicy::parse(gets("halo")?)
+        .ok_or_else(|| "unknown halo policy".to_string())?;
+    let affinity = WorkerAffinity::parse(gets("affinity")?)
+        .ok_or_else(|| "unknown affinity".to_string())?;
+    let band_rows = geti("band_rows")?;
+    if strategy == ShardStrategy::RowBands && band_rows == 0 {
+        return Err("band plan with band_rows = 0".into());
+    }
+    let tile_cols = geti("tile_cols")?;
+    if tile_cols == 0 {
+        return Err("tile_cols = 0".into());
+    }
+    Ok(CachedPlan {
+        key,
+        plan: Plan {
+            executor,
+            shard: ShardPlan {
+                strategy,
+                band_rows,
+                halo,
+                affinity,
+            },
+            tile_cols,
+        },
+        predicted_score: getf("predicted_score")?,
+        measured_mpix_s: getf("measured_mpix_s")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(isa: &str, workers: usize) -> CachedPlan {
+        CachedPlan {
+            key: PlanKey::new(640, 360, 3, isa, workers),
+            plan: Plan {
+                executor: ExecutorKind::Tilted,
+                shard: {
+                    let mut s = ShardPlan::row_bands(45, HaloPolicy::Exact);
+                    s.affinity = WorkerAffinity::BandModulo;
+                    s
+                },
+                tile_cols: 16,
+            },
+            predicted_score: 123456.5,
+            measured_mpix_s: 42.25,
+        }
+    }
+
+    #[test]
+    fn roundtrip_serialize_parse() {
+        let mut cache = PlanCache::new();
+        cache.insert(entry("avx2", 2));
+        cache.insert(CachedPlan {
+            key: PlanKey::new(64, 36, 2, "scalar", 1),
+            plan: Plan::serving_default(),
+            predicted_score: 10.0,
+            measured_mpix_s: 5.5,
+        });
+        let (back, warnings) = PlanCache::parse(&cache.render()).unwrap();
+        assert!(warnings.is_empty(), "{warnings:?}");
+        assert_eq!(back, cache);
+        // lookups hit through the round-trip
+        let hit = back.lookup(&PlanKey::new(640, 360, 3, "avx2", 2)).unwrap();
+        assert_eq!(hit.plan.tile_cols, 16);
+        assert_eq!(hit.plan.shard.band_rows, 45);
+        assert_eq!(hit.plan.shard.halo, HaloPolicy::Exact);
+    }
+
+    #[test]
+    fn lookup_never_crosses_isa_or_worker_keys() {
+        let mut cache = PlanCache::new();
+        cache.insert(entry("avx2", 2));
+        assert!(cache.lookup(&PlanKey::new(640, 360, 3, "avx2", 2)).is_some());
+        // same geometry, different ISA: a vector-tuned plan must not
+        // be served to a scalar host
+        assert!(cache.lookup(&PlanKey::new(640, 360, 3, "scalar", 2)).is_none());
+        assert!(cache.lookup(&PlanKey::new(640, 360, 3, "neon", 2)).is_none());
+        // same ISA, different worker count
+        assert!(cache.lookup(&PlanKey::new(640, 360, 3, "avx2", 4)).is_none());
+        // different geometry / scale
+        assert!(cache.lookup(&PlanKey::new(640, 360, 2, "avx2", 2)).is_none());
+        assert!(cache.lookup(&PlanKey::new(320, 180, 3, "avx2", 2)).is_none());
+    }
+
+    #[test]
+    fn corrupt_documents_degrade_not_panic() {
+        // top-level garbage -> Err (load() turns this into empty+warn)
+        assert!(PlanCache::parse("not toml at all ][").is_err());
+        assert!(PlanCache::parse("plan = 3").is_err());
+        // truncated mid-entry: the syntax is fine, the entry is not —
+        // skipped with a warning, cache stays usable
+        let full = {
+            let mut c = PlanCache::new();
+            c.insert(entry("avx2", 2));
+            c.render()
+        };
+        let truncated: String =
+            full.lines().take(8).collect::<Vec<_>>().join("\n");
+        let (cache, warnings) = PlanCache::parse(&truncated).unwrap();
+        assert!(cache.is_empty());
+        assert_eq!(warnings.len(), 1);
+        assert!(warnings[0].contains("malformed"), "{warnings:?}");
+        // one bad entry does not poison a good one
+        let mixed = format!(
+            "{full}\n[plan.8x8x2_scalar_w1]\nlr_w = 8\n# rest missing\n"
+        );
+        let (cache, warnings) = PlanCache::parse(&mixed).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(warnings.len(), 1);
+    }
+
+    #[test]
+    fn entry_under_wrong_slug_is_skipped() {
+        // an entry whose fields disagree with its section name must
+        // not be served under either key
+        let mut c = PlanCache::new();
+        c.insert(entry("avx2", 2));
+        let doc = c.render().replace("_avx2_", "_scalar_");
+        let (cache, warnings) = PlanCache::parse(&doc).unwrap();
+        assert!(cache.is_empty());
+        assert_eq!(warnings.len(), 1);
+        assert!(warnings[0].contains("does not match"), "{warnings:?}");
+    }
+
+    #[test]
+    fn invalid_plan_fields_are_rejected_per_entry() {
+        for (field, bad) in [
+            ("executor = \"tilted\"", "executor = \"warp\""),
+            ("shard = \"band\"", "shard = \"diagonal\""),
+            ("halo = \"exact\"", "halo = \"maybe\""),
+            ("affinity = \"modulo\"", "affinity = \"sticky\""),
+            ("band_rows = 45", "band_rows = 0"),
+            ("tile_cols = 16", "tile_cols = 0"),
+            ("workers = 2", "workers = -2"),
+            ("measured_mpix_s = 42.25", "measured_mpix_s = \"fast\""),
+        ] {
+            let mut c = PlanCache::new();
+            c.insert(entry("avx2", 2));
+            let doc = c.render().replace(field, bad);
+            let (cache, warnings) = PlanCache::parse(&doc).unwrap();
+            assert!(cache.is_empty(), "accepted {bad:?}");
+            assert!(!warnings.is_empty(), "no warning for {bad:?}");
+        }
+    }
+
+    #[test]
+    fn load_of_missing_file_is_empty() {
+        let cache = PlanCache::load(Path::new(
+            "/nonexistent/sr-accel-test/plans.toml",
+        ));
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn save_load_through_disk() {
+        let dir = std::env::temp_dir().join(format!(
+            "sr-accel-plan-cache-test-{}",
+            std::process::id()
+        ));
+        let path = dir.join("nested").join("plans.toml");
+        let mut cache = PlanCache::new();
+        cache.insert(entry("neon", 3));
+        cache.save(&path).unwrap();
+        let back = PlanCache::load(&path);
+        assert_eq!(back, cache);
+        // overwrite with an update to the same key
+        let mut e = entry("neon", 3);
+        e.plan.tile_cols = 8;
+        cache.insert(e);
+        assert_eq!(cache.len(), 1);
+        cache.save(&path).unwrap();
+        assert_eq!(
+            PlanCache::load(&path)
+                .lookup(&PlanKey::new(640, 360, 3, "neon", 3))
+                .unwrap()
+                .plan
+                .tile_cols,
+            8
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn default_path_is_under_a_cache_dir() {
+        let p = default_cache_path();
+        let s = p.to_string_lossy();
+        assert!(s.ends_with("plans.toml"), "{s}");
+        assert!(s.contains("sr-accel") || s.contains("cache"), "{s}");
+    }
+}

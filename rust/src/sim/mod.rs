@@ -13,6 +13,7 @@
 //! `rust/tests/sim_cross_check.rs` pins the two against each other.
 
 pub mod accum;
+pub mod cost;
 pub mod dram;
 pub mod engine;
 pub mod pe;

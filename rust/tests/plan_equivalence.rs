@@ -1,0 +1,177 @@
+//! §Planner acceptance: applying an execution plan must never change
+//! output bits, and the tune → cache → serve loop must round-trip.
+//!
+//! The searched space is bit-preserving by construction (whole-frame,
+//! or row bands with `HaloPolicy::Exact`, under either fused executor
+//! — both already proven bit-identical by `shard_equivalence` and
+//! `streaming_equivalence`); these tests pin that property end to end
+//! through the planner's own enumeration, so a future widening of the
+//! space cannot silently trade pixels for speed.
+
+use std::path::PathBuf;
+
+use sr_accel::coordinator::{
+    run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
+};
+use sr_accel::image::ImageU8;
+use sr_accel::model::QuantModel;
+use sr_accel::planner::{
+    tune_serving, CachedPlan, Plan, PlanCache, PlanKey, SearchSpace,
+    TuneParams,
+};
+
+fn factories(
+    qm: &QuantModel,
+    plan: &Plan,
+    workers: usize,
+) -> Vec<EngineFactory> {
+    (0..workers)
+        .map(|_| {
+            let qm = qm.clone();
+            let ex = plan.executor;
+            Box::new(move || {
+                Ok(Box::new(Int8Engine::with_executor(qm, ex))
+                    as Box<dyn Engine>)
+            }) as EngineFactory
+        })
+        .collect()
+}
+
+fn run_plan(
+    qm: &QuantModel,
+    lr_w: usize,
+    lr_h: usize,
+    plan: &Plan,
+    workers: usize,
+) -> Vec<ImageU8> {
+    let cfg = PipelineConfig {
+        frames: 2,
+        queue_depth: 2,
+        workers,
+        lr_w,
+        lr_h,
+        seed: 13,
+        source_fps: None,
+        scale: qm.scale,
+        shard: plan.shard.clone(),
+        model_layers: qm.n_layers(),
+    };
+    let mut out = Vec::new();
+    run_pipeline(&cfg, factories(qm, plan, workers), |_, hr| {
+        out.push(hr.clone())
+    })
+    .expect("pipeline run failed");
+    out
+}
+
+/// Every plan the serving search space can propose produces frames
+/// bit-identical to the serving default.
+#[test]
+fn every_candidate_plan_is_bit_identical_to_default() {
+    let workers = 2;
+    let qm = QuantModel::test_model(2, 3, 4, 3, 17);
+    let (lr_w, lr_h) = (24usize, 18usize);
+    let baseline = run_plan(&qm, lr_w, lr_h, &Plan::serving_default(), workers);
+    assert_eq!(baseline.len(), 2);
+    let plans = SearchSpace::serving(lr_h, workers).enumerate();
+    assert!(plans.len() >= 4, "serving space degenerated: {plans:?}");
+    for plan in &plans {
+        let got = run_plan(&qm, lr_w, lr_h, plan, workers);
+        assert_eq!(
+            got,
+            baseline,
+            "plan changed output bits: {}",
+            plan.describe()
+        );
+    }
+}
+
+/// Same property on an odd geometry and scale through the smoke space
+/// (the exact space `tune --smoke` / CI searches).
+#[test]
+fn smoke_space_is_bit_preserving_on_odd_geometry() {
+    let workers = 3;
+    let qm = QuantModel::test_model(3, 3, 5, 2, 23);
+    let (lr_w, lr_h) = (19usize, 13usize);
+    let baseline = run_plan(&qm, lr_w, lr_h, &Plan::serving_default(), workers);
+    for plan in &SearchSpace::smoke(lr_h, workers).enumerate() {
+        let got = run_plan(&qm, lr_w, lr_h, plan, workers);
+        assert_eq!(
+            got,
+            baseline,
+            "plan changed output bits: {}",
+            plan.describe()
+        );
+    }
+}
+
+fn temp_cache(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "sr-accel-plan-eq-{}-{tag}.toml",
+        std::process::id()
+    ))
+}
+
+/// The full loop: tune on the real engine, persist the winner, reload
+/// the cache, and apply the plan — output stays bit-identical and the
+/// recorded speedup can never undercut the default.
+#[test]
+fn tune_cache_serve_roundtrip() {
+    let workers = 2;
+    let qm = QuantModel::test_model(2, 3, 4, 3, 29);
+    let (lr_w, lr_h) = (20usize, 14usize);
+    let key = PlanKey::detected(lr_w, lr_h, qm.scale, workers);
+    let space = SearchSpace::smoke(lr_h, workers);
+    let params = TuneParams {
+        top_k: 2,
+        confirm_frames: 2,
+        confirm_reps: 1,
+        seed: 13,
+    };
+    let res = tune_serving(&qm, key.clone(), &space, &params)
+        .expect("tuning failed");
+    assert!(
+        res.plan_speedup() >= 1.0,
+        "winner must be the measured argmax: {}",
+        res.plan_speedup()
+    );
+    let wc = &res.candidates[res.winner];
+    assert!(wc.measured_mpix_s.unwrap_or(0.0) > 0.0);
+
+    // persist -> reload -> exact-key hit, foreign-key miss
+    let path = temp_cache("roundtrip");
+    let _ = std::fs::remove_file(&path);
+    let mut cache = PlanCache::new();
+    cache.insert(CachedPlan {
+        key: key.clone(),
+        plan: wc.plan.clone(),
+        predicted_score: wc.predicted.score,
+        measured_mpix_s: wc.measured_mpix_s.unwrap_or(0.0),
+    });
+    cache.save(&path).expect("cache save failed");
+    let loaded = PlanCache::load(&path);
+    let hit = loaded.lookup(&key).expect("exact key must hit");
+    assert_eq!(hit.plan, wc.plan);
+    let other_workers = PlanKey::new(
+        lr_w,
+        lr_h,
+        qm.scale,
+        &key.isa,
+        workers + 1,
+    );
+    assert!(
+        loaded.lookup(&other_workers).is_none(),
+        "a plan tuned for {} workers must not serve {}",
+        workers,
+        workers + 1
+    );
+    let other_isa =
+        PlanKey::new(lr_w, lr_h, qm.scale, "other-isa", workers);
+    assert!(loaded.lookup(&other_isa).is_none());
+
+    // applying the cached winner changes no pixels
+    let baseline = run_plan(&qm, lr_w, lr_h, &Plan::serving_default(), workers);
+    let tuned = run_plan(&qm, lr_w, lr_h, &hit.plan, workers);
+    assert_eq!(tuned, baseline, "cached plan changed output bits");
+    let _ = std::fs::remove_file(&path);
+}
