@@ -1,0 +1,64 @@
+//! `sr-lint` — the repo-specific static analysis gate.
+//!
+//! ```text
+//! cargo run --bin sr-lint              # lint rust/{src,benches,tests}
+//! cargo run --bin sr-lint -- PATH ...  # lint specific files/dirs
+//! ```
+//!
+//! Exits 0 when the tree is clean, 1 with one `path:line: [Lx/slug]
+//! message` diagnostic per violation otherwise (2 on a walk error).
+//! The rule catalog (L1–L5) is documented in `rust/README.md`
+//! §Static analysis & sanitizers and in `sr_accel::lint`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use sr_accel::lint;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        eprintln!(
+            "usage: sr-lint [PATH ...]\n\n\
+             Repo-specific static analysis (rules L1-L5; see \
+             rust/README.md).\n\
+             With no PATH, lints this crate's src/, benches/ and tests/."
+        );
+        return ExitCode::SUCCESS;
+    }
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        lint::default_roots()
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+    let report = match lint::lint_tree(&roots) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("sr-lint: walk failed: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    // print paths relative to the cwd when possible (CI log brevity)
+    let cwd = std::env::current_dir()
+        .ok()
+        .map(|c| c.to_string_lossy().replace('\\', "/") + "/");
+    for d in &report.diagnostics {
+        let shown = d.to_string();
+        let shown = match &cwd {
+            Some(c) => shown.strip_prefix(c.as_str()).unwrap_or(&shown),
+            None => &shown,
+        };
+        println!("{shown}");
+    }
+    if report.diagnostics.is_empty() {
+        eprintln!("sr-lint: {} files checked, clean", report.files);
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "sr-lint: {} violation(s) in {} files checked",
+            report.diagnostics.len(),
+            report.files
+        );
+        ExitCode::FAILURE
+    }
+}

@@ -86,7 +86,14 @@ enum WorkSource {
 impl WorkSource {
     fn recv(&self) -> Option<WorkItem> {
         match self {
-            WorkSource::Shared(rx) => rx.lock().unwrap().recv().ok(),
+            // a peer that panicked mid-recv poisons the queue lock;
+            // the channel itself is still coherent, so keep draining
+            // rather than cascading the panic across the pool
+            WorkSource::Shared(rx) => rx
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .recv()
+                .ok(),
             WorkSource::Own(rx) => rx.recv().ok(),
         }
     }
@@ -161,7 +168,10 @@ pub fn run_pipeline(
             let names = Arc::clone(&engine_names);
             handles.push(s.spawn(move || -> Result<()> {
                 let mut engine = factory()?;
-                names.lock().unwrap()[wi] = engine.name().to_string();
+                names
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    [wi] = engine.name().to_string();
                 while let Some(item) = source.recv() {
                     let dequeued = Instant::now();
                     let hr_ext = engine.upscale(&item.lr)?;
@@ -242,11 +252,23 @@ pub fn run_pipeline(
 
         let mut errors = Vec::new();
         for h in handles {
-            if let Err(e) = h.join().expect("worker panicked") {
-                errors.push(format!("{e:#}"));
+            // a panicking worker is recorded like an erroring one —
+            // the pool keeps serving and the report carries the cause
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => errors.push(format!("{e:#}")),
+                Err(_) => errors.push("worker thread panicked".into()),
             }
         }
-        let records = collector.join().expect("collector panicked");
+        let records = match collector.join() {
+            Ok(records) => records,
+            Err(_) => {
+                // no records => the empty-delivery check below turns
+                // this into an Err instead of a coordinator panic
+                errors.push("collector thread panicked".into());
+                Vec::new()
+            }
+        };
         (records, errors, offered)
     });
     if records.is_empty() && !errors.is_empty() {
@@ -256,7 +278,10 @@ pub fn run_pipeline(
         ));
     }
     let wall = t0.elapsed();
-    let names = engine_names.lock().unwrap().clone();
+    let names = engine_names
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .clone();
     let meta = StreamMeta {
         id: 0,
         label: format!("{}x{}@x{}", cfg.lr_w, cfg.lr_h, cfg.scale),

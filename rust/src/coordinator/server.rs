@@ -182,8 +182,16 @@ pub fn serve_multi(
                     BTreeMap::new();
                 loop {
                     // bind before matching so the queue lock is
-                    // released while we compute
-                    let recv = { rx.lock().unwrap().recv() };
+                    // released while we compute; tolerate a poisoned
+                    // lock so one panicking worker cannot wedge the
+                    // rest of the pool
+                    let recv = {
+                        rx.lock()
+                            .unwrap_or_else(
+                                std::sync::PoisonError::into_inner,
+                            )
+                            .recv()
+                    };
                     let Ok(item) = recv else {
                         return Ok(()); // sources done
                     };
@@ -204,7 +212,9 @@ pub fn serve_multi(
                         Entry::Occupied(e) => e.into_mut(),
                         Entry::Vacant(v) => {
                             let e = factory(item.scale)?;
-                            let mut names = names.lock().unwrap();
+                            let mut names = names.lock().unwrap_or_else(
+                                std::sync::PoisonError::into_inner,
+                            );
                             if names[wi].is_empty() {
                                 names[wi] = e.name().to_string();
                             }
@@ -338,18 +348,35 @@ pub fn serve_multi(
             (records, dropped)
         });
 
+        let mut errors = Vec::new();
+        // a panicking source/worker is folded into the error report
+        // instead of re-panicking in the coordinator; the empty-
+        // delivery check below still fails the run when nothing was
+        // served at all
         let offered: Vec<usize> = sources
             .into_iter()
-            .map(|h| h.join().expect("source panicked"))
+            .map(|h| match h.join() {
+                Ok(offered) => offered,
+                Err(_) => {
+                    errors.push("source thread panicked".into());
+                    0
+                }
+            })
             .collect();
-        let mut errors = Vec::new();
         for h in workers {
-            if let Err(e) = h.join().expect("worker panicked") {
-                errors.push(format!("{e:#}"));
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => errors.push(format!("{e:#}")),
+                Err(_) => errors.push("worker thread panicked".into()),
             }
         }
-        let (records, dropped) =
-            collector.join().expect("collector panicked");
+        let (records, dropped) = match collector.join() {
+            Ok(out) => out,
+            Err(_) => {
+                errors.push("collector thread panicked".into());
+                (Vec::new(), vec![0usize; n_streams])
+            }
+        };
         (records, dropped, offered, errors)
     });
 
@@ -360,7 +387,10 @@ pub fn serve_multi(
         ));
     }
     let wall = t0.elapsed();
-    let names = engine_names.lock().unwrap().clone();
+    let names = engine_names
+        .lock()
+        .unwrap_or_else(std::sync::PoisonError::into_inner)
+        .clone();
     let metas: Vec<StreamMeta> = cfg
         .streams
         .iter()

@@ -233,6 +233,8 @@ impl Reassembler {
                 },
             );
         }
+        // PANIC: the branch above inserted an entry for this frame if
+        // one was not already present, so the lookup cannot miss.
         let entry = self.pending.get_mut(&band.frame).unwrap();
         assert_eq!(entry.n_bands, band.n_bands, "inconsistent band count");
         let dst0 = band.spec.y0 * self.scale * self.hr_w * self.c;
@@ -251,6 +253,8 @@ impl Reassembler {
             }
         }
         if entry.received == entry.n_bands {
+            // PANIC: `entry` was just borrowed from `pending` under
+            // this key, so the entry is guaranteed to be present.
             let pf = self.pending.remove(&band.frame).unwrap();
             let record = FrameRecord {
                 stream: pf.stream,

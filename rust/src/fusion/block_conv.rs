@@ -152,6 +152,8 @@ impl FusionScheduler for BlockConvScheduler {
                     let input = h.as_ref().unwrap_or(&tile);
                     conv3x3_final_prepared(
                         input,
+                        // PANIC: PreparedModel::new rejects empty
+                        // models; a last layer always exists.
                         pm.layers.last().unwrap(),
                         &mut scratch,
                     )

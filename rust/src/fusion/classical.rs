@@ -157,6 +157,9 @@ impl FusionScheduler for ClassicalScheduler {
                     }
                 }
                 scratch.recycle_u8(cur);
+                // PANIC: PreparedModel::new rejects empty models, so
+                // the per-layer loop above ran at least once and the
+                // final iteration always assigns `pre`.
                 let pre = pre.unwrap();
                 // core region of the final map = [halo-?]: after n
                 // layers the map shrank by n per side relative to the

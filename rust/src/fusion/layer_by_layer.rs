@@ -71,6 +71,8 @@ impl FusionScheduler for LayerByLayerScheduler {
             let input = h.as_ref().unwrap_or(frame);
             conv3x3_final_prepared(
                 input,
+                // PANIC: PreparedModel::new rejects empty models, so
+                // there is always a last (final, non-ReLU) layer.
                 pm.layers.last().unwrap(),
                 &mut scratch,
             )

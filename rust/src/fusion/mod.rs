@@ -56,14 +56,60 @@ pub trait FusionScheduler {
     fn kind(&self) -> FusionKind;
 }
 
+/// Statically-dispatched scheduler covering every [`FusionKind`].
+///
+/// An enum instead of a boxed trait object keeps the simulator's
+/// dispatch static end to end (sr-lint rule L5 bans trait objects in
+/// `fusion/` and `reference/`, matching the PR-5 serving-path
+/// invariant): callers pay one `match` per frame instead of a heap
+/// allocation plus vtable indirection.
+#[derive(Clone, Debug)]
+pub enum AnyScheduler {
+    Tilted(TiltedScheduler),
+    Classical(ClassicalScheduler),
+    BlockConv(BlockConvScheduler),
+    LayerByLayer(LayerByLayerScheduler),
+}
+
+impl FusionScheduler for AnyScheduler {
+    fn run_frame(
+        &self,
+        frame: &Tensor<u8>,
+        qm: &QuantModel,
+        cfg: &AcceleratorConfig,
+    ) -> FrameResult {
+        match self {
+            AnyScheduler::Tilted(s) => s.run_frame(frame, qm, cfg),
+            AnyScheduler::Classical(s) => s.run_frame(frame, qm, cfg),
+            AnyScheduler::BlockConv(s) => s.run_frame(frame, qm, cfg),
+            AnyScheduler::LayerByLayer(s) => s.run_frame(frame, qm, cfg),
+        }
+    }
+
+    fn kind(&self) -> FusionKind {
+        match self {
+            AnyScheduler::Tilted(s) => s.kind(),
+            AnyScheduler::Classical(s) => s.kind(),
+            AnyScheduler::BlockConv(s) => s.kind(),
+            AnyScheduler::LayerByLayer(s) => s.kind(),
+        }
+    }
+}
+
 /// Construct the scheduler for a [`FusionKind`].
-pub fn make_scheduler(kind: FusionKind) -> Box<dyn FusionScheduler> {
+pub fn make_scheduler(kind: FusionKind) -> AnyScheduler {
     match kind {
-        FusionKind::Tilted => Box::new(TiltedScheduler::default()),
-        FusionKind::Classical => Box::new(ClassicalScheduler::default()),
-        FusionKind::BlockConv => Box::new(BlockConvScheduler::default()),
+        FusionKind::Tilted => {
+            AnyScheduler::Tilted(TiltedScheduler::default())
+        }
+        FusionKind::Classical => {
+            AnyScheduler::Classical(ClassicalScheduler::default())
+        }
+        FusionKind::BlockConv => {
+            AnyScheduler::BlockConv(BlockConvScheduler::default())
+        }
         FusionKind::LayerByLayer => {
-            Box::new(LayerByLayerScheduler::default())
+            AnyScheduler::LayerByLayer(LayerByLayerScheduler::default())
         }
     }
 }

@@ -99,8 +99,13 @@ impl OverlapQueue {
     /// [`OverlapQueue::read_front`] into a reusable buffer (cleared
     /// first) — the zero-allocation variant of the tilted band loop.
     pub fn read_front_into(&self, expect: EntryLabel, out: &mut Vec<u8>) {
-        let (label, len) = self.labels[self.front]
-            .unwrap_or_else(|| panic!("overlap queue empty reading {expect:?}"));
+        let Some((label, len)) = self.labels[self.front] else {
+            // PANIC: an empty front slot means the tilt schedule
+            // consumed an overlap entry it never produced — a
+            // scheduler bug, which must fail loudly rather than
+            // serve stale SRAM contents.
+            panic!("overlap queue empty reading {expect:?}");
+        };
         assert_eq!(
             label, expect,
             "overlap queue out of order: front {label:?}, expected {expect:?}"
@@ -113,8 +118,11 @@ impl OverlapQueue {
 
     /// Pop the front entry (it must carry `expect`).
     pub fn pop_front(&mut self, expect: EntryLabel) {
-        let (label, _) = self.labels[self.front]
-            .unwrap_or_else(|| panic!("overlap queue empty popping {expect:?}"));
+        let Some((label, _)) = self.labels[self.front] else {
+            // PANIC: popping an empty slot is the same
+            // schedule-integrity violation as in `read_front_into`.
+            panic!("overlap queue empty popping {expect:?}");
+        };
         assert_eq!(label, expect, "overlap pop out of order");
         self.labels[self.front] = None;
         self.front = (self.front + 1) % self.depth();

@@ -233,6 +233,8 @@ impl TiltedScheduler {
                         .map(|(cl, chi)| c_img >= cl && c_img <= chi)
                         .unwrap_or(false);
                     let col: &[u8] = if from_cur {
+                        // PANIC: `from_cur` is only true when `cur`
+                        // is Some (checked by the map just above).
                         let (cl, _) = cur.unwrap();
                         ping[cur_buf]
                             .read((c_img - cl) * col_stride, rows * cin)
@@ -409,6 +411,9 @@ fn overlap_col<'a>(
     k: usize,
 ) -> &'a [u8] {
     let (c1, c2) = cols.unwrap_or_else(|| {
+        // PANIC: reaching this arm means the tilt schedule itself is
+        // wrong (a column was consumed that was never produced) —
+        // a scheduler bug, not a data-dependent condition.
         panic!("tilt violated: tile {t} conv {k} needs col {c_img} with no overlap entry")
     });
     let half = bytes.len() / 2;
@@ -417,6 +422,9 @@ fn overlap_col<'a>(
     } else if c_img == c2 {
         &bytes[half..][..col_bytes]
     } else {
+        // PANIC: same invariant as above — the overlap entry exists
+        // but holds different columns than the schedule demands,
+        // which only a scheduler bug can produce.
         panic!(
             "tilt violated: tile {t} conv {k} needs col {c_img}, overlap has ({c1},{c2})"
         )

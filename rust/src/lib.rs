@@ -12,6 +12,12 @@
 //!   scheduler, the frame-serving coordinator, and the analysis models that
 //!   regenerate every table and figure of the paper.
 
+// Unsafe hygiene for the SIMD kernel surface (§Static analysis): every
+// unsafe operation inside an `unsafe fn` must sit in an explicit
+// `unsafe {}` block with its own `// SAFETY:` comment (enforced by
+// `sr-lint` rule L1 on top of this).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod analysis;
 pub mod benchkit;
 pub mod cli;
@@ -21,6 +27,7 @@ pub mod fusion;
 pub mod runtime;
 pub mod sim;
 pub mod image;
+pub mod lint;
 pub mod model;
 pub mod planner;
 pub mod reference;

@@ -1,0 +1,411 @@
+//! A minimal Rust *lexical* scanner for `sr-lint` (§Static analysis).
+//!
+//! The lint rules only need to know, for every character of a source
+//! file, whether it is **code**, **comment text**, or the inside of a
+//! **string/char literal** — full parsing (and a `syn` dependency,
+//! which the vendored-deps policy rules out) is unnecessary.  The
+//! scanner handles every literal form the token-level rules could be
+//! fooled by:
+//!
+//! * line comments (`//`, `///`, `//!`) and *nested* block comments
+//!   (`/* /* */ */`);
+//! * string literals with escapes (`"\""`), byte strings (`b".."`) and
+//!   C strings (`c".."`);
+//! * raw strings with any hash depth (`r#".."#`, `br##".."##`);
+//! * char and byte-char literals incl. escapes (`'\''`, `b'\\'`,
+//!   `'\u{1F600}'`), disambiguated from lifetimes/labels (`'a`,
+//!   `'static`, `'outer:`).
+//!
+//! The output is a pair of *views* the rules scan instead of the raw
+//! source: a **code view** (comments and literal contents blanked to
+//! spaces) and a **comment view** (everything else blanked).  Both
+//! preserve every newline, so character offsets and line numbers agree
+//! across the views and the original text.
+
+/// Lexical class of one source character.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Class {
+    Code,
+    Comment,
+    /// Inside a string/char literal (delimiters included).
+    Literal,
+}
+
+/// The character-classified source: original chars plus the blanked
+/// views the rules scan.
+pub struct Scan {
+    /// Original characters.
+    pub src: Vec<char>,
+    /// Code view: comments and literals blanked to spaces.
+    pub code: Vec<char>,
+    /// Comment view: everything but comment text blanked to spaces.
+    pub comment: Vec<char>,
+    /// Char index of the first character of each line.
+    line_starts: Vec<usize>,
+}
+
+impl Scan {
+    /// Classify `text` in one pass.
+    pub fn new(text: &str) -> Scan {
+        let src: Vec<char> = text.chars().collect();
+        let class = classify(&src);
+        let view = |keep: Class| -> Vec<char> {
+            src.iter()
+                .zip(&class)
+                .map(|(&c, &cl)| {
+                    if c == '\n' || cl == keep {
+                        c
+                    } else {
+                        ' '
+                    }
+                })
+                .collect()
+        };
+        let mut line_starts = vec![0usize];
+        for (i, &c) in src.iter().enumerate() {
+            if c == '\n' {
+                line_starts.push(i + 1);
+            }
+        }
+        Scan {
+            code: view(Class::Code),
+            comment: view(Class::Comment),
+            src,
+            line_starts,
+        }
+    }
+
+    /// 1-based line number of a character offset.
+    pub fn line_of(&self, idx: usize) -> usize {
+        match self.line_starts.binary_search(&idx) {
+            Ok(l) => l + 1,
+            Err(l) => l,
+        }
+    }
+
+    /// Number of lines in the file.
+    pub fn n_lines(&self) -> usize {
+        self.line_starts.len()
+    }
+
+    /// One line (1-based) of a view as a `String`.
+    fn line_from(&self, view: &[char], line: usize) -> String {
+        let lo = self.line_starts[line - 1];
+        let hi = self
+            .line_starts
+            .get(line)
+            .map(|&h| h.saturating_sub(1)) // drop the newline itself
+            .unwrap_or(view.len());
+        view[lo..hi.max(lo)].iter().collect()
+    }
+
+    /// Code text of a 1-based line.
+    pub fn code_line(&self, line: usize) -> String {
+        self.line_from(&self.code, line)
+    }
+
+    /// Comment text of a 1-based line.
+    pub fn comment_line(&self, line: usize) -> String {
+        self.line_from(&self.comment, line)
+    }
+
+    /// The first `"quoted string"` in the *original* source at or
+    /// after `from`, looking at most `window` chars ahead — used to
+    /// read attribute/macro arguments (e.g. the feature name of
+    /// `#[target_feature(enable = "avx2")]`) whose match position came
+    /// from the code view.
+    pub fn quoted_after(&self, from: usize, window: usize) -> Option<String> {
+        let hi = (from + window).min(self.src.len());
+        let open = (from..hi).find(|&i| self.src[i] == '"')?;
+        let close =
+            (open + 1..self.src.len()).find(|&i| self.src[i] == '"')?;
+        Some(self.src[open + 1..close].iter().collect())
+    }
+}
+
+/// Per-character classification (the actual scanner).
+fn classify(src: &[char]) -> Vec<Class> {
+    let n = src.len();
+    let mut class = vec![Class::Code; n];
+    let mut i = 0usize;
+    while i < n {
+        let c = src[i];
+        match c {
+            '/' if at(src, i + 1) == Some('/') => {
+                while i < n && src[i] != '\n' {
+                    class[i] = Class::Comment;
+                    i += 1;
+                }
+            }
+            '/' if at(src, i + 1) == Some('*') => {
+                let start = i;
+                let mut depth = 1usize;
+                i += 2;
+                while i < n && depth > 0 {
+                    if src[i] == '/' && at(src, i + 1) == Some('*') {
+                        depth += 1;
+                        i += 2;
+                    } else if src[i] == '*' && at(src, i + 1) == Some('/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                mark(&mut class, start, i, Class::Comment);
+            }
+            '"' => i = lex_string(src, &mut class, i),
+            '\'' => i = lex_char_or_lifetime(src, &mut class, i, i),
+            'r' | 'b' | 'c' if !prev_is_ident(src, i) => {
+                // possible literal prefix: b" c" r" br" cr" b' r#" ...
+                let mut j = i + 1;
+                let mut raw = c == 'r';
+                if (c == 'b' || c == 'c') && at(src, i + 1) == Some('r') {
+                    raw = true;
+                    j += 1;
+                }
+                if c == 'b' && at(src, i + 1) == Some('\'') {
+                    i = lex_char_or_lifetime(src, &mut class, i + 1, i);
+                } else if raw {
+                    let mut hashes = 0usize;
+                    while src.get(j + hashes) == Some(&'#') {
+                        hashes += 1;
+                    }
+                    if src.get(j + hashes) == Some(&'"') {
+                        i = lex_raw_string(
+                            src,
+                            &mut class,
+                            i,
+                            j + hashes,
+                            hashes,
+                        );
+                    } else {
+                        i += 1; // plain identifier starting with r/br/cr
+                    }
+                } else if at(src, i + 1) == Some('"') {
+                    i = lex_string_from(src, &mut class, i, i + 1);
+                } else {
+                    i += 1; // identifier starting with b/c
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    class
+}
+
+fn at(src: &[char], i: usize) -> Option<char> {
+    src.get(i).copied()
+}
+
+fn mark(class: &mut [Class], lo: usize, hi: usize, cl: Class) {
+    for c in class.iter_mut().take(hi.min(class.len())).skip(lo) {
+        *c = cl;
+    }
+}
+
+fn prev_is_ident(src: &[char], i: usize) -> bool {
+    i > 0
+        && (src[i - 1].is_alphanumeric() || src[i - 1] == '_')
+}
+
+/// Lex a `"..."` with escapes, starting at the quote; returns the
+/// index just past the closing quote.
+fn lex_string(src: &[char], class: &mut [Class], quote: usize) -> usize {
+    lex_string_from(src, class, quote, quote)
+}
+
+/// Same, with the literal (prefix included) starting at `start` and
+/// the opening quote at `quote`.
+fn lex_string_from(
+    src: &[char],
+    class: &mut [Class],
+    start: usize,
+    quote: usize,
+) -> usize {
+    let n = src.len();
+    let mut i = quote + 1;
+    while i < n {
+        if src[i] == '\\' {
+            i += 2;
+        } else if src[i] == '"' {
+            i += 1;
+            break;
+        } else {
+            i += 1;
+        }
+    }
+    mark(class, start, i, Class::Literal);
+    i
+}
+
+/// Lex `r#"..."#` (any hash depth); `start` covers the prefix, `quote`
+/// is the opening quote.
+fn lex_raw_string(
+    src: &[char],
+    class: &mut [Class],
+    start: usize,
+    quote: usize,
+    hashes: usize,
+) -> usize {
+    let n = src.len();
+    let mut i = quote + 1;
+    while i < n {
+        if src[i] == '"'
+            && (1..=hashes).all(|k| src.get(i + k) == Some(&'#'))
+        {
+            i += 1 + hashes;
+            break;
+        }
+        i += 1;
+    }
+    mark(class, start, i, Class::Literal);
+    i
+}
+
+/// At a `'`: either a char literal (classified) or a lifetime/label
+/// (left as code).  `start` covers a `b` prefix when present.
+fn lex_char_or_lifetime(
+    src: &[char],
+    class: &mut [Class],
+    quote: usize,
+    start: usize,
+) -> usize {
+    let n = src.len();
+    if quote + 1 >= n {
+        return quote + 1;
+    }
+    if src[quote + 1] == '\\' {
+        // escaped char literal: '\n' '\'' '\\' '\u{..}' '\x7f'
+        let mut i = quote + 2;
+        if src.get(i) == Some(&'u') {
+            while i < n && src[i] != '}' {
+                i += 1;
+            }
+            i += 1; // past '}'
+        } else if src.get(i) == Some(&'x') {
+            i += 3; // 'x' + two hex digits
+        } else {
+            i += 1; // single escaped char
+        }
+        if src.get(i) == Some(&'\'') {
+            i += 1;
+        }
+        mark(class, start, i, Class::Literal);
+        return i;
+    }
+    if quote + 2 < n && src[quote + 2] == '\'' {
+        // simple char literal 'x' (any single scalar, incl. non-ASCII)
+        mark(class, start, quote + 3, Class::Literal);
+        return quote + 3;
+    }
+    // lifetime or loop label: the quote stays code
+    quote + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(s: &str) -> String {
+        Scan::new(s).code.iter().collect()
+    }
+
+    fn comment_of(s: &str) -> String {
+        Scan::new(s).comment.iter().collect()
+    }
+
+    #[test]
+    fn comments_are_blanked_from_code() {
+        let s = "let a = 1; // unsafe unwrap()\nlet b = 2;\n";
+        let c = code_of(s);
+        assert!(!c.contains("unsafe"));
+        assert!(c.contains("let a = 1;"));
+        assert!(c.contains("let b = 2;"));
+        assert!(comment_of(s).contains("// unsafe unwrap()"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let s = "a /* x /* unsafe */ y */ b";
+        let c = code_of(s);
+        assert!(!c.contains("unsafe"));
+        assert!(c.starts_with('a') && c.ends_with('b'));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let s = r#"let m = "unsafe { unwrap() } // not a comment"; f();"#;
+        let c = code_of(s);
+        assert!(!c.contains("unsafe"));
+        assert!(!c.contains("unwrap"));
+        assert!(c.contains("f();"));
+        // the fake comment inside the string is not comment text
+        assert!(!comment_of(s).contains("not a comment"));
+    }
+
+    #[test]
+    fn raw_strings_any_hash_depth() {
+        let s = "let m = r#\"has \"quotes\" and unsafe\"#; g();";
+        let c = code_of(s);
+        assert!(!c.contains("unsafe"));
+        assert!(c.contains("g();"));
+        let s2 = "let m = br##\"x \"# y unsafe\"##; h();";
+        let c2 = code_of(s2);
+        assert!(!c2.contains("unsafe"));
+        assert!(c2.contains("h();"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        // '{' must not open a brace region; lifetimes stay code
+        let s = "fn f<'a>(x: &'a str) { let c = '{'; let q = '\\''; }";
+        let c = code_of(s);
+        assert!(!c.contains('{') || c.matches('{').count() == 1);
+        assert!(c.contains("fn f<'a>(x: &'a str)"));
+        // byte char with escape
+        let s2 = r"let b = b'\''; k();";
+        assert!(code_of(s2).contains("k();"));
+    }
+
+    #[test]
+    fn unicode_char_literal_is_not_a_lifetime() {
+        let s = "let c = 'é'; let l: &'static str = \"x\"; m();";
+        let c = code_of(s);
+        assert!(!c.contains('é'));
+        assert!(c.contains("&'static str"));
+        assert!(c.contains("m();"));
+    }
+
+    #[test]
+    fn newlines_survive_every_view() {
+        let s = "a\n/* c1\nc2 */\nlet s = \"l1\nl2\";\n";
+        let scan = Scan::new(s);
+        let code: String = scan.code.iter().collect();
+        let com: String = scan.comment.iter().collect();
+        assert_eq!(code.matches('\n').count(), s.matches('\n').count());
+        assert_eq!(com.matches('\n').count(), s.matches('\n').count());
+        assert_eq!(scan.n_lines(), 6);
+        assert_eq!(scan.line_of(0), 1);
+    }
+
+    #[test]
+    fn quoted_after_reads_original_text() {
+        let s = r#"#[target_feature(enable = "avx512f,avx512bw")]"#;
+        let scan = Scan::new(s);
+        assert_eq!(
+            scan.quoted_after(0, 80).as_deref(),
+            Some("avx512f,avx512bw")
+        );
+    }
+
+    #[test]
+    fn line_numbers_are_one_based_and_stable() {
+        let s = "l1\nl2\nl3 tail";
+        let scan = Scan::new(s);
+        assert_eq!(scan.line_of(0), 1);
+        assert_eq!(scan.line_of(3), 2);
+        assert_eq!(scan.line_of(6), 3);
+        assert_eq!(scan.code_line(2), "l2");
+    }
+}

@@ -1,0 +1,762 @@
+//! `sr-lint`: the repo-specific static analysis pass (§Static
+//! analysis & sanitizers in `rust/README.md`).
+//!
+//! Five rules, enforced over `rust/src`, `rust/benches` and
+//! `rust/tests` by the `sr-lint` binary (and by the
+//! `tests/sr_lint_gate.rs` self-check, so `cargo test` alone already
+//! gates the tree):
+//!
+//! * **L1 `safety-comment`** — every `unsafe` keyword is immediately
+//!   preceded by a `// SAFETY:` comment (a `/// # Safety` doc section
+//!   on the item also counts).
+//! * **L2 `unsafe-allowlist`** — `unsafe` is confined to the two
+//!   kernel modules (`reference/microkernel.rs`,
+//!   `reference/baseline.rs`); anywhere else is an error even when
+//!   justified.
+//! * **L3 `target-feature-gate`** — a `#[target_feature(enable =
+//!   ...)]` fn must share a file with a matching gate: an
+//!   `is_x86_feature_detected!`/`is_aarch64_feature_detected!` probe
+//!   for that feature, `cfg(sr_has_avx512)` for the AVX-512 family, or
+//!   `cfg(target_arch = "aarch64")` for NEON.
+//! * **L4 `hot-path-panic`** — no naked `unwrap()`/`expect()`/
+//!   `panic!`/`todo!`/`unimplemented!` in the serving hot-path modules
+//!   (`coordinator/`, `fusion/`, `planner/`, `reference/`) outside
+//!   `#[cfg(test)]`, unless annotated `// PANIC: <why unreachable>`.
+//! * **L5 `dyn-box`** — no `Box<dyn ...>` in `fusion/` or
+//!   `reference/` outside `#[cfg(test)]` (the PR-5 static-dispatch
+//!   invariant: schedulers and kernels stay monomorphic).
+//!
+//! The pass is token-level on the lexer's blanked code view
+//! ([`lexer::Scan`]), so strings, char literals and comments can never
+//! fool a rule. Known precision limits, chosen deliberately over a
+//! full parser: attributes are assumed to fit on one line, and a
+//! `cfg` predicate that mixes `test` with `not(...)` is treated as
+//! not-a-test-region (the tree only uses plain `#[cfg(test)]`).
+
+mod lexer;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use lexer::Scan;
+
+/// The rule catalog. Stable IDs `L1`..`L5` are part of the CLI
+/// contract (CI greps for them).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Rule {
+    SafetyComment,
+    UnsafeAllowlist,
+    TargetFeatureGate,
+    HotPathPanic,
+    DynBox,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::SafetyComment => "L1",
+            Rule::UnsafeAllowlist => "L2",
+            Rule::TargetFeatureGate => "L3",
+            Rule::HotPathPanic => "L4",
+            Rule::DynBox => "L5",
+        }
+    }
+
+    pub fn slug(self) -> &'static str {
+        match self {
+            Rule::SafetyComment => "safety-comment",
+            Rule::UnsafeAllowlist => "unsafe-allowlist",
+            Rule::TargetFeatureGate => "target-feature-gate",
+            Rule::HotPathPanic => "hot-path-panic",
+            Rule::DynBox => "dyn-box",
+        }
+    }
+}
+
+/// One violation at a source location.
+#[derive(Debug)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}/{}] {}",
+            self.path,
+            self.line,
+            self.rule.id(),
+            self.rule.slug(),
+            self.message
+        )
+    }
+}
+
+/// Result of a tree walk.
+pub struct LintReport {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+/// The roots the bare `sr-lint` invocation scans: this crate's `src`,
+/// `benches` and `tests` directories.
+pub fn default_roots() -> Vec<PathBuf> {
+    let base = Path::new(env!("CARGO_MANIFEST_DIR"));
+    vec![base.join("src"), base.join("benches"), base.join("tests")]
+}
+
+/// Lint every `.rs` file under `roots` (files are accepted directly;
+/// directories are walked recursively in sorted order). Roots that do
+/// not exist are skipped so `sr-lint benches` works from any cwd
+/// layout.
+pub fn lint_tree(roots: &[PathBuf]) -> io::Result<LintReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for root in roots {
+        if root.is_dir() {
+            collect_rs(root, &mut files)?;
+        } else if root.is_file() && is_rs(root) {
+            files.push(root.clone());
+        }
+    }
+    files.sort();
+    files.dedup();
+    let mut diagnostics = Vec::new();
+    for f in &files {
+        let text = fs::read_to_string(f)?;
+        diagnostics.extend(lint_source(&f.to_string_lossy(), &text));
+    }
+    Ok(LintReport {
+        files: files.len(),
+        diagnostics,
+    })
+}
+
+fn is_rs(p: &Path) -> bool {
+    p.extension().map(|e| e == "rs").unwrap_or(false)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if is_rs(&p) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file's text. `path` is used both for diagnostics and for
+/// the path-scoped rules (allowlist, hot modules), so fixtures can
+/// exercise any rule by picking the path.
+pub fn lint_source(path: &str, text: &str) -> Vec<Diagnostic> {
+    let scan = Scan::new(text);
+    let ctx = FileCtx {
+        path: path.replace('\\', "/"),
+        test_mask: test_mask(&scan),
+        scan: &scan,
+    };
+    let mut diags = Vec::new();
+    rule_unsafe(&ctx, &mut diags);
+    rule_target_feature(&ctx, &mut diags);
+    rule_hot_path_panic(&ctx, &mut diags);
+    rule_dyn_box(&ctx, &mut diags);
+    diags.sort_by_key(|d| (d.line, d.rule.id()));
+    diags
+}
+
+struct FileCtx<'a> {
+    path: String,
+    scan: &'a Scan,
+    /// 1-based line -> inside a `#[cfg(test)]` region.
+    test_mask: Vec<bool>,
+}
+
+impl FileCtx<'_> {
+    fn push(
+        &self,
+        diags: &mut Vec<Diagnostic>,
+        rule: Rule,
+        line: usize,
+        message: String,
+    ) {
+        diags.push(Diagnostic {
+            rule,
+            path: self.path.clone(),
+            line,
+            message,
+        });
+    }
+
+    fn in_any(&self, modules: &[&str]) -> bool {
+        modules.iter().any(|m| self.path.contains(m))
+    }
+}
+
+// ---------------------------------------------------------------- scanning
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Offsets of whole-word occurrences of `word` in `code`.
+fn word_positions(code: &[char], word: &str) -> Vec<usize> {
+    let w: Vec<char> = word.chars().collect();
+    let mut out = Vec::new();
+    if w.is_empty() || code.len() < w.len() {
+        return out;
+    }
+    for (i, win) in code.windows(w.len()).enumerate() {
+        if win == w[..]
+            && (i == 0 || !is_ident(code[i - 1]))
+            && !matches!(code.get(i + w.len()), Some(c) if is_ident(*c))
+        {
+            out.push(i);
+        }
+    }
+    out
+}
+
+fn next_non_ws(code: &[char], mut i: usize) -> Option<(usize, char)> {
+    while i < code.len() {
+        if !code[i].is_whitespace() {
+            return Some((i, code[i]));
+        }
+        i += 1;
+    }
+    None
+}
+
+fn prev_non_ws(code: &[char], i: usize) -> Option<(usize, char)> {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        if !code[j].is_whitespace() {
+            return Some((j, code[j]));
+        }
+    }
+    None
+}
+
+/// Index of the delimiter closing the one at `open`, tracking nesting.
+fn match_delim(code: &[char], open: usize, o: char, c: char) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, &ch) in code.iter().enumerate().skip(open) {
+        if ch == o {
+            depth += 1;
+        } else if ch == c {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+/// Lines covered by `#[cfg(test)] <item> { ... }` regions.
+fn test_mask(scan: &Scan) -> Vec<bool> {
+    let code = &scan.code;
+    let mut mask = vec![false; scan.n_lines() + 1];
+    for pos in word_positions(code, "cfg") {
+        // attribute context: `#[cfg` or `#![cfg`
+        let Some((bi, '[')) = prev_non_ws(code, pos) else {
+            continue;
+        };
+        let hash_ok = match prev_non_ws(code, bi) {
+            Some((ei, '!')) => {
+                matches!(prev_non_ws(code, ei), Some((_, '#')))
+            }
+            Some((_, '#')) => true,
+            _ => false,
+        };
+        if !hash_ok {
+            continue;
+        }
+        let Some((open, '(')) = next_non_ws(code, pos + 3) else {
+            continue;
+        };
+        let Some(close) = match_delim(code, open, '(', ')') else {
+            continue;
+        };
+        let args = &code[open..=close];
+        if word_positions(args, "test").is_empty()
+            || !word_positions(args, "not").is_empty()
+        {
+            continue;
+        }
+        let Some((_, ']')) = next_non_ws(code, close + 1) else {
+            continue;
+        };
+        // the attributed item's body: first `{` after the attribute
+        let Some(ob) = (close + 1..code.len()).find(|&k| code[k] == '{')
+        else {
+            continue;
+        };
+        let Some(cb) = match_delim(code, ob, '{', '}') else {
+            continue;
+        };
+        for l in scan.line_of(pos)..=scan.line_of(cb) {
+            mask[l] = true;
+        }
+    }
+    mask
+}
+
+/// Comment text attached to `line`: the line's own trailing comment
+/// plus the contiguous run of comment-only / attribute / blank lines
+/// directly above it.
+fn attached_comments(ctx: &FileCtx<'_>, line: usize) -> String {
+    let mut text = ctx.scan.comment_line(line);
+    let mut l = line;
+    while l > 1 {
+        l -= 1;
+        let code_t = ctx.scan.code_line(l);
+        let code_trim = code_t.trim();
+        if code_trim.is_empty()
+            || code_trim.starts_with("#[")
+            || code_trim.starts_with("#![")
+        {
+            text.push('\n');
+            text.push_str(ctx.scan.comment_line(l).trim());
+            continue;
+        }
+        break;
+    }
+    text
+}
+
+// ------------------------------------------------------------------- rules
+
+const ALLOWLIST: [&str; 2] = [
+    "src/reference/microkernel.rs",
+    "src/reference/baseline.rs",
+];
+
+const HOT_MODULES: [&str; 4] = [
+    "src/coordinator/",
+    "src/fusion/",
+    "src/planner/",
+    "src/reference/",
+];
+
+const STATIC_DISPATCH_MODULES: [&str; 2] = ["src/fusion/", "src/reference/"];
+
+/// L1 + L2: `unsafe` confinement and SAFETY comments.
+fn rule_unsafe(ctx: &FileCtx<'_>, diags: &mut Vec<Diagnostic>) {
+    let allowed = ALLOWLIST.iter().any(|m| ctx.path.ends_with(m));
+    for pos in word_positions(&ctx.scan.code, "unsafe") {
+        let line = ctx.scan.line_of(pos);
+        if !allowed {
+            ctx.push(
+                diags,
+                Rule::UnsafeAllowlist,
+                line,
+                "`unsafe` outside the allowlisted kernel modules \
+                 (reference/microkernel.rs, reference/baseline.rs)"
+                    .to_string(),
+            );
+            continue;
+        }
+        let attached = attached_comments(ctx, line);
+        if !(attached.contains("SAFETY") || attached.contains("# Safety")) {
+            ctx.push(
+                diags,
+                Rule::SafetyComment,
+                line,
+                "`unsafe` without an immediately preceding `// SAFETY:` \
+                 comment (or `/// # Safety` doc section)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// L3: `#[target_feature(enable = ...)]` must be gated in-file.
+fn rule_target_feature(ctx: &FileCtx<'_>, diags: &mut Vec<Diagnostic>) {
+    let code = &ctx.scan.code;
+    // runtime probes present in this file
+    let mut detected: Vec<String> = Vec::new();
+    for probe in ["is_x86_feature_detected", "is_aarch64_feature_detected"] {
+        for pos in word_positions(code, probe) {
+            if let Some(f) = ctx.scan.quoted_after(pos, 120) {
+                detected.push(f);
+            }
+        }
+    }
+    let has_avx512_cfg = !word_positions(code, "sr_has_avx512").is_empty();
+    let has_aarch64_cfg = word_positions(code, "target_arch")
+        .iter()
+        .any(|&p| ctx.scan.quoted_after(p, 60).as_deref() == Some("aarch64"));
+
+    for pos in word_positions(code, "target_feature") {
+        // only the attribute form `target_feature(enable = "...")`;
+        // a `cfg(target_feature = ...)` predicate IS a gate, not a use
+        let Some((open, '(')) = next_non_ws(code, pos + 14) else {
+            continue;
+        };
+        let Some((ep, 'e')) = next_non_ws(code, open + 1) else {
+            continue;
+        };
+        if word_positions(&code[ep..(ep + 7).min(code.len())], "enable")
+            .is_empty()
+        {
+            continue;
+        }
+        let line = ctx.scan.line_of(pos);
+        let Some(feats) = ctx.scan.quoted_after(pos, 160) else {
+            continue;
+        };
+        for feat in feats.split(',').map(str::trim).filter(|s| !s.is_empty())
+        {
+            let gated = if feat.starts_with("avx512") {
+                has_avx512_cfg
+                    || detected.iter().any(|d| d.starts_with("avx512"))
+            } else if feat == "neon" {
+                has_aarch64_cfg || detected.iter().any(|d| d == "neon")
+            } else {
+                detected.iter().any(|d| d == feat)
+            };
+            if !gated {
+                ctx.push(
+                    diags,
+                    Rule::TargetFeatureGate,
+                    line,
+                    format!(
+                        "#[target_feature(enable = \"{feat}\")] without a \
+                         matching runtime/compile-time gate in this file"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// L4: no naked panics in the serving hot path.
+fn rule_hot_path_panic(ctx: &FileCtx<'_>, diags: &mut Vec<Diagnostic>) {
+    if !ctx.in_any(&HOT_MODULES) {
+        return;
+    }
+    let code = &ctx.scan.code;
+    let mut sites: Vec<(usize, &str)> = Vec::new();
+    for method in ["unwrap", "expect"] {
+        for pos in word_positions(code, method) {
+            let dotted = matches!(prev_non_ws(code, pos), Some((_, '.')));
+            let called = matches!(
+                next_non_ws(code, pos + method.len()),
+                Some((_, '('))
+            );
+            if dotted && called {
+                sites.push((pos, method));
+            }
+        }
+    }
+    for mac in ["panic", "todo", "unimplemented"] {
+        for pos in word_positions(code, mac) {
+            if matches!(next_non_ws(code, pos + mac.len()), Some((_, '!'))) {
+                sites.push((pos, mac));
+            }
+        }
+    }
+    for (pos, what) in sites {
+        let line = ctx.scan.line_of(pos);
+        if ctx.test_mask[line] {
+            continue;
+        }
+        if attached_comments(ctx, line).contains("PANIC:") {
+            continue;
+        }
+        ctx.push(
+            diags,
+            Rule::HotPathPanic,
+            line,
+            format!(
+                "`{what}` in a serving hot-path module without a \
+                 `// PANIC:` justification (propagate the error or \
+                 annotate why it is unreachable)"
+            ),
+        );
+    }
+}
+
+/// L5: no `Box<dyn ...>` in the static-dispatch modules.
+fn rule_dyn_box(ctx: &FileCtx<'_>, diags: &mut Vec<Diagnostic>) {
+    if !ctx.in_any(&STATIC_DISPATCH_MODULES) {
+        return;
+    }
+    let code = &ctx.scan.code;
+    for pos in word_positions(code, "Box") {
+        let Some((lt, '<')) = next_non_ws(code, pos + 3) else {
+            continue;
+        };
+        let Some((dp, 'd')) = next_non_ws(code, lt + 1) else {
+            continue;
+        };
+        let is_dyn = code.get(dp..dp + 3) == Some(&['d', 'y', 'n'][..])
+            && !matches!(code.get(dp + 3), Some(c) if is_ident(*c));
+        if !is_dyn {
+            continue;
+        }
+        let line = ctx.scan.line_of(pos);
+        if ctx.test_mask[line] {
+            continue;
+        }
+        ctx.push(
+            diags,
+            Rule::DynBox,
+            line,
+            "`Box<dyn ...>` in a static-dispatch module (fusion/reference \
+             stay monomorphic; dispatch through an enum instead)"
+                .to_string(),
+        );
+    }
+}
+
+// ---------------------------------------------------------------- fixtures
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// (rule id, line) pairs — the shape every fixture asserts on.
+    fn ids(d: &[Diagnostic]) -> Vec<(&'static str, usize)> {
+        d.iter().map(|x| (x.rule.id(), x.line)).collect()
+    }
+
+    const MK: &str = "rust/src/reference/microkernel.rs";
+
+    #[test]
+    fn l1_flags_unsafe_without_safety_comment() {
+        let src = "pub fn read(p: *const u8) -> u8 {\n    \
+                   unsafe { *p }\n}\n";
+        assert_eq!(ids(&lint_source(MK, src)), vec![("L1", 2)]);
+    }
+
+    #[test]
+    fn l1_accepts_safety_comment_and_doc_section() {
+        let src = "\
+pub fn read(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid for reads.
+    unsafe { *p }
+}
+
+/// Reads a byte.
+///
+/// # Safety
+/// `p` must be valid for reads.
+pub unsafe fn read2(p: *const u8) -> u8 {
+    // SAFETY: contract forwarded from this fn's own # Safety section.
+    unsafe { *p }
+}
+";
+        let d = lint_source("rust/src/reference/baseline.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l1_safety_comment_above_cfg_attr_still_counts() {
+        // the dispatcher idiom: comment, then a cfg attr, then the arm
+        let src = "\
+fn go(x: Isa) {
+    match x {
+        // SAFETY: arm only reachable when AVX2 was detected.
+        #[cfg(target_arch = \"x86_64\")]
+        Isa::Avx2 => unsafe { kick() },
+        _ => {}
+    }
+}
+";
+        let d = lint_source(MK, src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l2_flags_unsafe_outside_allowlist() {
+        let src = "fn f(p: *const u8) -> u8 {\n    \
+                   // SAFETY: justified, but still confined by L2.\n    \
+                   unsafe { *p }\n}\n";
+        let d = lint_source("rust/src/fusion/streaming.rs", src);
+        assert_eq!(ids(&d), vec![("L2", 3)]);
+    }
+
+    #[test]
+    fn l3_flags_ungated_target_feature() {
+        let src = "\
+/// # Safety
+/// Caller must have checked for AVX2.
+#[target_feature(enable = \"avx2\")]
+unsafe fn k() {}
+";
+        assert_eq!(ids(&lint_source(MK, src)), vec![("L3", 3)]);
+    }
+
+    #[test]
+    fn l3_accepts_runtime_probe_gate() {
+        let src = "\
+pub fn have() -> bool { is_x86_feature_detected!(\"avx2\") }
+/// # Safety
+/// AVX2 checked via `have()`.
+#[target_feature(enable = \"avx2\")]
+unsafe fn k() {}
+";
+        let d = lint_source(MK, src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l3_accepts_avx512_cfg_and_aarch64_cfg_gates() {
+        let avx512 = "\
+#[cfg(sr_has_avx512)]
+mod probe {}
+/// # Safety
+/// Gated by cfg(sr_has_avx512) + dispatch.
+#[target_feature(enable = \"avx512f,avx512bw\")]
+unsafe fn k() {}
+";
+        let d = lint_source(MK, avx512);
+        assert!(d.is_empty(), "{d:?}");
+        let neon = "\
+#[cfg(target_arch = \"aarch64\")]
+mod probe {}
+/// # Safety
+/// aarch64-only module.
+#[target_feature(enable = \"neon\")]
+unsafe fn k() {}
+";
+        let d = lint_source(MK, neon);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l3_ignores_cfg_target_feature_predicates() {
+        // cfg(target_feature = "...") is a gate, not a gated use
+        let src = "#[cfg(target_feature = \"avx2\")]\nmod wide {}\n";
+        let d = lint_source(MK, src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l4_flags_naked_unwrap_expect_panic() {
+        let src = "\
+pub fn run() {
+    let v: Option<u32> = None;
+    let a = v.unwrap();
+    let b = v.expect(\"boom\");
+    if a + b == 0 {
+        panic!(\"impossible\");
+    }
+}
+";
+        let d = lint_source("rust/src/coordinator/fake.rs", src);
+        assert_eq!(ids(&d), vec![("L4", 3), ("L4", 4), ("L4", 6)]);
+    }
+
+    #[test]
+    fn l4_accepts_panic_comment_test_code_and_unwrap_or() {
+        let src = "\
+pub fn run(v: Option<u32>) -> u32 {
+    // PANIC: v is Some by construction in every caller (see plan()).
+    let a = v.unwrap();
+    a + v.unwrap_or(0) + v.unwrap_or_else(|| 1) + v.unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn boom() {
+        let x: Option<u32> = Some(1);
+        assert_eq!(x.unwrap(), 1);
+        std::panic!(\"fine in tests\");
+    }
+}
+";
+        let d = lint_source("rust/src/planner/fake.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l4_ignores_non_hot_modules() {
+        let src = "pub fn f(v: Option<u32>) -> u32 { v.unwrap() }\n";
+        let d = lint_source("rust/src/analysis/fake.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l5_flags_box_dyn_in_fusion_only() {
+        let src = "pub fn mk() -> Box<dyn Iterator<Item = u32>> {\n    \
+                   Box::new(0..3)\n}\n";
+        let d = lint_source("rust/src/fusion/fake.rs", src);
+        assert_eq!(ids(&d), vec![("L5", 1)]);
+        // coordinator is a hot module for L4 but not scoped by L5
+        let d = lint_source("rust/src/coordinator/fake.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+        // test code inside fusion is exempt
+        let test_only = "#[cfg(test)]\nmod tests {\n    \
+                         fn mk() -> Box<dyn Fn()> { Box::new(|| ()) }\n}\n";
+        let d = lint_source("rust/src/fusion/fake.rs", test_only);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn rules_ignore_strings_and_comments() {
+        let src = "\
+pub fn f() -> &'static str {
+    // a comment mentioning unsafe { } and x.unwrap() is fine
+    \"unsafe panic!() Box<dyn X> .unwrap() .expect(\"
+}
+";
+        let d = lint_source("rust/src/fusion/fake.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "\
+#[cfg(not(test))]
+pub fn hot(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+";
+        let d = lint_source("rust/src/coordinator/fake.rs", src);
+        assert_eq!(ids(&d), vec![("L4", 3)]);
+    }
+
+    #[test]
+    fn diagnostics_render_rule_id_and_location() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let d = lint_source(MK, src);
+        assert_eq!(d.len(), 1);
+        let shown = d[0].to_string();
+        assert!(
+            shown.starts_with(
+                "rust/src/reference/microkernel.rs:2: [L1/safety-comment]"
+            ),
+            "{shown}"
+        );
+    }
+
+    #[test]
+    fn tree_walk_reports_file_count() {
+        // lint this crate's own lint module: known-clean, nonzero files
+        let base = Path::new(env!("CARGO_MANIFEST_DIR")).join("src/lint");
+        let report = lint_tree(&[base]).expect("walk src/lint");
+        assert!(report.files >= 2, "files: {}", report.files);
+        assert!(
+            report.diagnostics.is_empty(),
+            "{:?}",
+            report.diagnostics
+        );
+    }
+}

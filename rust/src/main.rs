@@ -27,7 +27,9 @@ use sr_accel::coordinator::{
     Int8Engine, MultiServeConfig, PipelineConfig, ScaleEngineFactory,
     SimEngine,
 };
-use sr_accel::fusion::{make_scheduler, TiltedScheduler, FusionScheduler};
+use sr_accel::fusion::{
+    make_scheduler, AnyScheduler, FusionScheduler, TiltedScheduler,
+};
 use sr_accel::image::{read_ppm, write_ppm, SceneGenerator};
 use sr_accel::model::{load_apbnw, Tensor};
 use sr_accel::planner::{
@@ -494,10 +496,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let img = gen.frame(0);
     let frame = Tensor::from_vec(img.h, img.w, img.c, img.data);
 
-    let sched: Box<dyn FusionScheduler> = if fusion == FusionKind::Tilted
+    let sched: AnyScheduler = if fusion == FusionKind::Tilted
         && args.flag("cycle-exact")
     {
-        Box::new(TiltedScheduler::cycle_exact())
+        AnyScheduler::Tilted(TiltedScheduler::cycle_exact())
     } else {
         make_scheduler(fusion)
     };

@@ -436,6 +436,9 @@ pub fn tune_with(
     let default_idx = candidates
         .iter()
         .position(|c| c.plan == Plan::serving_default())
+        // PANIC: enumerate_candidates seeds its output with
+        // Plan::serving_default() unconditionally, so the position
+        // lookup cannot miss.
         .expect("enumerate_candidates always includes the default plan");
     // confirm the predicted top-K plus the default (dedup keeps the
     // measurement budget at <= top_k + 1 runs)
@@ -459,6 +462,8 @@ pub fn tune_with(
                 // ties go to the better-predicted (lower index) plan
                 .then(b.cmp(&a))
         })
+        // PANIC: `confirm` always contains at least `default_idx`
+        // (pushed above when absent), so max_by sees >= 1 element.
         .expect("at least the default plan is confirmed");
     // predicted frame time vs measured frame time (1/Mpix/s): positive
     // correlation means the pruning rank matches reality

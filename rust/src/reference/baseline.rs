@@ -23,7 +23,23 @@ use crate::model::{PreparedLayer, PreparedModel, Scratch, Tensor};
 use crate::util::fixed::clamp_u8;
 
 use super::add_anchor_and_shuffle;
-use super::microkernel::avx2_available;
+
+/// Runtime AVX2 probe local to the frozen baseline, so the
+/// `#[target_feature(enable = "avx2")]` kernel and the detection that
+/// gates it live in the same file (lint rule L3).  Deliberately not
+/// routed through [`super::microkernel::avx2_available`]: the baseline
+/// predates the multi-ISA layer and stays frozen.
+#[inline]
+fn baseline_avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
 
 /// PR-2 SAME row path + ReLU (pixel-at-a-time, separate requant pass).
 pub fn conv3x3_relu_pixel(
@@ -132,6 +148,8 @@ pub fn forward_int_pixel(
     }
     let pre = {
         let input = h.as_ref().unwrap_or(x);
+        // PANIC: PreparedModel::new rejects empty models, so there is
+        // always a last (final, non-ReLU) layer.
         conv3x3_final_pixel(input, pm.layers.last().unwrap(), scratch)
     };
     if let Some(old) = h {
@@ -156,7 +174,7 @@ fn conv_rows<F: FnMut(usize, &[i32], usize)>(
     let (cin, cout) = (pl.cin, pl.cout);
     let (cin_p, cout_p) = (pl.cin_p, pl.cout_p);
 
-    let use_avx2 = avx2_available();
+    let use_avx2 = baseline_avx2();
 
     let acc_row = &mut scratch.acc_row;
     acc_row.clear();
@@ -235,7 +253,7 @@ fn patch_pixels<F: FnMut(usize, usize, &[i32])>(
     let (oh, ow) = (patch.h - 2, patch.w - 2);
     let (cin, cout) = (pl.cin, pl.cout);
     let (cin_p, cout_p) = (pl.cin_p, pl.cout_p);
-    let use_avx2 = avx2_available();
+    let use_avx2 = baseline_avx2();
 
     let acc = &mut scratch.acc;
     acc.clear();
@@ -307,27 +325,40 @@ unsafe fn madd_avx2(
     cin_p: usize,
     cout_p: usize,
 ) {
-    use std::arch::x86_64::*;
-    for ci2 in 0..cin_p / 2 {
-        let x0 = px[2 * ci2] as u32;
-        let x1 = px[2 * ci2 + 1] as u32;
-        if x0 == 0 && x1 == 0 {
-            continue; // pair-granular sparsity skip
-        }
-        let xpair = _mm256_set1_epi32((x0 | (x1 << 16)) as i32);
-        let wrow = wtap.as_ptr().add(ci2 * cout_p);
-        let mut co = 0;
-        while co < cout_p {
-            let a_ptr = acc.as_mut_ptr().add(co);
-            let wv =
-                _mm256_loadu_si256(wrow.add(co) as *const __m256i);
-            let a = _mm256_loadu_si256(a_ptr as *const __m256i);
-            let prod = _mm256_madd_epi16(xpair, wv);
-            _mm256_storeu_si256(
-                a_ptr as *mut __m256i,
-                _mm256_add_epi32(a, prod),
-            );
-            co += 8;
+    debug_assert!(cin_p % 2 == 0 && px.len() == cin_p, "px/cin_p contract");
+    debug_assert!(
+        cout_p % 8 == 0 && acc.len() == cout_p,
+        "acc/cout_p contract"
+    );
+    debug_assert!(wtap.len() == cin_p / 2 * cout_p, "wtap pair-panel size");
+    // SAFETY: the caller upholds the `# Safety` contract (AVX2
+    // detected, slice lengths as asserted above), so every 8-lane
+    // load/store lands inside `wtap`/`acc` — `co` steps by 8 up to
+    // `cout_p`, a multiple of 8, and `ci2 * cout_p` rows stay inside
+    // the pair panel.
+    unsafe {
+        use std::arch::x86_64::*;
+        for ci2 in 0..cin_p / 2 {
+            let x0 = px[2 * ci2] as u32;
+            let x1 = px[2 * ci2 + 1] as u32;
+            if x0 == 0 && x1 == 0 {
+                continue; // pair-granular sparsity skip
+            }
+            let xpair = _mm256_set1_epi32((x0 | (x1 << 16)) as i32);
+            let wrow = wtap.as_ptr().add(ci2 * cout_p);
+            let mut co = 0;
+            while co < cout_p {
+                let a_ptr = acc.as_mut_ptr().add(co);
+                let wv =
+                    _mm256_loadu_si256(wrow.add(co) as *const __m256i);
+                let a = _mm256_loadu_si256(a_ptr as *const __m256i);
+                let prod = _mm256_madd_epi16(xpair, wv);
+                _mm256_storeu_si256(
+                    a_ptr as *mut __m256i,
+                    _mm256_add_epi32(a, prod),
+                );
+                co += 8;
+            }
         }
     }
 }

@@ -332,6 +332,9 @@ impl KernelIsa for ScalarKernel {
         true
     }
 
+    // SAFETY: trait contract (`# Safety` on [`KernelIsa::conv_strip`]);
+    // the oracle body is entirely safe code — no ISA requirement, all
+    // accesses bounds-checked.
     unsafe fn conv_strip(
         rows: &StripRows<'_>,
         pl: &PreparedLayer,
@@ -339,6 +342,7 @@ impl KernelIsa for ScalarKernel {
         np: usize,
         out: &mut StripOut<'_>,
     ) {
+        debug_assert_strip_contract(rows, pl, np, out);
         strip_scalar(rows, pl, x0, np, out);
     }
 }
@@ -357,6 +361,9 @@ impl KernelIsa for Avx2Kernel {
         has_avx2()
     }
 
+    // SAFETY: trait contract (`# Safety` on [`KernelIsa::conv_strip`]):
+    // the caller checked `available()` and passed a `PreparedLayer::new`
+    // layer, in-contract rows, and an `np * cout` output.
     unsafe fn conv_strip(
         rows: &StripRows<'_>,
         pl: &PreparedLayer,
@@ -364,14 +371,19 @@ impl KernelIsa for Avx2Kernel {
         np: usize,
         out: &mut StripOut<'_>,
     ) {
+        debug_assert_strip_contract(rows, pl, np, out);
         let n_tiles = pl.cout_p / 8;
         let mut cot = 0;
         while cot + 2 <= n_tiles {
-            strip_avx2::<2>(rows, pl, x0, np, cot, out);
+            // SAFETY: AVX2 is available per the trait contract;
+            // `cot + 2 <= n_tiles` keeps the panel walk in bounds.
+            unsafe { strip_avx2::<2>(rows, pl, x0, np, cot, out) };
             cot += 2;
         }
         if cot < n_tiles {
-            strip_avx2::<1>(rows, pl, x0, np, cot, out);
+            // SAFETY: as above, with the single-tile tail
+            // (`cot < n_tiles`).
+            unsafe { strip_avx2::<1>(rows, pl, x0, np, cot, out) };
         }
     }
 }
@@ -390,6 +402,9 @@ impl KernelIsa for Avx512Kernel {
         has_avx512()
     }
 
+    // SAFETY: trait contract (`# Safety` on [`KernelIsa::conv_strip`]):
+    // the caller checked `available()` and passed a `PreparedLayer::new`
+    // layer, in-contract rows, and an `np * cout` output.
     unsafe fn conv_strip(
         rows: &StripRows<'_>,
         pl: &PreparedLayer,
@@ -397,14 +412,20 @@ impl KernelIsa for Avx512Kernel {
         np: usize,
         out: &mut StripOut<'_>,
     ) {
+        debug_assert_strip_contract(rows, pl, np, out);
         let n_tiles = pl.cout.next_multiple_of(16) / 16;
         let mut cot = 0;
         while cot + 2 <= n_tiles {
-            strip_avx512::<2>(rows, pl, x0, np, cot, out);
+            // SAFETY: AVX-512 F+BW are available per the trait
+            // contract; `cot + 2 <= n_tiles` keeps the panel walk in
+            // bounds of `wt512`.
+            unsafe { strip_avx512::<2>(rows, pl, x0, np, cot, out) };
             cot += 2;
         }
         if cot < n_tiles {
-            strip_avx512::<1>(rows, pl, x0, np, cot, out);
+            // SAFETY: as above, with the single-tile tail
+            // (`cot < n_tiles`).
+            unsafe { strip_avx512::<1>(rows, pl, x0, np, cot, out) };
         }
     }
 }
@@ -423,6 +444,9 @@ impl KernelIsa for NeonKernel {
         has_neon()
     }
 
+    // SAFETY: trait contract (`# Safety` on [`KernelIsa::conv_strip`]):
+    // the caller checked `available()` and passed a `PreparedLayer::new`
+    // layer, in-contract rows, and an `np * cout` output.
     unsafe fn conv_strip(
         rows: &StripRows<'_>,
         pl: &PreparedLayer,
@@ -430,14 +454,19 @@ impl KernelIsa for NeonKernel {
         np: usize,
         out: &mut StripOut<'_>,
     ) {
+        debug_assert_strip_contract(rows, pl, np, out);
         let n_tiles = pl.cout_p / 8;
         let mut cot = 0;
         while cot + 2 <= n_tiles {
-            strip_neon::<2>(rows, pl, x0, np, cot, out);
+            // SAFETY: NEON is available per the trait contract;
+            // `cot + 2 <= n_tiles` keeps the panel walk in bounds.
+            unsafe { strip_neon::<2>(rows, pl, x0, np, cot, out) };
             cot += 2;
         }
         if cot < n_tiles {
-            strip_neon::<1>(rows, pl, x0, np, cot, out);
+            // SAFETY: as above, with the single-tile tail
+            // (`cot < n_tiles`).
+            unsafe { strip_neon::<1>(rows, pl, x0, np, cot, out) };
         }
     }
 }
@@ -460,26 +489,91 @@ pub(crate) fn conv_strip(
     out: &mut StripOut<'_>,
 ) {
     debug_assert!(np >= 1 && np <= isa.strip_width());
+    debug_assert_strip_contract(rows, pl, np, out);
     match isa {
-        // SAFETY (all vector arms): the caller's dispatch selected an
-        // available ISA; panel/bias bounds hold by the PreparedLayer
-        // packing invariants and `cot + NT <= n_tiles`; row reads stay
-        // inside the slices by the StripRows column contract (clamped
-        // per tap).
+        // SAFETY: this arm is only reachable when the caller's
+        // dispatch selected `Isa::Avx2` — available per
+        // `Isa::detected`/`Isa::available` — and the strip contract
+        // (panel/bias lengths, row coverage, `out` size; checked above
+        // in debug builds) is the trait's `# Safety` clause.
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe {
             Avx2Kernel::conv_strip(rows, pl, x0, np, out);
         },
+        // SAFETY: as above for `Isa::Avx512` — dispatch implies
+        // AVX-512 F+BW were runtime-detected, and the strip contract
+        // holds.
         #[cfg(all(target_arch = "x86_64", sr_has_avx512))]
         Isa::Avx512 => unsafe {
             Avx512Kernel::conv_strip(rows, pl, x0, np, out);
         },
+        // SAFETY: as above for `Isa::Neon` — dispatch implies NEON was
+        // runtime-detected, and the strip contract holds.
         #[cfg(target_arch = "aarch64")]
         Isa::Neon => unsafe {
             NeonKernel::conv_strip(rows, pl, x0, np, out);
         },
         _ => strip_scalar(rows, pl, x0, np, out),
     }
+}
+
+/// Debug-build teeth for the `# Safety` clause of
+/// [`KernelIsa::conv_strip`]: every length/packing precondition the
+/// kernels' raw-pointer walks rely on, asserted at the strip entry
+/// points so the Miri and sanitizer CI jobs fail loudly on a contract
+/// violation instead of reading out of bounds.  Compiles to nothing in
+/// release builds.
+fn debug_assert_strip_contract(
+    rows: &StripRows<'_>,
+    pl: &PreparedLayer,
+    np: usize,
+    out: &StripOut<'_>,
+) {
+    debug_assert!(
+        np >= 1 && np <= MK_P_MAX,
+        "strip width {np} outside 1..={MK_P_MAX}"
+    );
+    debug_assert!(rows.col_hi >= rows.col_lo, "inverted column range");
+    let row_bytes = (rows.col_hi - rows.col_lo) as usize * pl.cin;
+    for row in rows.rows.iter().flatten() {
+        debug_assert_eq!(
+            row.len(),
+            row_bytes,
+            "row must cover [col_lo, col_hi) at cin bytes per column"
+        );
+    }
+    // PreparedLayer::new packing invariants (panel strides and the
+    // zero-padded tails every kernel's pointer arithmetic assumes)
+    let pairs = pl.cin_p / 2;
+    debug_assert!(pl.cin_p % 2 == 0 && pl.cin_p >= pl.cin);
+    debug_assert!(pl.cout_p % 8 == 0 && pl.cout_p >= pl.cout);
+    debug_assert!(pl.bias_p.len() >= pl.cout_p, "bias slab too short");
+    debug_assert!(
+        pl.wt.len() >= (pl.cout_p / 8) * 9 * pairs * 8,
+        "ymm panel too short for the cout-tile walk"
+    );
+    debug_assert!(
+        pl.wt512.len()
+            >= (pl.cout.next_multiple_of(16) / 16) * 9 * pairs * 16,
+        "zmm panel too short for the cout-tile walk"
+    );
+    debug_assert!(
+        pl.wn.len() >= (pl.cout_p / 8) * 9 * pl.cin * 8,
+        "neon panel too short for the cout-tile walk"
+    );
+    debug_assert!(
+        pl.w32.len() >= 9 * pl.cin * pl.cout_p,
+        "scalar panel too short"
+    );
+    let need = np * pl.cout;
+    let out_len = match out {
+        StripOut::Relu(o) => o.len(),
+        StripOut::Final(o) => o.len(),
+    };
+    debug_assert!(
+        out_len >= need,
+        "strip output holds {out_len} values, needs {need}"
+    );
 }
 
 /// The valid pixel sub-range `[p_lo, p_hi)` of a strip for one
@@ -514,88 +608,96 @@ unsafe fn strip_avx2<const NT: usize>(
     cot0: usize,
     out: &mut StripOut<'_>,
 ) {
-    use std::arch::x86_64::*;
-    let cin = pl.cin;
-    let pairs = pl.cin_p / 2;
-    let tap_stride = pairs * 8; // u32 lanes per tap inside a panel
-    let panel_stride = 9 * tap_stride; // u32 lanes per cout-tile panel
-    let wt = pl.wt.as_ptr();
+    debug_assert!(cot0 + NT <= pl.cout_p / 8, "cout tile range out of bounds");
+    // SAFETY: the caller (`Avx2Kernel::conv_strip`) upholds the
+    // `# Safety` contract: AVX2 is available, the panels come from
+    // `PreparedLayer::new`, rows cover the column range, and `out`
+    // holds `np * cout` values — so every intrinsic call and raw
+    // pointer access below stays in bounds.
+    unsafe {
+        use std::arch::x86_64::*;
+        let cin = pl.cin;
+        let pairs = pl.cin_p / 2;
+        let tap_stride = pairs * 8; // u32 lanes per tap inside a panel
+        let panel_stride = 9 * tap_stride; // u32 lanes per cout-tile panel
+        let wt = pl.wt.as_ptr();
 
-    // bias-initialized register tile (np pixels x NT 8-lane groups)
-    let mut acc = [[_mm256_setzero_si256(); NT]; MK_P];
-    for accp in acc.iter_mut().take(np) {
-        for (t, a) in accp.iter_mut().enumerate() {
-            *a = _mm256_loadu_si256(
-                pl.bias_p.as_ptr().add((cot0 + t) * 8) as *const __m256i,
-            );
-        }
-    }
-
-    for (dr, rowo) in rows.rows.iter().enumerate() {
-        let Some(row) = rowo else { continue };
-        let rp = row.as_ptr();
-        for dc in 0..3usize {
-            let tap = dr * 3 + dc;
-            let vbase = x0 as isize + dc as isize - 1;
-            let (p_lo, p_hi) = tap_pixel_range(rows, vbase, np);
-            if p_lo >= p_hi {
-                continue;
+        // bias-initialized register tile (np pixels x NT 8-lane groups)
+        let mut acc = [[_mm256_setzero_si256(); NT]; MK_P];
+        for accp in acc.iter_mut().take(np) {
+            for (t, a) in accp.iter_mut().enumerate() {
+                *a = _mm256_loadu_si256(
+                    pl.bias_p.as_ptr().add((cot0 + t) * 8) as *const __m256i,
+                );
             }
-            let wtap = wt.add(cot0 * panel_stride + tap * tap_stride);
-            for ci2 in 0..pairs {
-                let mut wv = [_mm256_setzero_si256(); NT];
-                for (t, w) in wv.iter_mut().enumerate() {
-                    *w = _mm256_loadu_si256(
-                        wtap.add(t * panel_stride + ci2 * 8)
-                            as *const __m256i,
-                    );
+        }
+
+        for (dr, rowo) in rows.rows.iter().enumerate() {
+            let Some(row) = rowo else { continue };
+            let rp = row.as_ptr();
+            for dc in 0..3usize {
+                let tap = dr * 3 + dc;
+                let vbase = x0 as isize + dc as isize - 1;
+                let (p_lo, p_hi) = tap_pixel_range(rows, vbase, np);
+                if p_lo >= p_hi {
+                    continue;
                 }
-                let c0 = 2 * ci2;
-                let c1_valid = c0 + 1 < cin;
-                for p in p_lo..p_hi {
-                    let off = ((vbase + p as isize - rows.col_lo)
-                        as usize)
-                        * cin
-                        + c0;
-                    let xa = *rp.add(off) as u32;
-                    // odd-cin tail: the pair's high weight half is
-                    // zero-packed, so a zero stand-in keeps
-                    // bit-exactness without reading past the row
-                    let xb = if c1_valid {
-                        *rp.add(off + 1) as u32
-                    } else {
-                        0
-                    };
-                    if xa | xb == 0 {
-                        continue; // pair-granular post-ReLU sparsity
-                    }
-                    let xp =
-                        _mm256_set1_epi32((xa | (xb << 16)) as i32);
-                    for (t, a) in acc[p].iter_mut().enumerate() {
-                        *a = _mm256_add_epi32(
-                            *a,
-                            _mm256_madd_epi16(xp, wv[t]),
+                let wtap = wt.add(cot0 * panel_stride + tap * tap_stride);
+                for ci2 in 0..pairs {
+                    let mut wv = [_mm256_setzero_si256(); NT];
+                    for (t, w) in wv.iter_mut().enumerate() {
+                        *w = _mm256_loadu_si256(
+                            wtap.add(t * panel_stride + ci2 * 8)
+                                as *const __m256i,
                         );
                     }
+                    let c0 = 2 * ci2;
+                    let c1_valid = c0 + 1 < cin;
+                    for p in p_lo..p_hi {
+                        let off = ((vbase + p as isize - rows.col_lo)
+                            as usize)
+                            * cin
+                            + c0;
+                        let xa = *rp.add(off) as u32;
+                        // odd-cin tail: the pair's high weight half is
+                        // zero-packed, so a zero stand-in keeps
+                        // bit-exactness without reading past the row
+                        let xb = if c1_valid {
+                            *rp.add(off + 1) as u32
+                        } else {
+                            0
+                        };
+                        if xa | xb == 0 {
+                            continue; // pair-granular post-ReLU sparsity
+                        }
+                        let xp =
+                            _mm256_set1_epi32((xa | (xb << 16)) as i32);
+                        for (t, a) in acc[p].iter_mut().enumerate() {
+                            *a = _mm256_add_epi32(
+                                *a,
+                                _mm256_madd_epi16(xp, wv[t]),
+                            );
+                        }
+                    }
                 }
             }
         }
-    }
 
-    // fused epilogue: registers -> requant -> destination; the i32
-    // strip never lands in a Scratch buffer
-    let m = pl.m;
-    let cout = pl.cout;
-    let mut lanes = [0i32; 8];
-    for p in 0..np {
-        for (t, a) in acc[p].iter().enumerate() {
-            let co0 = (cot0 + t) * 8;
-            if co0 >= cout {
-                break; // fully padded tile: nothing to store
+        // fused epilogue: registers -> requant -> destination; the i32
+        // strip never lands in a Scratch buffer
+        let m = pl.m;
+        let cout = pl.cout;
+        let mut lanes = [0i32; 8];
+        for p in 0..np {
+            for (t, a) in acc[p].iter().enumerate() {
+                let co0 = (cot0 + t) * 8;
+                if co0 >= cout {
+                    break; // fully padded tile: nothing to store
+                }
+                let nco = (cout - co0).min(8);
+                _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, *a);
+                out.store(p * cout + co0, &lanes[..nco], m);
             }
-            let nco = (cout - co0).min(8);
-            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, *a);
-            out.store(p * cout + co0, &lanes[..nco], m);
         }
     }
 }
@@ -626,94 +728,106 @@ unsafe fn strip_avx512<const NT: usize>(
     cot0: usize,
     out: &mut StripOut<'_>,
 ) {
-    use std::arch::x86_64::*;
-    let cin = pl.cin;
-    let pairs = pl.cin_p / 2;
-    let tap_stride = pairs * 16; // u32 lanes per tap inside a panel
-    let panel_stride = 9 * tap_stride; // u32 lanes per cout-tile panel
-    let wt = pl.wt512.as_ptr();
-    let cout_p = pl.cout_p;
+    debug_assert!(
+        cot0 + NT <= pl.cout.next_multiple_of(16) / 16,
+        "cout tile range out of bounds"
+    );
+    // SAFETY: the caller (`Avx512Kernel::conv_strip`) upholds the
+    // `# Safety` contract: AVX-512 F+BW are available, the panels
+    // come from `PreparedLayer::new`, rows cover the column range,
+    // and `out` holds `np * cout` values — so every intrinsic call
+    // and raw pointer access below stays in bounds (bias tails are
+    // k-masked).
+    unsafe {
+        use std::arch::x86_64::*;
+        let cin = pl.cin;
+        let pairs = pl.cin_p / 2;
+        let tap_stride = pairs * 16; // u32 lanes per tap inside a panel
+        let panel_stride = 9 * tap_stride; // u32 lanes per cout-tile panel
+        let wt = pl.wt512.as_ptr();
+        let cout_p = pl.cout_p;
 
-    // bias-initialized register tile; a trailing half tile (cout_p is
-    // a multiple of 8, not 16) masks its load so no lane touches
-    // memory past bias_p
-    let mut acc = [[_mm512_setzero_si512(); NT]; MK_P_AVX512];
-    for accp in acc.iter_mut().take(np) {
-        for (t, a) in accp.iter_mut().enumerate() {
-            let co0 = (cot0 + t) * 16;
-            let nbl = cout_p.saturating_sub(co0).min(16);
-            let k: __mmask16 =
-                if nbl >= 16 { !0 } else { (1u16 << nbl) - 1 };
-            *a = _mm512_maskz_loadu_epi32(
-                k,
-                pl.bias_p.as_ptr().add(co0),
-            );
-        }
-    }
-
-    for (dr, rowo) in rows.rows.iter().enumerate() {
-        let Some(row) = rowo else { continue };
-        let rp = row.as_ptr();
-        for dc in 0..3usize {
-            let tap = dr * 3 + dc;
-            let vbase = x0 as isize + dc as isize - 1;
-            let (p_lo, p_hi) = tap_pixel_range(rows, vbase, np);
-            if p_lo >= p_hi {
-                continue;
+        // bias-initialized register tile; a trailing half tile (cout_p is
+        // a multiple of 8, not 16) masks its load so no lane touches
+        // memory past bias_p
+        let mut acc = [[_mm512_setzero_si512(); NT]; MK_P_AVX512];
+        for accp in acc.iter_mut().take(np) {
+            for (t, a) in accp.iter_mut().enumerate() {
+                let co0 = (cot0 + t) * 16;
+                let nbl = cout_p.saturating_sub(co0).min(16);
+                let k: __mmask16 =
+                    if nbl >= 16 { !0 } else { (1u16 << nbl) - 1 };
+                *a = _mm512_maskz_loadu_epi32(
+                    k,
+                    pl.bias_p.as_ptr().add(co0),
+                );
             }
-            let wtap = wt.add(cot0 * panel_stride + tap * tap_stride);
-            for ci2 in 0..pairs {
-                let mut wv = [_mm512_setzero_si512(); NT];
-                for (t, w) in wv.iter_mut().enumerate() {
-                    *w = core::ptr::read_unaligned(
-                        wtap.add(t * panel_stride + ci2 * 16)
-                            as *const __m512i,
-                    );
+        }
+
+        for (dr, rowo) in rows.rows.iter().enumerate() {
+            let Some(row) = rowo else { continue };
+            let rp = row.as_ptr();
+            for dc in 0..3usize {
+                let tap = dr * 3 + dc;
+                let vbase = x0 as isize + dc as isize - 1;
+                let (p_lo, p_hi) = tap_pixel_range(rows, vbase, np);
+                if p_lo >= p_hi {
+                    continue;
                 }
-                let c0 = 2 * ci2;
-                let c1_valid = c0 + 1 < cin;
-                for p in p_lo..p_hi {
-                    let off = ((vbase + p as isize - rows.col_lo)
-                        as usize)
-                        * cin
-                        + c0;
-                    let xa = *rp.add(off) as u32;
-                    let xb = if c1_valid {
-                        *rp.add(off + 1) as u32
-                    } else {
-                        0 // odd-cin: zero-packed weight half
-                    };
-                    if xa | xb == 0 {
-                        continue; // pair-granular post-ReLU sparsity
-                    }
-                    let xp =
-                        _mm512_set1_epi32((xa | (xb << 16)) as i32);
-                    for (t, a) in acc[p].iter_mut().enumerate() {
-                        *a = _mm512_add_epi32(
-                            *a,
-                            _mm512_madd_epi16(xp, wv[t]),
+                let wtap = wt.add(cot0 * panel_stride + tap * tap_stride);
+                for ci2 in 0..pairs {
+                    let mut wv = [_mm512_setzero_si512(); NT];
+                    for (t, w) in wv.iter_mut().enumerate() {
+                        *w = core::ptr::read_unaligned(
+                            wtap.add(t * panel_stride + ci2 * 16)
+                                as *const __m512i,
                         );
                     }
+                    let c0 = 2 * ci2;
+                    let c1_valid = c0 + 1 < cin;
+                    for p in p_lo..p_hi {
+                        let off = ((vbase + p as isize - rows.col_lo)
+                            as usize)
+                            * cin
+                            + c0;
+                        let xa = *rp.add(off) as u32;
+                        let xb = if c1_valid {
+                            *rp.add(off + 1) as u32
+                        } else {
+                            0 // odd-cin: zero-packed weight half
+                        };
+                        if xa | xb == 0 {
+                            continue; // pair-granular post-ReLU sparsity
+                        }
+                        let xp =
+                            _mm512_set1_epi32((xa | (xb << 16)) as i32);
+                        for (t, a) in acc[p].iter_mut().enumerate() {
+                            *a = _mm512_add_epi32(
+                                *a,
+                                _mm512_madd_epi16(xp, wv[t]),
+                            );
+                        }
+                    }
                 }
             }
         }
-    }
 
-    let m = pl.m;
-    let cout = pl.cout;
-    let mut lanes = [0i32; 16];
-    for (p, accp) in acc.iter().enumerate().take(np) {
-        for (t, a) in accp.iter().enumerate() {
-            let co0 = (cot0 + t) * 16;
-            if co0 >= cout {
-                break; // fully padded tile: nothing to store
+        let m = pl.m;
+        let cout = pl.cout;
+        let mut lanes = [0i32; 16];
+        for (p, accp) in acc.iter().enumerate().take(np) {
+            for (t, a) in accp.iter().enumerate() {
+                let co0 = (cot0 + t) * 16;
+                if co0 >= cout {
+                    break; // fully padded tile: nothing to store
+                }
+                let nco = (cout - co0).min(16);
+                core::ptr::write_unaligned(
+                    lanes.as_mut_ptr() as *mut __m512i,
+                    *a,
+                );
+                out.store(p * cout + co0, &lanes[..nco], m);
             }
-            let nco = (cout - co0).min(16);
-            core::ptr::write_unaligned(
-                lanes.as_mut_ptr() as *mut __m512i,
-                *a,
-            );
-            out.store(p * cout + co0, &lanes[..nco], m);
         }
     }
 }
@@ -750,77 +864,85 @@ unsafe fn strip_neon<const NT: usize>(
     cot0: usize,
     out: &mut StripOut<'_>,
 ) {
-    use std::arch::aarch64::*;
-    let cin = pl.cin;
-    let tap_stride = cin * 8; // i16 lanes per tap inside a panel
-    let panel_stride = 9 * tap_stride; // i16 lanes per cout-tile panel
-    let wn = pl.wn.as_ptr();
+    debug_assert!(cot0 + NT <= pl.cout_p / 8, "cout tile range out of bounds");
+    // SAFETY: the caller (`NeonKernel::conv_strip`) upholds the
+    // `# Safety` contract: NEON is available, the panels come from
+    // `PreparedLayer::new`, rows cover the column range, and `out`
+    // holds `np * cout` values — so every intrinsic call and raw
+    // pointer access below stays in bounds.
+    unsafe {
+        use std::arch::aarch64::*;
+        let cin = pl.cin;
+        let tap_stride = cin * 8; // i16 lanes per tap inside a panel
+        let panel_stride = 9 * tap_stride; // i16 lanes per cout-tile panel
+        let wn = pl.wn.as_ptr();
 
-    // bias-initialized register tile: np pixels x NT tiles x two
-    // int32x4_t halves per 8-lane tile
-    let mut acc = [[[vdupq_n_s32(0); 2]; NT]; MK_P];
-    for accp in acc.iter_mut().take(np) {
-        for (t, a) in accp.iter_mut().enumerate() {
-            let b = pl.bias_p.as_ptr().add((cot0 + t) * 8);
-            a[0] = vld1q_s32(b);
-            a[1] = vld1q_s32(b.add(4));
-        }
-    }
-
-    for (dr, rowo) in rows.rows.iter().enumerate() {
-        let Some(row) = rowo else { continue };
-        let rp = row.as_ptr();
-        for dc in 0..3usize {
-            let tap = dr * 3 + dc;
-            let vbase = x0 as isize + dc as isize - 1;
-            let (p_lo, p_hi) = tap_pixel_range(rows, vbase, np);
-            if p_lo >= p_hi {
-                continue;
-            }
-            let wtap = wn.add(cot0 * panel_stride + tap * tap_stride);
-            for ci in 0..cin {
-                let mut wv = [vdupq_n_s16(0); NT];
-                for (t, w) in wv.iter_mut().enumerate() {
-                    *w = vld1q_s16(wtap.add(t * panel_stride + ci * 8));
-                }
-                for p in p_lo..p_hi {
-                    let off = ((vbase + p as isize - rows.col_lo)
-                        as usize)
-                        * cin
-                        + ci;
-                    let xv = *rp.add(off);
-                    if xv == 0 {
-                        continue; // post-ReLU sparsity
-                    }
-                    // u8 fits i16 exactly; the widening MAC's i32
-                    // product equals the scalar kernel's
-                    let xd = vdupq_n_s16(xv as i16);
-                    for (t, a) in acc[p].iter_mut().enumerate() {
-                        a[0] = vmlal_s16(
-                            a[0],
-                            vget_low_s16(wv[t]),
-                            vget_low_s16(xd),
-                        );
-                        a[1] = vmlal_high_s16(a[1], wv[t], xd);
-                    }
-                }
+        // bias-initialized register tile: np pixels x NT tiles x two
+        // int32x4_t halves per 8-lane tile
+        let mut acc = [[[vdupq_n_s32(0); 2]; NT]; MK_P];
+        for accp in acc.iter_mut().take(np) {
+            for (t, a) in accp.iter_mut().enumerate() {
+                let b = pl.bias_p.as_ptr().add((cot0 + t) * 8);
+                a[0] = vld1q_s32(b);
+                a[1] = vld1q_s32(b.add(4));
             }
         }
-    }
 
-    let m = pl.m;
-    let cout = pl.cout;
-    let mut lanes = [0i32; 8];
-    for (p, accp) in acc.iter().enumerate().take(np) {
-        for (t, a) in accp.iter().enumerate() {
-            let co0 = (cot0 + t) * 8;
-            if co0 >= cout {
-                break; // fully padded tile: nothing to store
+        for (dr, rowo) in rows.rows.iter().enumerate() {
+            let Some(row) = rowo else { continue };
+            let rp = row.as_ptr();
+            for dc in 0..3usize {
+                let tap = dr * 3 + dc;
+                let vbase = x0 as isize + dc as isize - 1;
+                let (p_lo, p_hi) = tap_pixel_range(rows, vbase, np);
+                if p_lo >= p_hi {
+                    continue;
+                }
+                let wtap = wn.add(cot0 * panel_stride + tap * tap_stride);
+                for ci in 0..cin {
+                    let mut wv = [vdupq_n_s16(0); NT];
+                    for (t, w) in wv.iter_mut().enumerate() {
+                        *w = vld1q_s16(wtap.add(t * panel_stride + ci * 8));
+                    }
+                    for p in p_lo..p_hi {
+                        let off = ((vbase + p as isize - rows.col_lo)
+                            as usize)
+                            * cin
+                            + ci;
+                        let xv = *rp.add(off);
+                        if xv == 0 {
+                            continue; // post-ReLU sparsity
+                        }
+                        // u8 fits i16 exactly; the widening MAC's i32
+                        // product equals the scalar kernel's
+                        let xd = vdupq_n_s16(xv as i16);
+                        for (t, a) in acc[p].iter_mut().enumerate() {
+                            a[0] = vmlal_s16(
+                                a[0],
+                                vget_low_s16(wv[t]),
+                                vget_low_s16(xd),
+                            );
+                            a[1] = vmlal_high_s16(a[1], wv[t], xd);
+                        }
+                    }
+                }
             }
-            let nco = (cout - co0).min(8);
-            vst1q_s32(lanes.as_mut_ptr(), a[0]);
-            vst1q_s32(lanes.as_mut_ptr().add(4), a[1]);
-            out.store(p * cout + co0, &lanes[..nco], m);
+        }
+
+        let m = pl.m;
+        let cout = pl.cout;
+        let mut lanes = [0i32; 8];
+        for (p, accp) in acc.iter().enumerate().take(np) {
+            for (t, a) in accp.iter().enumerate() {
+                let co0 = (cot0 + t) * 8;
+                if co0 >= cout {
+                    break; // fully padded tile: nothing to store
+                }
+                let nco = (cout - co0).min(8);
+                vst1q_s32(lanes.as_mut_ptr(), a[0]);
+                vst1q_s32(lanes.as_mut_ptr().add(4), a[1]);
+                out.store(p * cout + co0, &lanes[..nco], m);
+            }
         }
     }
 }

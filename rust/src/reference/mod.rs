@@ -68,6 +68,8 @@ pub fn forward_int_prepared(
     }
     let pre = {
         let input = h.as_ref().unwrap_or(x);
+        // PANIC: PreparedModel::new rejects empty models, so there is
+        // always a last (final, non-ReLU) layer.
         conv3x3_final_prepared(input, pm.layers.last().unwrap(), scratch)
     };
     if let Some(old) = h {
@@ -217,6 +219,8 @@ pub fn forward_layers(
     }
     let pre = {
         let input = outs.last().unwrap_or(x);
+        // PANIC: PreparedModel::new rejects empty models, so there is
+        // always a last (final, non-ReLU) layer.
         conv3x3_final_prepared(input, pm.layers.last().unwrap(), &mut scratch)
     };
     (outs, pre)

@@ -1,0 +1,29 @@
+//! Self-check: the real tree passes `sr-lint` clean.
+//!
+//! This is the same walk the `sr-lint` binary performs (src, benches,
+//! tests), run from `cargo test` so the static-analysis gate cannot
+//! silently drift from CI: a new naked `unwrap()` in `coordinator/`
+//! or a stray `unsafe` outside the kernel allowlist fails the normal
+//! test suite, not just the dedicated lint job.
+
+use sr_accel::lint::{default_roots, lint_tree};
+
+#[test]
+fn tree_is_lint_clean() {
+    let report = lint_tree(&default_roots()).expect("tree walk failed");
+    let rendered: Vec<String> =
+        report.diagnostics.iter().map(|d| d.to_string()).collect();
+    assert!(
+        rendered.is_empty(),
+        "sr-lint found {} violation(s):\n{}",
+        rendered.len(),
+        rendered.join("\n")
+    );
+    // A broken `default_roots` that walks nothing must not masquerade
+    // as a clean tree; the crate has far more than 40 .rs files.
+    assert!(
+        report.files >= 40,
+        "suspiciously few files scanned: {}",
+        report.files
+    );
+}
