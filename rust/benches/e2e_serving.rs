@@ -24,13 +24,13 @@ use sr_accel::benchkit::{
     black_box, smoke_requested, BenchJson, BenchRecord, Bencher,
 };
 use sr_accel::config::{
-    AcceleratorConfig, ExecutorKind, HaloPolicy, RtPolicy, ShardPlan,
-    StreamSpec,
+    AcceleratorConfig, ExecutorKind, HaloPolicy, RestartPolicy, RtPolicy,
+    ShardPlan, StreamSpec,
 };
 use sr_accel::coordinator::{
     engine::model_for_scale, run_pipeline, serve_multi, Engine,
-    EngineFactory, Int8Engine, MultiServeConfig, PipelineConfig,
-    ScaleEngineFactory, SimEngine,
+    EngineFactory, FaultPlan, Int8Engine, MultiServeConfig,
+    PipelineConfig, ScaleEngineFactory, SimEngine,
 };
 use sr_accel::image::SceneGenerator;
 use sr_accel::model::{
@@ -86,12 +86,17 @@ fn main() {
                 scale: 3,
                 shard,
                 model_layers,
+                restart: RestartPolicy::none(),
+                inject: FaultPlan::default(),
             };
             let factories: Vec<EngineFactory> = (0..workers)
                 .map(|_| {
                     let qmc = qm.clone();
                     Box::new(move || {
-                        Ok(Box::new(Int8Engine::new(qmc)) as Box<dyn Engine>)
+                        // clone *inside*: the supervisor may call the
+                        // factory again after a restart
+                        Ok(Box::new(Int8Engine::new(qmc.clone()))
+                            as Box<dyn Engine>)
                     }) as EngineFactory
                 })
                 .collect();
@@ -198,6 +203,8 @@ fn main() {
             scale: 3,
             shard: ShardPlan::whole_frame(),
             model_layers,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
         };
         // the tilted/streaming ratio is CI-gated, so never record a
         // ratio of two single pipeline samples (same rule as the gated
@@ -236,8 +243,10 @@ fn main() {
         let sim_factory = |executor: ExecutorKind| -> EngineFactory {
             let qmc = qm.clone();
             Box::new(move || {
+                // clone *inside*: the supervisor may call the factory
+                // again after a restart
                 Ok(Box::new(SimEngine::with_executor(
-                    qmc,
+                    qmc.clone(),
                     AcceleratorConfig::paper(),
                     executor,
                 )) as Box<dyn Engine>)
@@ -246,8 +255,10 @@ fn main() {
         let int8_factory = |executor: ExecutorKind| -> EngineFactory {
             let qmc = qm.clone();
             Box::new(move || {
-                Ok(Box::new(Int8Engine::with_executor(qmc, executor))
-                    as Box<dyn Engine>)
+                Ok(Box::new(Int8Engine::with_executor(
+                    qmc.clone(),
+                    executor,
+                )) as Box<dyn Engine>)
             })
         };
         let tilted_fps = measure("tilted executor", &|| {
@@ -310,6 +321,8 @@ fn main() {
                 queue_depth: 2,
                 policy,
                 seed: 7,
+                restart: RestartPolicy::none(),
+                inject: FaultPlan::default(),
             };
             let factories: Vec<ScaleEngineFactory> = (0..mworkers)
                 .map(|_| {
@@ -370,6 +383,103 @@ fn main() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => {
             eprintln!("failed to write BENCH_serving_multi.json: {e}");
+            std::process::exit(1);
+        }
+    }
+
+    // ---- overload sweep (§Fault tolerance & degradation): an
+    //      undersized pool (1 worker, 1 queue slot, 3 fast sources)
+    //      with a deadline in the noise floor, swept across the three
+    //      real-time policies.  Emits BENCH_serving_degrade.json with
+    //      goodput / p95 / drop rate / degrade rate per policy; CI
+    //      gates on the ISSUE 9 acceptance pair (Degrade goodput
+    //      strictly above DropLate, zero undelivered under Degrade),
+    //      asserted here too so a bare `cargo bench` catches it. ------
+    let mut djson = BenchJson::new("serving_degrade");
+    {
+        let deadline_ms = 0.25;
+        let streams = StreamSpec::parse_list(&spec_pool[..3].join(","))
+            .expect("bench stream specs");
+        let dframes = if smoke { 4 } else { 12 };
+        let mut goodput_of = |policy: RtPolicy, tag: &str| -> f64 {
+            let cfg = MultiServeConfig {
+                streams: streams.clone(),
+                frames: dframes,
+                workers: 1,
+                queue_depth: 1,
+                policy,
+                seed: 7,
+                restart: RestartPolicy::none(),
+                inject: FaultPlan::default(),
+            };
+            let factories: Vec<ScaleEngineFactory> = (0..1)
+                .map(|_| {
+                    let qmc = qm.clone();
+                    Box::new(move |scale: usize| {
+                        let qm = model_for_scale(Some(&qmc), scale);
+                        Ok(Box::new(Int8Engine::new(qm))
+                            as Box<dyn Engine>)
+                    }) as ScaleEngineFactory
+                })
+                .collect();
+            let rep = serve_multi(&cfg, factories, |_, _, _| {})
+                .expect("overload sweep serve failed");
+            let offered: usize =
+                rep.streams.iter().map(|s| s.meta.offered).sum();
+            assert_eq!(offered, dframes * 3, "sources must run to end");
+            assert_eq!(
+                offered,
+                rep.frames + rep.dropped + rep.incomplete,
+                "every offered frame accounted for"
+            );
+            let goodput = rep.frames as f64 / offered.max(1) as f64;
+            println!(
+                "--- serving_degrade: {tag}: goodput {:.3} \
+                 ({}/{offered} delivered, {} dropped, {} degraded) ---",
+                goodput, rep.frames, rep.dropped, rep.degraded
+            );
+            djson.push(BenchRecord {
+                name: format!("serving_degrade {tag}"),
+                ns_per_iter: rep.wall.as_nanos() as f64
+                    / rep.frames.max(1) as f64,
+                mp_per_s: Some(rep.mpix_per_s),
+                macs_per_s: None,
+            });
+            djson.push_extra(&format!("goodput_{tag}"), goodput);
+            djson.push_extra(
+                &format!("p95_latency_ms_{tag}"),
+                rep.latency_ms.percentile(95.0),
+            );
+            djson.push_extra(&format!("drop_rate_{tag}"), rep.drop_rate);
+            djson.push_extra(
+                &format!("degrade_rate_{tag}"),
+                rep.degrade_rate,
+            );
+            if matches!(policy, RtPolicy::Degrade { .. }) {
+                assert_eq!(
+                    rep.dropped + rep.incomplete,
+                    0,
+                    "degrade must leave zero frames undelivered"
+                );
+            }
+            goodput
+        };
+        let _ = goodput_of(RtPolicy::BestEffort, "best_effort");
+        let g_drop =
+            goodput_of(RtPolicy::DropLate { deadline_ms }, "drop");
+        let g_degrade =
+            goodput_of(RtPolicy::Degrade { deadline_ms }, "degrade");
+        assert!(
+            g_degrade > g_drop,
+            "degrade goodput ({g_degrade:.3}) must strictly beat \
+             drop-late ({g_drop:.3}) under overload"
+        );
+        djson.push_extra("deadline_ms", deadline_ms);
+    }
+    match djson.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_serving_degrade.json: {e}");
             std::process::exit(1);
         }
     }

@@ -104,13 +104,25 @@ COMMANDS:
               config [run] executor overrides globally)
              --plan-cache PATH (autotuned plans; omitted shard/executor
               knobs resolve from the cache for the int8 engine)
+             --restart-max N --restart-backoff-ms F
+             --restart-backoff-cap-ms F (worker supervision: restarts
+              allowed per worker + capped exponential backoff;
+              --restart-max 0 makes the first failure fatal)
+             --inject PLAN (deterministic faults, e.g.
+              w0:panic@2,w1:error@0,w1:stall:50@3 — worker W's K-th
+              engine call panics / errors / stalls MS ms)
   serve-multi  run N concurrent streams over one shared worker pool
              --streams SPEC[,SPEC...] with SPEC = GEOM@xS[@FPS]
              (GEOM = WxH or 270p|360p|540p|720p|1080p; e.g.
               360p@x3,270p@x4@30,960x540@x2)
              --engine int8|sim  --frames N (per stream)  --workers N
-             --queue-depth N  --policy best-effort|drop:MS  --seed N
+             --queue-depth N  --seed N
+             --policy best-effort|drop:MS|degrade:MS (drop sheds late
+              frames; degrade downshifts them to bilinear instead and
+              recovers after a streak of on-time frames)
              --executor tilted|streaming  --plan-cache PATH
+             --restart-max N --restart-backoff-ms F
+             --restart-backoff-cap-ms F  --inject PLAN (as in serve)
   tune       search execution plans for one serving geometry and cache
              the measured winner (keyed by geometry, scale, ISA and
              worker count; serve applies it on later runs)

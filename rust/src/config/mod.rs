@@ -10,9 +10,10 @@ mod types;
 
 pub use parser::{parse_toml, ParseError, Value};
 pub use types::{
-    AcceleratorConfig, ExecutorKind, FidelityKind, FusionKind, HaloPolicy,
-    ModelConfig, RtPolicy, RunConfig, ServeConfig, ShardPlan, ShardStrategy,
-    SimConfig, StreamSpec, SystemConfig, TuneConfig, WorkerAffinity,
+    checked_ms, clamped_ms_duration, AcceleratorConfig, ExecutorKind,
+    FidelityKind, FusionKind, HaloPolicy, ModelConfig, RestartPolicy,
+    RtPolicy, RunConfig, ServeConfig, ShardPlan, ShardStrategy, SimConfig,
+    StreamSpec, SystemConfig, TuneConfig, WorkerAffinity, MS_ABSURD_CAP,
 };
 
 #[cfg(test)]

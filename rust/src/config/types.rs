@@ -1,6 +1,51 @@
 //! Typed configuration structs with the paper's numbers as defaults.
 
+use std::time::Duration;
+
 use super::parser::{parse_toml, ParseError, Value};
+use crate::coordinator::faults::FaultPlan;
+
+/// Upper bound for any millisecond-denominated knob: 1e12 ms = 1e9 s,
+/// the same ceiling [`clamped_ms_duration`] clamps to so that
+/// `Instant + Duration` arithmetic can never overflow.
+pub const MS_ABSURD_CAP: f64 = 1e12;
+
+/// Shared rejection path for millisecond-denominated knobs (real-time
+/// deadlines, restart backoffs): non-finite, wrong-signed and absurdly
+/// large values are config errors, not runtime surprises.  `"inf"` and
+/// `"NaN"` parse as valid f64, so the finiteness check is load-bearing.
+pub fn checked_ms(
+    v: f64,
+    what: &str,
+    allow_zero: bool,
+) -> Result<f64, String> {
+    if !v.is_finite() {
+        return Err(format!("{what} must be finite, got {v}"));
+    }
+    if v < 0.0 || (!allow_zero && v == 0.0) {
+        let bound = if allow_zero { ">= 0" } else { "> 0" };
+        return Err(format!("{what} must be {bound} ms, got {v}"));
+    }
+    if v > MS_ABSURD_CAP {
+        return Err(format!(
+            "{what} of {v} ms is absurd (cap {MS_ABSURD_CAP} ms)"
+        ));
+    }
+    Ok(v)
+}
+
+/// Total (never-panicking) milliseconds-to-`Duration` conversion for
+/// directly constructed policies that bypassed [`checked_ms`]: NaN maps
+/// to zero and the result is clamped to `[0, 1e9]` seconds so adding it
+/// to an `Instant` cannot overflow.
+pub fn clamped_ms_duration(ms: f64) -> Duration {
+    let secs = if ms.is_nan() {
+        0.0
+    } else {
+        (ms / 1e3).clamp(0.0, 1e9)
+    };
+    Duration::from_secs_f64(secs)
+}
 
 /// Accelerator geometry (Section III of the paper).
 #[derive(Clone, Debug, PartialEq)]
@@ -369,36 +414,121 @@ pub enum RtPolicy {
         /// Frame deadline in milliseconds from source emission.
         deadline_ms: f64,
     },
+    /// Degrade quality instead of shedding: admission blocks like
+    /// `BestEffort` (no frame is ever lost), and a frame that has
+    /// outlived `emitted + deadline_ms` at dequeue is served through
+    /// the cheap integer bilinear path instead of the full model.
+    /// Degraded frames are counted per stream (`degraded` /
+    /// `degrade_rate`); hysteresis requires a run of on-time frames
+    /// before a stream returns to full quality, so the policy doesn't
+    /// flap around the deadline.
+    Degrade {
+        /// Frame deadline in milliseconds from source emission.
+        deadline_ms: f64,
+    },
 }
 
 impl RtPolicy {
-    /// `best-effort` (alias `block`) or `drop:<deadline ms>`
-    /// (e.g. `drop:16.7` for a 60 fps display budget).
+    /// `best-effort` (alias `block`), `drop:<deadline ms>` (e.g.
+    /// `drop:16.7` for a 60 fps display budget), or
+    /// `degrade:<deadline ms>` (same budget, bilinear downshift
+    /// instead of a drop).
     ///
-    /// The deadline must be finite and strictly positive: f64 parsing
-    /// accepts `"inf"`/`"NaN"`, and a non-finite or zero deadline
-    /// would either panic in the server's `Duration` conversion or
-    /// declare every frame late at emission — reject all of them here,
-    /// which covers both the `[serve]` config path and the `--policy`
-    /// CLI path (both funnel through this parse).
+    /// The deadline must be finite, strictly positive and below the
+    /// absurdity cap — the same [`checked_ms`] rejection path the
+    /// restart-policy knobs use, covering both the `[serve]` config
+    /// path and the `--policy` CLI path (both funnel through here).
     pub fn parse(s: &str) -> Option<Self> {
         if s == "best-effort" || s == "block" {
             return Some(Self::BestEffort);
         }
-        let ms = s.strip_prefix("drop:")?;
-        let v: f64 = ms.parse().ok()?;
-        if v.is_finite() && v > 0.0 {
-            Some(Self::DropLate { deadline_ms: v })
-        } else {
-            None
+        if let Some(ms) = s.strip_prefix("drop:") {
+            let v: f64 = ms.parse().ok()?;
+            let v = checked_ms(v, "drop deadline", false).ok()?;
+            return Some(Self::DropLate { deadline_ms: v });
         }
+        let ms = s.strip_prefix("degrade:")?;
+        let v: f64 = ms.parse().ok()?;
+        let v = checked_ms(v, "degrade deadline", false).ok()?;
+        Some(Self::Degrade { deadline_ms: v })
     }
 
     pub fn name(&self) -> String {
         match self {
             Self::BestEffort => "best-effort".into(),
             Self::DropLate { deadline_ms } => format!("drop:{deadline_ms}"),
+            Self::Degrade { deadline_ms } => format!("degrade:{deadline_ms}"),
         }
+    }
+
+    /// The frame deadline, when the policy has one.
+    pub fn deadline_ms(&self) -> Option<f64> {
+        match self {
+            Self::BestEffort => None,
+            Self::DropLate { deadline_ms } | Self::Degrade { deadline_ms } => {
+                Some(*deadline_ms)
+            }
+        }
+    }
+}
+
+/// Worker supervision policy of the serving tier: how many times a
+/// dead worker (engine panic, engine error or failed rebuild) is
+/// respawned with a fresh engine, under capped exponential backoff.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RestartPolicy {
+    /// Restarts allowed per worker before it gives up, hands its
+    /// in-flight work back to the surviving pool, and dies for good.
+    /// 0 = the pre-supervision behaviour (first failure is fatal).
+    pub max_restarts: usize,
+    /// First-restart backoff in milliseconds; doubles per restart.
+    pub backoff_base_ms: f64,
+    /// Backoff ceiling in milliseconds.
+    pub backoff_cap_ms: f64,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        Self {
+            max_restarts: 2,
+            backoff_base_ms: 25.0,
+            backoff_cap_ms: 1000.0,
+        }
+    }
+}
+
+impl RestartPolicy {
+    /// Supervision disabled: any worker failure is final.
+    pub fn none() -> Self {
+        Self {
+            max_restarts: 0,
+            backoff_base_ms: 0.0,
+            backoff_cap_ms: 0.0,
+        }
+    }
+
+    /// Validate every knob through the same rejection path the
+    /// real-time deadlines use ([`checked_ms`]); zero backoff is legal
+    /// (restart immediately), a zero cap just clamps every backoff.
+    pub fn validated(self) -> Result<Self, String> {
+        checked_ms(self.backoff_base_ms, "restart backoff base", true)?;
+        checked_ms(self.backoff_cap_ms, "restart backoff cap", true)?;
+        if self.max_restarts > 1_000_000 {
+            return Err(format!(
+                "restart max of {} is absurd (cap 1000000)",
+                self.max_restarts
+            ));
+        }
+        Ok(self)
+    }
+
+    /// Backoff before restart number `attempt` (1-based):
+    /// `min(base * 2^(attempt-1), cap)`.
+    pub fn backoff(&self, attempt: usize) -> Duration {
+        let doublings = attempt.saturating_sub(1).min(62) as i32;
+        let ms = (self.backoff_base_ms * 2f64.powi(doublings))
+            .min(self.backoff_cap_ms);
+        clamped_ms_duration(ms)
     }
 }
 
@@ -547,6 +677,10 @@ pub struct ServeConfig {
     pub policy: RtPolicy,
     /// Streams served by `serve-multi` when the CLI gives none.
     pub streams: Vec<StreamSpec>,
+    /// Worker supervision (restart/backoff) policy.
+    pub restart: RestartPolicy,
+    /// Deterministic fault-injection plan (empty = no faults).
+    pub inject: FaultPlan,
 }
 
 impl Default for ServeConfig {
@@ -560,6 +694,8 @@ impl Default for ServeConfig {
             shard: ShardPlan::whole_frame(),
             policy: RtPolicy::BestEffort,
             streams: Vec::new(),
+            restart: RestartPolicy::default(),
+            inject: FaultPlan::default(),
         }
     }
 }
@@ -730,9 +866,33 @@ fn apply(cfg: &mut SystemConfig, v: &Value) -> Result<(), ParseError> {
     if let Some(s) = v.get_str("serve.policy") {
         cfg.serve.policy = RtPolicy::parse(s).ok_or_else(|| {
             perr(format!(
-                "unknown serve.policy {s:?} (best-effort|drop:MS)"
+                "unknown serve.policy {s:?} \
+                 (best-effort|drop:MS|degrade:MS)"
             ))
         })?;
+    }
+    if let Some(x) = v.get_i64("serve.restart_max") {
+        if x < 0 {
+            return Err(perr(format!(
+                "serve.restart_max must be >= 0, got {x}"
+            )));
+        }
+        cfg.serve.restart.max_restarts = x as usize;
+    }
+    if let Some(x) = v.get_f64("serve.restart_backoff_ms") {
+        cfg.serve.restart.backoff_base_ms = x;
+    }
+    if let Some(x) = v.get_f64("serve.restart_backoff_cap_ms") {
+        cfg.serve.restart.backoff_cap_ms = x;
+    }
+    cfg.serve.restart = cfg
+        .serve
+        .restart
+        .validated()
+        .map_err(|e| perr(format!("serve.restart_*: {e}")))?;
+    if let Some(s) = v.get_str("serve.inject") {
+        cfg.serve.inject = FaultPlan::parse(s)
+            .map_err(|e| perr(format!("serve.inject: {e}")))?;
     }
     match v.get("run.executor") {
         None => {}
@@ -1050,10 +1210,143 @@ mod tests {
             RtPolicy::DropLate { deadline_ms: 16.7 }.name(),
             "drop:16.7"
         );
+        // degrade shares the same deadline grammar and rejections
+        assert_eq!(
+            RtPolicy::parse("degrade:16.7"),
+            Some(RtPolicy::Degrade { deadline_ms: 16.7 })
+        );
+        assert_eq!(RtPolicy::parse("degrade:0"), None);
+        assert_eq!(RtPolicy::parse("degrade:-1"), None);
+        assert_eq!(RtPolicy::parse("degrade:inf"), None);
+        assert_eq!(RtPolicy::parse("degrade:NaN"), None);
+        assert_eq!(RtPolicy::parse("degrade:"), None);
+        // absurdly large deadlines fail the shared checked_ms cap
+        assert_eq!(RtPolicy::parse("drop:1e13"), None);
+        assert_eq!(RtPolicy::parse("degrade:1e13"), None);
         // name() round-trips through parse()
-        for p in [RtPolicy::BestEffort, RtPolicy::DropLate { deadline_ms: 5.0 }]
-        {
+        for p in [
+            RtPolicy::BestEffort,
+            RtPolicy::DropLate { deadline_ms: 5.0 },
+            RtPolicy::Degrade { deadline_ms: 8.0 },
+        ] {
             assert_eq!(RtPolicy::parse(&p.name()), Some(p));
+        }
+        // the deadline accessor sees through both deadline policies
+        assert_eq!(RtPolicy::BestEffort.deadline_ms(), None);
+        assert_eq!(
+            RtPolicy::DropLate { deadline_ms: 5.0 }.deadline_ms(),
+            Some(5.0)
+        );
+        assert_eq!(
+            RtPolicy::Degrade { deadline_ms: 8.0 }.deadline_ms(),
+            Some(8.0)
+        );
+    }
+
+    #[test]
+    fn checked_ms_shared_rejection_path() {
+        assert!(checked_ms(5.0, "x", false).is_ok());
+        assert!(checked_ms(0.0, "x", true).is_ok());
+        assert!(checked_ms(0.0, "x", false).is_err());
+        assert!(checked_ms(-1.0, "x", true).is_err());
+        assert!(checked_ms(f64::NAN, "x", true).is_err());
+        assert!(checked_ms(f64::INFINITY, "x", true).is_err());
+        assert!(checked_ms(MS_ABSURD_CAP, "x", false).is_ok());
+        assert!(checked_ms(MS_ABSURD_CAP * 2.0, "x", false).is_err());
+    }
+
+    #[test]
+    fn clamped_ms_duration_is_total() {
+        assert_eq!(clamped_ms_duration(f64::NAN), Duration::ZERO);
+        assert_eq!(clamped_ms_duration(-5.0), Duration::ZERO);
+        assert_eq!(clamped_ms_duration(f64::NEG_INFINITY), Duration::ZERO);
+        assert_eq!(
+            clamped_ms_duration(f64::INFINITY),
+            Duration::from_secs(1_000_000_000)
+        );
+        assert_eq!(clamped_ms_duration(250.0), Duration::from_millis(250));
+    }
+
+    #[test]
+    fn restart_policy_backoff_is_capped_exponential() {
+        let p = RestartPolicy {
+            max_restarts: 5,
+            backoff_base_ms: 10.0,
+            backoff_cap_ms: 35.0,
+        };
+        assert_eq!(p.backoff(1), Duration::from_millis(10));
+        assert_eq!(p.backoff(2), Duration::from_millis(20));
+        assert_eq!(p.backoff(3), Duration::from_millis(35)); // capped
+        assert_eq!(p.backoff(100), Duration::from_millis(35));
+        // huge attempt counts can't overflow the doubling
+        assert_eq!(p.backoff(usize::MAX), Duration::from_millis(35));
+        let none = RestartPolicy::none();
+        assert_eq!(none.max_restarts, 0);
+        assert_eq!(none.backoff(1), Duration::ZERO);
+    }
+
+    #[test]
+    fn restart_policy_validation_shares_checked_ms() {
+        assert!(RestartPolicy::default().validated().is_ok());
+        assert!(RestartPolicy::none().validated().is_ok());
+        for bad in [
+            RestartPolicy {
+                backoff_base_ms: f64::NAN,
+                ..RestartPolicy::default()
+            },
+            RestartPolicy {
+                backoff_base_ms: -1.0,
+                ..RestartPolicy::default()
+            },
+            RestartPolicy {
+                backoff_cap_ms: f64::INFINITY,
+                ..RestartPolicy::default()
+            },
+            RestartPolicy {
+                backoff_cap_ms: MS_ABSURD_CAP * 10.0,
+                ..RestartPolicy::default()
+            },
+            RestartPolicy {
+                max_restarts: 2_000_000,
+                ..RestartPolicy::default()
+            },
+        ] {
+            assert!(bad.validated().is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn serve_restart_and_inject_roundtrip_through_toml() {
+        let c = SystemConfig::from_toml(
+            "[serve]\nrestart_max = 5\nrestart_backoff_ms = 10\n\
+             restart_backoff_cap_ms = 250.0\n\
+             inject = \"w0:panic@2,w1:stall:5@0\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.serve.restart.max_restarts, 5);
+        assert_eq!(c.serve.restart.backoff_base_ms, 10.0);
+        assert_eq!(c.serve.restart.backoff_cap_ms, 250.0);
+        assert_eq!(c.serve.inject.render(), "w0:panic@2,w1:stall:5@0");
+        // defaults: supervision on, empty fault plan
+        let d = SystemConfig::default();
+        assert_eq!(d.serve.restart, RestartPolicy::default());
+        assert!(d.serve.inject.is_empty());
+    }
+
+    #[test]
+    fn serve_restart_and_inject_rejections() {
+        for bad in [
+            "[serve]\nrestart_max = -1",
+            "[serve]\nrestart_max = 99999999",
+            "[serve]\nrestart_backoff_ms = -5",
+            "[serve]\nrestart_backoff_ms = nan",
+            "[serve]\nrestart_backoff_cap_ms = -1.0",
+            "[serve]\ninject = \"w0:frobnicate@3\"",
+            "[serve]\ninject = \"panic@3\"",
+            "[serve]\npolicy = \"degrade:0\"",
+            "[serve]\npolicy = \"degrade:NaN\"",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
         }
     }
 

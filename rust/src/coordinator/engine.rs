@@ -39,9 +39,13 @@ pub trait Engine {
     }
 }
 
-/// Deferred engine constructor, sendable into a worker thread.
+/// Deferred engine constructor, sendable into a worker thread.  `Fn`
+/// (not `FnOnce`): the worker supervisor calls it again to rebuild the
+/// engine after a panic or engine error (`config::RestartPolicy`), so
+/// closures must clone captured models *inside* the body rather than
+/// moving them out.
 pub type EngineFactory =
-    Box<dyn FnOnce() -> Result<Box<dyn Engine>> + Send>;
+    Box<dyn Fn() -> Result<Box<dyn Engine>> + Send>;
 
 /// Engine selector for configs/CLI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

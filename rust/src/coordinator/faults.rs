@@ -1,0 +1,293 @@
+//! Deterministic fault injection for the serving tier.
+//!
+//! A [`FaultPlan`] schedules worker-local faults — panic, engine
+//! error, or a stall — at exact engine-call attempt indices, so the
+//! chaos tests (`rust/tests/chaos_serving.rs`) and the overload bench
+//! drive the *real* supervisor code paths in `pipeline.rs`/`server.rs`
+//! reproducibly.  The layer is compiled in always: an empty plan costs
+//! one integer increment and an empty-vec scan per engine call.
+//!
+//! Plan syntax (comma-separated, whitespace tolerated):
+//!
+//! - `w<W>:panic@<K>` — worker `W` panics on its `K`-th engine-call
+//!   attempt (0-based);
+//! - `w<W>:error@<K>` — the attempt fails with an engine error;
+//! - `w<W>:stall:<MS>@<K>` — the attempt is delayed by `MS`
+//!   milliseconds, then proceeds normally.
+//!
+//! Each fault fires exactly once and is then consumed, so a restarted
+//! worker's retry of the same work item succeeds — which is what lets
+//! the chaos tests assert full bit-identical delivery after a kill.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// What an injected fault does to an engine-call attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic inside the engine call (the supervisor's `catch_unwind`
+    /// is the code under test).
+    Panic,
+    /// Fail the attempt with an engine error.
+    Error,
+    /// Sleep the given milliseconds, then proceed normally — long
+    /// enough stalls push frames past their real-time deadline.
+    Stall {
+        ms: u64,
+    },
+}
+
+/// One scheduled fault: fires on worker `worker`'s `at_call`-th
+/// engine-call attempt (0-based), exactly once.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub worker: usize,
+    pub at_call: usize,
+    pub kind: FaultKind,
+}
+
+/// A full fault schedule, threaded from config/CLI (`[serve] inject` /
+/// `--inject`) into the serving pipelines.  Empty by default.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// Parse the `--inject` syntax (see the module docs).  An empty or
+    /// all-whitespace string is the empty plan.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut specs = Vec::new();
+        for item in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let rest = item.strip_prefix('w').ok_or_else(|| {
+                format!(
+                    "fault {item:?} must start with w<worker> \
+                     (e.g. w0:panic@2)"
+                )
+            })?;
+            let (w, action) = rest.split_once(':').ok_or_else(|| {
+                format!(
+                    "fault {item:?} is missing its action \
+                     (panic|error|stall:MS)"
+                )
+            })?;
+            let worker: usize = w.parse().map_err(|_| {
+                format!("bad worker index {w:?} in fault {item:?}")
+            })?;
+            let (act, at) = action.rsplit_once('@').ok_or_else(|| {
+                format!("fault {item:?} is missing its @call index")
+            })?;
+            let at_call: usize = at.parse().map_err(|_| {
+                format!("bad call index {at:?} in fault {item:?}")
+            })?;
+            let kind = if act == "panic" {
+                FaultKind::Panic
+            } else if act == "error" {
+                FaultKind::Error
+            } else if let Some(ms) = act.strip_prefix("stall:") {
+                let ms: u64 = ms.parse().map_err(|_| {
+                    format!("bad stall milliseconds {ms:?} in fault {item:?}")
+                })?;
+                FaultKind::Stall { ms }
+            } else {
+                return Err(format!(
+                    "unknown fault kind {act:?} in {item:?} \
+                     (panic|error|stall:MS)"
+                ));
+            };
+            specs.push(FaultSpec {
+                worker,
+                at_call,
+                kind,
+            });
+        }
+        Ok(Self { specs })
+    }
+
+    /// Render back to the `--inject` syntax (`parse` round-trips).
+    pub fn render(&self) -> String {
+        self.specs
+            .iter()
+            .map(|f| {
+                let w = f.worker;
+                let k = f.at_call;
+                match f.kind {
+                    FaultKind::Panic => format!("w{w}:panic@{k}"),
+                    FaultKind::Error => format!("w{w}:error@{k}"),
+                    FaultKind::Stall { ms } => {
+                        format!("w{w}:stall:{ms}@{k}")
+                    }
+                }
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    pub fn specs(&self) -> &[FaultSpec] {
+        &self.specs
+    }
+
+    /// The faults a given worker thread owns (moved into the thread).
+    pub fn for_worker(&self, worker: usize) -> WorkerFaults {
+        WorkerFaults {
+            pending: self
+                .specs
+                .iter()
+                .filter(|f| f.worker == worker)
+                .map(|f| (f.at_call, f.kind))
+                .collect(),
+            calls: 0,
+        }
+    }
+}
+
+/// Per-worker fault state: counts engine-call attempts and fires
+/// matching faults exactly once each.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerFaults {
+    pending: Vec<(usize, FaultKind)>,
+    calls: usize,
+}
+
+impl WorkerFaults {
+    /// Call at the top of every engine-call attempt, *inside* the
+    /// supervisor's `catch_unwind` region.  Stalls sleep then return
+    /// `Ok`, errors return `Err`, panics unwind.
+    pub fn before_call(&mut self) -> Result<()> {
+        let call = self.calls;
+        self.calls += 1;
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let mut fail = false;
+        let mut die = false;
+        self.pending.retain(|&(at, kind)| {
+            if at != call {
+                return true;
+            }
+            match kind {
+                FaultKind::Stall { ms } => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                FaultKind::Error => fail = true,
+                FaultKind::Panic => die = true,
+            }
+            false
+        });
+        if die {
+            // PANIC: deliberate injected fault — the supervisor's
+            // catch_unwind around the engine call is the code under
+            // test, and this unwind must never escape it.
+            panic!("injected worker panic at engine call {call}");
+        }
+        if fail {
+            anyhow::bail!("injected engine error at call {call}");
+        }
+        Ok(())
+    }
+
+    /// Faults still scheduled (not yet fired).
+    pub fn armed(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Engine-call attempts seen so far.
+    pub fn calls(&self) -> usize {
+        self.calls
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_render_roundtrip() {
+        let s = "w0:panic@2,w1:error@0,w2:stall:15@3";
+        let plan = FaultPlan::parse(s).unwrap();
+        assert_eq!(plan.render(), s);
+        assert_eq!(plan.specs().len(), 3);
+        assert_eq!(
+            plan.specs()[2],
+            FaultSpec {
+                worker: 2,
+                at_call: 3,
+                kind: FaultKind::Stall { ms: 15 },
+            }
+        );
+        // whitespace and trailing commas are tolerated
+        let plan2 = FaultPlan::parse(" w0:panic@2 , w1:error@0,").unwrap();
+        assert_eq!(plan2.specs().len(), 2);
+        // empty string is the empty plan
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ").unwrap().is_empty());
+        assert!(FaultPlan::default().is_empty());
+    }
+
+    #[test]
+    fn parse_rejections() {
+        for bad in [
+            "panic@2",         // missing worker prefix
+            "w0",              // missing action
+            "w0:panic",        // missing call index
+            "w0:panic@x",      // bad call index
+            "wx:panic@1",      // bad worker index
+            "w0:frobnicate@1", // unknown kind
+            "w0:stall@1",      // stall without ms
+            "w0:stall:abc@1",  // bad stall ms
+            "w0:stall:-5@1",   // negative stall ms
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn faults_fire_once_at_exact_calls() {
+        let plan = FaultPlan::parse("w1:error@1,w1:error@3").unwrap();
+        let mut w0 = plan.for_worker(0);
+        let mut w1 = plan.for_worker(1);
+        assert_eq!(w0.armed(), 0);
+        assert_eq!(w1.armed(), 2);
+        // worker 0 owns nothing: every call is clean
+        for _ in 0..5 {
+            assert!(w0.before_call().is_ok());
+        }
+        // worker 1: calls 1 and 3 fail, all others pass, each fires once
+        assert!(w1.before_call().is_ok()); // call 0
+        assert!(w1.before_call().is_err()); // call 1
+        assert_eq!(w1.armed(), 1);
+        assert!(w1.before_call().is_ok()); // call 2
+        assert!(w1.before_call().is_err()); // call 3
+        assert_eq!(w1.armed(), 0);
+        assert!(w1.before_call().is_ok()); // call 4
+        assert_eq!(w1.calls(), 5);
+    }
+
+    #[test]
+    fn injected_panic_unwinds_and_is_catchable() {
+        let plan = FaultPlan::parse("w0:panic@0").unwrap();
+        let mut w = plan.for_worker(0);
+        let caught = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| w.before_call()),
+        );
+        assert!(caught.is_err(), "injected panic must unwind");
+        // consumed: the retry after a restart succeeds
+        assert_eq!(w.armed(), 0);
+        assert!(w.before_call().is_ok());
+    }
+
+    #[test]
+    fn stall_delays_then_proceeds() {
+        let plan = FaultPlan::parse("w0:stall:20@0").unwrap();
+        let mut w = plan.for_worker(0);
+        let t = std::time::Instant::now();
+        assert!(w.before_call().is_ok());
+        assert!(t.elapsed() >= Duration::from_millis(20));
+        assert_eq!(w.armed(), 0);
+    }
+}

@@ -39,6 +39,9 @@ pub struct FrameRecord {
     /// Merged hardware stats of the frame's bands, if the engine
     /// models them.
     pub stats: Option<RunStats>,
+    /// True when the frame was served through the cheap bilinear path
+    /// instead of the full model (`RtPolicy::Degrade` downshift).
+    pub degraded: bool,
 }
 
 /// Identity and source-side accounting of one stream, supplied by the
@@ -73,8 +76,13 @@ pub struct StreamSummary {
     /// Offered but neither delivered nor dropped (lost to a dead
     /// worker, or parked behind such a loss).
     pub incomplete: usize,
+    /// Delivered at degraded (bilinear) quality — a subset of
+    /// `delivered`, never of `dropped`.
+    pub degraded: usize,
     /// `dropped / offered` (0 when nothing was offered).
     pub drop_rate: f64,
+    /// `degraded / offered` (0 when nothing was offered).
+    pub degrade_rate: f64,
     pub latency_ms: Summary,
     /// Delivered HR megapixels per second of wall time.
     pub mpix_per_s: f64,
@@ -120,8 +128,17 @@ pub struct PipelineReport {
     pub dropped: usize,
     /// Frames offered but neither delivered nor dropped.
     pub incomplete: usize,
+    /// Frames delivered at degraded (bilinear) quality, across all
+    /// streams — counted inside `frames`, not alongside it.
+    pub degraded: usize,
     /// `dropped / offered` across all streams.
     pub drop_rate: f64,
+    /// `degraded / offered` across all streams.
+    pub degrade_rate: f64,
+    /// Worker restarts the supervisor performed (`RestartPolicy`),
+    /// summed across workers.  Set by the pipeline after
+    /// `from_records`, like `errors`.
+    pub restarts: usize,
     /// Per-stream breakdown (single-stream runs have exactly one).
     pub streams: Vec<StreamSummary>,
     /// Worker errors — a report with errors is partial.
@@ -178,6 +195,10 @@ impl PipelineReport {
                     .filter(|r| r.stream == meta.id)
                     .map(|r| to_ms(&r.latency))
                     .collect();
+                let degraded = records
+                    .iter()
+                    .filter(|r| r.stream == meta.id && r.degraded)
+                    .count();
                 let delivered = latencies.len();
                 let hr_px = meta.hr_pixels() as f64 * delivered as f64;
                 hr_px_total += hr_px;
@@ -186,7 +207,9 @@ impl PipelineReport {
                     incomplete: meta
                         .offered
                         .saturating_sub(meta.dropped + delivered),
+                    degraded,
                     drop_rate: rate(meta.dropped, meta.offered),
+                    degrade_rate: rate(degraded, meta.offered),
                     latency_ms: Summary::from_samples(latencies),
                     mpix_per_s: hr_px / secs / 1e6,
                     meta,
@@ -197,6 +220,7 @@ impl PipelineReport {
         let dropped: usize = summaries.iter().map(|s| s.meta.dropped).sum();
         let incomplete: usize =
             summaries.iter().map(|s| s.incomplete).sum();
+        let degraded: usize = summaries.iter().map(|s| s.degraded).sum();
         Self {
             frames: records.len(),
             wall,
@@ -219,7 +243,10 @@ impl PipelineReport {
             plan_source: "default".to_string(),
             dropped,
             incomplete,
+            degraded,
             drop_rate: rate(dropped, offered),
+            degrade_rate: rate(degraded, offered),
+            restarts: 0,
             streams: summaries,
             errors: Vec::new(),
             hw,
@@ -251,7 +278,7 @@ impl PipelineReport {
             self.compute_ms.median(),
             self.compute_ms.percentile(95.0),
         );
-        if self.dropped > 0 || self.incomplete > 0 {
+        if self.dropped > 0 || self.incomplete > 0 || self.degraded > 0 {
             out.push_str(&format!(
                 "\ndelivery: {} delivered  {} dropped ({:.1} %)  \
                  {} incomplete",
@@ -259,6 +286,20 @@ impl PipelineReport {
                 self.dropped,
                 self.drop_rate * 100.0,
                 self.incomplete,
+            ));
+            if self.degraded > 0 {
+                out.push_str(&format!(
+                    "  {} degraded ({:.1} %)",
+                    self.degraded,
+                    self.degrade_rate * 100.0,
+                ));
+            }
+        }
+        if self.restarts > 0 {
+            out.push_str(&format!(
+                "\nsupervisor: {} worker restart{}",
+                self.restarts,
+                if self.restarts == 1 { "" } else { "s" },
             ));
         }
         if self.streams.len() > 1 {
@@ -277,6 +318,12 @@ impl PipelineReport {
                     s.latency_ms.percentile(95.0),
                     s.mpix_per_s,
                 ));
+                if s.degraded > 0 {
+                    out.push_str(&format!(
+                        "  degraded {}/{}",
+                        s.degraded, s.delivered,
+                    ));
+                }
             }
         }
         if !self.errors.is_empty() {
@@ -322,6 +369,7 @@ mod tests {
             compute: Duration::from_millis(ms / 2),
             bands: 1,
             stats: None,
+            degraded: false,
         }
     }
 
@@ -482,6 +530,59 @@ mod tests {
         assert!(r.contains("delivery: 5 delivered  1 dropped"));
         assert!(r.contains("stream 0 [10x10@x2]"));
         assert!(r.contains("stream 1 [20x10@x3]"));
+    }
+
+    #[test]
+    fn degraded_frames_are_counted_inside_delivered() {
+        // stream 0: 4 delivered, 2 of them degraded; stream 1: clean
+        let mut records: Vec<_> = (0..4)
+            .map(|i| FrameRecord {
+                stream: 0,
+                degraded: i % 2 == 0,
+                ..rec(i, 10)
+            })
+            .collect();
+        records.extend(
+            (0..3).map(|i| FrameRecord { stream: 1, ..rec(i, 10) }),
+        );
+        let mut rep = PipelineReport::from_records(
+            &records,
+            Duration::from_secs(1),
+            &names(&["int8"]),
+            1,
+            "multi-stream(2 streams, policy=degrade:5)",
+            vec![
+                StreamMeta {
+                    offered: 4,
+                    ..meta(0, 10, 10, 2)
+                },
+                StreamMeta {
+                    offered: 3,
+                    ..meta(1, 10, 10, 2)
+                },
+            ],
+        );
+        rep.restarts = 1;
+        // degraded frames stay inside delivered: nothing is undelivered
+        assert_eq!(rep.frames, 7);
+        assert_eq!(rep.degraded, 2);
+        assert_eq!((rep.dropped, rep.incomplete), (0, 0));
+        assert!((rep.degrade_rate - 2.0 / 7.0).abs() < 1e-12);
+        assert_eq!(rep.streams[0].degraded, 2);
+        assert!((rep.streams[0].degrade_rate - 0.5).abs() < 1e-12);
+        assert_eq!(rep.streams[1].degraded, 0);
+        let r = rep.render();
+        assert!(r.contains("delivery: 7 delivered  0 dropped"));
+        assert!(r.contains("2 degraded (28.6 %)"));
+        assert!(r.contains("degraded 2/4"));
+        assert!(r.contains("supervisor: 1 worker restart"));
+        // a fully clean run still omits the delivery/supervisor lines
+        rep.restarts = 0;
+        rep.degraded = 0;
+        rep.streams[0].degraded = 0;
+        let clean = rep.render();
+        assert!(!clean.contains("delivery:"));
+        assert!(!clean.contains("supervisor:"));
     }
 
     #[test]

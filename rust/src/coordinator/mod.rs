@@ -15,9 +15,14 @@
 //! On top of the single-stream pipeline sits the multi-stream serving
 //! front-end (`coordinator::server`): N paced streams with
 //! heterogeneous geometries/scales admitted into one shared worker
-//! pool under a configurable real-time policy (block vs shed-late).
+//! pool under a configurable real-time policy (block vs shed-late vs
+//! degrade-late), a worker supervisor (restart with backoff on engine
+//! panic/error, `config::RestartPolicy`), and a deterministic
+//! fault-injection layer (`coordinator::faults`) so all of it is
+//! testable.
 
 pub mod engine;
+pub mod faults;
 pub mod metrics;
 pub mod pipeline;
 pub mod server;
@@ -26,6 +31,7 @@ pub mod shard;
 pub use engine::{
     Engine, EngineFactory, EngineKind, Int8Engine, PjrtEngine, SimEngine,
 };
+pub use faults::{FaultKind, FaultPlan, FaultSpec, WorkerFaults};
 pub use metrics::{FrameRecord, PipelineReport, StreamMeta, StreamSummary};
 pub use pipeline::{run_pipeline, PipelineConfig};
 pub use server::{

@@ -16,18 +16,37 @@
 //! delivered frame's buffer is recycled back into the
 //! [`Reassembler`]'s pool — steady-state serving reuses a bounded set
 //! of HR staging frames instead of allocating one per frame.
+//!
+//! §Supervision: every engine call runs under `catch_unwind`.  A
+//! worker whose engine panics or errors drops the (state-unknown)
+//! engine and rebuilds it through its [`EngineFactory`] under the
+//! capped exponential backoff of [`RestartPolicy`], retrying the
+//! retained work item on the fresh engine — so a transient fault costs
+//! latency, never a frame.  A worker that exhausts its restart budget
+//! hands its in-flight item (and, for a per-worker queue, everything
+//! still queued behind it) to the surviving pool via an unbounded
+//! retry channel before dying; frames are lost only when *no* worker
+//! survives, and then they are counted `incomplete`, never silently
+//! vanished.  The deterministic fault-injection layer
+//! (`coordinator::faults`, [`FaultPlan`]) fires inside the same
+//! `catch_unwind` region, so chaos tests drive these exact paths.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender,
+};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{ShardPlan, ShardStrategy, WorkerAffinity};
+use crate::config::{RestartPolicy, ShardPlan, ShardStrategy, WorkerAffinity};
 use crate::image::{ImageU8, SceneGenerator};
 
-use super::engine::EngineFactory;
+use super::engine::{Engine, EngineFactory};
+use super::faults::FaultPlan;
 use super::metrics::{PipelineReport, StreamMeta};
 use super::shard::{crop_hr_band, plan_bands, BandSpec, DoneBand, Reassembler};
 
@@ -49,6 +68,12 @@ pub struct PipelineConfig {
     pub shard: ShardPlan,
     /// Conv depth of the served model — resolves `HaloPolicy::Exact`.
     pub model_layers: usize,
+    /// Worker supervision: restarts allowed per worker and their
+    /// backoff ([`RestartPolicy::none()`] = first failure is fatal).
+    pub restart: RestartPolicy,
+    /// Deterministic fault injection (`coordinator::faults`); the
+    /// default empty plan injects nothing.
+    pub inject: FaultPlan,
 }
 
 impl Default for PipelineConfig {
@@ -64,6 +89,8 @@ impl Default for PipelineConfig {
             scale: 3,
             shard: ShardPlan::whole_frame(),
             model_layers: 7,
+            restart: RestartPolicy::default(),
+            inject: FaultPlan::default(),
         }
     }
 }
@@ -83,19 +110,58 @@ enum WorkSource {
     Own(Receiver<WorkItem>),
 }
 
+/// One `WorkSource::poll` outcome.
+enum Polled {
+    Item(WorkItem),
+    /// Nothing arrived within the timeout; the source is still open.
+    Empty,
+    /// The source hung up — no further items will ever arrive here.
+    Closed,
+}
+
 impl WorkSource {
-    fn recv(&self) -> Option<WorkItem> {
-        match self {
-            // a peer that panicked mid-recv poisons the queue lock;
-            // the channel itself is still coherent, so keep draining
-            // rather than cascading the panic across the pool
+    fn poll(&self, timeout: Duration) -> Polled {
+        // a peer that panicked mid-recv poisons the queue lock; the
+        // channel itself is still coherent, so keep draining rather
+        // than cascading the panic across the pool
+        let got = match self {
             WorkSource::Shared(rx) => rx
                 .lock()
                 .unwrap_or_else(std::sync::PoisonError::into_inner)
-                .recv()
-                .ok(),
-            WorkSource::Own(rx) => rx.recv().ok(),
+                .recv_timeout(timeout),
+            WorkSource::Own(rx) => rx.recv_timeout(timeout),
+        };
+        match got {
+            Ok(item) => Polled::Item(item),
+            Err(RecvTimeoutError::Timeout) => Polled::Empty,
+            Err(RecvTimeoutError::Disconnected) => Polled::Closed,
         }
+    }
+
+    /// Called by a retiring worker: strand nothing in a private queue.
+    /// A per-worker (`BandModulo`) queue is drained into the retry
+    /// channel for surviving peers until the source hangs up; the
+    /// shared queue needs no forwarding — survivors drain it directly.
+    fn forward_rest(&self, retry: &Sender<WorkItem>) {
+        if let WorkSource::Own(rx) = self {
+            while let Ok(item) = rx.recv() {
+                // LOSSY: the retry receiver is held by this worker's
+                // own Arc, so the send cannot fail; if it somehow did,
+                // the frame is already counted incomplete.
+                let _ = retry.send(item);
+            }
+        }
+    }
+}
+
+/// Best-effort rendering of a caught panic payload for the report.
+pub(crate) fn panic_note(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        format!("worker panicked: {s}")
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        format!("worker panicked: {s}")
+    } else {
+        "worker panicked".to_string()
     }
 }
 
@@ -105,12 +171,15 @@ impl WorkSource {
 /// display order, while the pipeline is still running; the frame buffer
 /// it borrows is recycled immediately after it returns.
 ///
-/// A worker that errors mid-run (engine failure) does not sink the
-/// whole pipeline: surviving workers keep serving, the error is
-/// recorded in [`PipelineReport::errors`], and the frames the dead
-/// worker had in flight — plus any parked behind them — surface as
-/// [`PipelineReport::incomplete`] instead of silently vanishing from
-/// the counts.  `Err` is returned only when *nothing* was delivered.
+/// A worker whose engine panics or errors is restarted in place with a
+/// fresh engine under `cfg.restart` (§Supervision); the count of such
+/// restarts lands in [`PipelineReport::restarts`].  A worker that
+/// exhausts its budget does not sink the whole pipeline: it hands its
+/// in-flight work to the surviving pool, the error is recorded in
+/// [`PipelineReport::errors`], and only frames no survivor could
+/// rescue surface as [`PipelineReport::incomplete`] instead of
+/// silently vanishing from the counts.  `Err` is returned only when
+/// *nothing* was delivered.
 pub fn run_pipeline(
     cfg: &PipelineConfig,
     factories: Vec<EngineFactory>,
@@ -153,6 +222,15 @@ pub fn run_pipeline(
     // to race on, so heterogeneous pools report deterministically.
     let engine_names =
         Arc::new(Mutex::new(vec![String::new(); cfg.workers]));
+    // Rescue path (§Supervision): retired workers hand unfinished
+    // items to surviving peers here.  Unbounded — pushes never block.
+    let (retry_tx, retry_rx) = channel::<WorkItem>();
+    let retry_rx = Arc::new(Mutex::new(retry_rx));
+    // Items the source emitted that are not yet completed — queued,
+    // being processed, or parked on the retry channel.  The pool's
+    // retire condition: source closed AND inflight == 0.
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let restarts_total = Arc::new(AtomicUsize::new(0));
     let t0 = Instant::now();
     let scale = cfg.scale;
     let (lr_h, lr_w) = (cfg.lr_h, cfg.lr_w);
@@ -166,32 +244,161 @@ pub fn run_pipeline(
         {
             let tx = done_tx.clone();
             let names = Arc::clone(&engine_names);
+            let retry_tx = retry_tx.clone();
+            let retry_rx = Arc::clone(&retry_rx);
+            let inflight = Arc::clone(&inflight);
+            let restarts_total = Arc::clone(&restarts_total);
+            let restart = cfg.restart;
+            let mut faults = cfg.inject.for_worker(wi);
             handles.push(s.spawn(move || -> Result<()> {
-                let mut engine = factory()?;
-                names
-                    .lock()
-                    .unwrap_or_else(std::sync::PoisonError::into_inner)
-                    [wi] = engine.name().to_string();
-                while let Some(item) = source.recv() {
-                    let dequeued = Instant::now();
-                    let hr_ext = engine.upscale(&item.lr)?;
-                    let hr = crop_hr_band(&hr_ext, &item.spec, scale);
-                    let done = DoneBand {
-                        stream: 0,
-                        frame: item.frame,
-                        spec: item.spec,
-                        n_bands: item.n_bands,
-                        hr,
-                        emitted: item.emitted,
-                        dequeued,
-                        completed: Instant::now(),
-                        stats: engine.last_stats(),
-                    };
-                    if tx.send(done).is_err() {
-                        return Ok(()); // sink gone
+                let mut engine: Option<Box<dyn Engine>> = None;
+                let mut pending: Option<(WorkItem, Instant)> = None;
+                let mut restarts_used = 0usize;
+                let mut reason = String::new();
+                let exhausted = 'serve: loop {
+                    // (re)build the engine; construction failures burn
+                    // restart budget exactly like mid-run faults
+                    if engine.is_none() {
+                        match factory() {
+                            Ok(e) => {
+                                names
+                                    .lock()
+                                    .unwrap_or_else(
+                                        std::sync::PoisonError::into_inner,
+                                    )[wi] = e.name().to_string();
+                                engine = Some(e);
+                            }
+                            Err(e) => {
+                                reason = format!("{e:#}");
+                                if restarts_used >= restart.max_restarts {
+                                    break 'serve true;
+                                }
+                                restarts_used += 1;
+                                restarts_total
+                                    .fetch_add(1, Ordering::SeqCst);
+                                thread::sleep(
+                                    restart.backoff(restarts_used),
+                                );
+                                continue 'serve;
+                            }
+                        }
                     }
+                    // work: the item retained across a restart first,
+                    // then rescues from retired peers, then the source
+                    let (item, dequeued) = match pending.take() {
+                        Some(x) => x,
+                        None => {
+                            let rescued = retry_rx
+                                .lock()
+                                .unwrap_or_else(
+                                    std::sync::PoisonError::into_inner,
+                                )
+                                .try_recv()
+                                .ok();
+                            match rescued {
+                                Some(item) => (item, Instant::now()),
+                                None => match source
+                                    .poll(Duration::from_millis(5))
+                                {
+                                    Polled::Item(item) => {
+                                        (item, Instant::now())
+                                    }
+                                    Polled::Empty => continue 'serve,
+                                    Polled::Closed => {
+                                        // retire only once no item is
+                                        // queued, in flight, or parked
+                                        // on the retry channel — a
+                                        // requeued item keeps its
+                                        // inflight count until done
+                                        if inflight
+                                            .load(Ordering::SeqCst)
+                                            == 0
+                                        {
+                                            break 'serve false;
+                                        }
+                                        thread::sleep(
+                                            Duration::from_millis(1),
+                                        );
+                                        continue 'serve;
+                                    }
+                                },
+                            }
+                        }
+                    };
+                    let eng = match engine.as_mut() {
+                        Some(e) => e,
+                        None => continue 'serve, // ensured above
+                    };
+                    // the fault layer and the engine call share one
+                    // catch_unwind region: injected panics take the
+                    // same road as real ones
+                    let outcome =
+                        catch_unwind(AssertUnwindSafe(
+                            || -> Result<ImageU8> {
+                                faults.before_call()?;
+                                eng.upscale(&item.lr)
+                            },
+                        ));
+                    let fail = match outcome {
+                        Ok(Ok(hr_ext)) => {
+                            let hr = crop_hr_band(
+                                &hr_ext, &item.spec, scale,
+                            );
+                            let done = DoneBand {
+                                stream: 0,
+                                frame: item.frame,
+                                spec: item.spec,
+                                n_bands: item.n_bands,
+                                hr,
+                                emitted: item.emitted,
+                                dequeued,
+                                completed: Instant::now(),
+                                stats: eng.last_stats(),
+                                degraded: false,
+                            };
+                            let sunk = tx.send(done).is_ok();
+                            inflight.fetch_sub(1, Ordering::SeqCst);
+                            if !sunk {
+                                return Ok(()); // sink gone
+                            }
+                            None
+                        }
+                        Ok(Err(e)) => Some(format!("{e:#}")),
+                        Err(p) => Some(panic_note(p.as_ref())),
+                    };
+                    if let Some(why) = fail {
+                        reason = why;
+                        // engine state is unknown after a fault: drop
+                        // it, back off, rebuild, retry the same item
+                        engine = None;
+                        if restarts_used >= restart.max_restarts {
+                            pending = Some((item, dequeued));
+                            break 'serve true;
+                        }
+                        restarts_used += 1;
+                        restarts_total.fetch_add(1, Ordering::SeqCst);
+                        thread::sleep(restart.backoff(restarts_used));
+                        pending = Some((item, dequeued));
+                    }
+                };
+                if exhausted {
+                    // hand retained work to the surviving pool and
+                    // strand nothing in a private queue, then die
+                    if let Some((item, _)) = pending.take() {
+                        // LOSSY: the retry receiver is held by this
+                        // worker's own Arc, so the send cannot fail;
+                        // were it ever to, the frame is already
+                        // counted incomplete by the collector.
+                        let _ = retry_tx.send(item);
+                    }
+                    source.forward_rest(&retry_tx);
+                    return Err(anyhow::anyhow!(
+                        "worker {wi}: {reason} (restart budget of {} \
+                         exhausted)",
+                        restart.max_restarts
+                    ));
                 }
-                Ok(()) // source closed
+                Ok(()) // source closed, nothing left in flight
             }));
         }
         drop(done_tx);
@@ -242,8 +449,11 @@ pub fn run_pipeline(
                 } else {
                     &senders[0]
                 };
+                inflight.fetch_add(1, Ordering::SeqCst);
                 if tx.send(item).is_err() {
-                    // a worker died; stop feeding, surface its error
+                    // every receiver of this queue is gone; stop
+                    // feeding and surface the errors
+                    inflight.fetch_sub(1, Ordering::SeqCst);
                     break 'source;
                 }
             }
@@ -300,6 +510,7 @@ pub fn run_pipeline(
         vec![meta],
     );
     report.errors = errors;
+    report.restarts = restarts_total.load(Ordering::SeqCst);
     Ok(report)
 }
 
@@ -322,6 +533,19 @@ mod tests {
             scale: 3,
             shard: ShardPlan::whole_frame(),
             model_layers: 2,
+            // worker-death accounting tests below want the
+            // pre-supervision behaviour: first failure is fatal
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
+        }
+    }
+
+    /// Fast supervision policy for tests: generous budget, ~no backoff.
+    fn quick_restart(max: usize) -> RestartPolicy {
+        RestartPolicy {
+            max_restarts: max,
+            backoff_base_ms: 1.0,
+            backoff_cap_ms: 4.0,
         }
     }
 
@@ -498,6 +722,80 @@ mod tests {
         // reached the sink in display order
         assert!(rep.frames >= 2, "frames = {}", rep.frames);
         assert!(rep.incomplete >= 2, "incomplete = {}", rep.incomplete);
+    }
+
+    #[test]
+    fn supervisor_restarts_erroring_worker_and_loses_no_frame() {
+        // FailingEngine(3) errors on every call after its 3rd frame;
+        // each restart builds a fresh one, so a budget of 3 carries a
+        // single worker through 8 frames in 3 lives: 3 + 3 + 2.
+        let mut cfg = tiny_cfg(8, 1);
+        cfg.restart = quick_restart(3);
+        let factories: Vec<EngineFactory> = vec![Box::new(|| {
+            Ok(Box::new(FailingEngine::new(3))
+                as Box<dyn crate::coordinator::Engine>)
+        })];
+        let mut seen = Vec::new();
+        let rep =
+            run_pipeline(&cfg, factories, |i, _| seen.push(i)).unwrap();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+        assert_eq!(rep.frames, 8);
+        assert_eq!(rep.restarts, 2, "{:?}", rep.errors);
+        assert_eq!(rep.incomplete, 0);
+        assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+        assert!(rep.render().contains("supervisor: 2 worker restarts"));
+    }
+
+    #[test]
+    fn injected_panic_is_caught_restarted_and_bit_identical() {
+        // same frames with and without a mid-run panic: the supervisor
+        // retries the retained frame on the fresh engine, so delivery
+        // is bit-identical to the fault-free run
+        let mut clean = Vec::new();
+        run_pipeline(&tiny_cfg(5, 1), engines(1), |_, hr| {
+            clean.push(hr.clone())
+        })
+        .unwrap();
+        let mut cfg = tiny_cfg(5, 1);
+        cfg.restart = quick_restart(2);
+        cfg.inject = FaultPlan::parse("w0:panic@2").unwrap();
+        let mut seen = Vec::new();
+        let rep = run_pipeline(&cfg, engines(1), |_, hr| {
+            seen.push(hr.clone())
+        })
+        .unwrap();
+        assert_eq!(seen, clean, "delivery must survive the panic intact");
+        assert_eq!(rep.restarts, 1);
+        assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+    }
+
+    #[test]
+    fn exhausted_worker_hands_inflight_work_to_survivors() {
+        // per-worker queues pin band 0 of every frame to worker 0,
+        // which dies on its first engine call with no restart budget;
+        // worker 1 rescues the requeued band and everything drained
+        // out of the dead worker's own queue — every frame is
+        // delivered in order, nothing is incomplete
+        let mut cfg = tiny_cfg(10, 2);
+        cfg.shard = ShardPlan {
+            affinity: crate::config::WorkerAffinity::BandModulo,
+            ..ShardPlan::row_bands(10, HaloPolicy::Exact)
+        };
+        let factories: Vec<EngineFactory> = vec![
+            Box::new(|| {
+                Ok(Box::new(FailingEngine::new(0))
+                    as Box<dyn crate::coordinator::Engine>)
+            }),
+            engines(1).pop().unwrap(),
+        ];
+        let mut seen = Vec::new();
+        let rep =
+            run_pipeline(&cfg, factories, |i, _| seen.push(i)).unwrap();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        assert_eq!(rep.frames, 10);
+        assert_eq!(rep.incomplete, 0);
+        assert_eq!(rep.errors.len(), 1, "{:?}", rep.errors);
+        assert!(rep.errors[0].contains("restart budget of 0"));
     }
 
     #[test]

@@ -27,26 +27,51 @@
 //!   `emitted + deadline_ms`; sheds are counted per stream and
 //!   reported as drop rates, and the per-stream [`Reassembler`] skips
 //!   the shed slot so later frames still deliver in order.
+//! * [`RtPolicy::Degrade`] — admission blocks like best-effort (zero
+//!   undelivered frames), but a frame dequeued past its deadline is
+//!   *downshifted* to the cheap bilinear path instead of shed, and the
+//!   stream stays on bilinear until [`RECOVERY_STREAK`] consecutive
+//!   on-time dequeues earn back full quality (hysteresis — no
+//!   per-frame quality flapping under sustained overload).  Degraded
+//!   deliveries are counted per stream (`StreamSummary::degraded`) and
+//!   in aggregate, always as a subset of `delivered`.
 //!
 //! Workers cache one engine per distinct upscale factor (built lazily
 //! inside the worker thread via [`ScaleEngineFactory`]), so a pool
 //! serving x2/x3/x4 streams pays each engine construction once per
 //! worker, not per frame.
+//!
+//! §Supervision (shared with [`run_pipeline`](super::run_pipeline)):
+//! every engine call runs under `catch_unwind`; a worker whose engine
+//! panics or errors evicts that scale's engine, backs off per
+//! [`RestartPolicy`], rebuilds and retries the retained frame.  A
+//! worker that exhausts its budget hands its in-flight frame to the
+//! surviving pool over the retry channel before dying, so a frame is
+//! lost only when no worker survives.  Injected faults
+//! (`coordinator::faults`) fire inside the same region.
 
 use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
-use std::sync::mpsc::{sync_channel, TrySendError};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    channel, sync_channel, RecvTimeoutError, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::config::{RtPolicy, StreamSpec};
-use crate::image::{ImageU8, SceneGenerator};
+use crate::config::{
+    clamped_ms_duration, RestartPolicy, RtPolicy, StreamSpec,
+};
+use crate::image::{bilinear_upsample, ImageU8, SceneGenerator};
 
 use super::engine::Engine;
+use super::faults::FaultPlan;
 use super::metrics::{PipelineReport, StreamMeta};
+use super::pipeline::panic_note;
 use super::shard::{BandSpec, DoneBand, Reassembler};
 
 /// Parameters of one multi-stream serving run.
@@ -63,6 +88,12 @@ pub struct MultiServeConfig {
     /// Base seed; stream *i*'s synthetic source uses
     /// [`stream_seed`]`(seed, i)`.
     pub seed: u64,
+    /// Worker supervision: restarts allowed per worker and their
+    /// backoff ([`RestartPolicy::none()`] = first failure is fatal).
+    pub restart: RestartPolicy,
+    /// Deterministic fault injection (`coordinator::faults`); the
+    /// default empty plan injects nothing.
+    pub inject: FaultPlan,
 }
 
 impl Default for MultiServeConfig {
@@ -74,6 +105,8 @@ impl Default for MultiServeConfig {
             queue_depth: 4,
             policy: RtPolicy::BestEffort,
             seed: 7,
+            restart: RestartPolicy::default(),
+            inject: FaultPlan::default(),
         }
     }
 }
@@ -87,21 +120,30 @@ pub fn stream_seed(base: u64, stream: usize) -> u64 {
 /// `deadline_ms` as a [`Duration`], total for any f64.
 ///
 /// [`RtPolicy::parse`] rejects non-finite and non-positive deadlines,
-/// but `DropLate` can also be constructed directly (tests, library
-/// callers), and `Duration::from_secs_f64` **panics** on negative, NaN
-/// or infinite input — and `Instant + Duration::MAX` overflows.  Clamp
-/// to `[0, 1e9]` seconds (NaN -> 0: an unintelligible deadline sheds
-/// frames loudly rather than serving without a deadline silently) so
-/// the serving threads can never panic on a pathological policy value.
+/// but `DropLate`/`Degrade` can also be constructed directly (tests,
+/// library callers), and `Duration::from_secs_f64` **panics** on
+/// negative, NaN or infinite input — and `Instant + Duration::MAX`
+/// overflows.  Delegates to the one shared clamp
+/// ([`clamped_ms_duration`]: NaN -> 0, clamp to `[0, 1e9]` seconds —
+/// an unintelligible deadline sheds/degrades frames loudly rather
+/// than serving without a deadline silently) so the serving threads
+/// can never panic on a pathological policy value.
 fn deadline_duration(deadline_ms: f64) -> Duration {
-    let secs = deadline_ms / 1e3;
-    let secs = if secs.is_nan() {
-        0.0
-    } else {
-        secs.clamp(0.0, 1e9) // ~31 years: far past any Instant math
-    };
-    Duration::from_secs_f64(secs)
+    clamped_ms_duration(deadline_ms)
 }
+
+/// Per-stream quality mode under [`RtPolicy::Degrade`]: one late
+/// dequeue flips the stream onto the bilinear path; it earns full
+/// quality back after [`RECOVERY_STREAK`] consecutive on-time
+/// dequeues (the frame completing the streak already runs full).
+#[derive(Clone, Copy, Default)]
+struct QualityState {
+    degraded: bool,
+    streak: usize,
+}
+
+/// Consecutive on-time dequeues required to leave degraded mode.
+const RECOVERY_STREAK: usize = 3;
 
 /// Per-worker engine supplier for the multi-stream pool: invoked
 /// *inside* the worker thread, once per distinct upscale factor (the
@@ -131,10 +173,14 @@ enum StreamEvent {
 /// from the collector thread, in display order *per stream*; the
 /// frame buffer it borrows is recycled after it returns.
 ///
-/// Like [`run_pipeline`](super::run_pipeline), a worker error does not
-/// sink the run: it is recorded in [`PipelineReport::errors`] and the
-/// lost frames surface as `incomplete`; `Err` is returned only when
-/// nothing was delivered.
+/// Like [`run_pipeline`](super::run_pipeline), a worker whose engine
+/// panics or errors is restarted in place under `cfg.restart`
+/// (§Supervision; the count lands in [`PipelineReport::restarts`]),
+/// and a worker that exhausts its budget does not sink the run: it
+/// hands its in-flight frame to the surviving pool, the error is
+/// recorded in [`PipelineReport::errors`], and only frames no
+/// survivor could rescue surface as `incomplete`; `Err` is returned
+/// only when nothing was delivered.
 pub fn serve_multi(
     cfg: &MultiServeConfig,
     factories: Vec<ScaleEngineFactory>,
@@ -165,6 +211,19 @@ pub fn serve_multi(
 
     let engine_names =
         Arc::new(Mutex::new(vec![String::new(); cfg.workers]));
+    // Rescue path (§Supervision): retired workers hand unfinished
+    // frames to surviving peers here.  Unbounded — pushes never block.
+    let (retry_tx, retry_rx) = channel::<StreamItem>();
+    let retry_rx = Arc::new(Mutex::new(retry_rx));
+    // Frames admitted (or shed at admission and then decremented) but
+    // not yet completed — queued, in a worker, or parked on the retry
+    // channel.  Workers retire only when the sources are done AND this
+    // is zero, so a requeued frame is never stranded.
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let restarts_total = Arc::new(AtomicUsize::new(0));
+    // Per-stream hysteresis state under RtPolicy::Degrade.
+    let quality =
+        Arc::new(Mutex::new(vec![QualityState::default(); n_streams]));
     let t0 = Instant::now();
     let frames = cfg.frames;
     let policy = cfg.policy;
@@ -177,74 +236,269 @@ pub fn serve_multi(
         {
             let tx = done_tx.clone();
             let names = Arc::clone(&engine_names);
+            let retry_tx = retry_tx.clone();
+            let retry_rx = Arc::clone(&retry_rx);
+            let inflight = Arc::clone(&inflight);
+            let restarts_total = Arc::clone(&restarts_total);
+            let quality = Arc::clone(&quality);
+            let restart = cfg.restart;
+            let mut faults = cfg.inject.for_worker(wi);
             workers.push(s.spawn(move || -> Result<()> {
                 let mut engines: BTreeMap<usize, Box<dyn Engine>> =
                     BTreeMap::new();
-                loop {
-                    // bind before matching so the queue lock is
-                    // released while we compute; tolerate a poisoned
-                    // lock so one panicking worker cannot wedge the
-                    // rest of the pool
-                    let recv = {
-                        rx.lock()
-                            .unwrap_or_else(
-                                std::sync::PoisonError::into_inner,
-                            )
-                            .recv()
+                let mut pending: Option<(StreamItem, Instant)> = None;
+                let mut restarts_used = 0usize;
+                let mut reason = String::new();
+                let exhausted = 'serve: loop {
+                    // work: the frame retained across a restart first,
+                    // then rescues from retired peers, then the queue.
+                    // The queue lock is released while we compute;
+                    // tolerate poisoned locks so one panicking worker
+                    // cannot wedge the rest of the pool.
+                    let (item, dequeued) = match pending.take() {
+                        Some(x) => x,
+                        None => {
+                            let rescued = retry_rx
+                                .lock()
+                                .unwrap_or_else(
+                                    std::sync::PoisonError::into_inner,
+                                )
+                                .try_recv()
+                                .ok();
+                            match rescued {
+                                Some(item) => (item, Instant::now()),
+                                None => {
+                                    let got = rx
+                                        .lock()
+                                        .unwrap_or_else(
+                                            std::sync::PoisonError
+                                                ::into_inner,
+                                        )
+                                        .recv_timeout(
+                                            Duration::from_millis(5),
+                                        );
+                                    match got {
+                                        Ok(item) => {
+                                            (item, Instant::now())
+                                        }
+                                        Err(
+                                            RecvTimeoutError::Timeout,
+                                        ) => continue 'serve,
+                                        Err(
+                                            RecvTimeoutError
+                                            ::Disconnected,
+                                        ) => {
+                                            // retire only once no
+                                            // frame is queued, in
+                                            // flight, or parked on
+                                            // the retry channel
+                                            if inflight
+                                                .load(Ordering::SeqCst)
+                                                == 0
+                                            {
+                                                break 'serve false;
+                                            }
+                                            thread::sleep(
+                                                Duration::from_millis(
+                                                    1,
+                                                ),
+                                            );
+                                            continue 'serve;
+                                        }
+                                    }
+                                }
+                            }
+                        }
                     };
-                    let Ok(item) = recv else {
-                        return Ok(()); // sources done
-                    };
-                    let dequeued = Instant::now();
-                    if item.deadline.is_some_and(|d| dequeued > d) {
+                    let late =
+                        item.deadline.is_some_and(|d| dequeued > d);
+                    if matches!(policy, RtPolicy::DropLate { .. })
+                        && late
+                    {
                         // deadline already blown: shed instead of
                         // burning pool time on an unusable frame
                         let ev = StreamEvent::Dropped {
                             stream: item.stream,
                             frame: item.frame,
                         };
-                        if tx.send(ev).is_err() {
+                        let sunk = tx.send(ev).is_ok();
+                        inflight.fetch_sub(1, Ordering::SeqCst);
+                        if !sunk {
                             return Ok(());
                         }
-                        continue;
+                        continue 'serve;
                     }
-                    let engine = match engines.entry(item.scale) {
-                        Entry::Occupied(e) => e.into_mut(),
-                        Entry::Vacant(v) => {
-                            let e = factory(item.scale)?;
-                            let mut names = names.lock().unwrap_or_else(
+                    if matches!(policy, RtPolicy::Degrade { .. }) {
+                        // late frames (and streams still recovering)
+                        // take the cheap bilinear path instead of
+                        // being shed — hysteresis per stream
+                        let downshift = {
+                            let mut q = quality.lock().unwrap_or_else(
                                 std::sync::PoisonError::into_inner,
                             );
-                            if names[wi].is_empty() {
-                                names[wi] = e.name().to_string();
+                            let st = &mut q[item.stream];
+                            if late {
+                                st.degraded = true;
+                                st.streak = 0;
+                                true
+                            } else if st.degraded {
+                                st.streak += 1;
+                                if st.streak >= RECOVERY_STREAK {
+                                    st.degraded = false;
+                                    st.streak = 0;
+                                    false // earned full quality back
+                                } else {
+                                    true
+                                }
+                            } else {
+                                false
                             }
-                            drop(names);
-                            v.insert(e)
+                        };
+                        if downshift {
+                            let hr =
+                                bilinear_upsample(&item.lr, item.scale);
+                            let spec = BandSpec {
+                                band: 0,
+                                y0: 0,
+                                y1: item.lr.h,
+                                e0: 0,
+                                e1: item.lr.h,
+                            };
+                            let done = DoneBand {
+                                stream: item.stream,
+                                frame: item.frame,
+                                spec,
+                                n_bands: 1,
+                                hr,
+                                emitted: item.emitted,
+                                dequeued,
+                                completed: Instant::now(),
+                                stats: None,
+                                degraded: true,
+                            };
+                            let sunk =
+                                tx.send(StreamEvent::Done(done)).is_ok();
+                            inflight.fetch_sub(1, Ordering::SeqCst);
+                            if !sunk {
+                                return Ok(());
+                            }
+                            continue 'serve;
                         }
-                    };
-                    let hr = engine.upscale(&item.lr)?;
-                    let spec = BandSpec {
-                        band: 0,
-                        y0: 0,
-                        y1: item.lr.h,
-                        e0: 0,
-                        e1: item.lr.h,
-                    };
-                    let done = DoneBand {
-                        stream: item.stream,
-                        frame: item.frame,
-                        spec,
-                        n_bands: 1,
-                        hr,
-                        emitted: item.emitted,
-                        dequeued,
-                        completed: Instant::now(),
-                        stats: engine.last_stats(),
-                    };
-                    if tx.send(StreamEvent::Done(done)).is_err() {
-                        return Ok(()); // sink gone
                     }
+                    // full-quality path: ensure this scale's engine;
+                    // construction failures burn restart budget
+                    // exactly like mid-run faults
+                    if let Entry::Vacant(v) = engines.entry(item.scale)
+                    {
+                        match factory(item.scale) {
+                            Ok(e) => {
+                                let mut names =
+                                    names.lock().unwrap_or_else(
+                                        std::sync::PoisonError
+                                            ::into_inner,
+                                    );
+                                if names[wi].is_empty() {
+                                    names[wi] = e.name().to_string();
+                                }
+                                drop(names);
+                                v.insert(e);
+                            }
+                            Err(e) => {
+                                reason = format!("{e:#}");
+                                if restarts_used
+                                    >= restart.max_restarts
+                                {
+                                    pending = Some((item, dequeued));
+                                    break 'serve true;
+                                }
+                                restarts_used += 1;
+                                restarts_total
+                                    .fetch_add(1, Ordering::SeqCst);
+                                thread::sleep(
+                                    restart.backoff(restarts_used),
+                                );
+                                pending = Some((item, dequeued));
+                                continue 'serve;
+                            }
+                        }
+                    }
+                    let engine = match engines.get_mut(&item.scale) {
+                        Some(e) => e,
+                        None => continue 'serve, // ensured above
+                    };
+                    // the fault layer and the engine call share one
+                    // catch_unwind region: injected panics take the
+                    // same road as real ones
+                    let outcome = catch_unwind(AssertUnwindSafe(
+                        || -> Result<ImageU8> {
+                            faults.before_call()?;
+                            engine.upscale(&item.lr)
+                        },
+                    ));
+                    let fail = match outcome {
+                        Ok(Ok(hr)) => {
+                            let spec = BandSpec {
+                                band: 0,
+                                y0: 0,
+                                y1: item.lr.h,
+                                e0: 0,
+                                e1: item.lr.h,
+                            };
+                            let done = DoneBand {
+                                stream: item.stream,
+                                frame: item.frame,
+                                spec,
+                                n_bands: 1,
+                                hr,
+                                emitted: item.emitted,
+                                dequeued,
+                                completed: Instant::now(),
+                                stats: engine.last_stats(),
+                                degraded: false,
+                            };
+                            let sunk =
+                                tx.send(StreamEvent::Done(done)).is_ok();
+                            inflight.fetch_sub(1, Ordering::SeqCst);
+                            if !sunk {
+                                return Ok(()); // sink gone
+                            }
+                            None
+                        }
+                        Ok(Err(e)) => Some(format!("{e:#}")),
+                        Err(p) => Some(panic_note(p.as_ref())),
+                    };
+                    if let Some(why) = fail {
+                        reason = why;
+                        // the faulted engine's state is unknown:
+                        // evict it (other scales are fine), back off,
+                        // rebuild on retry of the retained frame
+                        engines.remove(&item.scale);
+                        if restarts_used >= restart.max_restarts {
+                            pending = Some((item, dequeued));
+                            break 'serve true;
+                        }
+                        restarts_used += 1;
+                        restarts_total.fetch_add(1, Ordering::SeqCst);
+                        thread::sleep(restart.backoff(restarts_used));
+                        pending = Some((item, dequeued));
+                    }
+                };
+                if exhausted {
+                    // hand retained work to the surviving pool, die
+                    if let Some((item, _)) = pending.take() {
+                        // LOSSY: the retry receiver is held by this
+                        // worker's own Arc, so the send cannot fail;
+                        // were it ever to, the frame is already
+                        // counted incomplete by the collector.
+                        let _ = retry_tx.send(item);
+                    }
+                    return Err(anyhow::anyhow!(
+                        "worker {wi}: {reason} (restart budget of {} \
+                         exhausted)",
+                        restart.max_restarts
+                    ));
                 }
+                Ok(()) // sources done, nothing left in flight
             }));
         }
 
@@ -253,6 +507,7 @@ pub fn serve_multi(
         for (si, spec) in cfg.streams.iter().enumerate() {
             let wtx = work_tx.clone();
             let dtx = done_tx.clone();
+            let inflight = Arc::clone(&inflight);
             let seed = stream_seed(cfg.seed, si);
             sources.push(s.spawn(move || -> usize {
                 let gen =
@@ -272,12 +527,9 @@ pub fn serve_multi(
                     let lr = gen.frame(i);
                     offered = i + 1;
                     let emitted = Instant::now();
-                    let deadline = match policy {
-                        RtPolicy::BestEffort => None,
-                        RtPolicy::DropLate { deadline_ms } => {
-                            Some(emitted + deadline_duration(deadline_ms))
-                        }
-                    };
+                    let deadline = policy.deadline_ms().map(|ms| {
+                        emitted + deadline_duration(ms)
+                    });
                     let item = StreamItem {
                         stream: si,
                         frame: i,
@@ -287,16 +539,25 @@ pub fn serve_multi(
                         deadline,
                     };
                     match policy {
-                        RtPolicy::BestEffort => {
+                        // Degrade admits like best-effort: overload
+                        // costs quality downstream, never a frame
+                        RtPolicy::BestEffort
+                        | RtPolicy::Degrade { .. } => {
+                            inflight.fetch_add(1, Ordering::SeqCst);
                             if wtx.send(item).is_err() {
-                                break; // pool died
+                                // pool died
+                                inflight.fetch_sub(1, Ordering::SeqCst);
+                                break;
                             }
                         }
                         RtPolicy::DropLate { .. } => {
+                            inflight.fetch_add(1, Ordering::SeqCst);
                             match wtx.try_send(item) {
                                 Ok(()) => {}
                                 Err(TrySendError::Full(_)) => {
                                     // admission control: shed now
+                                    inflight
+                                        .fetch_sub(1, Ordering::SeqCst);
                                     let ev = StreamEvent::Dropped {
                                         stream: si,
                                         frame: i,
@@ -306,7 +567,9 @@ pub fn serve_multi(
                                     }
                                 }
                                 Err(TrySendError::Disconnected(_)) => {
-                                    break
+                                    inflight
+                                        .fetch_sub(1, Ordering::SeqCst);
+                                    break;
                                 }
                             }
                         }
@@ -335,8 +598,15 @@ pub fn serve_multi(
                         (si, asms[si].push(band))
                     }
                     StreamEvent::Dropped { stream, frame } => {
-                        dropped[stream] += 1;
-                        (stream, asms[stream].skip(frame))
+                        // count a shed frame exactly once, even if a
+                        // rescued copy of it is shed again later —
+                        // the reassembler's shed history is the one
+                        // source of truth
+                        let (newly, ready) = asms[stream].skip(frame);
+                        if newly {
+                            dropped[stream] += 1;
+                        }
+                        (stream, ready)
                     }
                 };
                 for (hr, record) in ready {
@@ -418,6 +688,7 @@ pub fn serve_multi(
         metas,
     );
     report.errors = errors;
+    report.restarts = restarts_total.load(Ordering::SeqCst);
     Ok(report)
 }
 
@@ -469,6 +740,8 @@ mod tests {
             queue_depth: 2,
             policy: RtPolicy::BestEffort,
             seed: 3,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
         };
         let mut got: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); 3];
         let rep = serve_multi(
@@ -517,6 +790,8 @@ mod tests {
             queue_depth: 2,
             policy: RtPolicy::BestEffort,
             seed: 1,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
         };
         let rep = serve_multi(&cfg, vec![factory], |_, _, _| {}).unwrap();
         assert_eq!(rep.frames, 10);
@@ -537,6 +812,8 @@ mod tests {
             queue_depth: 1,
             policy: RtPolicy::DropLate { deadline_ms: 0.0 },
             seed: 5,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
         };
         let mut delivered: Vec<Vec<usize>> = vec![Vec::new(); 2];
         let rep = serve_multi(
@@ -593,6 +870,8 @@ mod tests {
                 deadline_ms: f64::NAN,
             },
             seed: 7,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
         };
         let rep =
             serve_multi(&cfg, int8_factories(1, 1, 2, 2), |_, _, _| {})
@@ -621,6 +900,8 @@ mod tests {
                 queue_depth: 2,
                 policy: RtPolicy::BestEffort,
                 seed: 9,
+                restart: RestartPolicy::none(),
+                inject: FaultPlan::default(),
             };
             let factories: Vec<ScaleEngineFactory> = (0..2)
                 .map(|_| {
@@ -661,6 +942,8 @@ mod tests {
             queue_depth: 1,
             policy: RtPolicy::BestEffort,
             seed: 2,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
         };
         let rep =
             serve_multi(&cfg, int8_factories(2, 1, 2, 3), |_, _, _| {})
@@ -683,6 +966,8 @@ mod tests {
             queue_depth: 1,
             policy: RtPolicy::BestEffort,
             seed: 1,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
         };
         let factory: ScaleEngineFactory =
             Box::new(|_| -> Result<Box<dyn Engine>> {
@@ -691,6 +976,124 @@ mod tests {
         let err = serve_multi(&cfg, vec![factory], |_, _, _| {})
             .unwrap_err();
         assert!(err.to_string().contains("no frames"), "{err}");
+    }
+
+    /// Fast supervision policy for tests: generous budget, ~no backoff.
+    fn quick_restart(max: usize) -> RestartPolicy {
+        RestartPolicy {
+            max_restarts: max,
+            backoff_base_ms: 1.0,
+            backoff_cap_ms: 4.0,
+        }
+    }
+
+    #[test]
+    fn degrade_downshifts_every_late_frame_and_loses_none() {
+        // deadline 0 ms: every frame is late at dequeue — DropLate
+        // would shed them all, Degrade must deliver every one of them
+        // through the bilinear path, bit-exactly.
+        let cfg = MultiServeConfig {
+            streams: vec![spec("a", 10, 8, 2)],
+            frames: 12,
+            workers: 1,
+            queue_depth: 1,
+            policy: RtPolicy::Degrade { deadline_ms: 0.0 },
+            seed: 11,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
+        };
+        let mut got: Vec<(usize, ImageU8)> = Vec::new();
+        let rep = serve_multi(
+            &cfg,
+            int8_factories(1, 1, 2, 2),
+            |_, fi, hr| got.push((fi, hr.clone())),
+        )
+        .unwrap();
+        assert_eq!(rep.frames, 12);
+        assert_eq!(rep.dropped, 0, "degrade never sheds");
+        assert_eq!(rep.incomplete, 0);
+        assert_eq!(rep.degraded, 12, "every frame was late");
+        assert!((rep.degrade_rate - 1.0).abs() < 1e-12);
+        assert_eq!(rep.streams[0].degraded, 12);
+        assert!(rep.plan.contains("degrade:0"));
+        // delivered bits are exactly the bilinear downshift of the
+        // deterministic source frames, in order
+        let gen = SceneGenerator::new(10, 8, stream_seed(11, 0));
+        for (i, (fi, hr)) in got.iter().enumerate() {
+            assert_eq!(*fi, i);
+            assert_eq!(hr, &bilinear_upsample(&gen.frame(i), 2));
+        }
+        assert!(rep.render().contains("12 degraded"));
+    }
+
+    #[test]
+    fn degrade_with_met_deadlines_matches_best_effort_bits() {
+        // a generous deadline never trips: Degrade behaves exactly
+        // like BestEffort — same admission, same full-quality bits,
+        // zero degraded frames
+        let run = |policy: RtPolicy| {
+            let cfg = MultiServeConfig {
+                streams: vec![spec("a", 9, 7, 3), spec("b", 8, 6, 2)],
+                frames: 5,
+                workers: 2,
+                queue_depth: 2,
+                policy,
+                seed: 4,
+                restart: RestartPolicy::none(),
+                inject: FaultPlan::default(),
+            };
+            let mut got: Vec<Vec<ImageU8>> = vec![Vec::new(); 2];
+            let rep = serve_multi(
+                &cfg,
+                int8_factories(2, 1, 2, 5),
+                |si, _, hr| got[si].push(hr.clone()),
+            )
+            .unwrap();
+            (got, rep)
+        };
+        let (best, _) = run(RtPolicy::BestEffort);
+        let (degr, rep) = run(RtPolicy::Degrade { deadline_ms: 1e6 });
+        assert_eq!(best, degr);
+        assert_eq!(rep.degraded, 0);
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.incomplete, 0);
+    }
+
+    #[test]
+    fn injected_worker_panic_restarts_and_delivery_is_bit_identical() {
+        // the ISSUE acceptance shape at unit scale: kill a worker
+        // mid-run via the fault plan; with restart budget the pool
+        // delivers 100% of frames, bit-identical to the fault-free run
+        let run = |inject: &str, restart: RestartPolicy| {
+            let cfg = MultiServeConfig {
+                streams: vec![spec("a", 10, 8, 2), spec("b", 8, 6, 3)],
+                frames: 4,
+                // one worker: its 2nd engine call deterministically
+                // hits the injected fault
+                workers: 1,
+                queue_depth: 2,
+                policy: RtPolicy::BestEffort,
+                seed: 6,
+                restart,
+                inject: FaultPlan::parse(inject).unwrap(),
+            };
+            let mut got: Vec<Vec<(usize, ImageU8)>> =
+                vec![Vec::new(); 2];
+            let rep = serve_multi(
+                &cfg,
+                int8_factories(1, 2, 4, 7),
+                |si, fi, hr| got[si].push((fi, hr.clone())),
+            )
+            .unwrap();
+            (got, rep)
+        };
+        let (clean, _) = run("", RestartPolicy::none());
+        let (faulted, rep) = run("w0:panic@1", quick_restart(2));
+        assert_eq!(faulted, clean, "restart must not cost a frame");
+        assert_eq!(rep.restarts, 1);
+        assert_eq!(rep.incomplete, 0);
+        assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+        assert!(rep.render().contains("supervisor: 1 worker restart"));
     }
 
     #[test]

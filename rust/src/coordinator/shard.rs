@@ -117,6 +117,9 @@ pub struct DoneBand {
     pub completed: Instant,
     /// Hardware stats of this band, if the engine models them.
     pub stats: Option<RunStats>,
+    /// True when the band was served through the cheap bilinear path
+    /// instead of the full model (`RtPolicy::Degrade`).
+    pub degraded: bool,
 }
 
 struct PartialFrame {
@@ -129,6 +132,7 @@ struct PartialFrame {
     compute: Duration,
     completed: Instant,
     stats: Option<RunStats>,
+    degraded: bool,
 }
 
 /// Stitches out-of-order [`DoneBand`]s into display-order frames and
@@ -147,8 +151,11 @@ pub struct Reassembler {
     next: usize,
     parked: BTreeMap<usize, (ImageU8, FrameRecord)>,
     /// Frames shed by the drop policy ([`Reassembler::skip`]) that
-    /// display order has not yet advanced past.
-    skipped: BTreeSet<usize>,
+    /// display order has not yet advanced past.  [`Reassembler::push`]
+    /// ignores bands of shed frames, so a band re-enqueued by the
+    /// worker supervisor can never resurrect a frame that was already
+    /// counted dropped (delivered twice / double-counted).
+    shed: BTreeSet<usize>,
     /// Recycled HR frame buffers ([`Reassembler::recycle`]): the
     /// steady-state serving loop reuses a bounded set of staging
     /// frames instead of allocating one per frame (§Perf).
@@ -166,7 +173,7 @@ impl Reassembler {
             pending: HashMap::new(),
             next: 0,
             parked: BTreeMap::new(),
-            skipped: BTreeSet::new(),
+            shed: BTreeSet::new(),
             pool: Vec::new(),
         }
     }
@@ -214,6 +221,17 @@ impl Reassembler {
             // the display cursor already moved past this frame (it was
             // skipped, or a duplicate) — a late band must not park a
             // frame below the cursor forever
+            self.pool.push(band.hr);
+            return self.drain_ready();
+        }
+        if self.shed.contains(&band.frame) {
+            // the frame was shed while this band was in flight (e.g. a
+            // supervisor re-enqueue finished after a deadline shed) —
+            // reclaim the band buffer and keep the frame out of
+            // assembly, or the late band would re-open a pending entry
+            // that parks and then strands behind the cursor, and a
+            // dropped frame could be delivered anyway
+            self.pool.push(band.hr);
             return self.drain_ready();
         }
         if !self.pending.contains_key(&band.frame) {
@@ -230,6 +248,7 @@ impl Reassembler {
                     compute: Duration::ZERO,
                     completed: band.completed,
                     stats: None,
+                    degraded: false,
                 },
             );
         }
@@ -246,6 +265,7 @@ impl Reassembler {
         entry.queue_wait =
             entry.queue_wait.max(band.dequeued - band.emitted);
         entry.compute += band.completed - band.dequeued;
+        entry.degraded |= band.degraded;
         if let Some(s) = band.stats {
             match &mut entry.stats {
                 Some(acc) => acc.merge(&s),
@@ -264,6 +284,7 @@ impl Reassembler {
                 compute: pf.compute,
                 bands: pf.n_bands,
                 stats: pf.stats,
+                degraded: pf.degraded,
             };
             self.parked.insert(band.frame, (pf.hr, record));
         }
@@ -271,29 +292,42 @@ impl Reassembler {
     }
 
     /// Record that `frame` was shed by the drop policy: display order
-    /// advances past it instead of waiting forever.  Returns frames
+    /// advances past it instead of waiting forever.  Returns whether
+    /// the frame was *newly* shed — `false` when it was already
+    /// delivered or already shed, so the caller counts each frame as
+    /// dropped at most once and never after delivery — plus frames
     /// that became emittable (later frames may already be parked).
     ///
-    /// Any partially-assembled state for the frame is reclaimed (its
-    /// staging buffer returns to the pool), so a shed frame can never
-    /// strand an `in_flight` entry below the cursor — relevant once a
-    /// drop policy meets band sharding.
-    pub fn skip(&mut self, frame: usize) -> Vec<(ImageU8, FrameRecord)> {
+    /// Any assembled state for the frame — pending *or* parked — is
+    /// reclaimed (its staging buffer returns to the pool), so a shed
+    /// frame can never strand an `in_flight` entry below the cursor —
+    /// relevant once a drop policy meets band sharding or supervisor
+    /// re-enqueue.
+    pub fn skip(
+        &mut self,
+        frame: usize,
+    ) -> (bool, Vec<(ImageU8, FrameRecord)>) {
+        if frame < self.next || self.shed.contains(&frame) {
+            // already delivered (cursor moved past it) or already shed:
+            // recording a second drop would double-count the frame
+            return (false, self.drain_ready());
+        }
         if let Some(pf) = self.pending.remove(&frame) {
             self.pool.push(pf.hr);
         }
-        if frame >= self.next {
-            self.skipped.insert(frame);
+        if let Some((hr, _)) = self.parked.remove(&frame) {
+            self.pool.push(hr);
         }
-        self.drain_ready()
+        self.shed.insert(frame);
+        (true, self.drain_ready())
     }
 
     /// Emit every frame at the display-order cursor, stepping over
-    /// skipped slots.
+    /// shed slots.
     fn drain_ready(&mut self) -> Vec<(ImageU8, FrameRecord)> {
         let mut out = Vec::new();
         loop {
-            if self.skipped.remove(&self.next) {
+            if self.shed.remove(&self.next) {
                 self.next += 1;
             } else if let Some(v) = self.parked.remove(&self.next) {
                 out.push(v);
@@ -408,6 +442,7 @@ mod tests {
             dequeued: t0 + Duration::from_millis(ms.1),
             completed: t0 + Duration::from_millis(ms.2),
             stats,
+            degraded: false,
         }
     }
 
@@ -531,17 +566,23 @@ mod tests {
         assert!(asm.push(mk(1, (1, 2, 3))).is_empty());
         assert_eq!(asm.in_flight(), 1);
         // frame 0 was shed -> frame 1 becomes emittable immediately
-        let out = asm.skip(0);
+        let (newly, out) = asm.skip(0);
+        assert!(newly);
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].1.index, 1);
         assert_eq!(asm.in_flight(), 0);
         // skip arriving before any completion also advances the cursor
-        assert!(asm.skip(2).is_empty());
+        let (newly, out) = asm.skip(2);
+        assert!(newly);
+        assert!(out.is_empty());
         let out = asm.push(mk(3, (4, 5, 6)));
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].1.index, 3);
-        // skipping an already-delivered frame is a no-op
-        assert!(asm.skip(1).is_empty());
+        // skipping an already-delivered frame is a no-op and must NOT
+        // report a new shed (it would double-count delivered + dropped)
+        let (newly, out) = asm.skip(1);
+        assert!(!newly);
+        assert!(out.is_empty());
         let out = asm.push(mk(4, (7, 8, 9)));
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].1.index, 4);
@@ -556,7 +597,9 @@ mod tests {
         // half of frame 0 arrives, then the frame is shed
         assert!(asm.push(mk(0, 0, (0, 1, 2))).is_empty());
         assert_eq!(asm.in_flight(), 1);
-        assert!(asm.skip(0).is_empty());
+        let (newly, out) = asm.skip(0);
+        assert!(newly);
+        assert!(out.is_empty());
         assert_eq!(asm.in_flight(), 0, "partial frame reclaimed");
         // the other band completes late: it must not park frame 0
         // below the display cursor
@@ -567,6 +610,83 @@ mod tests {
         let out = asm.push(mk(1, 1, (4, 5, 7)));
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].1.index, 1);
+    }
+
+    #[test]
+    fn shed_frames_never_resurrect_from_reenqueued_bands() {
+        let t0 = Instant::now();
+        // 2-band frames, 4 LR rows, scale 1; frame 1 is shed while the
+        // cursor still sits at frame 0 (the supervisor re-enqueue case:
+        // its bands are still in flight on another worker)
+        let mut asm = Reassembler::new(4, 2, 1, 1);
+        let mk = |f, b, ms| band(t0, f, b, 2, 2, 2, 1, ms, None);
+        let (newly, out) = asm.skip(1);
+        assert!(newly);
+        assert!(out.is_empty());
+        // both of frame 1's bands complete late (frame >= cursor):
+        // they must not re-open assembly for the shed frame
+        assert!(asm.push(mk(1, 0, (0, 1, 2))).is_empty());
+        assert!(asm.push(mk(1, 1, (0, 1, 3))).is_empty());
+        assert_eq!(asm.in_flight(), 0, "shed frame must not re-enter");
+        // a second shed report for the same frame is not a new drop
+        let (newly, _) = asm.skip(1);
+        assert!(!newly);
+        // frame 0 delivers, the cursor steps over the shed slot, and
+        // frame 2 delivers — frame 1 is neither delivered nor stranded
+        assert!(asm.push(mk(0, 0, (0, 1, 2))).is_empty());
+        let out = asm.push(mk(0, 1, (0, 1, 3)));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.index, 0);
+        assert!(asm.push(mk(2, 0, (4, 5, 6))).is_empty());
+        let out = asm.push(mk(2, 1, (4, 5, 7)));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.index, 2);
+        assert_eq!(asm.in_flight(), 0);
+    }
+
+    #[test]
+    fn skip_reclaims_parked_frames_too() {
+        let t0 = Instant::now();
+        // frame 1 fully assembles and parks behind the missing frame
+        // 0, then the policy sheds it: the parked buffer must be
+        // reclaimed, not stranded behind the cursor forever
+        let mut asm = Reassembler::new(4, 2, 1, 1);
+        let mk = |f, b, ms| band(t0, f, b, 2, 2, 2, 1, ms, None);
+        assert!(asm.push(mk(1, 0, (0, 1, 2))).is_empty());
+        assert!(asm.push(mk(1, 1, (0, 1, 3))).is_empty());
+        assert_eq!(asm.in_flight(), 1, "frame 1 parked");
+        let (newly, out) = asm.skip(1);
+        assert!(newly);
+        assert!(out.is_empty());
+        assert_eq!(asm.in_flight(), 0, "parked frame reclaimed");
+        // frame 0 delivers alone; the shed slot is stepped over
+        assert!(asm.push(mk(0, 0, (0, 1, 2))).is_empty());
+        let out = asm.push(mk(0, 1, (0, 1, 3)));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.index, 0);
+        assert!(asm.push(mk(2, 0, (4, 5, 6))).is_empty());
+        let out = asm.push(mk(2, 1, (4, 5, 7)));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].1.index, 2);
+    }
+
+    #[test]
+    fn degraded_bands_mark_the_frame_record() {
+        let t0 = Instant::now();
+        let mut asm = Reassembler::new(4, 2, 1, 1);
+        let mk = |f, b, ms| band(t0, f, b, 2, 2, 2, 1, ms, None);
+        // one degraded band taints the whole frame's record
+        let mut b0 = mk(0, 0, (0, 1, 2));
+        b0.degraded = true;
+        assert!(asm.push(b0).is_empty());
+        let out = asm.push(mk(0, 1, (0, 1, 3)));
+        assert_eq!(out.len(), 1);
+        assert!(out[0].1.degraded);
+        // an all-full-quality frame stays unmarked
+        assert!(asm.push(mk(1, 0, (4, 5, 6))).is_empty());
+        let out = asm.push(mk(1, 1, (4, 5, 7)));
+        assert_eq!(out.len(), 1);
+        assert!(!out[0].1.degraded);
     }
 
     #[test]

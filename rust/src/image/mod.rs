@@ -8,7 +8,7 @@ pub mod synth;
 
 pub use io::{read_ppm, write_ppm};
 pub use metrics::{mse, psnr, psnr_u8};
-pub use resize::{box_downsample_x3, nearest_upsample};
+pub use resize::{bilinear_upsample, box_downsample_x3, nearest_upsample};
 pub use synth::SceneGenerator;
 
 /// An 8-bit HWC image (the accelerator's native pixel format).

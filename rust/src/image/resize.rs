@@ -1,6 +1,7 @@
 //! Resampling: the x3 box downsample (LR degradation model, matching
-//! `python/compile/data.downsample_x3`) and nearest-neighbour upsample
-//! (the APBN anchor path).
+//! `python/compile/data.downsample_x3`), nearest-neighbour upsample
+//! (the APBN anchor path), and the integer bilinear upsample (the
+//! cheap degraded-quality path `RtPolicy::Degrade` falls back to).
 
 use super::{ImageF32, ImageU8};
 
@@ -25,6 +26,58 @@ pub fn box_downsample_x3(img: &ImageF32) -> ImageF32 {
                     }
                 }
                 out.set(y, x, ch, s / 9.0);
+            }
+        }
+    }
+    out
+}
+
+/// Bilinear x`r` upsample of a u8 image in exact integer arithmetic —
+/// the cheap fallback the serving tier downshifts to when a frame's
+/// deadline is at risk (`RtPolicy::Degrade`).
+///
+/// Half-pixel-center mapping (`src = (dst + 0.5)/r - 0.5`), edges
+/// clamped.  The source offset for output pixel `d` is the exact
+/// rational `(2d + 1 - r) / 2r`, so the whole interpolation runs in
+/// integers with denominator `(2r)^2` and round-half-up — bit-stable
+/// across hosts, which the chaos tests rely on.
+pub fn bilinear_upsample(img: &ImageU8, r: usize) -> ImageU8 {
+    assert!(r >= 1, "bilinear_upsample needs r >= 1 (got {r})");
+    let mut out = ImageU8::new(img.h * r, img.w * r, img.c);
+    let d2 = (2 * r) as i64;
+    // source index + fractional weight (numerator over 2r), clamped
+    let coord = |dst: usize, n: usize| -> (usize, usize, i64) {
+        let num = 2 * dst as i64 + 1 - r as i64;
+        let mut i0 = num.div_euclid(d2);
+        let mut f = num.rem_euclid(d2);
+        if i0 < 0 {
+            i0 = 0;
+            f = 0;
+        }
+        let mut i1 = i0 as usize + 1;
+        if i1 >= n {
+            i1 = n - 1;
+            if i0 as usize >= n - 1 {
+                f = 0;
+            }
+        }
+        (i0 as usize, i1, f)
+    };
+    let denom = d2 * d2;
+    for y in 0..out.h {
+        let (y0, y1, fy) = coord(y, img.h);
+        for x in 0..out.w {
+            let (x0, x1, fx) = coord(x, img.w);
+            for ch in 0..img.c {
+                let v00 = img.get(y0, x0, ch) as i64;
+                let v01 = img.get(y0, x1, ch) as i64;
+                let v10 = img.get(y1, x0, ch) as i64;
+                let v11 = img.get(y1, x1, ch) as i64;
+                let top = v00 * (d2 - fx) + v01 * fx;
+                let bot = v10 * (d2 - fx) + v11 * fx;
+                let sum = top * (d2 - fy) + bot * fy;
+                let v = (sum + denom / 2) / denom;
+                out.set(y, x, ch, v.clamp(0, 255) as u8);
             }
         }
     }
@@ -81,5 +134,41 @@ mod tests {
     #[should_panic(expected = "divisible by 3")]
     fn downsample_rejects_ragged() {
         box_downsample_x3(&ImageF32::new(4, 3, 1));
+    }
+
+    #[test]
+    fn bilinear_constant_is_exact() {
+        let img = ImageU8::from_vec(2, 2, 1, vec![42; 4]);
+        for r in 1..=4 {
+            let up = bilinear_upsample(&img, r);
+            assert_eq!((up.h, up.w), (2 * r, 2 * r));
+            assert!(up.data.iter().all(|&v| v == 42), "r={r}");
+        }
+    }
+
+    #[test]
+    fn bilinear_r1_is_identity() {
+        let img = ImageU8::from_vec(2, 3, 2, (0..12).collect());
+        assert_eq!(bilinear_upsample(&img, 1), img);
+    }
+
+    #[test]
+    fn bilinear_interpolates_between_neighbours() {
+        // 1x2 [0, 100] at x2: centers fall 1/4 and 3/4 between the
+        // two sources -> exact quarter weights, round-half-up.
+        let img = ImageU8::from_vec(1, 2, 1, vec![0, 100]);
+        let up = bilinear_upsample(&img, 2);
+        assert_eq!(up.data, vec![0, 25, 75, 100]);
+    }
+
+    #[test]
+    fn bilinear_is_deterministic_and_edge_clamped() {
+        let img = ImageU8::from_vec(3, 3, 1, (0..9).map(|i| i * 28).collect());
+        let a = bilinear_upsample(&img, 3);
+        let b = bilinear_upsample(&img, 3);
+        assert_eq!(a, b);
+        // corners replicate the corner sources (clamped mapping)
+        assert_eq!(a.get(0, 0, 0), img.get(0, 0, 0));
+        assert_eq!(a.get(8, 8, 0), img.get(2, 2, 0));
     }
 }

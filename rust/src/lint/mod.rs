@@ -1,7 +1,7 @@
 //! `sr-lint`: the repo-specific static analysis pass (§Static
 //! analysis & sanitizers in `rust/README.md`).
 //!
-//! Five rules, enforced over `rust/src`, `rust/benches` and
+//! Six rules, enforced over `rust/src`, `rust/benches` and
 //! `rust/tests` by the `sr-lint` binary (and by the
 //! `tests/sr_lint_gate.rs` self-check, so `cargo test` alone already
 //! gates the tree):
@@ -25,6 +25,11 @@
 //! * **L5 `dyn-box`** — no `Box<dyn ...>` in `fusion/` or
 //!   `reference/` outside `#[cfg(test)]` (the PR-5 static-dispatch
 //!   invariant: schedulers and kernels stay monomorphic).
+//! * **L6 `ignored-send`** — no silently ignored channel-send results
+//!   (`let _ = tx.send(..)`, `tx.send(..).ok();`) in `coordinator/`
+//!   outside `#[cfg(test)]`, unless annotated `// LOSSY: <why no
+//!   frame is lost>` — a swallowed disconnect is how frames vanish
+//!   without a trace (§Supervision).
 //!
 //! The pass is token-level on the lexer's blanked code view
 //! ([`lexer::Scan`]), so strings, char literals and comments can never
@@ -42,7 +47,7 @@ use std::path::{Path, PathBuf};
 
 use lexer::Scan;
 
-/// The rule catalog. Stable IDs `L1`..`L5` are part of the CLI
+/// The rule catalog. Stable IDs `L1`..`L6` are part of the CLI
 /// contract (CI greps for them).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Rule {
@@ -51,6 +56,7 @@ pub enum Rule {
     TargetFeatureGate,
     HotPathPanic,
     DynBox,
+    IgnoredSend,
 }
 
 impl Rule {
@@ -61,6 +67,7 @@ impl Rule {
             Rule::TargetFeatureGate => "L3",
             Rule::HotPathPanic => "L4",
             Rule::DynBox => "L5",
+            Rule::IgnoredSend => "L6",
         }
     }
 
@@ -71,6 +78,7 @@ impl Rule {
             Rule::TargetFeatureGate => "target-feature-gate",
             Rule::HotPathPanic => "hot-path-panic",
             Rule::DynBox => "dyn-box",
+            Rule::IgnoredSend => "ignored-send",
         }
     }
 }
@@ -173,6 +181,7 @@ pub fn lint_source(path: &str, text: &str) -> Vec<Diagnostic> {
     rule_target_feature(&ctx, &mut diags);
     rule_hot_path_panic(&ctx, &mut diags);
     rule_dyn_box(&ctx, &mut diags);
+    rule_ignored_send(&ctx, &mut diags);
     diags.sort_by_key(|d| (d.line, d.rule.id()));
     diags
 }
@@ -524,6 +533,104 @@ fn rule_dyn_box(ctx: &FileCtx<'_>, diags: &mut Vec<Diagnostic>) {
     }
 }
 
+/// L6: no silently ignored channel sends in the coordinator.
+///
+/// A `tx.send(..)` whose `Result` is discarded (`let _ = ...;` or
+/// `...ok();`) swallows the receiver-hung-up signal — in the serving
+/// pipeline that is exactly how a frame disappears without ever being
+/// counted dropped or incomplete.  Intentional discards carry a
+/// `// LOSSY:` comment saying why no frame can be lost.
+fn rule_ignored_send(ctx: &FileCtx<'_>, diags: &mut Vec<Diagnostic>) {
+    if !ctx.path.contains("src/coordinator/") {
+        return;
+    }
+    let code = &ctx.scan.code;
+    let mut sites: Vec<usize> = Vec::new();
+    // `let _ = <...  .send(...)  ...>;` — the whole Result discarded
+    for pos in word_positions(code, "let") {
+        let Some((up, '_')) = next_non_ws(code, pos + 3) else {
+            continue;
+        };
+        if matches!(code.get(up + 1), Some(c) if is_ident(*c)) {
+            continue; // `let _named = ...` still binds the Result
+        }
+        let Some((eq, '=')) = next_non_ws(code, up + 1) else {
+            continue;
+        };
+        let Some(semi) = (eq..code.len()).find(|&k| code[k] == ';') else {
+            continue;
+        };
+        let stmt = &code[eq..semi];
+        let is_send = ["send", "try_send"].iter().any(|m| {
+            word_positions(stmt, m).iter().any(|&p| {
+                matches!(prev_non_ws(stmt, p), Some((_, '.')))
+                    && matches!(
+                        next_non_ws(stmt, p + m.len()),
+                        Some((_, '('))
+                    )
+            })
+        });
+        if is_send {
+            sites.push(pos);
+        }
+    }
+    // `...send(...).ok();` — the Result swallowed inline
+    for m in ["send", "try_send"] {
+        for pos in word_positions(code, m) {
+            if !matches!(prev_non_ws(code, pos), Some((_, '.'))) {
+                continue;
+            }
+            let Some((open, '(')) = next_non_ws(code, pos + m.len())
+            else {
+                continue;
+            };
+            let Some(close) = match_delim(code, open, '(', ')') else {
+                continue;
+            };
+            let Some((dot, '.')) = next_non_ws(code, close + 1) else {
+                continue;
+            };
+            let Some((okp, 'o')) = next_non_ws(code, dot + 1) else {
+                continue;
+            };
+            let is_ok = code.get(okp..okp + 2) == Some(&['o', 'k'][..])
+                && !matches!(code.get(okp + 2), Some(c) if is_ident(*c));
+            if !is_ok {
+                continue;
+            }
+            let Some((o2, '(')) = next_non_ws(code, okp + 2) else {
+                continue;
+            };
+            let Some(c2) = match_delim(code, o2, '(', ')') else {
+                continue;
+            };
+            if matches!(next_non_ws(code, c2 + 1), Some((_, ';'))) {
+                sites.push(pos);
+            }
+        }
+    }
+    sites.sort_unstable();
+    sites.dedup();
+    for pos in sites {
+        let line = ctx.scan.line_of(pos);
+        if ctx.test_mask[line] {
+            continue;
+        }
+        if attached_comments(ctx, line).contains("LOSSY:") {
+            continue;
+        }
+        ctx.push(
+            diags,
+            Rule::IgnoredSend,
+            line,
+            "ignored channel-send result in coordinator/ (handle the \
+             disconnect, or attach a `// LOSSY:` comment justifying \
+             why dropping this message cannot lose a frame)"
+                .to_string(),
+        );
+    }
+}
+
 // ---------------------------------------------------------------- fixtures
 
 #[cfg(test)]
@@ -706,6 +813,52 @@ mod tests {
         let test_only = "#[cfg(test)]\nmod tests {\n    \
                          fn mk() -> Box<dyn Fn()> { Box::new(|| ()) }\n}\n";
         let d = lint_source("rust/src/fusion/fake.rs", test_only);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l6_flags_ignored_sends_in_coordinator_only() {
+        let src = "\
+pub fn pump(tx: &Sender<u32>, res: Vec<u32>) {
+    for v in res {
+        let _ = tx.send(v);
+    }
+    tx.try_send(7).ok();
+}
+";
+        let d = lint_source("rust/src/coordinator/fake.rs", src);
+        assert_eq!(ids(&d), vec![("L6", 3), ("L6", 5)]);
+        // the same discards outside coordinator/ are out of scope
+        let d = lint_source("rust/src/analysis/fake.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l6_accepts_lossy_comment_bound_results_and_test_code() {
+        let src = "\
+pub fn pump(tx: &Sender<u32>) -> bool {
+    // LOSSY: receiver outlives this loop by construction (owned Arc).
+    let _ = tx.send(1);
+    // binding or branching on the Result is the non-lossy idiom
+    let sunk = tx.send(2).is_ok();
+    if tx.send(3).is_err() {
+        return false;
+    }
+    let _unrelated = compute();
+    sunk
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn harness_may_drop_sends() {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let _ = tx.send(1);
+        tx.send(2).ok();
+    }
+}
+";
+        let d = lint_source("rust/src/coordinator/fake.rs", src);
         assert!(d.is_empty(), "{d:?}");
     }
 

@@ -18,14 +18,14 @@ use sr_accel::benchkit::Table;
 use sr_accel::cli::{Args, USAGE};
 use sr_accel::config::{
     AcceleratorConfig, ExecutorKind, FusionKind, HaloPolicy, ModelConfig,
-    RtPolicy, ShardPlan, ShardStrategy, StreamSpec, SystemConfig,
-    WorkerAffinity,
+    RestartPolicy, RtPolicy, ShardPlan, ShardStrategy, StreamSpec,
+    SystemConfig, WorkerAffinity,
 };
 use sr_accel::coordinator::{
     engine::{build_engine, engine_factory, model_for_scale},
     run_pipeline, serve_multi, Engine, EngineFactory, EngineKind,
-    Int8Engine, MultiServeConfig, PipelineConfig, ScaleEngineFactory,
-    SimEngine,
+    FaultPlan, Int8Engine, MultiServeConfig, PipelineConfig,
+    ScaleEngineFactory, SimEngine,
 };
 use sr_accel::fusion::{
     make_scheduler, AnyScheduler, FusionScheduler, TiltedScheduler,
@@ -96,6 +96,32 @@ fn resolve_executor(
     }))
 }
 
+/// Worker supervision + fault injection for `serve` / `serve-multi`:
+/// CLI flags override the `[serve]` config, and the merged restart
+/// policy passes the same `checked_ms` rejection path the config
+/// loader uses, so both entry points reject the same garbage.
+fn resolve_supervision(
+    args: &Args,
+    sys: &SystemConfig,
+) -> Result<(RestartPolicy, FaultPlan)> {
+    let mut restart = sys.serve.restart;
+    restart.max_restarts =
+        args.opt_usize("restart-max", restart.max_restarts)?;
+    restart.backoff_base_ms =
+        args.opt_f64("restart-backoff-ms", restart.backoff_base_ms)?;
+    restart.backoff_cap_ms =
+        args.opt_f64("restart-backoff-cap-ms", restart.backoff_cap_ms)?;
+    let restart = restart
+        .validated()
+        .map_err(|e| anyhow::anyhow!("--restart-*: {e}"))?;
+    let inject = match args.opt("inject") {
+        Some(s) => FaultPlan::parse(s)
+            .map_err(|e| anyhow::anyhow!("--inject: {e}"))?,
+        None => sys.serve.inject.clone(),
+    };
+    Ok((restart, inject))
+}
+
 /// Plan-cache location: `--plan-cache` flag, then `[tune] cache`,
 /// then the per-user default under `$XDG_CACHE_HOME`.
 fn plan_cache_path(args: &Args, sys: &SystemConfig) -> PathBuf {
@@ -112,7 +138,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "engine", "frames", "workers", "queue-depth", "width", "height",
         "source-fps", "seed", "config", "save-last", "shard", "band-rows",
-        "halo", "affinity", "executor", "plan-cache",
+        "halo", "affinity", "executor", "plan-cache", "restart-max",
+        "restart-backoff-ms", "restart-backoff-cap-ms", "inject",
     ])?;
     let sys = load_system_config(args)?;
     let kind = EngineKind::parse(args.opt_str("engine", &sys.serve.engine))
@@ -178,6 +205,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             plan_source = format!("cache:{}", key.slug());
         }
     }
+    let (restart, inject) = resolve_supervision(args, &sys)?;
     let cfg = PipelineConfig {
         frames: args.opt_usize("frames", sys.serve.frames)?,
         queue_depth: args.opt_usize("queue-depth", sys.serve.queue_depth)?,
@@ -192,6 +220,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         scale: sys.model.scale,
         shard: plan,
         model_layers: sys.model.n_layers(),
+        restart,
+        inject,
     };
     // PJRT artifacts are fixed-shape; pick the one matching the work
     // unit the engine will actually see (whole frame or band)
@@ -237,8 +267,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .map(|_| {
                 let qm = model_for_scale(trained.as_ref(), sys.model.scale);
                 Box::new(move || {
-                    Ok(Box::new(Int8Engine::with_executor(qm, executor))
-                        as Box<dyn Engine>)
+                    // clone *inside*: the supervisor may call the
+                    // factory again after a restart
+                    Ok(Box::new(Int8Engine::with_executor(
+                        qm.clone(),
+                        executor,
+                    )) as Box<dyn Engine>)
                 }) as EngineFactory
             })
             .collect()
@@ -273,7 +307,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_serve_multi(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "streams", "engine", "frames", "workers", "queue-depth", "policy",
-        "seed", "config", "executor", "plan-cache",
+        "seed", "config", "executor", "plan-cache", "restart-max",
+        "restart-backoff-ms", "restart-backoff-cap-ms", "inject",
     ])?;
     let sys = load_system_config(args)?;
     let streams = match args.opt("streams") {
@@ -285,7 +320,7 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
     };
     let policy = match args.opt("policy") {
         Some(s) => RtPolicy::parse(s)
-            .context("unknown --policy (best-effort|drop:MS)")?,
+            .context("unknown --policy (best-effort|drop:MS|degrade:MS)")?,
         None => sys.serve.policy,
     };
     let kind = EngineKind::parse(args.opt_str("engine", &sys.serve.engine))
@@ -296,6 +331,7 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
              pjrt artifacts are AOT-compiled for one geometry"
         );
     }
+    let (restart, inject) = resolve_supervision(args, &sys)?;
     let cfg = MultiServeConfig {
         streams,
         frames: args.opt_usize("frames", sys.serve.frames)?,
@@ -303,6 +339,8 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
         queue_depth: args.opt_usize("queue-depth", sys.serve.queue_depth)?,
         policy,
         seed: args.opt_usize("seed", 7)? as u64,
+        restart,
+        inject,
     };
     // load the trained weights once; per-scale fallback happens inside
     // the workers via the shared `model_for_scale` rule (streams whose

@@ -509,14 +509,20 @@ pub fn measure_plan(
             scale: qm.scale,
             shard: plan.shard.clone(),
             model_layers: qm.n_layers(),
+            restart: crate::config::RestartPolicy::none(),
+            inject: crate::coordinator::FaultPlan::default(),
         };
         let factories: Vec<EngineFactory> = (0..cfg.workers)
             .map(|_| {
                 let qm = qm.clone();
                 let ex = plan.executor;
                 Box::new(move || {
-                    Ok(Box::new(Int8Engine::with_executor(qm, ex))
-                        as Box<dyn Engine>)
+                    // clone *inside*: the supervisor may call the
+                    // factory again after a restart
+                    Ok(Box::new(Int8Engine::with_executor(
+                        qm.clone(),
+                        ex,
+                    )) as Box<dyn Engine>)
                 }) as EngineFactory
             })
             .collect();

@@ -1,0 +1,334 @@
+//! Chaos suite for the self-healing serving pipeline (§Supervision):
+//! seeded fault plans drive the real restart/backoff, retry-rescue and
+//! quality-degradation code paths, across the full policy x worker
+//! matrix.  CI additionally runs this file under ThreadSanitizer.
+//!
+//! Invariants exercised:
+//! * no injected panic ever escapes `serve_multi` — faults surface as
+//!   restarts, report errors, or a clean `Err`, never an abort;
+//! * every offered frame is accounted: delivered + dropped +
+//!   incomplete per stream, with degraded a subset of delivered;
+//! * with restart budget, delivered frames are bit-identical to the
+//!   fault-free run (supervision never trades pixels for liveness);
+//! * injected faults are visible in the report (`restarts`, `dropped`,
+//!   `degraded`, `errors`) where the schedule makes them deterministic;
+//! * under overload, `Degrade` beats `DropLate` on goodput with zero
+//!   undelivered frames (the ISSUE 9 acceptance pair).
+//!
+//! Geometries are deliberately tiny: TSan runs this whole file.
+
+use sr_accel::config::{RestartPolicy, RtPolicy, StreamSpec};
+use sr_accel::coordinator::{
+    serve_multi, Engine, FaultPlan, Int8Engine, MultiServeConfig,
+    ScaleEngineFactory,
+};
+use sr_accel::image::ImageU8;
+use sr_accel::model::QuantModel;
+
+fn spec(label: &str, w: usize, h: usize, scale: usize) -> StreamSpec {
+    StreamSpec {
+        label: label.to_string(),
+        lr_w: w,
+        lr_h: h,
+        scale,
+        fps: None,
+    }
+}
+
+fn int8_factories(workers: usize, seed: u64) -> Vec<ScaleEngineFactory> {
+    (0..workers)
+        .map(|_| {
+            Box::new(move |scale: usize| {
+                Ok(Box::new(Int8Engine::new(QuantModel::test_model(
+                    2, 3, 4, scale, seed,
+                ))) as Box<dyn Engine>)
+            }) as ScaleEngineFactory
+        })
+        .collect()
+}
+
+/// Fast supervision for tests: generous budget, ~1 ms backoff.
+fn quick_restart(max: usize) -> RestartPolicy {
+    RestartPolicy {
+        max_restarts: max,
+        backoff_base_ms: 1.0,
+        backoff_cap_ms: 4.0,
+    }
+}
+
+type Delivered = Vec<Vec<(usize, ImageU8)>>;
+
+fn run(
+    cfg: &MultiServeConfig,
+    seed: u64,
+) -> (Delivered, sr_accel::coordinator::PipelineReport) {
+    let n = cfg.streams.len();
+    let mut got: Delivered = vec![Vec::new(); n];
+    let rep = serve_multi(
+        cfg,
+        int8_factories(cfg.workers, seed),
+        |si, fi, hr| got[si].push((fi, hr.clone())),
+    )
+    .expect("serve_multi must not fail while any worker survives");
+    (got, rep)
+}
+
+fn assert_accounting(rep: &sr_accel::coordinator::PipelineReport) {
+    let mut degraded_total = 0;
+    for (si, s) in rep.streams.iter().enumerate() {
+        assert_eq!(
+            s.meta.offered,
+            s.delivered + s.meta.dropped + s.incomplete,
+            "stream {si}: offered must partition into terminal states"
+        );
+        assert!(
+            s.degraded <= s.delivered,
+            "stream {si}: degraded ({}) must be a subset of delivered \
+             ({})",
+            s.degraded,
+            s.delivered
+        );
+        degraded_total += s.degraded;
+    }
+    assert_eq!(rep.degraded, degraded_total);
+}
+
+/// The full matrix: (panic | error | stall-past-deadline) x
+/// (BestEffort | DropLate | Degrade) x (1 | 2 | 4 workers).  No panic
+/// escapes, accounting always holds, and with budget no error
+/// surfaces.  Where the schedule is deterministic (1 worker), the
+/// fault must be visible in the report.
+#[test]
+fn fault_matrix_never_escapes_and_always_accounts() {
+    // every fault fires on the worker's *first* engine call: frame 0
+    // is dequeued microseconds after emission, so the call happens (and
+    // the fault fires) under every policy regardless of scheduler
+    // timing — later indices could starve if frames go late under a
+    // sanitizer's slowdown
+    let faults = ["w0:panic@0", "w0:error@0", "w0:stall:25@0"];
+    let policies = [
+        RtPolicy::BestEffort,
+        RtPolicy::DropLate { deadline_ms: 5.0 },
+        RtPolicy::Degrade { deadline_ms: 5.0 },
+    ];
+    for fault in faults {
+        for policy in policies {
+            for workers in [1usize, 2, 4] {
+                let cfg = MultiServeConfig {
+                    streams: vec![spec("a", 10, 8, 2)],
+                    frames: 6,
+                    workers,
+                    queue_depth: 2,
+                    policy,
+                    seed: 3,
+                    restart: quick_restart(3),
+                    inject: FaultPlan::parse(fault).unwrap(),
+                };
+                let (got, rep) = run(&cfg, 9);
+                let tag = format!(
+                    "fault={fault} policy={} workers={workers}",
+                    policy.name()
+                );
+                assert_accounting(&rep);
+                assert!(
+                    rep.errors.is_empty(),
+                    "{tag}: budget 3 must absorb one fault: {:?}",
+                    rep.errors
+                );
+                // delivery order survives the chaos
+                let idx: Vec<usize> =
+                    got[0].iter().map(|(i, _)| *i).collect();
+                assert!(
+                    idx.windows(2).all(|w| w[0] < w[1]),
+                    "{tag}: out of order: {idx:?}"
+                );
+                // one worker serializes the schedule: its first engine
+                // call deterministically hits the fault
+                if workers == 1 && !fault.contains("stall") {
+                    assert_eq!(rep.restarts, 1, "{tag}");
+                }
+                if fault.contains("stall") {
+                    // a stall is slowness, not failure: never a restart
+                    assert_eq!(rep.restarts, 0, "{tag}");
+                }
+                if matches!(policy, RtPolicy::BestEffort) {
+                    // best-effort + budget: every frame full quality
+                    assert_eq!(rep.frames, 6, "{tag}");
+                    assert_eq!(rep.dropped, 0, "{tag}");
+                    assert_eq!(rep.degraded, 0, "{tag}");
+                }
+                if matches!(policy, RtPolicy::Degrade { .. }) {
+                    // degrade admits like best-effort: zero undelivered
+                    assert_eq!(rep.dropped, 0, "{tag}");
+                    assert_eq!(rep.incomplete, 0, "{tag}");
+                    assert_eq!(rep.frames, 6, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+/// Injected faults must not change a single delivered bit under
+/// best-effort with restart budget — compared against the fault-free
+/// run, per fault kind.
+#[test]
+fn best_effort_delivery_is_bit_identical_across_fault_kinds() {
+    let run_with = |inject: &str, restart: RestartPolicy| {
+        let cfg = MultiServeConfig {
+            streams: vec![spec("a", 10, 8, 2), spec("b", 8, 6, 3)],
+            frames: 4,
+            workers: 1, // serialize so every fault fires deterministically
+            queue_depth: 2,
+            policy: RtPolicy::BestEffort,
+            seed: 5,
+            restart,
+            inject: FaultPlan::parse(inject).unwrap(),
+        };
+        run(&cfg, 13)
+    };
+    let (clean, clean_rep) = run_with("", RestartPolicy::none());
+    assert_eq!(clean_rep.frames, 8);
+    for fault in ["w0:panic@2", "w0:error@0", "w0:stall:10@1"] {
+        let (got, rep) = run_with(fault, quick_restart(2));
+        assert_eq!(
+            got, clean,
+            "{fault}: delivery must be bit-identical to the clean run"
+        );
+        assert_eq!(rep.incomplete, 0, "{fault}");
+        assert!(rep.errors.is_empty(), "{fault}: {:?}", rep.errors);
+        if !fault.contains("stall") {
+            assert_eq!(rep.restarts, 1, "{fault}");
+            assert!(
+                rep.render().contains("supervisor: 1 worker restart"),
+                "{fault}: restart missing from report"
+            );
+        }
+    }
+}
+
+/// The ISSUE 9 acceptance shape: a seeded fault plan kills one of two
+/// workers mid-run; the pool still delivers 100% of frames,
+/// bit-identical to the fault-free run.
+#[test]
+fn killing_one_of_two_workers_loses_nothing() {
+    let run_with = |inject: &str, restart: RestartPolicy| {
+        let cfg = MultiServeConfig {
+            streams: vec![spec("a", 10, 8, 2), spec("b", 8, 6, 3)],
+            frames: 8,
+            workers: 2,
+            queue_depth: 2,
+            policy: RtPolicy::BestEffort,
+            seed: 7,
+            restart,
+            inject: if inject.is_empty() {
+                FaultPlan::default()
+            } else {
+                FaultPlan::parse(inject).unwrap()
+            },
+        };
+        run(&cfg, 17)
+    };
+    let (clean, _) = run_with("", RestartPolicy::none());
+    // worker 0 panics on every engine call it attempts until its
+    // budget absorbs it; the shared-queue protocol guarantees worker 1
+    // keeps serving throughout
+    let (got, rep) = run_with("w0:panic@0,w0:panic@1", quick_restart(2));
+    assert_eq!(got, clean, "fault run must be bit-identical");
+    assert_eq!(rep.frames, 16, "100% of frames delivered");
+    assert_eq!(rep.dropped, 0);
+    assert_eq!(rep.incomplete, 0);
+    assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+    assert_accounting(&rep);
+}
+
+/// When every worker exhausts its budget the run ends with a clean
+/// error — not a hang, not a panic — and nothing was delivered to
+/// mis-report.
+#[test]
+fn all_workers_exhausted_is_a_clean_error() {
+    let cfg = MultiServeConfig {
+        streams: vec![spec("a", 8, 6, 2)],
+        frames: 4,
+        workers: 1,
+        queue_depth: 1,
+        policy: RtPolicy::BestEffort,
+        seed: 2,
+        restart: RestartPolicy::none(), // first failure is fatal
+        inject: FaultPlan::parse("w0:panic@0").unwrap(),
+    };
+    let err = serve_multi(&cfg, int8_factories(1, 3), |_, _, _| {})
+        .expect_err("sole worker dies on frame 0: nothing delivered");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no frames"), "{msg}");
+    assert!(msg.contains("restart budget of 0"), "{msg}");
+}
+
+/// The ISSUE 9 acceptance pair, overload half: with a deadline no
+/// frame can meet and an undersized pool, `Degrade` delivers strictly
+/// more goodput than `DropLate` and leaves zero frames undelivered.
+#[test]
+fn overloaded_degrade_outdelivers_drop_late_with_zero_undelivered() {
+    let run_policy = |policy: RtPolicy| {
+        let cfg = MultiServeConfig {
+            streams: vec![
+                spec("a", 10, 8, 2),
+                spec("b", 8, 6, 3),
+                spec("c", 8, 8, 2),
+            ],
+            frames: 10,
+            workers: 1,     // undersized on purpose:
+            queue_depth: 1, // 3 fast sources vs 1 worker, 1 slot
+            policy,
+            seed: 29,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
+        };
+        run(&cfg, 23).1
+    };
+    let drop_rep = run_policy(RtPolicy::DropLate { deadline_ms: 0.01 });
+    let degr_rep = run_policy(RtPolicy::Degrade { deadline_ms: 0.01 });
+    assert_accounting(&drop_rep);
+    assert_accounting(&degr_rep);
+    assert!(
+        drop_rep.dropped > 0,
+        "overload must shed under DropLate: {}",
+        drop_rep.dropped
+    );
+    // Degrade: zero undelivered — every offered frame arrives, late
+    // ones on the bilinear path
+    assert_eq!(degr_rep.dropped, 0);
+    assert_eq!(degr_rep.incomplete, 0);
+    assert_eq!(degr_rep.frames, 30, "all offered frames delivered");
+    assert!(degr_rep.degraded > 0, "overload must show in the report");
+    assert!(
+        degr_rep.frames > drop_rep.frames,
+        "degrade goodput ({}) must strictly beat drop-late ({})",
+        degr_rep.frames,
+        drop_rep.frames
+    );
+}
+
+/// Faults injected while `Degrade` is active: the bilinear path makes
+/// no engine calls, so fault indices keep counting real engine
+/// attempts and the stream still loses nothing.
+#[test]
+fn degrade_with_engine_faults_still_loses_nothing() {
+    let cfg = MultiServeConfig {
+        streams: vec![spec("a", 10, 8, 2)],
+        frames: 8,
+        workers: 1,
+        queue_depth: 1,
+        policy: RtPolicy::Degrade { deadline_ms: 0.01 },
+        seed: 31,
+        restart: quick_restart(2),
+        inject: FaultPlan::parse("w0:panic@0").unwrap(),
+    };
+    let (got, rep) = run(&cfg, 19);
+    assert_eq!(rep.frames, 8, "degrade never sheds");
+    assert_eq!(rep.dropped, 0);
+    assert_eq!(rep.incomplete, 0);
+    assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+    assert_accounting(&rep);
+    let idx: Vec<usize> = got[0].iter().map(|(i, _)| *i).collect();
+    assert_eq!(idx, (0..8).collect::<Vec<_>>());
+}

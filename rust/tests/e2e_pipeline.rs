@@ -1,10 +1,12 @@
 //! End-to-end coordinator tests: the serving pipeline over real engines
 //! (artifact-dependent cases skip gracefully on bare checkouts).
 
-use sr_accel::config::{AcceleratorConfig, HaloPolicy, ShardPlan};
+use sr_accel::config::{
+    AcceleratorConfig, HaloPolicy, RestartPolicy, ShardPlan,
+};
 use sr_accel::coordinator::{
-    run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
-    SimEngine,
+    run_pipeline, Engine, EngineFactory, FaultPlan, Int8Engine,
+    PipelineConfig, SimEngine,
 };
 use sr_accel::image::psnr_u8;
 use sr_accel::model::QuantModel;
@@ -34,6 +36,8 @@ fn tiny(frames: usize, workers: usize) -> PipelineConfig {
         scale: 3,
         shard: ShardPlan::whole_frame(),
         model_layers: 3,
+        restart: RestartPolicy::none(),
+        inject: FaultPlan::default(),
     }
 }
 

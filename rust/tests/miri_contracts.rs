@@ -11,9 +11,10 @@
 //! Geometry is deliberately tiny — Miri is ~3 orders of magnitude
 //! slower than native.
 
-use sr_accel::config::ShardPlan;
+use sr_accel::config::{RestartPolicy, ShardPlan};
 use sr_accel::coordinator::{
-    run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
+    run_pipeline, Engine, EngineFactory, FaultPlan, Int8Engine,
+    PipelineConfig,
 };
 use sr_accel::model::{
     PreparedLayer, PreparedModel, QuantLayer, QuantModel, Scratch, Tensor,
@@ -172,6 +173,8 @@ fn threaded_pipeline_is_exact_and_race_free() {
         scale: 2,
         shard: ShardPlan::whole_frame(),
         model_layers: 2,
+        restart: RestartPolicy::none(),
+        inject: FaultPlan::default(),
     };
     let mut one = Vec::new();
     run_pipeline(&cfg(1), factories(1), |_, hr| one.push(hr.clone()))

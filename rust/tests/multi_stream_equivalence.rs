@@ -10,10 +10,11 @@
 //! every offered frame is accounted for (delivered + dropped +
 //! incomplete) and delivery order still holds per stream.
 
-use sr_accel::config::{RtPolicy, ShardPlan, StreamSpec};
+use sr_accel::config::{RestartPolicy, RtPolicy, ShardPlan, StreamSpec};
 use sr_accel::coordinator::{
     run_pipeline, serve_multi, stream_seed, Engine, EngineFactory,
-    Int8Engine, MultiServeConfig, PipelineConfig, ScaleEngineFactory,
+    FaultPlan, Int8Engine, MultiServeConfig, PipelineConfig,
+    ScaleEngineFactory,
 };
 use sr_accel::image::ImageU8;
 use sr_accel::model::QuantModel;
@@ -49,6 +50,8 @@ fn solo_frames(
         scale: spec.scale,
         shard: ShardPlan::whole_frame(),
         model_layers: layers,
+        restart: RestartPolicy::none(),
+        inject: FaultPlan::default(),
     };
     let scale = spec.scale;
     let factories: Vec<EngineFactory> = vec![Box::new(move || {
@@ -134,6 +137,8 @@ fn prop_best_effort_multi_stream_matches_solo_runs() {
                 queue_depth: 2,
                 policy: RtPolicy::BestEffort,
                 seed: base_seed,
+                restart: RestartPolicy::none(),
+                inject: FaultPlan::default(),
             };
             let mut got: Vec<Vec<(usize, ImageU8)>> = vec![Vec::new(); n];
             let rep = serve_multi(
@@ -205,6 +210,8 @@ fn three_heterogeneous_streams_bit_identical_to_solo() {
             queue_depth: 3,
             policy: RtPolicy::BestEffort,
             seed: base_seed,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
         };
         let mut got: Vec<Vec<ImageU8>> = vec![Vec::new(); 3];
         let rep = serve_multi(
@@ -246,6 +253,8 @@ fn drop_late_records_nonzero_drop_rate_under_undersized_pool() {
         queue_depth: 1, // 3 fast sources vs 1 worker, 1 queue slot
         policy: RtPolicy::DropLate { deadline_ms: 0.0 },
         seed: 19,
+        restart: RestartPolicy::none(),
+        inject: FaultPlan::default(),
     };
     let mut got: Vec<Vec<usize>> = vec![Vec::new(); 3];
     let rep = serve_multi(
@@ -272,4 +281,67 @@ fn drop_late_records_nonzero_drop_rate_under_undersized_pool() {
     // the report renders the delivery breakdown
     assert!(rep.render().contains("delivery:"));
     assert!(rep.render().contains("drop"));
+}
+
+/// §Supervision x shed history (PR 9 satellite): when a worker dies
+/// mid-frame and hands its in-flight frame to a survivor under
+/// `DropLate`, every admitted frame must terminate **exactly once** —
+/// delivered once, in order, or shed once — never delivered twice, and
+/// never counted as both dropped and incomplete.
+#[test]
+fn rescued_frames_terminate_exactly_once_under_drop_late() {
+    let streams = streams_for(2);
+    let mcfg = MultiServeConfig {
+        streams: streams.clone(),
+        frames: 12,
+        workers: 2,
+        queue_depth: 1, // fast sources vs 1 slot: admission sheds too
+        policy: RtPolicy::DropLate { deadline_ms: 1e6 },
+        seed: 23,
+        restart: RestartPolicy::none(),
+        inject: FaultPlan::default(),
+    };
+    // worker 0 can never build an engine: with a zero restart budget it
+    // exhausts on the first frame it picks up and must hand that frame
+    // to worker 1 over the retry channel instead of losing it
+    let mut factories = multi_factories(2, 1, 2, 5);
+    factories[0] =
+        Box::new(|_| anyhow::bail!("poisoned worker (factory)"));
+    let mut got: Vec<Vec<usize>> = vec![Vec::new(); 2];
+    let rep = serve_multi(&mcfg, factories, |si, fi, _| {
+        got[si].push(fi)
+    })
+    .unwrap();
+    // worker 1 survives and drains the retry channel before retiring,
+    // so a rescued frame is delivered or shed — never silently lost
+    assert_eq!(rep.incomplete, 0, "survivor must rescue in-flight work");
+    assert!(
+        rep.errors.len() <= 1,
+        "only worker 0 may die: {:?}",
+        rep.errors
+    );
+    if let Some(e) = rep.errors.first() {
+        assert!(e.contains("restart budget of 0"), "{e}");
+    }
+    let mut delivered_total = 0;
+    for (si, s) in rep.streams.iter().enumerate() {
+        assert_eq!(s.meta.offered, 12);
+        // the satellite property: terminal states partition offered
+        // frames — nothing double-counted dropped *and* incomplete
+        assert_eq!(
+            s.meta.offered,
+            s.delivered + s.meta.dropped + s.incomplete,
+            "stream {si} accounting"
+        );
+        // strictly increasing indices == no frame delivered twice and
+        // display order preserved across the rescue
+        assert!(
+            got[si].windows(2).all(|w| w[0] < w[1]),
+            "stream {si} duplicated or reordered: {:?}",
+            got[si]
+        );
+        assert_eq!(got[si].len(), s.delivered);
+        delivered_total += s.delivered;
+    }
+    assert_eq!(rep.frames, delivered_total);
 }

@@ -30,7 +30,9 @@ fn factories(
             let qm = qm.clone();
             let ex = plan.executor;
             Box::new(move || {
-                Ok(Box::new(Int8Engine::with_executor(qm, ex))
+                // clone *inside*: the supervisor may call the factory
+                // again after a restart
+                Ok(Box::new(Int8Engine::with_executor(qm.clone(), ex))
                     as Box<dyn Engine>)
             }) as EngineFactory
         })
@@ -55,6 +57,8 @@ fn run_plan(
         scale: qm.scale,
         shard: plan.shard.clone(),
         model_layers: qm.n_layers(),
+        restart: sr_accel::config::RestartPolicy::none(),
+        inject: sr_accel::coordinator::FaultPlan::default(),
     };
     let mut out = Vec::new();
     run_pipeline(&cfg, factories(qm, plan, workers), |_, hr| {

@@ -14,11 +14,12 @@
 //!   scheduler produces for the whole frame.
 
 use sr_accel::config::{
-    AcceleratorConfig, HaloPolicy, ShardPlan, ShardStrategy, WorkerAffinity,
+    AcceleratorConfig, HaloPolicy, RestartPolicy, ShardPlan, ShardStrategy,
+    WorkerAffinity,
 };
 use sr_accel::coordinator::{
-    run_pipeline, Engine, EngineFactory, Int8Engine, PipelineConfig,
-    PipelineReport, SimEngine,
+    run_pipeline, Engine, EngineFactory, FaultPlan, Int8Engine,
+    PipelineConfig, PipelineReport, SimEngine,
 };
 use sr_accel::fusion::{FusionScheduler, TiltedScheduler};
 use sr_accel::image::{ImageU8, SceneGenerator};
@@ -59,6 +60,8 @@ fn base_cfg(
         scale: 3,
         shard: ShardPlan::whole_frame(),
         model_layers,
+        restart: RestartPolicy::none(),
+        inject: FaultPlan::default(),
     }
 }
 
@@ -212,7 +215,10 @@ fn sim_engine_band_sharding_preserves_output_and_merges_stats() {
                 let qm = qm.clone();
                 let acc = acc.clone();
                 Box::new(move || {
-                    Ok(Box::new(SimEngine::new(qm, acc)) as Box<dyn Engine>)
+                    // clone *inside*: the supervisor may call the
+                    // factory again after a restart
+                    Ok(Box::new(SimEngine::new(qm.clone(), acc.clone()))
+                        as Box<dyn Engine>)
                 }) as EngineFactory
             })
             .collect()
