@@ -87,6 +87,7 @@ fn main() {
                 shard,
                 model_layers,
                 restart: RestartPolicy::none(),
+                stall_budget_ms: None,
                 inject: FaultPlan::default(),
             };
             let factories: Vec<EngineFactory> = (0..workers)
@@ -204,6 +205,7 @@ fn main() {
             shard: ShardPlan::whole_frame(),
             model_layers,
             restart: RestartPolicy::none(),
+            stall_budget_ms: None,
             inject: FaultPlan::default(),
         };
         // the tilted/streaming ratio is CI-gated, so never record a
@@ -323,6 +325,7 @@ fn main() {
                 seed: 7,
                 restart: RestartPolicy::none(),
                 inject: FaultPlan::default(),
+                stall_budget_ms: None,
             };
             let factories: Vec<ScaleEngineFactory> = (0..mworkers)
                 .map(|_| {
@@ -411,6 +414,7 @@ fn main() {
                 seed: 7,
                 restart: RestartPolicy::none(),
                 inject: FaultPlan::default(),
+                stall_budget_ms: None,
             };
             let factories: Vec<ScaleEngineFactory> = (0..1)
                 .map(|_| {
@@ -480,6 +484,179 @@ fn main() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => {
             eprintln!("failed to write BENCH_serving_degrade.json: {e}");
+            std::process::exit(1);
+        }
+    }
+
+    // ---- hang-recovery sweep (§Watchdog): one worker goes dark for
+    //      400 ms mid-run (an *uncooperative* stall, so the
+    //      watchdog-off arm still terminates — a true park would hang
+    //      it forever) while paced sources keep emitting against a
+    //      30 ms drop-late deadline.  With the watchdog disarmed the
+    //      blackout eats the whole run; armed at 25 ms the stalled
+    //      worker is reaped, its frame rescued, and a replacement
+    //      serves the rest on time.  Emits BENCH_serving_watchdog.json;
+    //      CI gates on goodput_watchdog_on > goodput_watchdog_off,
+    //      asserted here too so a bare `cargo bench` catches it. ------
+    let mut wjson = BenchJson::new("serving_watchdog");
+    {
+        // a deliberately tiny model: healthy engine calls must sit far
+        // below the 25 ms budget on every runner (including the
+        // artifact-less CI fallback, whose 7-layer model could graze
+        // it), so the only thing the watchdog can ever reap here is
+        // the injected stall
+        let small_factories = |n: usize| -> Vec<ScaleEngineFactory> {
+            (0..n)
+                .map(|_| {
+                    Box::new(move |scale: usize| {
+                        Ok(Box::new(Int8Engine::new(
+                            QuantModel::test_model(2, 3, 4, scale, 7),
+                        )) as Box<dyn Engine>)
+                    }) as ScaleEngineFactory
+                })
+                .collect()
+        };
+        let stall_budget_ms = 25.0;
+        let deadline_ms = 30.0;
+        let wframes = if smoke { 6 } else { 16 };
+        // 50 fps pacing: the emission window (>= 120 ms) dwarfs the
+        // armed recovery time (budget + tick) and is itself dwarfed by
+        // the 400 ms blackout, so the arms separate robustly even on
+        // noisy shared runners
+        // x4 first so the ladder's Reduced rung is reachable in the
+        // degrade arm (x3 has no "SR at x2" split)
+        let streams: Vec<StreamSpec> = [("a", 4usize), ("b", 3)]
+            .iter()
+            .map(|(label, scale)| StreamSpec {
+                label: label.to_string(),
+                lr_w: 64,
+                lr_h: 36,
+                scale: *scale,
+                fps: Some(50.0),
+            })
+            .collect();
+        let mut goodput_of = |armed: bool, tag: &str| -> f64 {
+            let cfg = MultiServeConfig {
+                streams: streams.clone(),
+                frames: wframes,
+                workers: 1,
+                queue_depth: 2,
+                policy: RtPolicy::DropLate { deadline_ms },
+                seed: 7,
+                restart: if armed {
+                    // the reap itself charges one restart
+                    RestartPolicy {
+                        max_restarts: 1,
+                        backoff_base_ms: 1.0,
+                        backoff_cap_ms: 4.0,
+                    }
+                } else {
+                    RestartPolicy::none()
+                },
+                inject: FaultPlan::parse("w0:stall:400@0").unwrap(),
+                stall_budget_ms: if armed { Some(stall_budget_ms) } else { None },
+            };
+            let rep = serve_multi(&cfg, small_factories(1), |_, _, _| {})
+                .expect("watchdog sweep serve failed");
+            let offered: usize =
+                rep.streams.iter().map(|s| s.meta.offered).sum();
+            assert_eq!(offered, wframes * 2, "sources must run to end");
+            assert!(rep.errors.is_empty(), "{tag}: {:?}", rep.errors);
+            if armed {
+                assert_eq!(
+                    rep.hangs_detected, 1,
+                    "the armed watchdog must reap the 400 ms stall"
+                );
+                wjson.push_extra("hangs_detected", rep.hangs_detected as f64);
+                wjson.push_extra(
+                    "zombies_reaped",
+                    rep.zombies_reaped as f64,
+                );
+            } else {
+                assert_eq!(rep.hangs_detected, 0, "disarmed arm reaped");
+            }
+            let goodput = rep.frames as f64 / offered.max(1) as f64;
+            println!(
+                "--- serving_watchdog: {tag}: goodput {:.3} \
+                 ({}/{offered} delivered, {} dropped, wall {:.0} ms) ---",
+                goodput,
+                rep.frames,
+                rep.dropped,
+                rep.wall.as_secs_f64() * 1e3
+            );
+            wjson.push(BenchRecord {
+                name: format!("serving_watchdog {tag}"),
+                ns_per_iter: rep.wall.as_nanos() as f64
+                    / rep.frames.max(1) as f64,
+                mp_per_s: Some(rep.mpix_per_s),
+                macs_per_s: None,
+            });
+            wjson.push_extra(&format!("goodput_{tag}"), goodput);
+            wjson.push_extra(
+                &format!("wall_ms_{tag}"),
+                rep.wall.as_secs_f64() * 1e3,
+            );
+            goodput
+        };
+        let g_off = goodput_of(false, "watchdog_off");
+        let g_on = goodput_of(true, "watchdog_on");
+        assert!(
+            g_on > g_off,
+            "armed watchdog goodput ({g_on:.3}) must strictly beat \
+             the disarmed run ({g_off:.3}) through a 400 ms blackout"
+        );
+        // recovery ceiling: budget + one monitor tick (budget/8,
+        // clamped) — what the armed arm pays before frames flow again
+        wjson.push_extra("stall_budget_ms", stall_budget_ms);
+        wjson.push_extra(
+            "time_to_recover_ms_bound",
+            stall_budget_ms + (stall_budget_ms / 8.0).clamp(1.0, 50.0),
+        );
+        wjson.push_extra("deadline_ms", deadline_ms);
+
+        // ladder visibility under the same blackout: Degrade + armed
+        // watchdog loses nothing and reports per-rung delivery rates
+        let cfg = MultiServeConfig {
+            streams: streams.clone(),
+            frames: wframes,
+            workers: 1,
+            queue_depth: 2,
+            policy: RtPolicy::Degrade { deadline_ms },
+            seed: 7,
+            restart: RestartPolicy {
+                max_restarts: 1,
+                backoff_base_ms: 1.0,
+                backoff_cap_ms: 4.0,
+            },
+            inject: FaultPlan::parse("w0:stall:400@0").unwrap(),
+            stall_budget_ms: Some(stall_budget_ms),
+        };
+        let rep = serve_multi(&cfg, small_factories(1), |_, _, _| {})
+            .expect("watchdog degrade arm failed");
+        assert_eq!(
+            rep.dropped + rep.incomplete,
+            0,
+            "degrade + watchdog must leave zero frames undelivered"
+        );
+        let delivered = rep.frames.max(1) as f64;
+        wjson.push_extra(
+            "reduced_rate_watchdog_degrade",
+            rep.degraded_by_level[0] as f64 / delivered,
+        );
+        wjson.push_extra(
+            "bilinear_rate_watchdog_degrade",
+            rep.degraded_by_level[1] as f64 / delivered,
+        );
+        println!(
+            "--- serving_watchdog: degrade arm: {} delivered \
+             [{} reduced, {} bilinear], 0 lost ---",
+            rep.frames, rep.degraded_by_level[0], rep.degraded_by_level[1]
+        );
+    }
+    match wjson.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_serving_watchdog.json: {e}");
             std::process::exit(1);
         }
     }

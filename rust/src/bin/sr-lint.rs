@@ -7,7 +7,7 @@
 //!
 //! Exits 0 when the tree is clean, 1 with one `path:line: [Lx/slug]
 //! message` diagnostic per violation otherwise (2 on a walk error).
-//! The rule catalog (L1–L6) is documented in `rust/README.md`
+//! The rule catalog (L1–L7) is documented in `rust/README.md`
 //! §Static analysis & sanitizers and in `sr_accel::lint`.
 
 use std::path::PathBuf;
@@ -20,7 +20,7 @@ fn main() -> ExitCode {
     if args.iter().any(|a| a == "--help" || a == "-h") {
         eprintln!(
             "usage: sr-lint [PATH ...]\n\n\
-             Repo-specific static analysis (rules L1-L6; see \
+             Repo-specific static analysis (rules L1-L7; see \
              rust/README.md).\n\
              With no PATH, lints this crate's src/, benches/ and tests/."
         );

@@ -108,9 +108,14 @@ COMMANDS:
              --restart-backoff-cap-ms F (worker supervision: restarts
               allowed per worker + capped exponential backoff;
               --restart-max 0 makes the first failure fatal)
+             --stall-budget-ms F|off (hung-worker watchdog: an engine
+              call busy past F ms is zombified, its work rerouted and
+              the worker replaced; off by default)
              --inject PLAN (deterministic faults, e.g.
-              w0:panic@2,w1:error@0,w1:stall:50@3 — worker W's K-th
-              engine call panics / errors / stalls MS ms)
+              w0:panic@2,w1:error@0,w1:stall:50@3,w0:hang@1,
+              w1:slow:4@0 — worker W's K-th engine call panics /
+              errors / stalls MS ms / hangs forever / every call from
+              the K-th on runs FACTOR-times slower)
   serve-multi  run N concurrent streams over one shared worker pool
              --streams SPEC[,SPEC...] with SPEC = GEOM@xS[@FPS]
              (GEOM = WxH or 270p|360p|540p|720p|1080p; e.g.
@@ -118,11 +123,14 @@ COMMANDS:
              --engine int8|sim  --frames N (per stream)  --workers N
              --queue-depth N  --seed N
              --policy best-effort|drop:MS|degrade:MS (drop sheds late
-              frames; degrade downshifts them to bilinear instead and
-              recovers after a streak of on-time frames)
+              frames; degrade walks them down a quality ladder —
+              full -> x2-SR+bilinear -> pure bilinear — one rung per
+              late frame, recovering one rung per on-time streak)
              --executor tilted|streaming  --plan-cache PATH
              --restart-max N --restart-backoff-ms F
-             --restart-backoff-cap-ms F  --inject PLAN (as in serve)
+             --restart-backoff-cap-ms F  --inject PLAN
+             --stall-budget-ms F|off (as in serve; must exceed the
+              policy deadline when both are set)
   tune       search execution plans for one serving geometry and cache
              the measured winner (keyed by geometry, scale, ISA and
              worker count; serve applies it on later runs)

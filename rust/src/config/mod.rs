@@ -10,7 +10,8 @@ mod types;
 
 pub use parser::{parse_toml, ParseError, Value};
 pub use types::{
-    checked_ms, clamped_ms_duration, AcceleratorConfig, ExecutorKind,
+    check_stall_budget, checked_ms, clamped_ms_duration,
+    AcceleratorConfig, ExecutorKind,
     FidelityKind, FusionKind, HaloPolicy, ModelConfig, RestartPolicy,
     RtPolicy, RunConfig, ServeConfig, ShardPlan, ShardStrategy, SimConfig,
     StreamSpec, SystemConfig, TuneConfig, WorkerAffinity, MS_ABSURD_CAP,

@@ -472,6 +472,32 @@ impl RtPolicy {
     }
 }
 
+/// Cross-check of the watchdog stall budget against the real-time
+/// deadline: when both are set, the budget must strictly exceed the
+/// deadline.  A budget at or below the deadline would zombify workers
+/// that are merely *late* (the degradation ladder's job) rather than
+/// *hung* (the watchdog's job), reaping healthy workers every frame.
+///
+/// Shared by the TOML path (`[serve] stall_budget_ms`) and the CLI
+/// path (`--stall-budget-ms`) so both reject the same configs.
+pub fn check_stall_budget(
+    stall_budget_ms: Option<f64>,
+    policy: &RtPolicy,
+) -> Result<(), String> {
+    if let (Some(budget), Some(deadline)) =
+        (stall_budget_ms, policy.deadline_ms())
+    {
+        if budget <= deadline {
+            return Err(format!(
+                "stall budget of {budget} ms must exceed the {deadline} \
+                 ms frame deadline (lateness belongs to the degradation \
+                 ladder; the watchdog only reaps hangs)"
+            ));
+        }
+    }
+    Ok(())
+}
+
 /// Worker supervision policy of the serving tier: how many times a
 /// dead worker (engine panic, engine error or failed rebuild) is
 /// respawned with a fresh engine, under capped exponential backoff.
@@ -681,6 +707,13 @@ pub struct ServeConfig {
     pub restart: RestartPolicy,
     /// Deterministic fault-injection plan (empty = no faults).
     pub inject: FaultPlan,
+    /// Hung-worker watchdog: a worker whose single engine call runs
+    /// past this budget is declared hung, its frame is rerouted to the
+    /// survivors and a replacement is spawned (under the restart
+    /// budget).  `None` disables the watchdog.  Must exceed the
+    /// real-time deadline when the policy has one — see
+    /// [`check_stall_budget`].
+    pub stall_budget_ms: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -696,6 +729,7 @@ impl Default for ServeConfig {
             streams: Vec::new(),
             restart: RestartPolicy::default(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         }
     }
 }
@@ -894,6 +928,29 @@ fn apply(cfg: &mut SystemConfig, v: &Value) -> Result<(), ParseError> {
         cfg.serve.inject = FaultPlan::parse(s)
             .map_err(|e| perr(format!("serve.inject: {e}")))?;
     }
+    match v.get("serve.stall_budget_ms") {
+        None => {}
+        Some(Value::Str(s)) if s == "off" || s == "none" => {
+            cfg.serve.stall_budget_ms = None;
+        }
+        Some(val) => {
+            let x = match val {
+                Value::Float(f) => *f,
+                Value::Int(i) => *i as f64,
+                other => {
+                    return Err(perr(format!(
+                        "serve.stall_budget_ms must be milliseconds or \
+                         \"off\", got {other:?}"
+                    )));
+                }
+            };
+            let x = checked_ms(x, "serve.stall_budget_ms", false)
+                .map_err(perr)?;
+            cfg.serve.stall_budget_ms = Some(x);
+        }
+    }
+    check_stall_budget(cfg.serve.stall_budget_ms, &cfg.serve.policy)
+        .map_err(perr)?;
     match v.get("run.executor") {
         None => {}
         Some(Value::Str(s)) => {
@@ -1348,6 +1405,58 @@ mod tests {
         ] {
             assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
         }
+    }
+
+    #[test]
+    fn serve_stall_budget_roundtrip_through_toml() {
+        let c = SystemConfig::from_toml(
+            "[serve]\nstall_budget_ms = 120.5\n",
+        )
+        .unwrap();
+        assert_eq!(c.serve.stall_budget_ms, Some(120.5));
+        // integers promote to milliseconds like every other ms knob
+        let c = SystemConfig::from_toml("[serve]\nstall_budget_ms = 80\n")
+            .unwrap();
+        assert_eq!(c.serve.stall_budget_ms, Some(80.0));
+        // explicit opt-out spellings and the default are all "off"
+        for off in [
+            "[serve]\nstall_budget_ms = \"off\"\n",
+            "[serve]\nstall_budget_ms = \"none\"\n",
+            "[serve]\nworkers = 2\n",
+        ] {
+            let c = SystemConfig::from_toml(off).unwrap();
+            assert_eq!(c.serve.stall_budget_ms, None, "for: {off}");
+        }
+        // budget above the deadline is the intended pairing
+        let c = SystemConfig::from_toml(
+            "[serve]\npolicy = \"drop:16.7\"\nstall_budget_ms = 100\n",
+        )
+        .unwrap();
+        assert_eq!(c.serve.stall_budget_ms, Some(100.0));
+    }
+
+    #[test]
+    fn serve_stall_budget_rejections() {
+        for bad in [
+            "[serve]\nstall_budget_ms = 0",
+            "[serve]\nstall_budget_ms = -5",
+            "[serve]\nstall_budget_ms = nan",
+            "[serve]\nstall_budget_ms = inf",
+            "[serve]\nstall_budget_ms = 1e13", // past MS_ABSURD_CAP
+            "[serve]\nstall_budget_ms = true",
+            "[serve]\nstall_budget_ms = \"fast\"",
+            // budget at or below the deadline reaps healthy-but-late
+            // workers — rejected for both deadline-bearing policies
+            "[serve]\npolicy = \"drop:50\"\nstall_budget_ms = 50",
+            "[serve]\npolicy = \"drop:50\"\nstall_budget_ms = 20",
+            "[serve]\npolicy = \"degrade:50\"\nstall_budget_ms = 49.9",
+        ] {
+            assert!(SystemConfig::from_toml(bad).is_err(), "accepted: {bad}");
+        }
+        // deadline-free policy accepts any valid budget
+        assert!(check_stall_budget(Some(5.0), &RtPolicy::BestEffort).is_ok());
+        assert!(check_stall_budget(None, &RtPolicy::parse("drop:16").unwrap())
+            .is_ok());
     }
 
     #[test]

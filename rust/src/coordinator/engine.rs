@@ -37,15 +37,23 @@ pub trait Engine {
     fn last_stats(&self) -> Option<RunStats> {
         None
     }
+    /// §Watchdog: install a cooperative-cancellation token the engine
+    /// polls at row/tile granularity.  A cancelled engine aborts its
+    /// current band early and returns a partial (blank-tail) frame —
+    /// the caller's generation check discards it.  Engines without an
+    /// interruptible inner loop (PJRT) ignore the token; the watchdog
+    /// still reroutes their work, it just cannot reclaim the thread.
+    fn set_cancel(&mut self, _cancel: crate::util::cancel::CancelToken) {}
 }
 
 /// Deferred engine constructor, sendable into a worker thread.  `Fn`
 /// (not `FnOnce`): the worker supervisor calls it again to rebuild the
 /// engine after a panic or engine error (`config::RestartPolicy`), so
 /// closures must clone captured models *inside* the body rather than
-/// moving them out.
+/// moving them out.  `Sync` so the watchdog monitor can reuse the same
+/// factory slice when spawning replacement workers.
 pub type EngineFactory =
-    Box<dyn Fn() -> Result<Box<dyn Engine>> + Send>;
+    Box<dyn Fn() -> Result<Box<dyn Engine>> + Send + Sync>;
 
 /// Engine selector for configs/CLI.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -146,6 +154,10 @@ impl Engine for Int8Engine {
 
     fn name(&self) -> &'static str {
         "int8"
+    }
+
+    fn set_cancel(&mut self, cancel: crate::util::cancel::CancelToken) {
+        self.scratch.cancel = Some(cancel);
     }
 }
 
@@ -281,6 +293,10 @@ impl Engine for SimEngine {
 
     fn last_stats(&self) -> Option<RunStats> {
         self.last.clone()
+    }
+
+    fn set_cancel(&mut self, cancel: crate::util::cancel::CancelToken) {
+        self.scratch.cancel = Some(cancel);
     }
 }
 

@@ -1,9 +1,10 @@
 //! Deterministic fault injection for the serving tier.
 //!
 //! A [`FaultPlan`] schedules worker-local faults — panic, engine
-//! error, or a stall — at exact engine-call attempt indices, so the
-//! chaos tests (`rust/tests/chaos_serving.rs`) and the overload bench
-//! drive the *real* supervisor code paths in `pipeline.rs`/`server.rs`
+//! error, a stall, a hang, or a persistent slowdown — at exact
+//! engine-call attempt indices, so the chaos tests
+//! (`rust/tests/chaos_serving.rs`) and the overload bench drive the
+//! *real* supervisor code paths in `pipeline.rs`/`server.rs`
 //! reproducibly.  The layer is compiled in always: an empty plan costs
 //! one integer increment and an empty-vec scan per engine call.
 //!
@@ -13,15 +14,33 @@
 //!   attempt (0-based);
 //! - `w<W>:error@<K>` — the attempt fails with an engine error;
 //! - `w<W>:stall:<MS>@<K>` — the attempt is delayed by `MS`
-//!   milliseconds, then proceeds normally.
+//!   milliseconds, then proceeds normally.  The sleep is deliberately
+//!   *uncooperative* (it ignores cancellation), modelling a call
+//!   blocked in a syscall — the watchdog must route around it;
+//! - `w<W>:hang@<K>` — the attempt parks on the worker's
+//!   [`CancelToken`] and never returns until the watchdog zombifies
+//!   the worker's generation.  Without an armed watchdog this hangs
+//!   the slot forever (the PR 9 failure mode, now injectable);
+//! - `w<W>:slow:<FACTOR>@<K>` — from attempt `K` onward, every call
+//!   takes `FACTOR`x its natural time (integer factor in `[2, 1000]`).
+//!   Unlike the one-shot kinds this is persistent, and the extra delay
+//!   is interruptible — it parks on the token, so a zombified slow
+//!   worker still exits promptly.
 //!
-//! Each fault fires exactly once and is then consumed, so a restarted
-//! worker's retry of the same work item succeeds — which is what lets
-//! the chaos tests assert full bit-identical delivery after a kill.
+//! One-shot faults fire exactly once and are then consumed, so a
+//! restarted worker's retry of the same work item succeeds — which is
+//! what lets the chaos tests assert full bit-identical delivery after
+//! a kill.
 
 use std::time::Duration;
 
 use anyhow::Result;
+
+use super::watchdog::CancelToken;
+
+/// Slowdown factors above this are absurd (a 1000x slowdown of a 5 ms
+/// band is already 5 s — far past any sane stall budget).
+const SLOW_FACTOR_CAP: u32 = 1000;
 
 /// What an injected fault does to an engine-call attempt.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,14 +51,25 @@ pub enum FaultKind {
     /// Fail the attempt with an engine error.
     Error,
     /// Sleep the given milliseconds, then proceed normally — long
-    /// enough stalls push frames past their real-time deadline.
+    /// enough stalls push frames past their real-time deadline, and
+    /// past the stall budget they exercise the watchdog against an
+    /// uncooperative (non-cancellable) worker.
     Stall {
         ms: u64,
+    },
+    /// Park on the worker's cancellation token: a true never-returns
+    /// hang that only the watchdog can unwind.
+    Hang,
+    /// Persistent slowdown: from this attempt onward every call owes
+    /// `(factor - 1)`x its natural time in extra (interruptible) delay.
+    Slow {
+        factor: u32,
     },
 }
 
 /// One scheduled fault: fires on worker `worker`'s `at_call`-th
-/// engine-call attempt (0-based), exactly once.
+/// engine-call attempt (0-based), exactly once (`Slow` stays latched
+/// once fired).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct FaultSpec {
     pub worker: usize,
@@ -69,7 +99,7 @@ impl FaultPlan {
             let (w, action) = rest.split_once(':').ok_or_else(|| {
                 format!(
                     "fault {item:?} is missing its action \
-                     (panic|error|stall:MS)"
+                     (panic|error|stall:MS|hang|slow:FACTOR)"
                 )
             })?;
             let worker: usize = w.parse().map_err(|_| {
@@ -85,15 +115,34 @@ impl FaultPlan {
                 FaultKind::Panic
             } else if act == "error" {
                 FaultKind::Error
+            } else if act == "hang" {
+                FaultKind::Hang
             } else if let Some(ms) = act.strip_prefix("stall:") {
                 let ms: u64 = ms.parse().map_err(|_| {
                     format!("bad stall milliseconds {ms:?} in fault {item:?}")
                 })?;
                 FaultKind::Stall { ms }
+            } else if let Some(f) = act.strip_prefix("slow:") {
+                let factor: u32 = f.parse().map_err(|_| {
+                    format!("bad slowdown factor {f:?} in fault {item:?}")
+                })?;
+                if factor < 2 {
+                    return Err(format!(
+                        "slowdown factor must be >= 2 in fault {item:?} \
+                         (1x is a no-op)"
+                    ));
+                }
+                if factor > SLOW_FACTOR_CAP {
+                    return Err(format!(
+                        "slowdown factor {factor} in fault {item:?} is \
+                         absurd (cap {SLOW_FACTOR_CAP}x)"
+                    ));
+                }
+                FaultKind::Slow { factor }
             } else {
                 return Err(format!(
                     "unknown fault kind {act:?} in {item:?} \
-                     (panic|error|stall:MS)"
+                     (panic|error|stall:MS|hang|slow:FACTOR)"
                 ));
             };
             specs.push(FaultSpec {
@@ -117,6 +166,10 @@ impl FaultPlan {
                     FaultKind::Error => format!("w{w}:error@{k}"),
                     FaultKind::Stall { ms } => {
                         format!("w{w}:stall:{ms}@{k}")
+                    }
+                    FaultKind::Hang => format!("w{w}:hang@{k}"),
+                    FaultKind::Slow { factor } => {
+                        format!("w{w}:slow:{factor}@{k}")
                     }
                 }
             })
@@ -142,6 +195,7 @@ impl FaultPlan {
                 .map(|f| (f.at_call, f.kind))
                 .collect(),
             calls: 0,
+            slow: None,
         }
     }
 }
@@ -152,13 +206,15 @@ impl FaultPlan {
 pub struct WorkerFaults {
     pending: Vec<(usize, FaultKind)>,
     calls: usize,
+    slow: Option<u32>,
 }
 
 impl WorkerFaults {
     /// Call at the top of every engine-call attempt, *inside* the
-    /// supervisor's `catch_unwind` region.  Stalls sleep then return
-    /// `Ok`, errors return `Err`, panics unwind.
-    pub fn before_call(&mut self) -> Result<()> {
+    /// supervisor's `catch_unwind` region and the watchdog heartbeat
+    /// window.  Stalls sleep then return `Ok`, hangs park on `cancel`,
+    /// errors return `Err`, panics unwind.
+    pub fn before_call(&mut self, cancel: &CancelToken) -> Result<()> {
         let call = self.calls;
         self.calls += 1;
         if self.pending.is_empty() {
@@ -166,6 +222,8 @@ impl WorkerFaults {
         }
         let mut fail = false;
         let mut die = false;
+        let mut hang = false;
+        let mut slow = None;
         self.pending.retain(|&(at, kind)| {
             if at != call {
                 return true;
@@ -176,9 +234,21 @@ impl WorkerFaults {
                 }
                 FaultKind::Error => fail = true,
                 FaultKind::Panic => die = true,
+                FaultKind::Hang => hang = true,
+                FaultKind::Slow { factor } => slow = Some(factor),
             }
             false
         });
+        if slow.is_some() {
+            self.slow = slow;
+        }
+        if hang {
+            // Parks until the watchdog cancels this generation; the
+            // call then proceeds into the engine, whose cancelled
+            // token aborts the band at the first row — the stale
+            // result is discarded by the generation check.
+            cancel.wait();
+        }
         if die {
             // PANIC: deliberate injected fault — the supervisor's
             // catch_unwind around the engine call is the code under
@@ -191,6 +261,34 @@ impl WorkerFaults {
         Ok(())
     }
 
+    /// Call after the engine call with its measured duration: returns
+    /// the extra delay an active `slow` fault owes for this attempt.
+    /// The caller parks on its token for the returned duration so the
+    /// slowdown stays cancellable.
+    pub fn after_call(&self, elapsed: Duration) -> Option<Duration> {
+        self.slow.map(|f| elapsed.saturating_mul(f - 1))
+    }
+
+    /// Re-baseline a replacement worker at global attempt index
+    /// `calls`: one-shot faults below the index are dropped (their
+    /// generation already consumed them), while a `slow` scheduled
+    /// below it stays latched — the slowdown is a property of the
+    /// slot, not of the thread that first observed it.
+    pub fn skip_before(&mut self, calls: usize) {
+        self.calls = calls;
+        let mut slow = self.slow;
+        self.pending.retain(|&(at, kind)| {
+            if at >= calls {
+                return true;
+            }
+            if let FaultKind::Slow { factor } = kind {
+                slow = Some(factor);
+            }
+            false
+        });
+        self.slow = slow;
+    }
+
     /// Faults still scheduled (not yet fired).
     pub fn armed(&self) -> usize {
         self.pending.len()
@@ -200,6 +298,11 @@ impl WorkerFaults {
     pub fn calls(&self) -> usize {
         self.calls
     }
+
+    /// The latched persistent slowdown factor, if any fired yet.
+    pub fn slow_factor(&self) -> Option<u32> {
+        self.slow
+    }
 }
 
 #[cfg(test)]
@@ -208,16 +311,32 @@ mod tests {
 
     #[test]
     fn parse_render_roundtrip() {
-        let s = "w0:panic@2,w1:error@0,w2:stall:15@3";
+        let s = "w0:panic@2,w1:error@0,w2:stall:15@3,w3:hang@1,w4:slow:3@2";
         let plan = FaultPlan::parse(s).unwrap();
         assert_eq!(plan.render(), s);
-        assert_eq!(plan.specs().len(), 3);
+        assert_eq!(plan.specs().len(), 5);
         assert_eq!(
             plan.specs()[2],
             FaultSpec {
                 worker: 2,
                 at_call: 3,
                 kind: FaultKind::Stall { ms: 15 },
+            }
+        );
+        assert_eq!(
+            plan.specs()[3],
+            FaultSpec {
+                worker: 3,
+                at_call: 1,
+                kind: FaultKind::Hang,
+            }
+        );
+        assert_eq!(
+            plan.specs()[4],
+            FaultSpec {
+                worker: 4,
+                at_call: 2,
+                kind: FaultKind::Slow { factor: 3 },
             }
         );
         // whitespace and trailing commas are tolerated
@@ -241,6 +360,13 @@ mod tests {
             "w0:stall@1",      // stall without ms
             "w0:stall:abc@1",  // bad stall ms
             "w0:stall:-5@1",   // negative stall ms
+            "w0:hang",         // hang without call index
+            "w0:hang:5@1",     // hang takes no argument
+            "w0:slow@1",       // slow without factor
+            "w0:slow:abc@1",   // bad slow factor
+            "w0:slow:1@1",     // 1x slowdown is a no-op
+            "w0:slow:0@1",     // 0x slowdown is nonsense
+            "w0:slow:5000@1",  // past the absurdity cap
         ] {
             assert!(FaultPlan::parse(bad).is_err(), "accepted: {bad:?}");
         }
@@ -249,45 +375,108 @@ mod tests {
     #[test]
     fn faults_fire_once_at_exact_calls() {
         let plan = FaultPlan::parse("w1:error@1,w1:error@3").unwrap();
+        let tok = CancelToken::new();
         let mut w0 = plan.for_worker(0);
         let mut w1 = plan.for_worker(1);
         assert_eq!(w0.armed(), 0);
         assert_eq!(w1.armed(), 2);
         // worker 0 owns nothing: every call is clean
         for _ in 0..5 {
-            assert!(w0.before_call().is_ok());
+            assert!(w0.before_call(&tok).is_ok());
         }
         // worker 1: calls 1 and 3 fail, all others pass, each fires once
-        assert!(w1.before_call().is_ok()); // call 0
-        assert!(w1.before_call().is_err()); // call 1
+        assert!(w1.before_call(&tok).is_ok()); // call 0
+        assert!(w1.before_call(&tok).is_err()); // call 1
         assert_eq!(w1.armed(), 1);
-        assert!(w1.before_call().is_ok()); // call 2
-        assert!(w1.before_call().is_err()); // call 3
+        assert!(w1.before_call(&tok).is_ok()); // call 2
+        assert!(w1.before_call(&tok).is_err()); // call 3
         assert_eq!(w1.armed(), 0);
-        assert!(w1.before_call().is_ok()); // call 4
+        assert!(w1.before_call(&tok).is_ok()); // call 4
         assert_eq!(w1.calls(), 5);
     }
 
     #[test]
     fn injected_panic_unwinds_and_is_catchable() {
         let plan = FaultPlan::parse("w0:panic@0").unwrap();
+        let tok = CancelToken::new();
         let mut w = plan.for_worker(0);
         let caught = std::panic::catch_unwind(
-            std::panic::AssertUnwindSafe(|| w.before_call()),
+            std::panic::AssertUnwindSafe(|| w.before_call(&tok)),
         );
         assert!(caught.is_err(), "injected panic must unwind");
         // consumed: the retry after a restart succeeds
         assert_eq!(w.armed(), 0);
-        assert!(w.before_call().is_ok());
+        assert!(w.before_call(&tok).is_ok());
     }
 
     #[test]
     fn stall_delays_then_proceeds() {
         let plan = FaultPlan::parse("w0:stall:20@0").unwrap();
+        let tok = CancelToken::new();
         let mut w = plan.for_worker(0);
         let t = std::time::Instant::now();
-        assert!(w.before_call().is_ok());
+        assert!(w.before_call(&tok).is_ok());
         assert!(t.elapsed() >= Duration::from_millis(20));
+        assert_eq!(w.armed(), 0);
+    }
+
+    #[test]
+    fn hang_parks_until_cancelled_then_proceeds() {
+        let plan = FaultPlan::parse("w0:hang@0").unwrap();
+        let tok = CancelToken::new();
+        let t2 = tok.clone();
+        let h = std::thread::spawn(move || {
+            let mut w = plan.for_worker(0);
+            let r = w.before_call(&t2);
+            (r.is_ok(), w.armed())
+        });
+        // the hang must still be parked while uncancelled
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!h.is_finished(), "hang returned without cancellation");
+        tok.cancel();
+        let (ok, armed) = h.join().expect("hung worker joins after cancel");
+        assert!(ok, "a cancelled hang proceeds (result discarded later)");
+        assert_eq!(armed, 0, "hang is one-shot");
+    }
+
+    #[test]
+    fn slow_latches_and_scales_the_extra_delay() {
+        let plan = FaultPlan::parse("w0:slow:3@1").unwrap();
+        let tok = CancelToken::new();
+        let mut w = plan.for_worker(0);
+        assert!(w.before_call(&tok).is_ok()); // call 0: not yet latched
+        assert_eq!(w.after_call(Duration::from_millis(10)), None);
+        assert!(w.before_call(&tok).is_ok()); // call 1: latches 3x
+        assert_eq!(w.slow_factor(), Some(3));
+        assert_eq!(
+            w.after_call(Duration::from_millis(10)),
+            Some(Duration::from_millis(20)),
+            "3x slowdown owes 2x the natural time as extra delay"
+        );
+        assert!(w.before_call(&tok).is_ok()); // call 2: still latched
+        assert_eq!(
+            w.after_call(Duration::from_millis(4)),
+            Some(Duration::from_millis(8))
+        );
+    }
+
+    #[test]
+    fn skip_before_drops_spent_one_shots_but_keeps_slow_latched() {
+        let plan =
+            FaultPlan::parse("w0:panic@0,w0:slow:4@1,w0:error@5").unwrap();
+        let tok = CancelToken::new();
+        let mut w = plan.for_worker(0);
+        w.skip_before(3);
+        assert_eq!(w.calls(), 3);
+        assert_eq!(w.armed(), 1, "only the error@5 is still scheduled");
+        assert_eq!(
+            w.slow_factor(),
+            Some(4),
+            "a slow below the skip index stays latched on the slot"
+        );
+        assert!(w.before_call(&tok).is_ok()); // call 3
+        assert!(w.before_call(&tok).is_ok()); // call 4
+        assert!(w.before_call(&tok).is_err()); // call 5: error fires
         assert_eq!(w.armed(), 0);
     }
 }

@@ -21,6 +21,35 @@ use std::time::Duration;
 use crate::sim::RunStats;
 use crate::util::stats::Summary;
 
+/// Rung of the `RtPolicy::Degrade` quality ladder a band/frame was
+/// served at.  Ordered: reassembly taints a frame with the *worst*
+/// (`max`) rung among its bands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum QualityLevel {
+    /// Full-quality SR at the stream's native scale.
+    Full,
+    /// Scale-downshift: SR at x2, bilinear-expanded the rest of the
+    /// way to the stream's target geometry (ladder rung 1).
+    Reduced,
+    /// Pure bilinear upsample — no model at all (ladder rung 2).
+    Bilinear,
+}
+
+impl QualityLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            QualityLevel::Full => "full",
+            QualityLevel::Reduced => "reduced",
+            QualityLevel::Bilinear => "bilinear",
+        }
+    }
+
+    /// Anything below full quality counts as degraded delivery.
+    pub fn is_degraded(self) -> bool {
+        self != QualityLevel::Full
+    }
+}
+
 /// Timing of one frame through the pipeline.
 #[derive(Clone, Debug)]
 pub struct FrameRecord {
@@ -39,9 +68,9 @@ pub struct FrameRecord {
     /// Merged hardware stats of the frame's bands, if the engine
     /// models them.
     pub stats: Option<RunStats>,
-    /// True when the frame was served through the cheap bilinear path
-    /// instead of the full model (`RtPolicy::Degrade` downshift).
-    pub degraded: bool,
+    /// Worst degradation-ladder rung among the frame's bands
+    /// (`RtPolicy::Degrade` downshift).
+    pub level: QualityLevel,
 }
 
 /// Identity and source-side accounting of one stream, supplied by the
@@ -76,9 +105,11 @@ pub struct StreamSummary {
     /// Offered but neither delivered nor dropped (lost to a dead
     /// worker, or parked behind such a loss).
     pub incomplete: usize,
-    /// Delivered at degraded (bilinear) quality — a subset of
-    /// `delivered`, never of `dropped`.
+    /// Delivered below full quality — a subset of `delivered`, never
+    /// of `dropped`.
     pub degraded: usize,
+    /// Breakdown of `degraded` by ladder rung: `[reduced, bilinear]`.
+    pub degraded_by_level: [usize; 2],
     /// `dropped / offered` (0 when nothing was offered).
     pub drop_rate: f64,
     /// `degraded / offered` (0 when nothing was offered).
@@ -128,17 +159,27 @@ pub struct PipelineReport {
     pub dropped: usize,
     /// Frames offered but neither delivered nor dropped.
     pub incomplete: usize,
-    /// Frames delivered at degraded (bilinear) quality, across all
-    /// streams — counted inside `frames`, not alongside it.
+    /// Frames delivered below full quality, across all streams —
+    /// counted inside `frames`, not alongside it.
     pub degraded: usize,
+    /// Breakdown of `degraded` by ladder rung: `[reduced, bilinear]`.
+    pub degraded_by_level: [usize; 2],
     /// `dropped / offered` across all streams.
     pub drop_rate: f64,
     /// `degraded / offered` across all streams.
     pub degrade_rate: f64,
     /// Worker restarts the supervisor performed (`RestartPolicy`),
-    /// summed across workers.  Set by the pipeline after
-    /// `from_records`, like `errors`.
+    /// summed across workers — fail-fast rebuilds *and* hung-worker
+    /// replacements.  Set by the pipeline after `from_records`, like
+    /// `errors`.
     pub restarts: usize,
+    /// Workers the watchdog zombified for exceeding the stall budget.
+    /// Set by the pipeline after `from_records`.
+    pub hangs_detected: usize,
+    /// Late results from zombified worker generations that were
+    /// discarded instead of double-delivered.  Set by the pipeline
+    /// after `from_records`.
+    pub zombies_reaped: usize,
     /// Per-stream breakdown (single-stream runs have exactly one).
     pub streams: Vec<StreamSummary>,
     /// Worker errors — a report with errors is partial.
@@ -195,10 +236,17 @@ impl PipelineReport {
                     .filter(|r| r.stream == meta.id)
                     .map(|r| to_ms(&r.latency))
                     .collect();
-                let degraded = records
-                    .iter()
-                    .filter(|r| r.stream == meta.id && r.degraded)
-                    .count();
+                let by_level = |lvl: QualityLevel| {
+                    records
+                        .iter()
+                        .filter(|r| r.stream == meta.id && r.level == lvl)
+                        .count()
+                };
+                let degraded_by_level = [
+                    by_level(QualityLevel::Reduced),
+                    by_level(QualityLevel::Bilinear),
+                ];
+                let degraded = degraded_by_level.iter().sum();
                 let delivered = latencies.len();
                 let hr_px = meta.hr_pixels() as f64 * delivered as f64;
                 hr_px_total += hr_px;
@@ -208,6 +256,7 @@ impl PipelineReport {
                         .offered
                         .saturating_sub(meta.dropped + delivered),
                     degraded,
+                    degraded_by_level,
                     drop_rate: rate(meta.dropped, meta.offered),
                     degrade_rate: rate(degraded, meta.offered),
                     latency_ms: Summary::from_samples(latencies),
@@ -221,6 +270,10 @@ impl PipelineReport {
         let incomplete: usize =
             summaries.iter().map(|s| s.incomplete).sum();
         let degraded: usize = summaries.iter().map(|s| s.degraded).sum();
+        let degraded_by_level = [
+            summaries.iter().map(|s| s.degraded_by_level[0]).sum(),
+            summaries.iter().map(|s| s.degraded_by_level[1]).sum(),
+        ];
         Self {
             frames: records.len(),
             wall,
@@ -244,9 +297,12 @@ impl PipelineReport {
             dropped,
             incomplete,
             degraded,
+            degraded_by_level,
             drop_rate: rate(dropped, offered),
             degrade_rate: rate(degraded, offered),
             restarts: 0,
+            hangs_detected: 0,
+            zombies_reaped: 0,
             streams: summaries,
             errors: Vec::new(),
             hw,
@@ -293,6 +349,13 @@ impl PipelineReport {
                     self.degraded,
                     self.degrade_rate * 100.0,
                 ));
+                if self.degraded_by_level[0] > 0 {
+                    out.push_str(&format!(
+                        " [{} reduced, {} bilinear]",
+                        self.degraded_by_level[0],
+                        self.degraded_by_level[1],
+                    ));
+                }
             }
         }
         if self.restarts > 0 {
@@ -300,6 +363,16 @@ impl PipelineReport {
                 "\nsupervisor: {} worker restart{}",
                 self.restarts,
                 if self.restarts == 1 { "" } else { "s" },
+            ));
+        }
+        if self.hangs_detected > 0 || self.zombies_reaped > 0 {
+            out.push_str(&format!(
+                "\nwatchdog: {} hang{} detected  {} zombie result{} \
+                 discarded",
+                self.hangs_detected,
+                if self.hangs_detected == 1 { "" } else { "s" },
+                self.zombies_reaped,
+                if self.zombies_reaped == 1 { "" } else { "s" },
             ));
         }
         if self.streams.len() > 1 {
@@ -369,7 +442,7 @@ mod tests {
             compute: Duration::from_millis(ms / 2),
             bands: 1,
             stats: None,
-            degraded: false,
+            level: QualityLevel::Full,
         }
     }
 
@@ -538,7 +611,11 @@ mod tests {
         let mut records: Vec<_> = (0..4)
             .map(|i| FrameRecord {
                 stream: 0,
-                degraded: i % 2 == 0,
+                level: if i % 2 == 0 {
+                    QualityLevel::Bilinear
+                } else {
+                    QualityLevel::Full
+                },
                 ..rec(i, 10)
             })
             .collect();
@@ -571,6 +648,9 @@ mod tests {
         assert_eq!(rep.streams[0].degraded, 2);
         assert!((rep.streams[0].degrade_rate - 0.5).abs() < 1e-12);
         assert_eq!(rep.streams[1].degraded, 0);
+        // all-bilinear degradation: no reduced rung in the breakdown
+        assert_eq!(rep.degraded_by_level, [0, 2]);
+        assert_eq!(rep.streams[0].degraded_by_level, [0, 2]);
         let r = rep.render();
         assert!(r.contains("delivery: 7 delivered  0 dropped"));
         assert!(r.contains("2 degraded (28.6 %)"));
@@ -583,6 +663,56 @@ mod tests {
         let clean = rep.render();
         assert!(!clean.contains("delivery:"));
         assert!(!clean.contains("supervisor:"));
+    }
+
+    #[test]
+    fn ladder_levels_break_down_and_watchdog_line_renders() {
+        let levels = [
+            QualityLevel::Full,
+            QualityLevel::Reduced,
+            QualityLevel::Reduced,
+            QualityLevel::Bilinear,
+        ];
+        let records: Vec<_> = levels
+            .iter()
+            .enumerate()
+            .map(|(i, &level)| FrameRecord { level, ..rec(i, 10) })
+            .collect();
+        let mut rep = PipelineReport::from_records(
+            &records,
+            Duration::from_secs(1),
+            &names(&["int8"]),
+            1,
+            "whole-frame",
+            vec![StreamMeta {
+                offered: 4,
+                ..meta(0, 10, 10, 4)
+            }],
+        );
+        assert_eq!(rep.degraded, 3);
+        assert_eq!(rep.degraded_by_level, [2, 1]);
+        assert!((rep.degrade_rate - 0.75).abs() < 1e-12);
+        let r = rep.render();
+        assert!(r.contains("3 degraded (75.0 %) [2 reduced, 1 bilinear]"));
+        // the watchdog line appears only once something was reaped
+        assert!(!r.contains("watchdog:"));
+        rep.hangs_detected = 1;
+        rep.zombies_reaped = 1;
+        let r = rep.render();
+        assert!(
+            r.contains("watchdog: 1 hang detected  1 zombie result discarded")
+        );
+        rep.hangs_detected = 2;
+        rep.zombies_reaped = 0;
+        assert!(rep.render().contains(
+            "watchdog: 2 hangs detected  0 zombie results discarded"
+        ));
+        // ordering sanity: reassembly's max-merge relies on it
+        assert!(QualityLevel::Full < QualityLevel::Reduced);
+        assert!(QualityLevel::Reduced < QualityLevel::Bilinear);
+        assert_eq!(QualityLevel::Reduced.name(), "reduced");
+        assert!(!QualityLevel::Full.is_degraded());
+        assert!(QualityLevel::Bilinear.is_degraded());
     }
 
     #[test]

@@ -17,7 +17,9 @@
 //! heterogeneous geometries/scales admitted into one shared worker
 //! pool under a configurable real-time policy (block vs shed-late vs
 //! degrade-late), a worker supervisor (restart with backoff on engine
-//! panic/error, `config::RestartPolicy`), and a deterministic
+//! panic/error, `config::RestartPolicy`), a hung-worker watchdog
+//! (`coordinator::watchdog`: heartbeats, a stall budget, cooperative
+//! cancellation, generation-tagged results), and a deterministic
 //! fault-injection layer (`coordinator::faults`) so all of it is
 //! testable.
 
@@ -27,12 +29,15 @@ pub mod metrics;
 pub mod pipeline;
 pub mod server;
 pub mod shard;
+pub mod watchdog;
 
 pub use engine::{
     Engine, EngineFactory, EngineKind, Int8Engine, PjrtEngine, SimEngine,
 };
 pub use faults::{FaultKind, FaultPlan, FaultSpec, WorkerFaults};
-pub use metrics::{FrameRecord, PipelineReport, StreamMeta, StreamSummary};
+pub use metrics::{
+    FrameRecord, PipelineReport, QualityLevel, StreamMeta, StreamSummary,
+};
 pub use pipeline::{run_pipeline, PipelineConfig};
 pub use server::{
     serve_multi, stream_seed, MultiServeConfig, ScaleEngineFactory,
@@ -40,3 +45,4 @@ pub use server::{
 pub use shard::{
     crop_hr_band, plan_bands, BandSpec, DoneBand, Reassembler, ShardPlan,
 };
+pub use watchdog::{CancelToken, Lease, Watchdog, Zombie};

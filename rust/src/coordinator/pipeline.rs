@@ -30,13 +30,28 @@
 //! vanished.  The deterministic fault-injection layer
 //! (`coordinator::faults`, [`FaultPlan`]) fires inside the same
 //! `catch_unwind` region, so chaos tests drive these exact paths.
+//!
+//! §Watchdog: fail-fast supervision cannot see a worker that never
+//! returns.  When `stall_budget_ms` is set, every worker stamps a
+//! [`Watchdog`] heartbeat around each engine call and a monitor thread
+//! sweeps the slots: a call busy past the budget is *zombified* — its
+//! generation is bumped (the late result is discarded at `end_call`,
+//! never double-delivered through the reassembler), its cancel token
+//! trips (the fusion row/tile loops poll it, so a cooperative engine
+//! abandons the doomed band within one row), its stashed in-flight
+//! item (and, under `BandModulo`, its queued backlog) is rerouted to
+//! survivors through the same retry channel, and a replacement worker
+//! is spawned under the shared [`RestartPolicy`] budget.  The zombie
+//! thread is left to wake on its own; an engine that never polls the
+//! token (a truly wedged syscall) keeps its thread until it returns,
+//! but the pipeline has already routed around it.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{
     channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender,
 };
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError, Weak};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -47,8 +62,16 @@ use crate::image::{ImageU8, SceneGenerator};
 
 use super::engine::{Engine, EngineFactory};
 use super::faults::FaultPlan;
-use super::metrics::{PipelineReport, StreamMeta};
+use super::metrics::{PipelineReport, QualityLevel, StreamMeta};
 use super::shard::{crop_hr_band, plan_bands, BandSpec, DoneBand, Reassembler};
+use super::watchdog::Watchdog;
+
+/// Poison-tolerant lock (see `coordinator::watchdog`): a peer that
+/// panicked while holding a shared lock poisons it, but the data
+/// stays structurally valid and the panic is accounted separately.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Pipeline parameters.
 pub struct PipelineConfig {
@@ -71,6 +94,9 @@ pub struct PipelineConfig {
     /// Worker supervision: restarts allowed per worker and their
     /// backoff ([`RestartPolicy::none()`] = first failure is fatal).
     pub restart: RestartPolicy,
+    /// §Watchdog: an engine call busy past this budget is zombified
+    /// and its work rerouted (None = hung-worker detection off).
+    pub stall_budget_ms: Option<f64>,
     /// Deterministic fault injection (`coordinator::faults`); the
     /// default empty plan injects nothing.
     pub inject: FaultPlan,
@@ -90,11 +116,16 @@ impl Default for PipelineConfig {
             shard: ShardPlan::whole_frame(),
             model_layers: 7,
             restart: RestartPolicy::default(),
+            stall_budget_ms: None,
             inject: FaultPlan::default(),
         }
     }
 }
 
+/// `Clone` is the §Watchdog stash: an armed `begin_call` keeps a copy
+/// of the in-flight item so the monitor can reroute it if this call
+/// never comes back.
+#[derive(Clone)]
 struct WorkItem {
     frame: usize,
     spec: BandSpec,
@@ -105,9 +136,21 @@ struct WorkItem {
 }
 
 /// Where a worker pulls work from: the shared queue, or its own.
+/// Receivers sit behind `Arc<Mutex<..>>` for both variants so a
+/// replacement worker (§Watchdog) can adopt its predecessor's queue.
+#[derive(Clone)]
 enum WorkSource {
     Shared(Arc<Mutex<Receiver<WorkItem>>>),
-    Own(Receiver<WorkItem>),
+    Own(Arc<Mutex<Receiver<WorkItem>>>),
+}
+
+/// Weak handle on a [`WorkSource`] held by the watchdog monitor: it
+/// must not keep a channel alive (a dropped receiver is what unblocks
+/// the source when a whole queue dies), but it can pin one briefly to
+/// hand a zombified worker's queue to the replacement.
+enum WeakSource {
+    Shared(Weak<Mutex<Receiver<WorkItem>>>),
+    Own(Weak<Mutex<Receiver<WorkItem>>>),
 }
 
 /// One `WorkSource::poll` outcome.
@@ -120,18 +163,25 @@ enum Polled {
 }
 
 impl WorkSource {
+    fn rx(&self) -> &Mutex<Receiver<WorkItem>> {
+        match self {
+            WorkSource::Shared(rx) => rx,
+            WorkSource::Own(rx) => rx,
+        }
+    }
+
+    fn downgrade(&self) -> WeakSource {
+        match self {
+            WorkSource::Shared(rx) => WeakSource::Shared(Arc::downgrade(rx)),
+            WorkSource::Own(rx) => WeakSource::Own(Arc::downgrade(rx)),
+        }
+    }
+
     fn poll(&self, timeout: Duration) -> Polled {
         // a peer that panicked mid-recv poisons the queue lock; the
         // channel itself is still coherent, so keep draining rather
         // than cascading the panic across the pool
-        let got = match self {
-            WorkSource::Shared(rx) => rx
-                .lock()
-                .unwrap_or_else(std::sync::PoisonError::into_inner)
-                .recv_timeout(timeout),
-            WorkSource::Own(rx) => rx.recv_timeout(timeout),
-        };
-        match got {
+        match lock_clean(self.rx()).recv_timeout(timeout) {
             Ok(item) => Polled::Item(item),
             Err(RecvTimeoutError::Timeout) => Polled::Empty,
             Err(RecvTimeoutError::Disconnected) => Polled::Closed,
@@ -144,12 +194,42 @@ impl WorkSource {
     /// shared queue needs no forwarding — survivors drain it directly.
     fn forward_rest(&self, retry: &Sender<WorkItem>) {
         if let WorkSource::Own(rx) = self {
-            while let Ok(item) = rx.recv() {
-                // LOSSY: the retry receiver is held by this worker's
-                // own Arc, so the send cannot fail; if it somehow did,
-                // the frame is already counted incomplete.
-                let _ = retry.send(item);
+            loop {
+                let got =
+                    lock_clean(rx).recv_timeout(Duration::from_millis(5));
+                match got {
+                    Ok(item) => {
+                        // LOSSY: the retry receiver outlives the pool,
+                        // so the send cannot fail; if it somehow did,
+                        // the frame is already counted incomplete.
+                        let _ = retry.send(item);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
             }
+        }
+    }
+
+    /// Non-blocking sweep of everything currently queued into the
+    /// retry channel — the §Watchdog monitor reroutes a zombified or
+    /// orphaned queue's backlog to survivors this way.
+    fn drain_into(&self, retry: &Sender<WorkItem>) {
+        let rx = lock_clean(self.rx());
+        while let Ok(item) = rx.try_recv() {
+            // LOSSY: the retry receiver outlives the pool, so the send
+            // cannot fail; if it somehow did, the frame is already
+            // counted incomplete.
+            let _ = retry.send(item);
+        }
+    }
+}
+
+impl WeakSource {
+    fn upgrade(&self) -> Option<WorkSource> {
+        match self {
+            WeakSource::Shared(w) => w.upgrade().map(WorkSource::Shared),
+            WeakSource::Own(w) => w.upgrade().map(WorkSource::Own),
         }
     }
 }
@@ -165,6 +245,23 @@ pub(crate) fn panic_note(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// Drop guard for the pool's live-worker count: any exit path —
+/// including a panic unwinding out of a worker — retires the slot,
+/// except a *stale* (zombified) exit, whose count the monitor either
+/// transferred to the replacement or retired itself.
+struct Retire<'a> {
+    active: &'a AtomicUsize,
+    on: bool,
+}
+
+impl Drop for Retire<'_> {
+    fn drop(&mut self) {
+        if self.on {
+            self.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
 /// Run the pipeline; `factories` supplies one engine constructor per
 /// worker — each engine is built *inside* its thread (PJRT clients are
 /// not `Send`).  `on_frame` is invoked from the collector thread, in
@@ -172,10 +269,15 @@ pub(crate) fn panic_note(p: &(dyn std::any::Any + Send)) -> String {
 /// it borrows is recycled immediately after it returns.
 ///
 /// A worker whose engine panics or errors is restarted in place with a
-/// fresh engine under `cfg.restart` (§Supervision); the count of such
-/// restarts lands in [`PipelineReport::restarts`].  A worker that
-/// exhausts its budget does not sink the whole pipeline: it hands its
-/// in-flight work to the surviving pool, the error is recorded in
+/// fresh engine under `cfg.restart` (§Supervision); with a
+/// `stall_budget_ms` armed, a worker whose engine call never returns
+/// is zombified and replaced under the same budget (§Watchdog), the
+/// hang counted in [`PipelineReport::hangs_detected`] and any late
+/// result discarded ([`PipelineReport::zombies_reaped`]).  The count
+/// of restarts — rebuilds and replacements — lands in
+/// [`PipelineReport::restarts`].  A worker that exhausts its budget
+/// does not sink the whole pipeline: it hands its in-flight work to
+/// the surviving pool, the error is recorded in
 /// [`PipelineReport::errors`], and only frames no survivor could
 /// rescue surface as [`PipelineReport::incomplete`] instead of
 /// silently vanishing from the counts.  `Err` is returned only when
@@ -202,7 +304,7 @@ pub fn run_pipeline(
         for _ in 0..cfg.workers {
             let (tx, rx) = sync_channel::<WorkItem>(cfg.queue_depth.max(1));
             senders.push(tx);
-            sources.push(WorkSource::Own(rx));
+            sources.push(WorkSource::Own(Arc::new(Mutex::new(rx))));
         }
     } else {
         let (tx, rx) = sync_channel::<WorkItem>(cfg.queue_depth.max(1));
@@ -212,6 +314,8 @@ pub fn run_pipeline(
             sources.push(WorkSource::Shared(Arc::clone(&shared)));
         }
     }
+    let weak_sources: Vec<WeakSource> =
+        sources.iter().map(WorkSource::downgrade).collect();
 
     // The collector never blocks on downstream work, so this capacity
     // only needs to absorb bursts of bands completing together.
@@ -220,187 +324,301 @@ pub fn run_pipeline(
 
     // Per-worker engine names, indexed by worker id — no shared slot
     // to race on, so heterogeneous pools report deterministically.
-    let engine_names =
-        Arc::new(Mutex::new(vec![String::new(); cfg.workers]));
+    let engine_names = Mutex::new(vec![String::new(); cfg.workers]);
+    // Worker deaths, in completion order (joined Results are gone now
+    // that the §Watchdog monitor also spawns workers mid-run).
+    let errors_shared = Mutex::new(Vec::<String>::new());
     // Rescue path (§Supervision): retired workers hand unfinished
     // items to surviving peers here.  Unbounded — pushes never block.
     let (retry_tx, retry_rx) = channel::<WorkItem>();
-    let retry_rx = Arc::new(Mutex::new(retry_rx));
+    let retry_rx = Mutex::new(retry_rx);
     // Items the source emitted that are not yet completed — queued,
     // being processed, or parked on the retry channel.  The pool's
     // retire condition: source closed AND inflight == 0.
-    let inflight = Arc::new(AtomicUsize::new(0));
-    let restarts_total = Arc::new(AtomicUsize::new(0));
+    let inflight = AtomicUsize::new(0);
+    // Worker threads currently holding a slot.  A zombified worker's
+    // count is transferred to its replacement (the stale exit never
+    // decrements), so the monitor's `active == 0` means the pool is
+    // truly drained, replacements included.
+    let active = AtomicUsize::new(cfg.workers);
+    let src_done = AtomicBool::new(false);
+    let wd: Watchdog<WorkItem> =
+        Watchdog::new(cfg.workers, cfg.stall_budget_ms);
     let t0 = Instant::now();
     let scale = cfg.scale;
     let (lr_h, lr_w) = (cfg.lr_h, cfg.lr_w);
     let frames = cfg.frames;
+    let restart = cfg.restart;
 
-    let (records, errors, offered) = thread::scope(|s| {
-        // --- workers -------------------------------------------------
-        let mut handles = Vec::new();
-        for (wi, (factory, source)) in
-            factories.into_iter().zip(sources).enumerate()
-        {
-            let tx = done_tx.clone();
-            let names = Arc::clone(&engine_names);
-            let retry_tx = retry_tx.clone();
-            let retry_rx = Arc::clone(&retry_rx);
-            let inflight = Arc::clone(&inflight);
-            let restarts_total = Arc::clone(&restarts_total);
-            let restart = cfg.restart;
-            let mut faults = cfg.inject.for_worker(wi);
-            handles.push(s.spawn(move || -> Result<()> {
-                let mut engine: Option<Box<dyn Engine>> = None;
-                let mut pending: Option<(WorkItem, Instant)> = None;
-                let mut restarts_used = 0usize;
-                let mut reason = String::new();
-                let exhausted = 'serve: loop {
-                    // (re)build the engine; construction failures burn
-                    // restart budget exactly like mid-run faults
-                    if engine.is_none() {
-                        match factory() {
-                            Ok(e) => {
-                                names
-                                    .lock()
-                                    .unwrap_or_else(
-                                        std::sync::PoisonError::into_inner,
-                                    )[wi] = e.name().to_string();
-                                engine = Some(e);
-                            }
-                            Err(e) => {
-                                reason = format!("{e:#}");
-                                if restarts_used >= restart.max_restarts {
-                                    break 'serve true;
-                                }
-                                restarts_used += 1;
-                                restarts_total
-                                    .fetch_add(1, Ordering::SeqCst);
-                                thread::sleep(
-                                    restart.backoff(restarts_used),
-                                );
-                                continue 'serve;
-                            }
-                        }
+    // One worker *shift*: the body a slot's thread runs, used both by
+    // the initial spawns and by the §Watchdog monitor's replacements.
+    // `skip_calls` fast-forwards the injected fault plan past the
+    // previous shift's spent calls; `start_delay` is the replacement's
+    // restart backoff.
+    let worker_shift = |wi: usize,
+                        source: WorkSource,
+                        done_tx: SyncSender<DoneBand>,
+                        skip_calls: usize,
+                        start_delay: Option<Duration>| {
+        let mut retire = Retire {
+            active: &active,
+            on: true,
+        };
+        if let Some(d) = start_delay {
+            thread::sleep(d);
+        }
+        let lease = wd.adopt(wi);
+        let mut faults = cfg.inject.for_worker(wi);
+        faults.skip_before(skip_calls);
+        let mut engine: Option<Box<dyn Engine>> = None;
+        let mut pending: Option<(WorkItem, Instant)> = None;
+        let mut reason = String::new();
+        let exhausted = 'serve: loop {
+            // (re)build the engine; construction failures burn
+            // restart budget exactly like mid-run faults
+            if engine.is_none() {
+                match factories[wi]() {
+                    Ok(mut e) => {
+                        e.set_cancel(lease.cancel.clone());
+                        lock_clean(&engine_names)[wi] = e.name().to_string();
+                        engine = Some(e);
                     }
-                    // work: the item retained across a restart first,
-                    // then rescues from retired peers, then the source
-                    let (item, dequeued) = match pending.take() {
-                        Some(x) => x,
-                        None => {
-                            let rescued = retry_rx
-                                .lock()
-                                .unwrap_or_else(
-                                    std::sync::PoisonError::into_inner,
-                                )
-                                .try_recv()
-                                .ok();
-                            match rescued {
-                                Some(item) => (item, Instant::now()),
-                                None => match source
-                                    .poll(Duration::from_millis(5))
-                                {
-                                    Polled::Item(item) => {
-                                        (item, Instant::now())
-                                    }
-                                    Polled::Empty => continue 'serve,
-                                    Polled::Closed => {
-                                        // retire only once no item is
-                                        // queued, in flight, or parked
-                                        // on the retry channel — a
-                                        // requeued item keeps its
-                                        // inflight count until done
-                                        if inflight
-                                            .load(Ordering::SeqCst)
-                                            == 0
-                                        {
-                                            break 'serve false;
-                                        }
-                                        thread::sleep(
-                                            Duration::from_millis(1),
-                                        );
-                                        continue 'serve;
-                                    }
-                                },
-                            }
-                        }
-                    };
-                    let eng = match engine.as_mut() {
-                        Some(e) => e,
-                        None => continue 'serve, // ensured above
-                    };
-                    // the fault layer and the engine call share one
-                    // catch_unwind region: injected panics take the
-                    // same road as real ones
-                    let outcome =
-                        catch_unwind(AssertUnwindSafe(
-                            || -> Result<ImageU8> {
-                                faults.before_call()?;
-                                eng.upscale(&item.lr)
-                            },
-                        ));
-                    let fail = match outcome {
-                        Ok(Ok(hr_ext)) => {
-                            let hr = crop_hr_band(
-                                &hr_ext, &item.spec, scale,
-                            );
-                            let done = DoneBand {
-                                stream: 0,
-                                frame: item.frame,
-                                spec: item.spec,
-                                n_bands: item.n_bands,
-                                hr,
-                                emitted: item.emitted,
-                                dequeued,
-                                completed: Instant::now(),
-                                stats: eng.last_stats(),
-                                degraded: false,
-                            };
-                            let sunk = tx.send(done).is_ok();
-                            inflight.fetch_sub(1, Ordering::SeqCst);
-                            if !sunk {
-                                return Ok(()); // sink gone
-                            }
-                            None
-                        }
-                        Ok(Err(e)) => Some(format!("{e:#}")),
-                        Err(p) => Some(panic_note(p.as_ref())),
-                    };
-                    if let Some(why) = fail {
-                        reason = why;
-                        // engine state is unknown after a fault: drop
-                        // it, back off, rebuild, retry the same item
-                        engine = None;
-                        if restarts_used >= restart.max_restarts {
-                            pending = Some((item, dequeued));
+                    Err(e) => {
+                        reason = format!("{e:#}");
+                        let used = wd.restarts_used(wi);
+                        if used >= restart.max_restarts {
                             break 'serve true;
                         }
-                        restarts_used += 1;
-                        restarts_total.fetch_add(1, Ordering::SeqCst);
-                        thread::sleep(restart.backoff(restarts_used));
-                        pending = Some((item, dequeued));
+                        wd.note_restart(wi);
+                        thread::sleep(restart.backoff(used + 1));
+                        continue 'serve;
                     }
-                };
-                if exhausted {
-                    // hand retained work to the surviving pool and
-                    // strand nothing in a private queue, then die
-                    if let Some((item, _)) = pending.take() {
-                        // LOSSY: the retry receiver is held by this
-                        // worker's own Arc, so the send cannot fail;
-                        // were it ever to, the frame is already
-                        // counted incomplete by the collector.
-                        let _ = retry_tx.send(item);
-                    }
-                    source.forward_rest(&retry_tx);
-                    return Err(anyhow::anyhow!(
-                        "worker {wi}: {reason} (restart budget of {} \
-                         exhausted)",
-                        restart.max_restarts
-                    ));
                 }
-                Ok(()) // source closed, nothing left in flight
-            }));
+            }
+            // work: the item retained across a restart first, then
+            // rescues from retired peers, then the source
+            let (item, dequeued) = match pending.take() {
+                Some(x) => x,
+                None => {
+                    let rescued = lock_clean(&retry_rx).try_recv().ok();
+                    match rescued {
+                        Some(item) => (item, Instant::now()),
+                        None => {
+                            match source.poll(Duration::from_millis(5)) {
+                                Polled::Item(item) => (item, Instant::now()),
+                                Polled::Empty => continue 'serve,
+                                Polled::Closed => {
+                                    // retire only once no item is
+                                    // queued, in flight, or parked on
+                                    // the retry channel — a requeued
+                                    // item keeps its inflight count
+                                    // until done
+                                    if inflight.load(Ordering::SeqCst) == 0 {
+                                        break 'serve false;
+                                    }
+                                    thread::sleep(Duration::from_millis(1));
+                                    continue 'serve;
+                                }
+                            }
+                        }
+                    }
+                }
+            };
+            let eng = match engine.as_mut() {
+                Some(e) => e,
+                None => continue 'serve, // ensured above
+            };
+            // §Watchdog heartbeat: stamp busy (stashing a reroutable
+            // copy when armed) before entering the engine
+            if !wd.begin_call(wi, &lease, || item.clone()) {
+                // zombified between calls — the slot already belongs
+                // to a replacement; put the just-dequeued item back.
+                // LOSSY: the retry receiver outlives the pool, so the
+                // send cannot fail; a lost frame would be counted
+                // incomplete by the collector regardless.
+                let _ = retry_tx.send(item);
+                retire.on = false;
+                return;
+            }
+            // the fault layer and the engine call share one
+            // catch_unwind region: injected panics take the same road
+            // as real ones
+            let call_t0 = Instant::now();
+            let outcome = catch_unwind(AssertUnwindSafe(
+                || -> Result<ImageU8> {
+                    faults.before_call(&lease.cancel)?;
+                    eng.upscale(&item.lr)
+                },
+            ));
+            if let Some(extra) = faults.after_call(call_t0.elapsed()) {
+                // a slow fault owes its extra latency here, parked on
+                // the token so a zombified shift wakes immediately
+                lease.cancel.wait_timeout(extra);
+            }
+            if !wd.end_call(wi, &lease) {
+                // zombified mid-call: the monitor rerouted the stash,
+                // so delivering (or retrying) this result would
+                // double-serve the band — discard and bow out
+                retire.on = false;
+                return;
+            }
+            let fail = match outcome {
+                Ok(Ok(hr_ext)) => {
+                    let hr = crop_hr_band(&hr_ext, &item.spec, scale);
+                    let done = DoneBand {
+                        stream: 0,
+                        frame: item.frame,
+                        spec: item.spec,
+                        n_bands: item.n_bands,
+                        hr,
+                        emitted: item.emitted,
+                        dequeued,
+                        completed: Instant::now(),
+                        stats: eng.last_stats(),
+                        level: QualityLevel::Full,
+                    };
+                    let sunk = done_tx.send(done).is_ok();
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                    if !sunk {
+                        return; // sink gone
+                    }
+                    None
+                }
+                Ok(Err(e)) => Some(format!("{e:#}")),
+                Err(p) => Some(panic_note(p.as_ref())),
+            };
+            if let Some(why) = fail {
+                reason = why;
+                // engine state is unknown after a fault: drop it,
+                // back off, rebuild, retry the same item
+                engine = None;
+                let used = wd.restarts_used(wi);
+                if used >= restart.max_restarts {
+                    pending = Some((item, dequeued));
+                    break 'serve true;
+                }
+                wd.note_restart(wi);
+                thread::sleep(restart.backoff(used + 1));
+                pending = Some((item, dequeued));
+            }
+        };
+        if exhausted {
+            // hand retained work to the surviving pool and strand
+            // nothing in a private queue, then die
+            if let Some((item, _)) = pending.take() {
+                // LOSSY: the retry receiver outlives the pool, so the
+                // send cannot fail; were it ever to, the frame is
+                // already counted incomplete by the collector.
+                let _ = retry_tx.send(item);
+            }
+            lock_clean(&errors_shared).push(format!(
+                "worker {wi}: {reason} (restart budget of {} exhausted)",
+                restart.max_restarts
+            ));
+            source.forward_rest(&retry_tx);
         }
+        // source closed with nothing left in flight (or sink gone):
+        // `retire` clears the slot on drop
+    };
+    let worker_shift = &worker_shift;
+
+    let (records, offered) = thread::scope(|s| {
+        // --- workers -------------------------------------------------
+        let mut handles = Vec::new();
+        for (wi, source) in sources.into_iter().enumerate() {
+            let dtx = done_tx.clone();
+            handles
+                .push(s.spawn(move || worker_shift(wi, source, dtx, 0, None)));
+        }
+
+        // --- §Watchdog monitor (armed pools only) --------------------
+        let monitor = wd.armed().then(|| {
+            let retry_tx = retry_tx.clone();
+            let done_tx = done_tx.clone();
+            let weak_sources = &weak_sources;
+            let (wd, active) = (&wd, &active);
+            let (src_done, errors_shared) = (&src_done, &errors_shared);
+            let budget_ms = wd
+                .stall_budget()
+                .map(|b| b.as_secs_f64() * 1e3)
+                .unwrap_or(0.0);
+            s.spawn(move || {
+                // queues of dead slots with no replacement: babysat
+                // here so the source never blocks on a full queue
+                // nobody drains
+                let mut orphans: Vec<WorkSource> = Vec::new();
+                loop {
+                    let drained = src_done.load(Ordering::SeqCst)
+                        && active.load(Ordering::SeqCst) == 0;
+                    // pin every queue across the sweep: a zombie that
+                    // wakes and exits must not disconnect its channel
+                    // before the replacement adopts it
+                    let pinned: Vec<Option<WorkSource>> = weak_sources
+                        .iter()
+                        .map(WeakSource::upgrade)
+                        .collect();
+                    for z in wd.scan() {
+                        if let Some(item) = z.stash {
+                            // LOSSY: the monitor holds a retry_tx
+                            // clone, so the receiver outlives this
+                            // send; a lost item would surface as
+                            // incomplete, never silently.
+                            let _ = retry_tx.send(item);
+                        }
+                        let src = pinned[z.worker].clone();
+                        if let Some(src) = &src {
+                            // a BandModulo zombie's backlog reroutes
+                            // to survivors; replacements repopulate
+                            // their own queue from the source
+                            if matches!(src, WorkSource::Own(_)) {
+                                src.drain_into(&retry_tx);
+                            }
+                        }
+                        let replaceable =
+                            z.restarts_used <= restart.max_restarts;
+                        match src {
+                            Some(src) if replaceable => {
+                                // the zombie's live count transfers
+                                // to its replacement
+                                let dtx = done_tx.clone();
+                                let delay =
+                                    restart.backoff(z.restarts_used);
+                                let wi = z.worker;
+                                let calls = z.calls;
+                                s.spawn(move || {
+                                    worker_shift(
+                                        wi,
+                                        src,
+                                        dtx,
+                                        calls,
+                                        Some(delay),
+                                    )
+                                });
+                            }
+                            src => {
+                                lock_clean(&errors_shared).push(format!(
+                                    "worker {}: hung past the \
+                                     {budget_ms:.0}ms stall budget \
+                                     (restart budget of {} exhausted)",
+                                    z.worker, restart.max_restarts
+                                ));
+                                active.fetch_sub(1, Ordering::SeqCst);
+                                if let Some(src) = src {
+                                    orphans.push(src);
+                                }
+                            }
+                        }
+                    }
+                    for o in &orphans {
+                        o.drain_into(&retry_tx);
+                    }
+                    if drained {
+                        break;
+                    }
+                    thread::sleep(wd.tick());
+                }
+            })
+        });
         drop(done_tx);
 
         // --- reassembly sink (collector drains while we feed, hands
@@ -459,28 +677,37 @@ pub fn run_pipeline(
             }
         }
         drop(senders);
+        src_done.store(true, Ordering::SeqCst);
 
-        let mut errors = Vec::new();
         for h in handles {
             // a panicking worker is recorded like an erroring one —
             // the pool keeps serving and the report carries the cause
-            match h.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => errors.push(format!("{e:#}")),
-                Err(_) => errors.push("worker thread panicked".into()),
+            if h.join().is_err() {
+                lock_clean(&errors_shared)
+                    .push("worker thread panicked".into());
             }
+        }
+        // the monitor outlives every replacement it spawned (it waits
+        // for active == 0), so joining it here means all done_tx
+        // clones are gone and the collector below can terminate
+        if let Some(m) = monitor {
+            let _ = m.join();
         }
         let records = match collector.join() {
             Ok(records) => records,
             Err(_) => {
                 // no records => the empty-delivery check below turns
                 // this into an Err instead of a coordinator panic
-                errors.push("collector thread panicked".into());
+                lock_clean(&errors_shared)
+                    .push("collector thread panicked".into());
                 Vec::new()
             }
         };
-        (records, errors, offered)
+        (records, offered)
     });
+    let errors = errors_shared
+        .into_inner()
+        .unwrap_or_else(PoisonError::into_inner);
     if records.is_empty() && !errors.is_empty() {
         return Err(anyhow::anyhow!(
             "pipeline delivered no frames: {}",
@@ -489,9 +716,8 @@ pub fn run_pipeline(
     }
     let wall = t0.elapsed();
     let names = engine_names
-        .lock()
-        .unwrap_or_else(std::sync::PoisonError::into_inner)
-        .clone();
+        .into_inner()
+        .unwrap_or_else(PoisonError::into_inner);
     let meta = StreamMeta {
         id: 0,
         label: format!("{}x{}@x{}", cfg.lr_w, cfg.lr_h, cfg.scale),
@@ -510,7 +736,9 @@ pub fn run_pipeline(
         vec![meta],
     );
     report.errors = errors;
-    report.restarts = restarts_total.load(Ordering::SeqCst);
+    report.restarts = wd.total_restarts();
+    report.hangs_detected = wd.hangs_detected();
+    report.zombies_reaped = wd.zombies_reaped();
     Ok(report)
 }
 
@@ -536,6 +764,7 @@ mod tests {
             // worker-death accounting tests below want the
             // pre-supervision behaviour: first failure is fatal
             restart: RestartPolicy::none(),
+            stall_budget_ms: None,
             inject: FaultPlan::default(),
         }
     }
@@ -805,6 +1034,48 @@ mod tests {
             vec![Box::new(|| anyhow::bail!("no engine for you"))];
         let err = run_pipeline(&cfg, factories, |_, _| {}).unwrap_err();
         assert!(err.to_string().contains("no frames"), "{err}");
+    }
+
+    #[test]
+    fn hung_worker_is_reaped_replaced_and_frames_stay_bit_identical() {
+        // §Watchdog: worker 0's second engine call parks forever on an
+        // injected hang; the monitor zombifies it within the stall
+        // budget, reroutes the stashed band plus worker 0's BandModulo
+        // backlog, and spawns a replacement — delivery is complete, in
+        // order, and bit-identical to the fault-free run, with the
+        // hang (not a frame loss) as the only trace.
+        let shard = ShardPlan {
+            affinity: crate::config::WorkerAffinity::BandModulo,
+            ..ShardPlan::row_bands(9, HaloPolicy::Exact)
+        };
+        let mut clean_cfg = tiny_cfg(8, 2);
+        clean_cfg.shard = shard.clone();
+        let mut clean = Vec::new();
+        run_pipeline(&clean_cfg, engines(2), |_, hr| {
+            clean.push(hr.clone())
+        })
+        .unwrap();
+
+        let mut cfg = tiny_cfg(8, 2);
+        cfg.shard = shard;
+        cfg.restart = quick_restart(2);
+        cfg.stall_budget_ms = Some(60.0);
+        cfg.inject = FaultPlan::parse("w0:hang@1").unwrap();
+        let mut seen = Vec::new();
+        let mut frames = Vec::new();
+        let rep = run_pipeline(&cfg, engines(2), |i, hr| {
+            seen.push(i);
+            frames.push(hr.clone());
+        })
+        .unwrap();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+        assert_eq!(frames, clean, "rescued frames must be bit-identical");
+        assert_eq!(rep.hangs_detected, 1, "{:?}", rep.errors);
+        assert!(rep.restarts >= 1, "the hang charges a restart");
+        assert_eq!(rep.incomplete, 0);
+        assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+        let r = rep.render();
+        assert!(r.contains("watchdog: 1 hang detected"), "{r}");
     }
 
     #[test]

@@ -28,18 +28,30 @@
 //!   reported as drop rates, and the per-stream [`Reassembler`] skips
 //!   the shed slot so later frames still deliver in order.
 //! * [`RtPolicy::Degrade`] — admission blocks like best-effort (zero
-//!   undelivered frames), but a frame dequeued past its deadline is
-//!   *downshifted* to the cheap bilinear path instead of shed, and the
-//!   stream stays on bilinear until [`RECOVERY_STREAK`] consecutive
-//!   on-time dequeues earn back full quality (hysteresis — no
-//!   per-frame quality flapping under sustained overload).  Degraded
-//!   deliveries are counted per stream (`StreamSummary::degraded`) and
-//!   in aggregate, always as a subset of `delivered`.
+//!   undelivered frames), but lateness walks the stream down a
+//!   **quality ladder** instead of shedding (§Ladder below).
+//!
+//! §Ladder: under `Degrade`, each stream carries a hysteresis-driven
+//! quality level ([`QualityLevel`]).  Every late dequeue steps the
+//! stream one rung down; [`RECOVERY_STREAK`] consecutive on-time
+//! dequeues step it one rung back up (the frame completing the streak
+//! already runs at the recovered rung), so quality never flaps
+//! per-frame around the deadline.  The rungs:
+//!
+//! 1. `Full` — the SR model at the stream's native scale;
+//! 2. `Reduced` — the SR model at x2, bilinear-expanded the rest of
+//!    the way (exists only when the scale splits as `2 * k` with
+//!    `k >= 2`; a x2 or odd-scale stream drops straight to rung 3);
+//! 3. `Bilinear` — pure integer bilinear, no model at all.
+//!
+//! Per-rung delivery counts land in `StreamSummary::degraded_by_level`
+//! and the aggregate report.
 //!
 //! Workers cache one engine per distinct upscale factor (built lazily
 //! inside the worker thread via [`ScaleEngineFactory`]), so a pool
 //! serving x2/x3/x4 streams pays each engine construction once per
-//! worker, not per frame.
+//! worker, not per frame — and the `Reduced` rung's x2 engine shares
+//! that cache.
 //!
 //! §Supervision (shared with [`run_pipeline`](super::run_pipeline)):
 //! every engine call runs under `catch_unwind`; a worker whose engine
@@ -49,15 +61,25 @@
 //! surviving pool over the retry channel before dying, so a frame is
 //! lost only when no worker survives.  Injected faults
 //! (`coordinator::faults`) fire inside the same region.
+//!
+//! §Watchdog (shared with [`run_pipeline`](super::run_pipeline)):
+//! with `stall_budget_ms` set, every worker stamps a [`Watchdog`]
+//! heartbeat around each engine call; a monitor thread zombifies a
+//! worker busy past the budget — generation bump (the late result is
+//! discarded, never double-delivered), cancel-token trip (cooperative
+//! engines abandon the doomed frame within one row), stashed frame
+//! rerouted to survivors, replacement spawned under the shared
+//! [`RestartPolicy`] budget.
 
 use std::collections::btree_map::Entry;
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{
-    channel, sync_channel, RecvTimeoutError, TrySendError,
+    channel, sync_channel, Receiver, RecvTimeoutError, SyncSender,
+    TrySendError,
 };
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError, Weak};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -70,9 +92,17 @@ use crate::image::{bilinear_upsample, ImageU8, SceneGenerator};
 
 use super::engine::Engine;
 use super::faults::FaultPlan;
-use super::metrics::{PipelineReport, StreamMeta};
+use super::metrics::{PipelineReport, QualityLevel, StreamMeta};
 use super::pipeline::panic_note;
 use super::shard::{BandSpec, DoneBand, Reassembler};
+use super::watchdog::Watchdog;
+
+/// Poison-tolerant lock (see `coordinator::watchdog`): a peer that
+/// panicked while holding a shared lock poisons it, but the data
+/// stays structurally valid and the panic is accounted separately.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Parameters of one multi-stream serving run.
 #[derive(Clone, Debug)]
@@ -94,6 +124,9 @@ pub struct MultiServeConfig {
     /// Deterministic fault injection (`coordinator::faults`); the
     /// default empty plan injects nothing.
     pub inject: FaultPlan,
+    /// §Watchdog: an engine call busy past this budget is zombified
+    /// and its frame rerouted (None = hung-worker detection off).
+    pub stall_budget_ms: Option<f64>,
 }
 
 impl Default for MultiServeConfig {
@@ -107,6 +140,7 @@ impl Default for MultiServeConfig {
             seed: 7,
             restart: RestartPolicy::default(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         }
     }
 }
@@ -132,26 +166,66 @@ fn deadline_duration(deadline_ms: f64) -> Duration {
     clamped_ms_duration(deadline_ms)
 }
 
-/// Per-stream quality mode under [`RtPolicy::Degrade`]: one late
-/// dequeue flips the stream onto the bilinear path; it earns full
-/// quality back after [`RECOVERY_STREAK`] consecutive on-time
-/// dequeues (the frame completing the streak already runs full).
-#[derive(Clone, Copy, Default)]
+/// Per-stream ladder state under [`RtPolicy::Degrade`] (§Ladder): the
+/// rung frames currently serve at, plus the on-time streak that earns
+/// the next rung back.
+#[derive(Clone, Copy)]
 struct QualityState {
-    degraded: bool,
+    level: QualityLevel,
     streak: usize,
 }
 
-/// Consecutive on-time dequeues required to leave degraded mode.
+impl Default for QualityState {
+    fn default() -> Self {
+        Self {
+            level: QualityLevel::Full,
+            streak: 0,
+        }
+    }
+}
+
+/// Consecutive on-time dequeues required to climb one ladder rung.
 const RECOVERY_STREAK: usize = 3;
+
+/// Whether a stream of this scale has the `Reduced` rung at all: the
+/// scale must split as `2 * k` with `k >= 2` for "SR at x2, bilinear
+/// the rest" to mean anything.
+fn has_reduced_rung(scale: usize) -> bool {
+    scale >= 4 && scale % 2 == 0
+}
+
+/// One rung down (a late dequeue).
+fn rung_down(level: QualityLevel, scale: usize) -> QualityLevel {
+    match level {
+        QualityLevel::Full if has_reduced_rung(scale) => {
+            QualityLevel::Reduced
+        }
+        _ => QualityLevel::Bilinear,
+    }
+}
+
+/// One rung up (a completed on-time streak).
+fn rung_up(level: QualityLevel, scale: usize) -> QualityLevel {
+    match level {
+        QualityLevel::Bilinear if has_reduced_rung(scale) => {
+            QualityLevel::Reduced
+        }
+        _ => QualityLevel::Full,
+    }
+}
 
 /// Per-worker engine supplier for the multi-stream pool: invoked
 /// *inside* the worker thread, once per distinct upscale factor (the
-/// worker caches the built engine per scale).
+/// worker caches the built engine per scale).  `Sync` because the
+/// §Watchdog monitor may run a replacement shift against the same
+/// factory.
 pub type ScaleEngineFactory =
-    Box<dyn Fn(usize) -> Result<Box<dyn Engine>> + Send>;
+    Box<dyn Fn(usize) -> Result<Box<dyn Engine>> + Send + Sync>;
 
-/// One whole frame of one stream on its way to the pool.
+/// One whole frame of one stream on its way to the pool.  `Clone` is
+/// the §Watchdog stash: an armed `begin_call` keeps a copy so the
+/// monitor can reroute the frame if the call never comes back.
+#[derive(Clone)]
 struct StreamItem {
     stream: usize,
     frame: usize,
@@ -175,12 +249,17 @@ enum StreamEvent {
 ///
 /// Like [`run_pipeline`](super::run_pipeline), a worker whose engine
 /// panics or errors is restarted in place under `cfg.restart`
-/// (§Supervision; the count lands in [`PipelineReport::restarts`]),
-/// and a worker that exhausts its budget does not sink the run: it
-/// hands its in-flight frame to the surviving pool, the error is
-/// recorded in [`PipelineReport::errors`], and only frames no
-/// survivor could rescue surface as `incomplete`; `Err` is returned
-/// only when nothing was delivered.
+/// (§Supervision; the count lands in [`PipelineReport::restarts`]);
+/// with a `stall_budget_ms` armed, a worker whose engine call never
+/// returns is zombified and replaced under the same budget
+/// (§Watchdog), the hang counted in
+/// [`PipelineReport::hangs_detected`] and any late result discarded
+/// ([`PipelineReport::zombies_reaped`]).  A worker that exhausts its
+/// budget does not sink the run: it hands its in-flight frame to the
+/// surviving pool, the error is recorded in
+/// [`PipelineReport::errors`], and only frames no survivor could
+/// rescue surface as `incomplete`; `Err` is returned only when
+/// nothing was delivered.
 pub fn serve_multi(
     cfg: &MultiServeConfig,
     factories: Vec<ScaleEngineFactory>,
@@ -197,10 +276,14 @@ pub fn serve_multi(
 
     let (work_tx, work_rx) =
         sync_channel::<StreamItem>(cfg.queue_depth.max(1));
-    // One Arc per worker and *no* longer-lived ref: when every worker
-    // has exited, the receiver drops and blocked sources see the
-    // disconnect instead of waiting on a queue nobody drains.
+    // One Arc per worker and *no* longer-lived strong ref: when every
+    // worker has exited, the receiver drops and blocked sources see
+    // the disconnect instead of waiting on a queue nobody drains.
+    // The §Watchdog monitor holds only a Weak, upgraded per sweep to
+    // hand the queue to a replacement.
     let shared_rx = Arc::new(Mutex::new(work_rx));
+    let weak_rx: Weak<Mutex<Receiver<StreamItem>>> =
+        Arc::downgrade(&shared_rx);
     let worker_rxs: Vec<_> =
         (0..cfg.workers).map(|_| Arc::clone(&shared_rx)).collect();
     drop(shared_rx);
@@ -209,305 +292,394 @@ pub fn serve_multi(
     let done_cap = (cfg.queue_depth.max(1) * 2 + 2 * n_streams).max(8);
     let (done_tx, done_rx) = sync_channel::<StreamEvent>(done_cap);
 
-    let engine_names =
-        Arc::new(Mutex::new(vec![String::new(); cfg.workers]));
+    let engine_names = Mutex::new(vec![String::new(); cfg.workers]);
+    // Worker deaths, in completion order (joined Results are gone now
+    // that the §Watchdog monitor also spawns workers mid-run).
+    let errors_shared = Mutex::new(Vec::<String>::new());
     // Rescue path (§Supervision): retired workers hand unfinished
     // frames to surviving peers here.  Unbounded — pushes never block.
     let (retry_tx, retry_rx) = channel::<StreamItem>();
-    let retry_rx = Arc::new(Mutex::new(retry_rx));
+    let retry_rx = Mutex::new(retry_rx);
     // Frames admitted (or shed at admission and then decremented) but
     // not yet completed — queued, in a worker, or parked on the retry
     // channel.  Workers retire only when the sources are done AND this
     // is zero, so a requeued frame is never stranded.
-    let inflight = Arc::new(AtomicUsize::new(0));
-    let restarts_total = Arc::new(AtomicUsize::new(0));
-    // Per-stream hysteresis state under RtPolicy::Degrade.
-    let quality =
-        Arc::new(Mutex::new(vec![QualityState::default(); n_streams]));
+    let inflight = AtomicUsize::new(0);
+    // Worker threads currently holding a slot; a zombie's count
+    // transfers to its replacement (see `coordinator::pipeline`).
+    let active = AtomicUsize::new(cfg.workers);
+    let src_done = AtomicBool::new(false);
+    // Per-stream ladder state under RtPolicy::Degrade.
+    let quality = Mutex::new(vec![QualityState::default(); n_streams]);
+    let wd: Watchdog<StreamItem> =
+        Watchdog::new(cfg.workers, cfg.stall_budget_ms);
     let t0 = Instant::now();
     let frames = cfg.frames;
     let policy = cfg.policy;
+    let restart = cfg.restart;
 
-    let (records, dropped, offered, errors) = thread::scope(|s| {
-        // --- worker pool ---------------------------------------------
-        let mut workers = Vec::new();
-        for (wi, (factory, rx)) in
-            factories.into_iter().zip(worker_rxs).enumerate()
-        {
-            let tx = done_tx.clone();
-            let names = Arc::clone(&engine_names);
-            let retry_tx = retry_tx.clone();
-            let retry_rx = Arc::clone(&retry_rx);
-            let inflight = Arc::clone(&inflight);
-            let restarts_total = Arc::clone(&restarts_total);
-            let quality = Arc::clone(&quality);
-            let restart = cfg.restart;
-            let mut faults = cfg.inject.for_worker(wi);
-            workers.push(s.spawn(move || -> Result<()> {
-                let mut engines: BTreeMap<usize, Box<dyn Engine>> =
-                    BTreeMap::new();
-                let mut pending: Option<(StreamItem, Instant)> = None;
-                let mut restarts_used = 0usize;
-                let mut reason = String::new();
-                let exhausted = 'serve: loop {
-                    // work: the frame retained across a restart first,
-                    // then rescues from retired peers, then the queue.
-                    // The queue lock is released while we compute;
-                    // tolerate poisoned locks so one panicking worker
-                    // cannot wedge the rest of the pool.
-                    let (item, dequeued) = match pending.take() {
-                        Some(x) => x,
+    // One worker *shift*: the body a slot's thread runs, used both by
+    // the initial spawns and by the §Watchdog monitor's replacements.
+    // `skip_calls` fast-forwards the injected fault plan past the
+    // previous shift's spent calls; `start_delay` is the replacement's
+    // restart backoff.
+    let worker_shift = |wi: usize,
+                        rx: Arc<Mutex<Receiver<StreamItem>>>,
+                        tx: SyncSender<StreamEvent>,
+                        skip_calls: usize,
+                        start_delay: Option<Duration>| {
+        let mut retire = Retire {
+            active: &active,
+            on: true,
+        };
+        if let Some(d) = start_delay {
+            thread::sleep(d);
+        }
+        let lease = wd.adopt(wi);
+        let mut faults = cfg.inject.for_worker(wi);
+        faults.skip_before(skip_calls);
+        let mut engines: BTreeMap<usize, Box<dyn Engine>> = BTreeMap::new();
+        let mut pending: Option<(StreamItem, Instant)> = None;
+        let mut reason = String::new();
+        let exhausted = 'serve: loop {
+            // work: the frame retained across a restart first, then
+            // rescues from retired peers, then the shared queue
+            let (item, dequeued) = match pending.take() {
+                Some(x) => x,
+                None => {
+                    let rescued = lock_clean(&retry_rx).try_recv().ok();
+                    match rescued {
+                        Some(item) => (item, Instant::now()),
                         None => {
-                            let rescued = retry_rx
-                                .lock()
-                                .unwrap_or_else(
-                                    std::sync::PoisonError::into_inner,
-                                )
-                                .try_recv()
-                                .ok();
-                            match rescued {
-                                Some(item) => (item, Instant::now()),
-                                None => {
-                                    let got = rx
-                                        .lock()
-                                        .unwrap_or_else(
-                                            std::sync::PoisonError
-                                                ::into_inner,
-                                        )
-                                        .recv_timeout(
-                                            Duration::from_millis(5),
-                                        );
-                                    match got {
-                                        Ok(item) => {
-                                            (item, Instant::now())
-                                        }
-                                        Err(
-                                            RecvTimeoutError::Timeout,
-                                        ) => continue 'serve,
-                                        Err(
-                                            RecvTimeoutError
-                                            ::Disconnected,
-                                        ) => {
-                                            // retire only once no
-                                            // frame is queued, in
-                                            // flight, or parked on
-                                            // the retry channel
-                                            if inflight
-                                                .load(Ordering::SeqCst)
-                                                == 0
-                                            {
-                                                break 'serve false;
-                                            }
-                                            thread::sleep(
-                                                Duration::from_millis(
-                                                    1,
-                                                ),
-                                            );
-                                            continue 'serve;
-                                        }
+                            let got = lock_clean(&rx)
+                                .recv_timeout(Duration::from_millis(5));
+                            match got {
+                                Ok(item) => (item, Instant::now()),
+                                Err(RecvTimeoutError::Timeout) => {
+                                    continue 'serve;
+                                }
+                                Err(RecvTimeoutError::Disconnected) => {
+                                    // retire only once no frame is
+                                    // queued, in flight, or parked on
+                                    // the retry channel
+                                    if inflight.load(Ordering::SeqCst) == 0
+                                    {
+                                        break 'serve false;
                                     }
+                                    thread::sleep(Duration::from_millis(1));
+                                    continue 'serve;
                                 }
-                            }
-                        }
-                    };
-                    let late =
-                        item.deadline.is_some_and(|d| dequeued > d);
-                    if matches!(policy, RtPolicy::DropLate { .. })
-                        && late
-                    {
-                        // deadline already blown: shed instead of
-                        // burning pool time on an unusable frame
-                        let ev = StreamEvent::Dropped {
-                            stream: item.stream,
-                            frame: item.frame,
-                        };
-                        let sunk = tx.send(ev).is_ok();
-                        inflight.fetch_sub(1, Ordering::SeqCst);
-                        if !sunk {
-                            return Ok(());
-                        }
-                        continue 'serve;
-                    }
-                    if matches!(policy, RtPolicy::Degrade { .. }) {
-                        // late frames (and streams still recovering)
-                        // take the cheap bilinear path instead of
-                        // being shed — hysteresis per stream
-                        let downshift = {
-                            let mut q = quality.lock().unwrap_or_else(
-                                std::sync::PoisonError::into_inner,
-                            );
-                            let st = &mut q[item.stream];
-                            if late {
-                                st.degraded = true;
-                                st.streak = 0;
-                                true
-                            } else if st.degraded {
-                                st.streak += 1;
-                                if st.streak >= RECOVERY_STREAK {
-                                    st.degraded = false;
-                                    st.streak = 0;
-                                    false // earned full quality back
-                                } else {
-                                    true
-                                }
-                            } else {
-                                false
-                            }
-                        };
-                        if downshift {
-                            let hr =
-                                bilinear_upsample(&item.lr, item.scale);
-                            let spec = BandSpec {
-                                band: 0,
-                                y0: 0,
-                                y1: item.lr.h,
-                                e0: 0,
-                                e1: item.lr.h,
-                            };
-                            let done = DoneBand {
-                                stream: item.stream,
-                                frame: item.frame,
-                                spec,
-                                n_bands: 1,
-                                hr,
-                                emitted: item.emitted,
-                                dequeued,
-                                completed: Instant::now(),
-                                stats: None,
-                                degraded: true,
-                            };
-                            let sunk =
-                                tx.send(StreamEvent::Done(done)).is_ok();
-                            inflight.fetch_sub(1, Ordering::SeqCst);
-                            if !sunk {
-                                return Ok(());
-                            }
-                            continue 'serve;
-                        }
-                    }
-                    // full-quality path: ensure this scale's engine;
-                    // construction failures burn restart budget
-                    // exactly like mid-run faults
-                    if let Entry::Vacant(v) = engines.entry(item.scale)
-                    {
-                        match factory(item.scale) {
-                            Ok(e) => {
-                                let mut names =
-                                    names.lock().unwrap_or_else(
-                                        std::sync::PoisonError
-                                            ::into_inner,
-                                    );
-                                if names[wi].is_empty() {
-                                    names[wi] = e.name().to_string();
-                                }
-                                drop(names);
-                                v.insert(e);
-                            }
-                            Err(e) => {
-                                reason = format!("{e:#}");
-                                if restarts_used
-                                    >= restart.max_restarts
-                                {
-                                    pending = Some((item, dequeued));
-                                    break 'serve true;
-                                }
-                                restarts_used += 1;
-                                restarts_total
-                                    .fetch_add(1, Ordering::SeqCst);
-                                thread::sleep(
-                                    restart.backoff(restarts_used),
-                                );
-                                pending = Some((item, dequeued));
-                                continue 'serve;
                             }
                         }
                     }
-                    let engine = match engines.get_mut(&item.scale) {
-                        Some(e) => e,
-                        None => continue 'serve, // ensured above
-                    };
-                    // the fault layer and the engine call share one
-                    // catch_unwind region: injected panics take the
-                    // same road as real ones
-                    let outcome = catch_unwind(AssertUnwindSafe(
-                        || -> Result<ImageU8> {
-                            faults.before_call()?;
-                            engine.upscale(&item.lr)
-                        },
-                    ));
-                    let fail = match outcome {
-                        Ok(Ok(hr)) => {
-                            let spec = BandSpec {
-                                band: 0,
-                                y0: 0,
-                                y1: item.lr.h,
-                                e0: 0,
-                                e1: item.lr.h,
-                            };
-                            let done = DoneBand {
-                                stream: item.stream,
-                                frame: item.frame,
-                                spec,
-                                n_bands: 1,
-                                hr,
-                                emitted: item.emitted,
-                                dequeued,
-                                completed: Instant::now(),
-                                stats: engine.last_stats(),
-                                degraded: false,
-                            };
-                            let sunk =
-                                tx.send(StreamEvent::Done(done)).is_ok();
-                            inflight.fetch_sub(1, Ordering::SeqCst);
-                            if !sunk {
-                                return Ok(()); // sink gone
-                            }
-                            None
+                }
+            };
+            let late = item.deadline.is_some_and(|d| dequeued > d);
+            if matches!(policy, RtPolicy::DropLate { .. }) && late {
+                // deadline already blown: shed instead of burning
+                // pool time on an unusable frame
+                let ev = StreamEvent::Dropped {
+                    stream: item.stream,
+                    frame: item.frame,
+                };
+                let sunk = tx.send(ev).is_ok();
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                if !sunk {
+                    return;
+                }
+                continue 'serve;
+            }
+            // §Ladder rung for this dequeue (Full outside Degrade): a
+            // late frame steps its stream down, an on-time frame on a
+            // degraded stream grows the streak that steps back up
+            let level = if matches!(policy, RtPolicy::Degrade { .. }) {
+                let mut q = lock_clean(&quality);
+                let st = &mut q[item.stream];
+                if late {
+                    st.level = rung_down(st.level, item.scale);
+                    st.streak = 0;
+                } else if st.level != QualityLevel::Full {
+                    st.streak += 1;
+                    if st.streak >= RECOVERY_STREAK {
+                        st.level = rung_up(st.level, item.scale);
+                        st.streak = 0;
+                    }
+                }
+                st.level
+            } else {
+                QualityLevel::Full
+            };
+            if level == QualityLevel::Bilinear {
+                // bottom rung: no model at all
+                let hr = bilinear_upsample(&item.lr, item.scale);
+                let spec = BandSpec {
+                    band: 0,
+                    y0: 0,
+                    y1: item.lr.h,
+                    e0: 0,
+                    e1: item.lr.h,
+                };
+                let done = DoneBand {
+                    stream: item.stream,
+                    frame: item.frame,
+                    spec,
+                    n_bands: 1,
+                    hr,
+                    emitted: item.emitted,
+                    dequeued,
+                    completed: Instant::now(),
+                    stats: None,
+                    level: QualityLevel::Bilinear,
+                };
+                let sunk = tx.send(StreamEvent::Done(done)).is_ok();
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                if !sunk {
+                    return;
+                }
+                continue 'serve;
+            }
+            // model rungs: Full runs the stream's native scale,
+            // Reduced runs x2 and bilinear-expands the rest
+            let (eng_scale, expand) = match level {
+                QualityLevel::Reduced => (2, item.scale / 2),
+                _ => (item.scale, 1),
+            };
+            // ensure this scale's engine; construction failures burn
+            // restart budget exactly like mid-run faults
+            if let Entry::Vacant(v) = engines.entry(eng_scale) {
+                match factories[wi](eng_scale) {
+                    Ok(mut e) => {
+                        e.set_cancel(lease.cancel.clone());
+                        let mut names = lock_clean(&engine_names);
+                        if names[wi].is_empty() {
+                            names[wi] = e.name().to_string();
                         }
-                        Ok(Err(e)) => Some(format!("{e:#}")),
-                        Err(p) => Some(panic_note(p.as_ref())),
-                    };
-                    if let Some(why) = fail {
-                        reason = why;
-                        // the faulted engine's state is unknown:
-                        // evict it (other scales are fine), back off,
-                        // rebuild on retry of the retained frame
-                        engines.remove(&item.scale);
-                        if restarts_used >= restart.max_restarts {
+                        drop(names);
+                        v.insert(e);
+                    }
+                    Err(e) => {
+                        reason = format!("{e:#}");
+                        let used = wd.restarts_used(wi);
+                        if used >= restart.max_restarts {
                             pending = Some((item, dequeued));
                             break 'serve true;
                         }
-                        restarts_used += 1;
-                        restarts_total.fetch_add(1, Ordering::SeqCst);
-                        thread::sleep(restart.backoff(restarts_used));
+                        wd.note_restart(wi);
+                        thread::sleep(restart.backoff(used + 1));
                         pending = Some((item, dequeued));
+                        continue 'serve;
                     }
-                };
-                if exhausted {
-                    // hand retained work to the surviving pool, die
-                    if let Some((item, _)) = pending.take() {
-                        // LOSSY: the retry receiver is held by this
-                        // worker's own Arc, so the send cannot fail;
-                        // were it ever to, the frame is already
-                        // counted incomplete by the collector.
-                        let _ = retry_tx.send(item);
-                    }
-                    return Err(anyhow::anyhow!(
-                        "worker {wi}: {reason} (restart budget of {} \
-                         exhausted)",
-                        restart.max_restarts
-                    ));
                 }
-                Ok(()) // sources done, nothing left in flight
-            }));
+            }
+            let engine = match engines.get_mut(&eng_scale) {
+                Some(e) => e,
+                None => continue 'serve, // ensured above
+            };
+            // §Watchdog heartbeat: stamp busy (stashing a reroutable
+            // copy when armed) before entering the engine
+            if !wd.begin_call(wi, &lease, || item.clone()) {
+                // zombified between calls — the slot already belongs
+                // to a replacement; put the just-dequeued frame back.
+                // LOSSY: the retry receiver outlives the pool, so the
+                // send cannot fail; a lost frame would be counted
+                // incomplete by the collector regardless.
+                let _ = retry_tx.send(item);
+                retire.on = false;
+                return;
+            }
+            // the fault layer and the engine call share one
+            // catch_unwind region: injected panics take the same road
+            // as real ones
+            let call_t0 = Instant::now();
+            let outcome = catch_unwind(AssertUnwindSafe(
+                || -> Result<ImageU8> {
+                    faults.before_call(&lease.cancel)?;
+                    engine.upscale(&item.lr)
+                },
+            ));
+            if let Some(extra) = faults.after_call(call_t0.elapsed()) {
+                // a slow fault owes its extra latency here, parked on
+                // the token so a zombified shift wakes immediately
+                lease.cancel.wait_timeout(extra);
+            }
+            if !wd.end_call(wi, &lease) {
+                // zombified mid-call: the monitor rerouted the stash,
+                // so delivering (or retrying) this result would
+                // double-serve the frame — discard and bow out
+                retire.on = false;
+                return;
+            }
+            let fail = match outcome {
+                Ok(Ok(hr_model)) => {
+                    let hr = if expand > 1 {
+                        bilinear_upsample(&hr_model, expand)
+                    } else {
+                        hr_model
+                    };
+                    let spec = BandSpec {
+                        band: 0,
+                        y0: 0,
+                        y1: item.lr.h,
+                        e0: 0,
+                        e1: item.lr.h,
+                    };
+                    let done = DoneBand {
+                        stream: item.stream,
+                        frame: item.frame,
+                        spec,
+                        n_bands: 1,
+                        hr,
+                        emitted: item.emitted,
+                        dequeued,
+                        completed: Instant::now(),
+                        stats: engine.last_stats(),
+                        level,
+                    };
+                    let sunk = tx.send(StreamEvent::Done(done)).is_ok();
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                    if !sunk {
+                        return; // sink gone
+                    }
+                    None
+                }
+                Ok(Err(e)) => Some(format!("{e:#}")),
+                Err(p) => Some(panic_note(p.as_ref())),
+            };
+            if let Some(why) = fail {
+                reason = why;
+                // the faulted engine's state is unknown: evict it
+                // (other scales are fine), back off, rebuild on retry
+                // of the retained frame
+                engines.remove(&eng_scale);
+                let used = wd.restarts_used(wi);
+                if used >= restart.max_restarts {
+                    pending = Some((item, dequeued));
+                    break 'serve true;
+                }
+                wd.note_restart(wi);
+                thread::sleep(restart.backoff(used + 1));
+                pending = Some((item, dequeued));
+            }
+        };
+        if exhausted {
+            // hand retained work to the surviving pool, die
+            if let Some((item, _)) = pending.take() {
+                // LOSSY: the retry receiver outlives the pool, so the
+                // send cannot fail; were it ever to, the frame is
+                // already counted incomplete by the collector.
+                let _ = retry_tx.send(item);
+            }
+            lock_clean(&errors_shared).push(format!(
+                "worker {wi}: {reason} (restart budget of {} exhausted)",
+                restart.max_restarts
+            ));
         }
+        // sources closed with nothing left in flight (or sink gone):
+        // `retire` clears the slot on drop
+    };
+    let worker_shift = &worker_shift;
+
+    let (records, dropped, offered) = thread::scope(|s| {
+        // --- worker pool ---------------------------------------------
+        let mut workers = Vec::new();
+        for (wi, rx) in worker_rxs.into_iter().enumerate() {
+            let tx = done_tx.clone();
+            workers
+                .push(s.spawn(move || worker_shift(wi, rx, tx, 0, None)));
+        }
+
+        // --- §Watchdog monitor (armed pools only) --------------------
+        let monitor = wd.armed().then(|| {
+            let retry_tx = retry_tx.clone();
+            let done_tx = done_tx.clone();
+            let weak_rx = &weak_rx;
+            let (wd, active) = (&wd, &active);
+            let (src_done, errors_shared) = (&src_done, &errors_shared);
+            let budget_ms = wd
+                .stall_budget()
+                .map(|b| b.as_secs_f64() * 1e3)
+                .unwrap_or(0.0);
+            s.spawn(move || {
+                // the queue outlives a fully-exhausted pool only here:
+                // babysat so the sources never block on a full queue
+                // nobody drains
+                let mut orphan: Option<Arc<Mutex<Receiver<StreamItem>>>> =
+                    None;
+                loop {
+                    let drained = src_done.load(Ordering::SeqCst)
+                        && active.load(Ordering::SeqCst) == 0;
+                    // pin the queue across the sweep: a zombie that
+                    // wakes and exits must not disconnect it before
+                    // the replacement adopts it
+                    let pinned = weak_rx.upgrade();
+                    for z in wd.scan() {
+                        if let Some(item) = z.stash {
+                            // LOSSY: the monitor holds a retry_tx
+                            // clone, so the receiver outlives this
+                            // send; a lost frame would surface as
+                            // incomplete, never silently.
+                            let _ = retry_tx.send(item);
+                        }
+                        let replaceable =
+                            z.restarts_used <= restart.max_restarts;
+                        match pinned.clone() {
+                            Some(rx) if replaceable => {
+                                // the zombie's live count transfers
+                                // to its replacement
+                                let dtx = done_tx.clone();
+                                let delay =
+                                    restart.backoff(z.restarts_used);
+                                let wi = z.worker;
+                                let calls = z.calls;
+                                s.spawn(move || {
+                                    worker_shift(
+                                        wi,
+                                        rx,
+                                        dtx,
+                                        calls,
+                                        Some(delay),
+                                    )
+                                });
+                            }
+                            rx => {
+                                lock_clean(errors_shared).push(format!(
+                                    "worker {}: hung past the \
+                                     {budget_ms:.0}ms stall budget \
+                                     (restart budget of {} exhausted)",
+                                    z.worker, restart.max_restarts
+                                ));
+                                active.fetch_sub(1, Ordering::SeqCst);
+                                if let Some(rx) = rx {
+                                    orphan = Some(rx);
+                                }
+                            }
+                        }
+                    }
+                    if let Some(rx) = &orphan {
+                        // reroute the stranded backlog to any survivor
+                        let q = lock_clean(rx);
+                        while let Ok(item) = q.try_recv() {
+                            // LOSSY: the monitor holds a retry_tx
+                            // clone, so the receiver outlives this
+                            // send; a lost frame would surface as
+                            // incomplete, never silently.
+                            let _ = retry_tx.send(item);
+                        }
+                    }
+                    if drained {
+                        break;
+                    }
+                    thread::sleep(wd.tick());
+                }
+            })
+        });
 
         // --- per-stream sources --------------------------------------
         let mut sources = Vec::new();
         for (si, spec) in cfg.streams.iter().enumerate() {
             let wtx = work_tx.clone();
             let dtx = done_tx.clone();
-            let inflight = Arc::clone(&inflight);
+            let inflight = &inflight;
             let seed = stream_seed(cfg.seed, si);
             sources.push(s.spawn(move || -> usize {
                 let gen =
@@ -618,7 +790,6 @@ pub fn serve_multi(
             (records, dropped)
         });
 
-        let mut errors = Vec::new();
         // a panicking source/worker is folded into the error report
         // instead of re-panicking in the coordinator; the empty-
         // delivery check below still fails the run when nothing was
@@ -628,27 +799,38 @@ pub fn serve_multi(
             .map(|h| match h.join() {
                 Ok(offered) => offered,
                 Err(_) => {
-                    errors.push("source thread panicked".into());
+                    lock_clean(&errors_shared)
+                        .push("source thread panicked".into());
                     0
                 }
             })
             .collect();
+        src_done.store(true, Ordering::SeqCst);
         for h in workers {
-            match h.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => errors.push(format!("{e:#}")),
-                Err(_) => errors.push("worker thread panicked".into()),
+            if h.join().is_err() {
+                lock_clean(&errors_shared)
+                    .push("worker thread panicked".into());
             }
+        }
+        // the monitor outlives every replacement it spawned (it waits
+        // for active == 0), so joining it here means all done_tx
+        // clones are gone and the collector below can terminate
+        if let Some(m) = monitor {
+            let _ = m.join();
         }
         let (records, dropped) = match collector.join() {
             Ok(out) => out,
             Err(_) => {
-                errors.push("collector thread panicked".into());
+                lock_clean(&errors_shared)
+                    .push("collector thread panicked".into());
                 (Vec::new(), vec![0usize; n_streams])
             }
         };
-        (records, dropped, offered, errors)
+        (records, dropped, offered)
     });
+    let errors = errors_shared
+        .into_inner()
+        .unwrap_or_else(PoisonError::into_inner);
 
     if records.is_empty() && !errors.is_empty() {
         return Err(anyhow::anyhow!(
@@ -658,9 +840,8 @@ pub fn serve_multi(
     }
     let wall = t0.elapsed();
     let names = engine_names
-        .lock()
-        .unwrap_or_else(std::sync::PoisonError::into_inner)
-        .clone();
+        .into_inner()
+        .unwrap_or_else(PoisonError::into_inner);
     let metas: Vec<StreamMeta> = cfg
         .streams
         .iter()
@@ -688,8 +869,27 @@ pub fn serve_multi(
         metas,
     );
     report.errors = errors;
-    report.restarts = restarts_total.load(Ordering::SeqCst);
+    report.restarts = wd.total_restarts();
+    report.hangs_detected = wd.hangs_detected();
+    report.zombies_reaped = wd.zombies_reaped();
     Ok(report)
+}
+
+/// Drop guard for the pool's live-worker count (see
+/// `coordinator::pipeline`): any exit path retires the slot, except a
+/// *stale* (zombified) exit, whose count the monitor either
+/// transferred to the replacement or retired itself.
+struct Retire<'a> {
+    active: &'a AtomicUsize,
+    on: bool,
+}
+
+impl Drop for Retire<'_> {
+    fn drop(&mut self) {
+        if self.on {
+            self.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -742,6 +942,7 @@ mod tests {
             seed: 3,
             restart: RestartPolicy::none(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         };
         let mut got: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); 3];
         let rep = serve_multi(
@@ -792,6 +993,7 @@ mod tests {
             seed: 1,
             restart: RestartPolicy::none(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         };
         let rep = serve_multi(&cfg, vec![factory], |_, _, _| {}).unwrap();
         assert_eq!(rep.frames, 10);
@@ -814,6 +1016,7 @@ mod tests {
             seed: 5,
             restart: RestartPolicy::none(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         };
         let mut delivered: Vec<Vec<usize>> = vec![Vec::new(); 2];
         let rep = serve_multi(
@@ -872,6 +1075,7 @@ mod tests {
             seed: 7,
             restart: RestartPolicy::none(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         };
         let rep =
             serve_multi(&cfg, int8_factories(1, 1, 2, 2), |_, _, _| {})
@@ -902,6 +1106,7 @@ mod tests {
                 seed: 9,
                 restart: RestartPolicy::none(),
                 inject: FaultPlan::default(),
+                stall_budget_ms: None,
             };
             let factories: Vec<ScaleEngineFactory> = (0..2)
                 .map(|_| {
@@ -944,6 +1149,7 @@ mod tests {
             seed: 2,
             restart: RestartPolicy::none(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         };
         let rep =
             serve_multi(&cfg, int8_factories(2, 1, 2, 3), |_, _, _| {})
@@ -968,6 +1174,7 @@ mod tests {
             seed: 1,
             restart: RestartPolicy::none(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         };
         let factory: ScaleEngineFactory =
             Box::new(|_| -> Result<Box<dyn Engine>> {
@@ -989,9 +1196,10 @@ mod tests {
 
     #[test]
     fn degrade_downshifts_every_late_frame_and_loses_none() {
-        // deadline 0 ms: every frame is late at dequeue — DropLate
-        // would shed them all, Degrade must deliver every one of them
-        // through the bilinear path, bit-exactly.
+        // deadline 0 ms on a x2 stream: every frame is late at
+        // dequeue, and x2 has no Reduced rung — the ladder bottoms
+        // out at Bilinear on the very first frame.  DropLate would
+        // shed them all; Degrade must deliver every one, bit-exactly.
         let cfg = MultiServeConfig {
             streams: vec![spec("a", 10, 8, 2)],
             frames: 12,
@@ -1001,6 +1209,7 @@ mod tests {
             seed: 11,
             restart: RestartPolicy::none(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         };
         let mut got: Vec<(usize, ImageU8)> = Vec::new();
         let rep = serve_multi(
@@ -1015,6 +1224,7 @@ mod tests {
         assert_eq!(rep.degraded, 12, "every frame was late");
         assert!((rep.degrade_rate - 1.0).abs() < 1e-12);
         assert_eq!(rep.streams[0].degraded, 12);
+        assert_eq!(rep.streams[0].degraded_by_level, [0, 12]);
         assert!(rep.plan.contains("degrade:0"));
         // delivered bits are exactly the bilinear downshift of the
         // deterministic source frames, in order
@@ -1024,6 +1234,56 @@ mod tests {
             assert_eq!(hr, &bilinear_upsample(&gen.frame(i), 2));
         }
         assert!(rep.render().contains("12 degraded"));
+    }
+
+    #[test]
+    fn degrade_ladder_reduced_rung_is_x2_model_plus_bilinear() {
+        // deadline 0 ms on a x4 stream: frame 0 steps Full -> Reduced
+        // (x2 model + bilinear expand), frame 1 steps Reduced ->
+        // Bilinear, and the ladder stays on the bottom rung — every
+        // delivered frame matches its offline reference bit-exactly.
+        let (layers, c_mid, model_seed) = (1, 2, 2);
+        let cfg = MultiServeConfig {
+            streams: vec![spec("a", 8, 6, 4)],
+            frames: 8,
+            workers: 1,
+            queue_depth: 1,
+            policy: RtPolicy::Degrade { deadline_ms: 0.0 },
+            seed: 13,
+            restart: RestartPolicy::none(),
+            inject: FaultPlan::default(),
+            stall_budget_ms: None,
+        };
+        let mut got: Vec<(usize, ImageU8)> = Vec::new();
+        let rep = serve_multi(
+            &cfg,
+            int8_factories(1, layers, c_mid, model_seed),
+            |_, fi, hr| got.push((fi, hr.clone())),
+        )
+        .unwrap();
+        assert_eq!(rep.frames, 8);
+        assert_eq!(rep.dropped, 0);
+        assert_eq!(rep.incomplete, 0);
+        assert_eq!(rep.degraded, 8);
+        // rung 1 exactly once (frame 0), rung 2 for the rest
+        assert_eq!(rep.streams[0].degraded_by_level, [1, 7]);
+        let gen = SceneGenerator::new(8, 6, stream_seed(13, 0));
+        let mut x2 = Int8Engine::new(QuantModel::test_model(
+            layers, 3, c_mid, 2, model_seed,
+        ));
+        for (i, (fi, hr)) in got.iter().enumerate() {
+            assert_eq!(*fi, i);
+            let lr = gen.frame(i);
+            let want = if i == 0 {
+                // §Ladder rung 1: SR at x2, bilinear the rest
+                bilinear_upsample(&x2.upscale(&lr).unwrap(), 2)
+            } else {
+                bilinear_upsample(&lr, 4)
+            };
+            assert_eq!(hr, &want, "frame {i}");
+        }
+        let r = rep.render();
+        assert!(r.contains("[1 reduced, 7 bilinear]"), "{r}");
     }
 
     #[test]
@@ -1041,6 +1301,7 @@ mod tests {
                 seed: 4,
                 restart: RestartPolicy::none(),
                 inject: FaultPlan::default(),
+                stall_budget_ms: None,
             };
             let mut got: Vec<Vec<ImageU8>> = vec![Vec::new(); 2];
             let rep = serve_multi(
@@ -1060,6 +1321,27 @@ mod tests {
     }
 
     #[test]
+    fn ladder_rungs_step_one_at_a_time() {
+        // pure state-machine check of the hysteresis walk on a x4
+        // stream: down one rung per late frame, up one rung per
+        // completed streak, and x3 (no Reduced rung) skips straight
+        // to Bilinear and back
+        use QualityLevel::{Bilinear, Full, Reduced};
+        assert_eq!(rung_down(Full, 4), Reduced);
+        assert_eq!(rung_down(Reduced, 4), Bilinear);
+        assert_eq!(rung_down(Bilinear, 4), Bilinear);
+        assert_eq!(rung_up(Bilinear, 4), Reduced);
+        assert_eq!(rung_up(Reduced, 4), Full);
+        assert_eq!(rung_up(Full, 4), Full);
+        for scale in [2usize, 3, 5, 7] {
+            assert_eq!(rung_down(Full, scale), Bilinear, "x{scale}");
+            assert_eq!(rung_up(Bilinear, scale), Full, "x{scale}");
+        }
+        assert!(has_reduced_rung(6));
+        assert!(!has_reduced_rung(2));
+    }
+
+    #[test]
     fn injected_worker_panic_restarts_and_delivery_is_bit_identical() {
         // the ISSUE acceptance shape at unit scale: kill a worker
         // mid-run via the fault plan; with restart budget the pool
@@ -1076,6 +1358,7 @@ mod tests {
                 seed: 6,
                 restart,
                 inject: FaultPlan::parse(inject).unwrap(),
+                stall_budget_ms: None,
             };
             let mut got: Vec<Vec<(usize, ImageU8)>> =
                 vec![Vec::new(); 2];
@@ -1094,6 +1377,53 @@ mod tests {
         assert_eq!(rep.incomplete, 0);
         assert!(rep.errors.is_empty(), "{:?}", rep.errors);
         assert!(rep.render().contains("supervisor: 1 worker restart"));
+    }
+
+    #[test]
+    fn hung_worker_is_reaped_and_delivery_is_bit_identical() {
+        // §Watchdog at unit scale: worker 0 of 2 parks forever on its
+        // second engine call; the monitor zombifies it within the
+        // stall budget, reroutes the stashed frame and spawns a
+        // replacement — delivery is complete, in order per stream,
+        // and bit-identical to the fault-free run.
+        let run = |inject: &str,
+                   restart: RestartPolicy,
+                   stall: Option<f64>| {
+            let cfg = MultiServeConfig {
+                streams: vec![spec("a", 10, 8, 2), spec("b", 8, 6, 3)],
+                frames: 4,
+                workers: 2,
+                queue_depth: 2,
+                policy: RtPolicy::BestEffort,
+                seed: 8,
+                restart,
+                inject: FaultPlan::parse(inject).unwrap(),
+                stall_budget_ms: stall,
+            };
+            let mut got: Vec<Vec<(usize, ImageU8)>> =
+                vec![Vec::new(); 2];
+            let rep = serve_multi(
+                &cfg,
+                int8_factories(2, 2, 4, 7),
+                |si, fi, hr| got[si].push((fi, hr.clone())),
+            )
+            .unwrap();
+            (got, rep)
+        };
+        let (clean, _) = run("", RestartPolicy::none(), None);
+        let (faulted, rep) =
+            run("w0:hang@1", quick_restart(2), Some(60.0));
+        assert_eq!(faulted, clean, "rescue must be bit-identical");
+        assert_eq!(rep.hangs_detected, 1, "{:?}", rep.errors);
+        assert!(rep.restarts >= 1, "the hang charges a restart");
+        assert_eq!(rep.incomplete, 0);
+        assert_eq!(rep.dropped, 0);
+        assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+        assert!(
+            rep.render().contains("watchdog: 1 hang detected"),
+            "{}",
+            rep.render()
+        );
     }
 
     #[test]

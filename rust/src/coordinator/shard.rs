@@ -27,7 +27,7 @@ use crate::fusion::band_ranges;
 use crate::image::ImageU8;
 use crate::sim::RunStats;
 
-use super::metrics::FrameRecord;
+use super::metrics::{FrameRecord, QualityLevel};
 
 /// One band of one frame, in LR row coordinates.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -117,9 +117,10 @@ pub struct DoneBand {
     pub completed: Instant,
     /// Hardware stats of this band, if the engine models them.
     pub stats: Option<RunStats>,
-    /// True when the band was served through the cheap bilinear path
-    /// instead of the full model (`RtPolicy::Degrade`).
-    pub degraded: bool,
+    /// Which rung of the degradation ladder served this band
+    /// (`RtPolicy::Degrade`): full model, scale-downshifted SR, or
+    /// pure bilinear.
+    pub level: QualityLevel,
 }
 
 struct PartialFrame {
@@ -132,7 +133,7 @@ struct PartialFrame {
     compute: Duration,
     completed: Instant,
     stats: Option<RunStats>,
-    degraded: bool,
+    level: QualityLevel,
 }
 
 /// Stitches out-of-order [`DoneBand`]s into display-order frames and
@@ -248,7 +249,7 @@ impl Reassembler {
                     compute: Duration::ZERO,
                     completed: band.completed,
                     stats: None,
-                    degraded: false,
+                    level: QualityLevel::Full,
                 },
             );
         }
@@ -265,7 +266,8 @@ impl Reassembler {
         entry.queue_wait =
             entry.queue_wait.max(band.dequeued - band.emitted);
         entry.compute += band.completed - band.dequeued;
-        entry.degraded |= band.degraded;
+        // the worst band's rung taints the whole frame
+        entry.level = entry.level.max(band.level);
         if let Some(s) = band.stats {
             match &mut entry.stats {
                 Some(acc) => acc.merge(&s),
@@ -284,7 +286,7 @@ impl Reassembler {
                 compute: pf.compute,
                 bands: pf.n_bands,
                 stats: pf.stats,
-                degraded: pf.degraded,
+                level: pf.level,
             };
             self.parked.insert(band.frame, (pf.hr, record));
         }
@@ -442,7 +444,7 @@ mod tests {
             dequeued: t0 + Duration::from_millis(ms.1),
             completed: t0 + Duration::from_millis(ms.2),
             stats,
-            degraded: false,
+            level: QualityLevel::Full,
         }
     }
 
@@ -675,18 +677,22 @@ mod tests {
         let t0 = Instant::now();
         let mut asm = Reassembler::new(4, 2, 1, 1);
         let mk = |f, b, ms| band(t0, f, b, 2, 2, 2, 1, ms, None);
-        // one degraded band taints the whole frame's record
+        // the worst band's ladder rung taints the whole frame's record
         let mut b0 = mk(0, 0, (0, 1, 2));
-        b0.degraded = true;
+        b0.level = QualityLevel::Bilinear;
         assert!(asm.push(b0).is_empty());
-        let out = asm.push(mk(0, 1, (0, 1, 3)));
+        let mut b1 = mk(0, 1, (0, 1, 3));
+        b1.level = QualityLevel::Reduced;
+        let out = asm.push(b1);
         assert_eq!(out.len(), 1);
-        assert!(out[0].1.degraded);
+        assert_eq!(out[0].1.level, QualityLevel::Bilinear);
+        assert!(out[0].1.level.is_degraded());
         // an all-full-quality frame stays unmarked
         assert!(asm.push(mk(1, 0, (4, 5, 6))).is_empty());
         let out = asm.push(mk(1, 1, (4, 5, 7)));
         assert_eq!(out.len(), 1);
-        assert!(!out[0].1.degraded);
+        assert_eq!(out[0].1.level, QualityLevel::Full);
+        assert!(!out[0].1.level.is_degraded());
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! §Watchdog: time-domain supervision for the serving worker pools.
+//!
+//! PR 9's supervisor heals *fail-fast* faults (a panicking or erroring
+//! engine is caught, rebuilt, and its frame retried) but a *fail-slow*
+//! worker — an engine call that never returns — silently eats its slot
+//! forever.  This module supplies the mechanism for reaping those:
+//!
+//! * [`CancelToken`] — a shared cooperative-cancellation flag the
+//!   fusion schedulers poll at row/tile granularity, with a condvar so
+//!   injected hangs can *park* on it instead of burning CPU.
+//! * [`Watchdog`] — per-worker heartbeat slots.  A worker stamps
+//!   `begin_call` before every engine call and `end_call` after; a
+//!   monitor thread calls [`Watchdog::scan`] and any slot busy past the
+//!   stall budget is *zombified*: its generation counter is bumped (so
+//!   the late result is discarded, never double-delivered through the
+//!   reassembler), its token is cancelled (so the zombie aborts its
+//!   doomed band early and exits), and its stashed in-flight item is
+//!   handed back for rerouting to survivors.
+//!
+//! The slot mutex is the exactly-once guarantee: `end_call` and `scan`
+//! serialize on it, so a finishing call either clears the slot first
+//! (scan sees it idle) or observes the bumped generation and reports
+//! its result stale.  The policy side — rerouting, replacement spawns,
+//! restart budgets — lives with the pools in `pipeline.rs`/`server.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::config::clamped_ms_duration;
+
+/// The flag side of the mechanism lives in `util` (the fusion row/tile
+/// loops poll it from the bottom of the stack); the watchdog is its
+/// canonical canceller, so it is re-exported here.
+pub use crate::util::cancel::CancelToken;
+
+/// Poison-tolerant lock: a worker that panicked while holding a slot
+/// poisons the mutex, but the slot data stays structurally valid (the
+/// supervisor catches the panic and accounts the worker separately).
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A worker's claim on its heartbeat slot for one generation.  Issued
+/// by [`Watchdog::adopt`]; all stamps carry it so a zombified worker's
+/// stamps are recognised as stale.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub generation: u64,
+    pub cancel: CancelToken,
+}
+
+/// A reaped hung worker, as reported by [`Watchdog::scan`].
+#[derive(Debug)]
+pub struct Zombie<T> {
+    /// Worker slot index.
+    pub worker: usize,
+    /// The in-flight item stashed at `begin_call`, for rerouting.
+    pub stash: Option<T>,
+    /// Engine calls begun on this slot so far (all generations) — the
+    /// replacement skips one-shot fault indices below this.
+    pub calls: usize,
+    /// Restarts charged to this slot so far, *including* this hang.
+    pub restarts_used: usize,
+}
+
+struct Slot<T> {
+    generation: u64,
+    calls: usize,
+    restarts: usize,
+    busy_since: Option<Instant>,
+    stash: Option<T>,
+    cancel: CancelToken,
+}
+
+impl<T> Slot<T> {
+    fn new() -> Self {
+        Slot {
+            generation: 0,
+            calls: 0,
+            restarts: 0,
+            busy_since: None,
+            stash: None,
+            cancel: CancelToken::new(),
+        }
+    }
+}
+
+/// Per-worker heartbeat slots plus hang/zombie counters.  `T` is the
+/// pool's in-flight work item type (stashed for rerouting).
+pub struct Watchdog<T> {
+    slots: Vec<Mutex<Slot<T>>>,
+    stall_budget: Option<Duration>,
+    hangs: AtomicUsize,
+    zombies: AtomicUsize,
+}
+
+impl<T> Watchdog<T> {
+    /// `stall_budget_ms = None` disarms the watchdog entirely: stamps
+    /// degenerate to a generation check (no stash clone, no monitor).
+    pub fn new(workers: usize, stall_budget_ms: Option<f64>) -> Self {
+        Watchdog {
+            slots: (0..workers.max(1)).map(|_| Mutex::new(Slot::new())).collect(),
+            stall_budget: stall_budget_ms.map(clamped_ms_duration),
+            hangs: AtomicUsize::new(0),
+            zombies: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn armed(&self) -> bool {
+        self.stall_budget.is_some()
+    }
+
+    pub fn stall_budget(&self) -> Option<Duration> {
+        self.stall_budget
+    }
+
+    /// Monitor cadence: an eighth of the budget, clamped to [1, 50] ms,
+    /// so detection latency stays well under one budget.
+    pub fn tick(&self) -> Duration {
+        let budget = self.stall_budget.unwrap_or(Duration::from_millis(200));
+        (budget / 8).clamp(Duration::from_millis(1), Duration::from_millis(50))
+    }
+
+    /// Claim the slot's *current* generation (fresh worker or
+    /// replacement).  Does not bump — only `scan` retires generations.
+    pub fn adopt(&self, worker: usize) -> Lease {
+        let slot = lock_clean(&self.slots[worker]);
+        Lease {
+            generation: slot.generation,
+            cancel: slot.cancel.clone(),
+        }
+    }
+
+    /// Heartbeat: stamp the slot busy before an engine call.  The
+    /// stash closure runs only when armed (it clones the work item).
+    /// Returns `false` if the lease is stale — the caller was already
+    /// zombified and must exit without touching the pipeline.
+    pub fn begin_call(&self, worker: usize, lease: &Lease, stash: impl FnOnce() -> T) -> bool {
+        let mut slot = lock_clean(&self.slots[worker]);
+        if slot.generation != lease.generation {
+            return false;
+        }
+        slot.calls += 1;
+        if self.stall_budget.is_some() {
+            slot.busy_since = Some(Instant::now());
+            slot.stash = Some(stash());
+        }
+        true
+    }
+
+    /// Clear the heartbeat after an engine call.  Returns `true` iff
+    /// the lease is still current — a `false` means the slot was
+    /// zombified mid-call and the result MUST be discarded (it was
+    /// already rerouted; delivering it would double-deliver).
+    pub fn end_call(&self, worker: usize, lease: &Lease) -> bool {
+        let mut slot = lock_clean(&self.slots[worker]);
+        if slot.generation != lease.generation {
+            self.zombies.fetch_add(1, Ordering::SeqCst);
+            return false;
+        }
+        slot.busy_since = None;
+        slot.stash = None;
+        true
+    }
+
+    /// Charge one restart (fail-fast rebuild) to the slot; returns the
+    /// total used.  The budget is shared across generations so a
+    /// replacement cannot reset its predecessor's spend.
+    pub fn note_restart(&self, worker: usize) -> usize {
+        let mut slot = lock_clean(&self.slots[worker]);
+        slot.restarts += 1;
+        slot.restarts
+    }
+
+    pub fn restarts_used(&self, worker: usize) -> usize {
+        lock_clean(&self.slots[worker]).restarts
+    }
+
+    /// Total restarts across all slots (fail-fast rebuilds + hangs).
+    pub fn total_restarts(&self) -> usize {
+        self.slots.iter().map(|s| lock_clean(s).restarts).sum()
+    }
+
+    /// Sweep every slot; zombify any call busy past the stall budget:
+    /// bump the generation, cancel the old token (waking parked
+    /// hangs), take the stash for rerouting, and charge a restart.
+    /// Disarmed watchdogs never zombify.
+    pub fn scan(&self) -> Vec<Zombie<T>> {
+        let budget = match self.stall_budget {
+            Some(b) => b,
+            None => return Vec::new(),
+        };
+        let mut reaped = Vec::new();
+        for (worker, slot) in self.slots.iter().enumerate() {
+            let mut slot = lock_clean(slot);
+            let stalled = slot.busy_since.is_some_and(|t| t.elapsed() >= budget);
+            if !stalled {
+                continue;
+            }
+            slot.generation += 1;
+            slot.busy_since = None;
+            slot.restarts += 1;
+            let old = std::mem::take(&mut slot.cancel);
+            old.cancel();
+            self.hangs.fetch_add(1, Ordering::SeqCst);
+            reaped.push(Zombie {
+                worker,
+                stash: slot.stash.take(),
+                calls: slot.calls,
+                restarts_used: slot.restarts,
+            });
+        }
+        reaped
+    }
+
+    /// Workers zombified for exceeding the stall budget.
+    pub fn hangs_detected(&self) -> usize {
+        self.hangs.load(Ordering::SeqCst)
+    }
+
+    /// Late results from zombified generations that were discarded
+    /// instead of delivered (the zombie woke up and reported in).
+    pub fn zombies_reaped(&self) -> usize {
+        self.zombies.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_calls_never_zombify() {
+        let wd: Watchdog<u32> = Watchdog::new(2, Some(1.0));
+        let lease = wd.adopt(0);
+        assert!(wd.begin_call(0, &lease, || 7));
+        assert!(wd.end_call(0, &lease));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(wd.scan().is_empty(), "idle slots must never be reaped");
+        assert_eq!(wd.hangs_detected(), 0);
+        assert_eq!(wd.zombies_reaped(), 0);
+    }
+
+    #[test]
+    fn stalled_call_is_zombified_and_its_late_result_discarded() {
+        let wd: Watchdog<u32> = Watchdog::new(2, Some(1.0));
+        let lease = wd.adopt(0);
+        assert!(wd.begin_call(0, &lease, || 42));
+        std::thread::sleep(Duration::from_millis(10));
+        let reaped = wd.scan();
+        assert_eq!(reaped.len(), 1);
+        assert_eq!(reaped[0].worker, 0);
+        assert_eq!(reaped[0].stash, Some(42), "in-flight item is handed back");
+        assert_eq!(reaped[0].calls, 1);
+        assert_eq!(reaped[0].restarts_used, 1, "a hang charges a restart");
+        assert!(lease.cancel.is_cancelled(), "zombie's token is cancelled");
+        // the zombie wakes up and reports in: stale, result discarded
+        assert!(!wd.end_call(0, &lease));
+        assert_eq!(wd.hangs_detected(), 1);
+        assert_eq!(wd.zombies_reaped(), 1);
+        // a second scan must not double-reap the same stall
+        assert!(wd.scan().is_empty());
+        // the replacement adopts the bumped generation with a live token
+        let next = wd.adopt(0);
+        assert_eq!(next.generation, lease.generation + 1);
+        assert!(!next.cancel.is_cancelled());
+        assert!(wd.begin_call(0, &next, || 43));
+        assert!(wd.end_call(0, &next));
+        // and the zombie's own stamps are refused
+        assert!(!wd.begin_call(0, &lease, || 44));
+    }
+
+    #[test]
+    fn disarmed_watchdog_is_inert() {
+        let wd: Watchdog<u32> = Watchdog::new(1, None);
+        assert!(!wd.armed());
+        let lease = wd.adopt(0);
+        assert!(wd.begin_call(0, &lease, || panic!("stash must not be cloned unarmed")));
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(wd.scan().is_empty());
+        assert!(wd.end_call(0, &lease));
+    }
+
+    #[test]
+    fn restart_budget_is_shared_across_generations() {
+        let wd: Watchdog<u32> = Watchdog::new(1, Some(1.0));
+        assert_eq!(wd.note_restart(0), 1, "fail-fast rebuild charges the slot");
+        let lease = wd.adopt(0);
+        assert!(wd.begin_call(0, &lease, || 1));
+        std::thread::sleep(Duration::from_millis(10));
+        let reaped = wd.scan();
+        assert_eq!(reaped[0].restarts_used, 2, "hang charges the same budget");
+        assert_eq!(wd.restarts_used(0), 2);
+        assert_eq!(wd.total_restarts(), 2);
+    }
+}

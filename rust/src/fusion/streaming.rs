@@ -112,6 +112,13 @@ impl StreamingScheduler {
         // -- the row pipeline: step r ingests band row r (implicitly —
         // the band is resident) and layer k retires its row r - k -----
         for r in 0..rows + n_layers {
+            // §Watchdog: a zombified worker observes cancellation at
+            // row-retirement granularity and aborts the doomed band —
+            // the partial result is discarded by the caller's
+            // generation check, never delivered.
+            if scratch.cancel.as_ref().is_some_and(|t| t.is_cancelled()) {
+                break;
+            }
             for k in 1..=n_layers {
                 let y = r as isize - k as isize;
                 if y < 0 || y >= rows as isize {
@@ -364,6 +371,26 @@ mod tests {
         );
         let want = reference::forward_int(&frame, &qm);
         assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn cancelled_scratch_aborts_the_band_early() {
+        let qm = QuantModel::test_model(3, 3, 5, 3, 21);
+        let band = rand_frame(6, 24, 3, 1);
+        let pm = PreparedModel::new(&qm);
+        let mut scratch = Scratch::new();
+        let sched = StreamingScheduler::default();
+        // an uncancelled token changes nothing: bit-identical output
+        let tok = crate::util::cancel::CancelToken::new();
+        scratch.cancel = Some(tok.clone());
+        let (hr, _) = sched.run_band_prepared(&band, &pm, &mut scratch);
+        let want = reference::forward_int(&band, &qm);
+        assert_eq!(hr.data, want.data);
+        scratch.recycle_u8(hr);
+        // a pre-cancelled token aborts before any row retires
+        tok.cancel();
+        let (hr, _) = sched.run_band_prepared(&band, &pm, &mut scratch);
+        assert!(hr.data.iter().all(|&b| b == 0), "aborted band is blank");
     }
 
     #[test]

@@ -163,6 +163,13 @@ impl TiltedScheduler {
             };
 
         for t in 0..n_tiles + n_layers {
+            // §Watchdog: a zombified worker observes cancellation at
+            // tile granularity and aborts the doomed band — the
+            // partial result is discarded by the caller's generation
+            // check, never delivered.
+            if scratch.cancel.as_ref().is_some_and(|c| c.is_cancelled()) {
+                break;
+            }
             // -- 1. load the input tile from DRAM into the ping buffer --
             let mut cur_buf = 0usize; // buffer holding map k-1's region
             let in_region = if t < n_tiles {
@@ -552,6 +559,29 @@ mod tests {
         assert_eq!(stats.overlap_bytes, 9 * 60 * 2 * 28); // 30240 = 30.24 KB
         assert_eq!(stats.residual_bytes, 3 * 60 * (8 + 7)); // 2700 = 2.7 KB
         assert!(stats.peak_pingpong_bytes <= 2 * 60 * 8 * 28);
+    }
+
+    #[test]
+    fn cancelled_scratch_aborts_the_band_early() {
+        let qm = QuantModel::test_model(3, 3, 5, 3, 21);
+        let band = rand_frame(6, 24, 3, 1);
+        let cfg = small_cfg(6, 4);
+        let pm = PreparedModel::new(&qm);
+        let mut scratch = Scratch::new();
+        let sched = TiltedScheduler::default();
+        // an uncancelled token changes nothing: bit-identical output
+        let tok = crate::util::cancel::CancelToken::new();
+        scratch.cancel = Some(tok.clone());
+        let (hr, _) =
+            sched.run_band_prepared(&band, &pm, &cfg, &mut scratch);
+        let want = reference::forward_int(&band, &qm);
+        assert_eq!(hr.data, want.data);
+        // a pre-cancelled token aborts before any tile runs
+        tok.cancel();
+        let (hr, stats) =
+            sched.run_band_prepared(&band, &pm, &cfg, &mut scratch);
+        assert!(hr.data.iter().all(|&b| b == 0), "aborted band is blank");
+        assert_eq!(stats.tiles, 0, "no tile ran after cancellation");
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! `sr-lint`: the repo-specific static analysis pass (§Static
 //! analysis & sanitizers in `rust/README.md`).
 //!
-//! Six rules, enforced over `rust/src`, `rust/benches` and
+//! Seven rules, enforced over `rust/src`, `rust/benches` and
 //! `rust/tests` by the `sr-lint` binary (and by the
 //! `tests/sr_lint_gate.rs` self-check, so `cargo test` alone already
 //! gates the tree):
@@ -30,6 +30,12 @@
 //!   outside `#[cfg(test)]`, unless annotated `// LOSSY: <why no
 //!   frame is lost>` — a swallowed disconnect is how frames vanish
 //!   without a trace (§Supervision).
+//! * **L7 `unbounded-recv`** — no blocking `.recv()` without a timeout
+//!   in `coordinator/` outside `#[cfg(test)]`, unless annotated
+//!   `// BLOCKS: <why this wait terminates>` — an unbounded wait is
+//!   exactly the shape the hung-worker watchdog exists to reap, and
+//!   the supervisor itself must never strike that pose
+//!   (`recv_timeout`/`try_recv` keep every loop preemptible).
 //!
 //! The pass is token-level on the lexer's blanked code view
 //! ([`lexer::Scan`]), so strings, char literals and comments can never
@@ -47,7 +53,7 @@ use std::path::{Path, PathBuf};
 
 use lexer::Scan;
 
-/// The rule catalog. Stable IDs `L1`..`L6` are part of the CLI
+/// The rule catalog. Stable IDs `L1`..`L7` are part of the CLI
 /// contract (CI greps for them).
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum Rule {
@@ -57,6 +63,7 @@ pub enum Rule {
     HotPathPanic,
     DynBox,
     IgnoredSend,
+    UnboundedRecv,
 }
 
 impl Rule {
@@ -68,6 +75,7 @@ impl Rule {
             Rule::HotPathPanic => "L4",
             Rule::DynBox => "L5",
             Rule::IgnoredSend => "L6",
+            Rule::UnboundedRecv => "L7",
         }
     }
 
@@ -79,6 +87,7 @@ impl Rule {
             Rule::HotPathPanic => "hot-path-panic",
             Rule::DynBox => "dyn-box",
             Rule::IgnoredSend => "ignored-send",
+            Rule::UnboundedRecv => "unbounded-recv",
         }
     }
 }
@@ -182,6 +191,7 @@ pub fn lint_source(path: &str, text: &str) -> Vec<Diagnostic> {
     rule_hot_path_panic(&ctx, &mut diags);
     rule_dyn_box(&ctx, &mut diags);
     rule_ignored_send(&ctx, &mut diags);
+    rule_unbounded_recv(&ctx, &mut diags);
     diags.sort_by_key(|d| (d.line, d.rule.id()));
     diags
 }
@@ -631,6 +641,52 @@ fn rule_ignored_send(ctx: &FileCtx<'_>, diags: &mut Vec<Diagnostic>) {
     }
 }
 
+/// L7: no blocking `.recv()` without a timeout in the coordinator.
+///
+/// A bare `rx.recv()` parks the caller until a message or a
+/// disconnect — the exact unbounded wait the watchdog was built to
+/// reap, except nothing watches the watcher.  Supervision code keeps
+/// every loop preemptible with `recv_timeout`/`try_recv` so it can
+/// notice shutdown, reroute work and honour restart budgets.  The
+/// rare wait that provably terminates carries a `// BLOCKS:` comment
+/// saying what bounds it.
+fn rule_unbounded_recv(ctx: &FileCtx<'_>, diags: &mut Vec<Diagnostic>) {
+    if !ctx.path.contains("src/coordinator/") {
+        return;
+    }
+    let code = &ctx.scan.code;
+    for pos in word_positions(code, "recv") {
+        // only the method-call form `.recv()`; `recv_timeout` and
+        // `try_recv` fail the whole-word match and stay legal
+        if !matches!(prev_non_ws(code, pos), Some((_, '.'))) {
+            continue;
+        }
+        let Some((open, '(')) = next_non_ws(code, pos + 4) else {
+            continue;
+        };
+        if !matches!(next_non_ws(code, open + 1), Some((_, ')'))) {
+            continue; // `.recv(deadline)` on some other type
+        }
+        let line = ctx.scan.line_of(pos);
+        if ctx.test_mask[line] {
+            continue;
+        }
+        if attached_comments(ctx, line).contains("BLOCKS:") {
+            continue;
+        }
+        ctx.push(
+            diags,
+            Rule::UnboundedRecv,
+            line,
+            "blocking `.recv()` without a timeout in coordinator/ (use \
+             `recv_timeout`/`try_recv` so the loop stays preemptible, \
+             or attach a `// BLOCKS:` comment proving the wait is \
+             bounded)"
+                .to_string(),
+        );
+    }
+}
+
 // ---------------------------------------------------------------- fixtures
 
 #[cfg(test)]
@@ -855,6 +911,55 @@ mod tests {
         let (tx, _rx) = std::sync::mpsc::channel();
         let _ = tx.send(1);
         tx.send(2).ok();
+    }
+}
+";
+        let d = lint_source("rust/src/coordinator/fake.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l7_flags_bare_recv_in_coordinator_only() {
+        let src = "\
+pub fn drain(rx: &Receiver<u32>) -> u32 {
+    let mut sum = 0;
+    while let Ok(v) = rx.recv() {
+        sum += v;
+    }
+    sum
+}
+";
+        let d = lint_source("rust/src/coordinator/fake.rs", src);
+        assert_eq!(ids(&d), vec![("L7", 3)]);
+        // the same wait outside coordinator/ is out of scope
+        let d = lint_source("rust/src/analysis/fake.rs", src);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn l7_accepts_timeouts_blocks_comment_and_test_code() {
+        let src = "\
+pub fn drain(rx: &Receiver<u32>) -> u32 {
+    let mut sum = 0;
+    while let Ok(v) = rx.recv_timeout(TICK) {
+        sum += v;
+    }
+    if let Ok(v) = rx.try_recv() {
+        sum += v;
+    }
+    // BLOCKS: every sender stamps a heartbeat first, so the watchdog
+    // reaps any producer that could leave this wait unbounded.
+    let last = rx.recv().unwrap_or(0);
+    sum + last
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn harness_may_block() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        tx.send(1).unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
     }
 }
 ";

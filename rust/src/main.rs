@@ -17,9 +17,9 @@ use sr_accel::analysis::{
 use sr_accel::benchkit::Table;
 use sr_accel::cli::{Args, USAGE};
 use sr_accel::config::{
-    AcceleratorConfig, ExecutorKind, FusionKind, HaloPolicy, ModelConfig,
-    RestartPolicy, RtPolicy, ShardPlan, ShardStrategy, StreamSpec,
-    SystemConfig, WorkerAffinity,
+    check_stall_budget, checked_ms, AcceleratorConfig, ExecutorKind,
+    FusionKind, HaloPolicy, ModelConfig, RestartPolicy, RtPolicy,
+    ShardPlan, ShardStrategy, StreamSpec, SystemConfig, WorkerAffinity,
 };
 use sr_accel::coordinator::{
     engine::{build_engine, engine_factory, model_for_scale},
@@ -96,14 +96,15 @@ fn resolve_executor(
     }))
 }
 
-/// Worker supervision + fault injection for `serve` / `serve-multi`:
-/// CLI flags override the `[serve]` config, and the merged restart
-/// policy passes the same `checked_ms` rejection path the config
-/// loader uses, so both entry points reject the same garbage.
+/// Worker supervision + fault injection + hung-worker watchdog for
+/// `serve` / `serve-multi`: CLI flags override the `[serve]` config,
+/// and the merged restart policy and stall budget pass the same
+/// `checked_ms` rejection path the config loader uses, so both entry
+/// points reject the same garbage.
 fn resolve_supervision(
     args: &Args,
     sys: &SystemConfig,
-) -> Result<(RestartPolicy, FaultPlan)> {
+) -> Result<(RestartPolicy, FaultPlan, Option<f64>)> {
     let mut restart = sys.serve.restart;
     restart.max_restarts =
         args.opt_usize("restart-max", restart.max_restarts)?;
@@ -119,7 +120,18 @@ fn resolve_supervision(
             .map_err(|e| anyhow::anyhow!("--inject: {e}"))?,
         None => sys.serve.inject.clone(),
     };
-    Ok((restart, inject))
+    let stall_budget_ms = match args.opt("stall-budget-ms") {
+        Some(s) if s == "off" || s == "none" => None,
+        Some(_) => {
+            let v = args.opt_f64("stall-budget-ms", 0.0)?;
+            Some(
+                checked_ms(v, "--stall-budget-ms", false)
+                    .map_err(anyhow::Error::msg)?,
+            )
+        }
+        None => sys.serve.stall_budget_ms,
+    };
+    Ok((restart, inject, stall_budget_ms))
 }
 
 /// Plan-cache location: `--plan-cache` flag, then `[tune] cache`,
@@ -140,6 +152,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "source-fps", "seed", "config", "save-last", "shard", "band-rows",
         "halo", "affinity", "executor", "plan-cache", "restart-max",
         "restart-backoff-ms", "restart-backoff-cap-ms", "inject",
+        "stall-budget-ms",
     ])?;
     let sys = load_system_config(args)?;
     let kind = EngineKind::parse(args.opt_str("engine", &sys.serve.engine))
@@ -205,7 +218,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             plan_source = format!("cache:{}", key.slug());
         }
     }
-    let (restart, inject) = resolve_supervision(args, &sys)?;
+    let (restart, inject, stall_budget_ms) =
+        resolve_supervision(args, &sys)?;
     let cfg = PipelineConfig {
         frames: args.opt_usize("frames", sys.serve.frames)?,
         queue_depth: args.opt_usize("queue-depth", sys.serve.queue_depth)?,
@@ -221,6 +235,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shard: plan,
         model_layers: sys.model.n_layers(),
         restart,
+        stall_budget_ms,
         inject,
     };
     // PJRT artifacts are fixed-shape; pick the one matching the work
@@ -309,6 +324,7 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
         "streams", "engine", "frames", "workers", "queue-depth", "policy",
         "seed", "config", "executor", "plan-cache", "restart-max",
         "restart-backoff-ms", "restart-backoff-cap-ms", "inject",
+        "stall-budget-ms",
     ])?;
     let sys = load_system_config(args)?;
     let streams = match args.opt("streams") {
@@ -331,7 +347,12 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
              pjrt artifacts are AOT-compiled for one geometry"
         );
     }
-    let (restart, inject) = resolve_supervision(args, &sys)?;
+    let (restart, inject, stall_budget_ms) =
+        resolve_supervision(args, &sys)?;
+    // a stall budget at or below the frame deadline would reap
+    // healthy-but-late workers — same cross-check as the config loader
+    check_stall_budget(stall_budget_ms, &policy)
+        .map_err(|e| anyhow::anyhow!("--stall-budget-ms: {e}"))?;
     let cfg = MultiServeConfig {
         streams,
         frames: args.opt_usize("frames", sys.serve.frames)?,
@@ -341,6 +362,7 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
         seed: args.opt_usize("seed", 7)? as u64,
         restart,
         inject,
+        stall_budget_ms,
     };
     // load the trained weights once; per-scale fallback happens inside
     // the workers via the shared `model_for_scale` rule (streams whose

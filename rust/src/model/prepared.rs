@@ -238,6 +238,14 @@ pub struct Scratch {
     /// fused anchor-add + pixel-shuffle immediately after it is
     /// produced, so the whole-band i32 map never materializes.
     pub(crate) pre_row: Vec<i32>,
+    /// Cooperative cancellation for the executing worker generation:
+    /// the fusion schedulers poll this at row/tile granularity and
+    /// abort the band early once the serving watchdog cancels it
+    /// (`coordinator::watchdog`).  `None` — the default — means run to
+    /// completion.  A band aborted mid-run returns partial pixels; the
+    /// zombified caller's result is discarded by its generation check,
+    /// never delivered.
+    pub cancel: Option<crate::util::cancel::CancelToken>,
     pool_u8: Vec<Vec<u8>>,
     pool_i32: Vec<Vec<i32>>,
     pool_limit_bytes: usize,
@@ -269,6 +277,7 @@ impl Scratch {
             accum: Accumulator::default(),
             rings: Vec::new(),
             pre_row: Vec::new(),
+            cancel: None,
             pool_u8: Vec::new(),
             pool_i32: Vec::new(),
             pool_limit_bytes: limit,

@@ -510,6 +510,7 @@ pub fn measure_plan(
             shard: plan.shard.clone(),
             model_layers: qm.n_layers(),
             restart: crate::config::RestartPolicy::none(),
+            stall_budget_ms: None,
             inject: crate::coordinator::FaultPlan::default(),
         };
         let factories: Vec<EngineFactory> = (0..cfg.workers)

@@ -1,0 +1,129 @@
+//! Cooperative cancellation: a shared sticky flag with a condvar.
+//!
+//! Lives in `util` (not `coordinator`) because the *checkers* sit at
+//! the bottom of the stack — the fusion schedulers poll the flag at
+//! row/tile granularity via [`Scratch`](crate::model::Scratch) — while
+//! the *canceller* is the serving watchdog
+//! ([`coordinator::watchdog`](crate::coordinator::watchdog)), which
+//! re-exports this type.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Poison-tolerant lock: a cancelling thread that panicked while
+/// holding the gate poisons the mutex, but the gate guards no data —
+/// waiters can always proceed.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[derive(Debug, Default)]
+struct CancelInner {
+    cancelled: AtomicBool,
+    gate: Mutex<()>,
+    cond: Condvar,
+}
+
+/// Shared cooperative-cancellation flag.
+///
+/// Cloning is cheap (an `Arc` bump); all clones observe one flag.
+/// Cancellation is one-way and sticky — there is no reset, a fresh
+/// token is issued per worker generation instead.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    inner: Arc<CancelInner>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Raise the flag and wake every parked waiter.  The store happens
+    /// under the gate so a waiter can never re-check the flag between
+    /// our store and our notify and then park forever.
+    pub fn cancel(&self) {
+        let _gate = lock_clean(&self.inner.gate);
+        self.inner.cancelled.store(true, Ordering::SeqCst);
+        self.inner.cond.notify_all();
+    }
+
+    /// Cheap poll — this is what the fusion row/tile loops check.
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// Park until cancelled.  This is the primitive the injected
+    /// `hang` fault uses: a true never-returns stall that still
+    /// unwinds promptly once the watchdog cancels the generation.
+    pub fn wait(&self) {
+        let mut gate = lock_clean(&self.inner.gate);
+        while !self.is_cancelled() {
+            gate = self
+                .inner
+                .cond
+                .wait(gate)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Park for at most `timeout`; returns `true` iff cancelled.
+    /// Used by the `slow` fault so an injected slowdown remains
+    /// interruptible by the watchdog.
+    pub fn wait_timeout(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut gate = lock_clean(&self.inner.gate);
+        while !self.is_cancelled() {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = self
+                .inner
+                .cond
+                .wait_timeout(gate, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            gate = g;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cancel_token_wakes_parked_waiter() {
+        let tok = CancelToken::new();
+        let t2 = tok.clone();
+        let h = std::thread::spawn(move || t2.wait());
+        assert!(!tok.is_cancelled());
+        tok.cancel();
+        h.join().expect("waiter exits after cancel");
+        assert!(tok.is_cancelled());
+        // sticky: a second cancel and a post-cancel wait are no-ops
+        tok.cancel();
+        tok.wait();
+    }
+
+    #[test]
+    fn wait_timeout_distinguishes_cancel_from_expiry() {
+        let tok = CancelToken::new();
+        assert!(!tok.wait_timeout(Duration::from_millis(1)));
+        tok.cancel();
+        assert!(tok.wait_timeout(Duration::from_millis(1)));
+        assert!(tok.wait_timeout(Duration::ZERO));
+    }
+
+    #[test]
+    fn clones_share_one_flag_but_fresh_tokens_are_independent() {
+        let a = CancelToken::new();
+        let b = a.clone();
+        b.cancel();
+        assert!(a.is_cancelled());
+        let fresh = CancelToken::new();
+        assert!(!fresh.is_cancelled());
+    }
+}

@@ -1,15 +1,18 @@
 //! Shared substrates: deterministic PRNG, statistics, fixed-point
-//! helpers, and a miniature property-testing framework.
+//! helpers, cooperative cancellation, and a miniature property-testing
+//! framework.
 //!
 //! The build environment is offline (no `rand`, `proptest`, `criterion`
 //! crates), so these are first-class implementations rather than shims —
 //! see DESIGN.md §3 (S1/S2).
 
+pub mod cancel;
 pub mod fixed;
 pub mod quickcheck;
 pub mod rng;
 pub mod stats;
 
+pub use cancel::CancelToken;
 pub use fixed::{requant_round_shift, FixedMul};
 pub use rng::Xoshiro256pp;
 pub use stats::Summary;

@@ -1,7 +1,8 @@
-//! Chaos suite for the self-healing serving pipeline (§Supervision):
-//! seeded fault plans drive the real restart/backoff, retry-rescue and
-//! quality-degradation code paths, across the full policy x worker
-//! matrix.  CI additionally runs this file under ThreadSanitizer.
+//! Chaos suite for the self-healing serving pipeline (§Supervision +
+//! §Watchdog): seeded fault plans drive the real restart/backoff,
+//! retry-rescue, hung-worker-reaping and quality-ladder code paths,
+//! across the full fault x policy x worker matrix.  CI additionally
+//! runs this file under ThreadSanitizer.
 //!
 //! Invariants exercised:
 //! * no injected panic ever escapes `serve_multi` — faults surface as
@@ -9,20 +10,31 @@
 //! * every offered frame is accounted: delivered + dropped +
 //!   incomplete per stream, with degraded a subset of delivered;
 //! * with restart budget, delivered frames are bit-identical to the
-//!   fault-free run (supervision never trades pixels for liveness);
+//!   fault-free run (supervision never trades pixels for liveness) —
+//!   including when the fault is a true hang that only the armed
+//!   watchdog can unwind;
+//! * a zombified worker's late result is discarded by the generation
+//!   check — a frame terminates exactly once, never delivered twice;
 //! * injected faults are visible in the report (`restarts`, `dropped`,
-//!   `degraded`, `errors`) where the schedule makes them deterministic;
+//!   `degraded`, `hangs_detected`, `errors`) where the schedule makes
+//!   them deterministic;
 //! * under overload, `Degrade` beats `DropLate` on goodput with zero
-//!   undelivered frames (the ISSUE 9 acceptance pair).
+//!   undelivered frames (the ISSUE 9 acceptance pair), and its
+//!   `Reduced` rung is bit-exact against an offline x2-SR + bilinear
+//!   reference (the ISSUE 10 ladder).
 //!
-//! Geometries are deliberately tiny: TSan runs this whole file.
+//! Geometries are deliberately tiny: TSan runs this whole file.  Stall
+//! budgets are armed only on rows that inject a hang — a 75 ms budget
+//! keeps TSan's 10-20x slowdown clear of false zombies.
+
+use std::time::Instant;
 
 use sr_accel::config::{RestartPolicy, RtPolicy, StreamSpec};
 use sr_accel::coordinator::{
-    serve_multi, Engine, FaultPlan, Int8Engine, MultiServeConfig,
-    ScaleEngineFactory,
+    serve_multi, stream_seed, Engine, FaultPlan, Int8Engine,
+    MultiServeConfig, ScaleEngineFactory,
 };
-use sr_accel::image::ImageU8;
+use sr_accel::image::{bilinear_upsample, ImageU8, SceneGenerator};
 use sr_accel::model::QuantModel;
 
 fn spec(label: &str, w: usize, h: usize, scale: usize) -> StreamSpec {
@@ -93,25 +105,33 @@ fn assert_accounting(rep: &sr_accel::coordinator::PipelineReport) {
     assert_eq!(rep.degraded, degraded_total);
 }
 
-/// The full matrix: (panic | error | stall-past-deadline) x
-/// (BestEffort | DropLate | Degrade) x (1 | 2 | 4 workers).  No panic
-/// escapes, accounting always holds, and with budget no error
-/// surfaces.  Where the schedule is deterministic (1 worker), the
-/// fault must be visible in the report.
+/// The full matrix: (panic | error | stall-past-deadline | hang |
+/// persistent slowdown) x (BestEffort | DropLate | Degrade) x
+/// (1 | 2 | 4 workers).  No panic escapes, accounting always holds,
+/// and with budget no error surfaces.  Where the schedule is
+/// deterministic (1 worker), the fault must be visible in the report.
 #[test]
 fn fault_matrix_never_escapes_and_always_accounts() {
     // every fault fires on the worker's *first* engine call: frame 0
     // is dequeued microseconds after emission, so the call happens (and
     // the fault fires) under every policy regardless of scheduler
     // timing — later indices could starve if frames go late under a
-    // sanitizer's slowdown
-    let faults = ["w0:panic@0", "w0:error@0", "w0:stall:25@0"];
+    // sanitizer's slowdown.  Only the hang rows arm the watchdog (a
+    // hang is unrecoverable without it); healthy rows stay disarmed so
+    // sanitizer slowdowns can never fake a zombie.
+    let faults: [(&str, Option<f64>); 5] = [
+        ("w0:panic@0", None),
+        ("w0:error@0", None),
+        ("w0:stall:25@0", None),
+        ("w0:hang@0", Some(75.0)),
+        ("w0:slow:3@0", None),
+    ];
     let policies = [
         RtPolicy::BestEffort,
         RtPolicy::DropLate { deadline_ms: 5.0 },
         RtPolicy::Degrade { deadline_ms: 5.0 },
     ];
-    for fault in faults {
+    for (fault, stall_budget_ms) in faults {
         for policy in policies {
             for workers in [1usize, 2, 4] {
                 let cfg = MultiServeConfig {
@@ -123,6 +143,7 @@ fn fault_matrix_never_escapes_and_always_accounts() {
                     seed: 3,
                     restart: quick_restart(3),
                     inject: FaultPlan::parse(fault).unwrap(),
+                    stall_budget_ms,
                 };
                 let (got, rep) = run(&cfg, 9);
                 let tag = format!(
@@ -144,12 +165,23 @@ fn fault_matrix_never_escapes_and_always_accounts() {
                 );
                 // one worker serializes the schedule: its first engine
                 // call deterministically hits the fault
-                if workers == 1 && !fault.contains("stall") {
+                if workers == 1
+                    && (fault.contains("panic") || fault.contains("error"))
+                {
                     assert_eq!(rep.restarts, 1, "{tag}");
                 }
-                if fault.contains("stall") {
-                    // a stall is slowness, not failure: never a restart
+                if workers == 1 && fault.contains("hang") {
+                    // the sole worker's first call parks forever: the
+                    // watchdog must reap it exactly once and replace it
+                    assert_eq!(rep.hangs_detected, 1, "{tag}");
+                    assert_eq!(rep.restarts, 1, "{tag}: hangs charge \
+                         the same restart budget");
+                }
+                if fault.contains("stall") || fault.contains("slow") {
+                    // slowness is not failure: never a restart, and
+                    // with the watchdog disarmed, never a zombie
                     assert_eq!(rep.restarts, 0, "{tag}");
+                    assert_eq!(rep.hangs_detected, 0, "{tag}");
                 }
                 if matches!(policy, RtPolicy::BestEffort) {
                     // best-effort + budget: every frame full quality
@@ -183,6 +215,7 @@ fn best_effort_delivery_is_bit_identical_across_fault_kinds() {
             seed: 5,
             restart,
             inject: FaultPlan::parse(inject).unwrap(),
+            stall_budget_ms: None,
         };
         run(&cfg, 13)
     };
@@ -225,6 +258,7 @@ fn killing_one_of_two_workers_loses_nothing() {
             } else {
                 FaultPlan::parse(inject).unwrap()
             },
+            stall_budget_ms: None,
         };
         run(&cfg, 17)
     };
@@ -255,6 +289,7 @@ fn all_workers_exhausted_is_a_clean_error() {
         seed: 2,
         restart: RestartPolicy::none(), // first failure is fatal
         inject: FaultPlan::parse("w0:panic@0").unwrap(),
+        stall_budget_ms: None,
     };
     let err = serve_multi(&cfg, int8_factories(1, 3), |_, _, _| {})
         .expect_err("sole worker dies on frame 0: nothing delivered");
@@ -282,6 +317,7 @@ fn overloaded_degrade_outdelivers_drop_late_with_zero_undelivered() {
             seed: 29,
             restart: RestartPolicy::none(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         };
         run(&cfg, 23).1
     };
@@ -322,6 +358,7 @@ fn degrade_with_engine_faults_still_loses_nothing() {
         seed: 31,
         restart: quick_restart(2),
         inject: FaultPlan::parse("w0:panic@0").unwrap(),
+        stall_budget_ms: None,
     };
     let (got, rep) = run(&cfg, 19);
     assert_eq!(rep.frames, 8, "degrade never sheds");
@@ -331,4 +368,186 @@ fn degrade_with_engine_faults_still_loses_nothing() {
     assert_accounting(&rep);
     let idx: Vec<usize> = got[0].iter().map(|(i, _)| *i).collect();
     assert_eq!(idx, (0..8).collect::<Vec<_>>());
+}
+
+/// The ISSUE 10 acceptance shape: a hang on 1 of 2 workers, under
+/// *every* policy, still delivers 100% of frames bit-identical to the
+/// fault-free run, with exactly one hang detected and recovery well
+/// inside the run.  Deadlines are generous enough that no frame is
+/// ever late, so `DropLate` and `Degrade` deliver the same pixels as
+/// `BestEffort` and one clean reference covers all three policies.
+#[test]
+fn hang_on_one_of_two_workers_recovers_under_every_policy() {
+    let run_with = |policy: RtPolicy,
+                    inject: &str,
+                    stall: Option<f64>,
+                    restart: RestartPolicy| {
+        let cfg = MultiServeConfig {
+            streams: vec![spec("a", 10, 8, 2), spec("b", 8, 6, 3)],
+            frames: 6,
+            workers: 2,
+            queue_depth: 2,
+            policy,
+            seed: 41,
+            restart,
+            inject: if inject.is_empty() {
+                FaultPlan::default()
+            } else {
+                FaultPlan::parse(inject).unwrap()
+            },
+            stall_budget_ms: stall,
+        };
+        run(&cfg, 37)
+    };
+    let (clean, clean_rep) = run_with(
+        RtPolicy::BestEffort,
+        "",
+        None,
+        RestartPolicy::none(),
+    );
+    assert_eq!(clean_rep.frames, 12);
+    let policies = [
+        RtPolicy::BestEffort,
+        RtPolicy::DropLate { deadline_ms: 1e6 },
+        RtPolicy::Degrade { deadline_ms: 1e6 },
+    ];
+    for policy in policies {
+        let t0 = Instant::now();
+        let (got, rep) =
+            run_with(policy, "w0:hang@0", Some(75.0), quick_restart(2));
+        let tag = policy.name();
+        assert_eq!(got, clean, "{tag}: rescue must be bit-identical");
+        assert_eq!(rep.frames, 12, "{tag}: 100% of frames delivered");
+        assert_eq!(rep.dropped, 0, "{tag}");
+        assert_eq!(rep.incomplete, 0, "{tag}");
+        assert_eq!(rep.degraded, 0, "{tag}: on-time frames stay Full");
+        assert_eq!(rep.hangs_detected, 1, "{tag}: exactly one hang");
+        assert!(rep.restarts >= 1, "{tag}: the reap charges a restart");
+        assert!(rep.errors.is_empty(), "{tag}: {:?}", rep.errors);
+        assert_accounting(&rep);
+        assert!(
+            rep.render().contains("watchdog: 1 hang detected"),
+            "{tag}: {}",
+            rep.render()
+        );
+        // recovery bound, deliberately loose for sanitizer runs: the
+        // budget (75 ms) + monitor tick + replacement backoff is well
+        // under a second; the whole 12-frame run finishing is the
+        // recovery proof
+        assert!(
+            t0.elapsed().as_secs() < 30,
+            "{tag}: run took {:?}",
+            t0.elapsed()
+        );
+    }
+}
+
+/// §Watchdog exactly-once (the generation tag): the zombified worker
+/// wakes when its token is cancelled and tries to report its stale
+/// result — which must be discarded, never delivered, while the
+/// rescued copy of the same frame terminates exactly once through a
+/// survivor.  Mirrors `rescued_frames_terminate_exactly_once_under_
+/// drop_late` with a hang instead of a dead factory.
+#[test]
+fn zombie_late_result_is_discarded_never_delivered_twice() {
+    let cfg = MultiServeConfig {
+        streams: vec![spec("a", 10, 8, 2), spec("b", 8, 6, 3)],
+        frames: 12,
+        workers: 2,
+        queue_depth: 1, // fast sources vs 1 slot: admission sheds too
+        policy: RtPolicy::DropLate { deadline_ms: 1e6 },
+        seed: 43,
+        restart: quick_restart(2),
+        inject: FaultPlan::parse("w0:hang@0").unwrap(),
+        stall_budget_ms: Some(75.0),
+    };
+    let (got, rep) = run(&cfg, 47);
+    assert_eq!(rep.hangs_detected, 1, "{:?}", rep.errors);
+    // the injected hang parks on the cancel token, so the zombie
+    // always wakes after the reap and reports in — and its stale
+    // result is counted discarded, not delivered
+    assert_eq!(
+        rep.zombies_reaped, 1,
+        "the woken zombie's result must be discarded via the \
+         generation check"
+    );
+    assert_eq!(rep.incomplete, 0, "the stash reroute loses nothing");
+    assert!(rep.errors.is_empty(), "{:?}", rep.errors);
+    let mut delivered_total = 0;
+    for (si, s) in rep.streams.iter().enumerate() {
+        assert_eq!(s.meta.offered, 12);
+        // terminal states partition offered frames: nothing counted
+        // both dropped and delivered
+        assert_eq!(
+            s.meta.offered,
+            s.delivered + s.meta.dropped + s.incomplete,
+            "stream {si} accounting"
+        );
+        // strictly increasing indices == no frame delivered twice and
+        // display order preserved across the reap
+        let idx: Vec<usize> = got[si].iter().map(|(i, _)| *i).collect();
+        assert!(
+            idx.windows(2).all(|w| w[0] < w[1]),
+            "stream {si} duplicated or reordered: {idx:?}"
+        );
+        assert_eq!(got[si].len(), s.delivered);
+        delivered_total += s.delivered;
+    }
+    assert_eq!(rep.frames, delivered_total);
+    assert!(
+        rep.render().contains("zombie result"),
+        "{}",
+        rep.render()
+    );
+}
+
+/// §Ladder bit-exactness: a x4 stream forced down the ladder serves
+/// its `Reduced` frame as exactly "x2 SR model + bilinear expand" and
+/// its `Bilinear` frames as exactly the pure bilinear path — verified
+/// against offline references built from the same engine weights and
+/// the same deterministic source.
+#[test]
+fn reduced_rung_is_bit_exact_against_offline_x2_plus_bilinear() {
+    let (w, h, scale) = (8usize, 6usize, 4usize);
+    let (base_seed, engine_seed) = (51u64, 9u64);
+    let frames = 8;
+    let cfg = MultiServeConfig {
+        streams: vec![spec("a", w, h, scale)],
+        frames,
+        workers: 1,
+        queue_depth: 1,
+        // a deadline nothing can meet: frame 0 steps Full -> Reduced,
+        // every later frame steps (or stays) at Bilinear
+        policy: RtPolicy::Degrade { deadline_ms: 0.0 },
+        seed: base_seed,
+        restart: RestartPolicy::none(),
+        inject: FaultPlan::default(),
+        stall_budget_ms: None,
+    };
+    let (got, rep) = run(&cfg, engine_seed);
+    assert_eq!(rep.frames, frames, "degrade never sheds");
+    assert_eq!(
+        rep.streams[0].degraded_by_level,
+        [1, frames - 1],
+        "one Reduced frame, the rest Bilinear"
+    );
+    // offline references: the x2 engine with the weights worker 0
+    // would build for eng_scale=2, and the same synthetic source
+    let mut x2 = Int8Engine::new(QuantModel::test_model(
+        2, 3, 4, 2, engine_seed,
+    ));
+    let gen = SceneGenerator::new(w, h, stream_seed(base_seed, 0));
+    for (fi, hr) in &got[0] {
+        let lr = gen.frame(*fi);
+        let want = if *fi == 0 {
+            bilinear_upsample(&x2.upscale(&lr).unwrap(), scale / 2)
+        } else {
+            bilinear_upsample(&lr, scale)
+        };
+        assert_eq!(
+            *hr, want,
+            "frame {fi}: downshifted delivery must be bit-exact \
+             against the offline reference"
+        );
+    }
 }

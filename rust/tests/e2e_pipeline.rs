@@ -37,6 +37,7 @@ fn tiny(frames: usize, workers: usize) -> PipelineConfig {
         shard: ShardPlan::whole_frame(),
         model_layers: 3,
         restart: RestartPolicy::none(),
+        stall_budget_ms: None,
         inject: FaultPlan::default(),
     }
 }

@@ -174,6 +174,7 @@ fn threaded_pipeline_is_exact_and_race_free() {
         shard: ShardPlan::whole_frame(),
         model_layers: 2,
         restart: RestartPolicy::none(),
+        stall_budget_ms: None,
         inject: FaultPlan::default(),
     };
     let mut one = Vec::new();

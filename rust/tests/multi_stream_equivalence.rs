@@ -51,6 +51,7 @@ fn solo_frames(
         shard: ShardPlan::whole_frame(),
         model_layers: layers,
         restart: RestartPolicy::none(),
+        stall_budget_ms: None,
         inject: FaultPlan::default(),
     };
     let scale = spec.scale;
@@ -139,6 +140,7 @@ fn prop_best_effort_multi_stream_matches_solo_runs() {
                 seed: base_seed,
                 restart: RestartPolicy::none(),
                 inject: FaultPlan::default(),
+                stall_budget_ms: None,
             };
             let mut got: Vec<Vec<(usize, ImageU8)>> = vec![Vec::new(); n];
             let rep = serve_multi(
@@ -212,6 +214,7 @@ fn three_heterogeneous_streams_bit_identical_to_solo() {
             seed: base_seed,
             restart: RestartPolicy::none(),
             inject: FaultPlan::default(),
+            stall_budget_ms: None,
         };
         let mut got: Vec<Vec<ImageU8>> = vec![Vec::new(); 3];
         let rep = serve_multi(
@@ -255,6 +258,7 @@ fn drop_late_records_nonzero_drop_rate_under_undersized_pool() {
         seed: 19,
         restart: RestartPolicy::none(),
         inject: FaultPlan::default(),
+        stall_budget_ms: None,
     };
     let mut got: Vec<Vec<usize>> = vec![Vec::new(); 3];
     let rep = serve_multi(
@@ -300,6 +304,7 @@ fn rescued_frames_terminate_exactly_once_under_drop_late() {
         seed: 23,
         restart: RestartPolicy::none(),
         inject: FaultPlan::default(),
+        stall_budget_ms: None,
     };
     // worker 0 can never build an engine: with a zero restart budget it
     // exhausts on the first frame it picks up and must hand that frame

@@ -58,6 +58,7 @@ fn run_plan(
         shard: plan.shard.clone(),
         model_layers: qm.n_layers(),
         restart: sr_accel::config::RestartPolicy::none(),
+        stall_budget_ms: None,
         inject: sr_accel::coordinator::FaultPlan::default(),
     };
     let mut out = Vec::new();

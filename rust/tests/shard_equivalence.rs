@@ -61,6 +61,7 @@ fn base_cfg(
         shard: ShardPlan::whole_frame(),
         model_layers,
         restart: RestartPolicy::none(),
+        stall_budget_ms: None,
         inject: FaultPlan::default(),
     }
 }
